@@ -1,0 +1,83 @@
+//! Ablation playground: poke at the pieces of ARA in isolation —
+//! staircase masks, guidance metric, the R=1 discontinuity — printing the
+//! intermediate quantities the paper's Sec. 3 reasons about.
+//!
+//!   cargo run --release --example ablation_playground
+
+use ara_compress::ara::{binary_mask, guidance_loss, guidance_metric, Staircase};
+use ara_compress::coordinator::Pipeline;
+use ara_compress::model::module_dims;
+use ara_compress::Result;
+
+fn main() -> Result<()> {
+    let pl = Pipeline::new("micro-llama")?;
+    let ws = pl.pretrained()?;
+    let grams = pl.grams(&ws)?;
+    let fm = pl.factored(&ws, &grams)?;
+    let dims = module_dims(&pl.cfg);
+
+    // --- 1. staircase masks under different α concentrations ---
+    println!("== staircase (D=8, r=16): p = α·M ==");
+    let st = Staircase::new(8, 16);
+    for (label, alpha) in [
+        ("uniform α", vec![0.125f64; 8]),
+        ("mass on α₁ (keep little)", {
+            let mut a = vec![0.0; 8];
+            a[0] = 1.0;
+            a
+        }),
+        ("mass on α_D (keep everything)", {
+            let mut a = vec![0.0; 8];
+            a[7] = 1.0;
+            a
+        }),
+    ] {
+        let p = st.prob_mask(&alpha);
+        let pstr: Vec<String> = p.iter().map(|x| format!("{x:.2}")).collect();
+        println!("  {label:<28} p = [{}]", pstr.join(" "));
+    }
+
+    // --- 2. per-module spectra and the guidance metric G_R ---
+    println!("\n== guidance metric G_R vs R (Eq. 6) — first-layer modules ==");
+    for d in dims.iter().take(7) {
+        let f = &fm.factors[&d.name];
+        let gs: Vec<String> = [0.2, 0.4, 0.6, 0.8, 1.0]
+            .iter()
+            .map(|&r| format!("{:.2}", guidance_metric(d, f, r)))
+            .collect();
+        let (lg, _) = guidance_loss(d, f, 0.8);
+        println!(
+            "  {:<22} G_R@[.2 .4 .6 .8 1.] = [{}]  L_g(0.8) = {:.2}",
+            d.name.split("layers.0.").last().unwrap(),
+            gs.join(" "),
+            lg
+        );
+    }
+
+    // --- 3. the R=1 parameter discontinuity ---
+    println!("\n== the R=1 discontinuity (Sec. 1): params(k) around break-even ==");
+    let d = &dims[0];
+    let be = d.breakeven_rank();
+    for k in [be.saturating_sub(2), be, be + 2, d.r_full()] {
+        println!(
+            "  k={k:<4} factored {} vs dense {}  ({})",
+            d.factored_params(k),
+            d.dense_params(),
+            if d.factored_params(k) > d.dense_params() { "dense wins" } else { "factored wins" }
+        );
+    }
+
+    // --- 4. mask state at a concrete probabilistic mask ---
+    println!("\n== Eq. 3/4: ratio and binary mask from p ==");
+    let p: Vec<f64> = (0..d.r_full()).map(|i| 1.0 / (1.0 + i as f64 * 0.2)).collect();
+    let stt = binary_mask(d, &p);
+    println!(
+        "  {}: Σp = {:.2} → R = {:.3}, k = {}, dense = {}",
+        d.name,
+        p.iter().sum::<f64>(),
+        stt.ratio,
+        stt.k,
+        stt.dense
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Serving example: run the threaded router + dynamic batcher + decode
+//! engine on a stream of generation requests and report latency/throughput.
+//!
+//!   cargo run --release --example serving_throughput
+//!
+//! Demonstrates the L3 topology: the engine (PJRT state) lives on a worker
+//! thread; requests flow through the router; the batcher picks compiled
+//! batch sizes; weights and KV caches stay device-resident.
+
+use std::time::Instant;
+
+use ara_compress::coordinator::Pipeline;
+use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::model::Allocation;
+use ara_compress::serving::{DynamicBatcher, Engine, Router, ServeRequest};
+use ara_compress::Result;
+
+fn main() -> Result<()> {
+    let model = "minillama-s";
+    let alloc_name = "ara-80";
+    let pl = Pipeline::new(model)?;
+    let ws = pl.pretrained()?;
+    let grams = pl.grams(&ws)?;
+    let fm = pl.factored(&ws, &grams)?;
+    let cfg = pl.cfg.clone();
+
+    let alloc_path = {
+        let c = pl.paths.configs.join("allocations").join(format!("{model}.{alloc_name}.json"));
+        if c.exists() {
+            c
+        } else {
+            pl.paths.artifacts.join("allocations").join(format!("{model}.{alloc_name}.json"))
+        }
+    };
+    let alloc = Allocation::load(&alloc_path)?;
+
+    // batcher demo over the compiled batch sizes
+    let batcher = DynamicBatcher::new(cfg.decode_batches.clone());
+    println!("batch plan for 11 queued requests: {:?}", batcher.plan(11));
+
+    // the router owns the engine on its worker thread (largest batch size)
+    let batch = *cfg.decode_batches.last().unwrap();
+    let prefill_len = cfg.prefill_len;
+    let paths = pl.paths.clone();
+    let cfg2 = cfg.clone();
+    let router = Router::spawn(
+        move || {
+            let rt = ara_compress::runtime::Runtime::new(paths.artifact_dir(&cfg2.name))
+                .expect("runtime");
+            let engine = Engine::new(&cfg2, &rt, &ws, &fm, &alloc, alloc_name, batch)
+                .expect("engine");
+            Box::new(move |prompts: &[Vec<i32>], gen_len: usize| {
+                let (tokens, stats) = engine.generate(prompts, gen_len)?;
+                Ok((tokens, stats.tok_per_s()))
+            })
+        },
+        batch,
+        prefill_len,
+        5, // max batching wait (ms)
+    );
+
+    // fire a stream of requests and measure end-to-end latency
+    let n_requests = ara_compress::config::scaled(32, 8);
+    let gen_len = ara_compress::config::scaled(24, 8);
+    let stream = generate_tokens(cfg.vocab, corpus_spec("synwiki"), 3, 65536);
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    for i in 0..n_requests {
+        let off = (i * prefill_len) % (stream.len() - prefill_len);
+        receivers.push((
+            Instant::now(),
+            router.submit(ServeRequest {
+                prompt: stream[off..off + prefill_len].to_vec(),
+                gen_len,
+            }),
+        ));
+    }
+    let mut latencies = Vec::new();
+    let mut tps_sum = 0.0;
+    for (t_submit, rx) in receivers {
+        let resp = rx.recv().expect("response");
+        latencies.push(t_submit.elapsed().as_secs_f64());
+        tps_sum += resp.decode_tok_per_s;
+        assert_eq!(resp.tokens.len(), gen_len);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    println!(
+        "served {n_requests} requests × {gen_len} tokens in {wall:.2}s \
+         → {:.1} tok/s end-to-end",
+        (n_requests * gen_len) as f64 / wall
+    );
+    println!("latency p50 {:.0} ms, p99 {:.0} ms", p50 * 1e3, p99 * 1e3);
+    println!("mean engine decode throughput {:.1} tok/s", tps_sum / n_requests as f64);
+    Ok(())
+}

@@ -1,0 +1,3 @@
+# Build-time compile path: JAX/Pallas model definitions + AOT lowering.
+# Nothing in this package is imported at runtime; `aot.py` runs once under
+# `make artifacts` and emits HLO text + manifests consumed by the rust layer.

@@ -1,0 +1,201 @@
+"""AOT compile path: lower every exported graph to HLO text + manifest.
+
+Runs ONCE under `make artifacts`. For each model preset in
+configs/models.json this emits, under artifacts/<model>/:
+
+  train_step      — dense fwd+bwd (pre-training the substrate LM)
+  score_dense     — dense per-token NLL (PPL / zero-shot for dense+pruning)
+  score_masked    — masked-SVD per-token NLL (compressed eval)
+  mask_fwd_grad   — loss + ∂L/∂mask per module (allocation training core)
+  lora_step       — loss + ∂L/∂(A,B) (LoRA recovery, Table 6)
+  decode_<alloc>_b<B> / prefill_<alloc>_b<B>   (serving models only)
+
+plus <name>.manifest.json describing the exact input/output tensor order
+(name, shape, dtype) — the rust runtime binds by name, never by position.
+
+Interchange is HLO TEXT, not a serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Serving graphs are specialized to rank allocations. Allocation JSONs are
+looked up in configs/allocations/<model>.<alloc>.json (written there by the
+rust allocator via `ara export-alloc`, or checked-in defaults); uniform/dense
+allocations are computed here; a missing ARA allocation falls back to a
+paper-shaped heuristic (Fig. 4 structure: v/down dense, q/k compressed hard)
+and the resolved JSON is dumped to artifacts/allocations/ for inspection.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False so PJRT can untuple multi-output executables into
+    # separate device buffers (the serving engine keeps KV caches device-
+    # resident across decode steps); the rust runtime also handles the
+    # single-tuple-buffer case defensively.
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt):
+    return "i32" if dt == M.I32 else "f32"
+
+
+def export(fn, spec, outs, outdir, name):
+    """Lower `fn` with the given input spec and write HLO text + manifest."""
+    args = [jax.ShapeDtypeStruct(shape, dt) for (_, shape, dt) in spec]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, name + ".hlo.txt"), "w") as f:
+        f.write(text)
+    manifest = {
+        "name": name,
+        "inputs": [
+            {"name": n, "shape": list(shape), "dtype": _dtype_name(dt)}
+            for (n, shape, dt) in spec
+        ],
+        "outputs": outs,
+    }
+    with open(os.path.join(outdir, name + ".manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: {len(spec)} inputs, {len(outs)} outputs, "
+          f"{len(text) // 1024} KiB hlo")
+
+
+# ---------------------------------------------------------------------------
+# Allocations for serving specialization
+# ---------------------------------------------------------------------------
+
+def uniform_alloc(cfg, ratio):
+    """SVD-LLM-style uniform allocation: same parameter ratio per module."""
+    mods = {}
+    for name, (m, n) in M.module_dims(cfg):
+        k = max(1, int(ratio * m * n / (m + n)))
+        mods[name] = {"dense": False, "rank": min(k, min(m, n))}
+    return {"name": f"uniform-{int(ratio*100)}", "modules": mods}
+
+
+def dense_alloc(cfg):
+    return {"name": "dense",
+            "modules": {name: {"dense": True} for name, _ in M.module_dims(cfg)}}
+
+
+def heuristic_ara_alloc(cfg, ratio):
+    """Paper-shaped fallback (Fig. 4): keep v/down dense where the budget
+    allows, compress q/k hardest, meet the global compressible budget."""
+    dims = M.module_dims(cfg)
+    total = sum(m * n for _, (m, n) in dims)
+    budget = ratio * total
+    prefer_dense = [name for name, _ in dims
+                    if name.endswith(".wv") or name.endswith(".wdown")]
+    weight = {"wq": 0.45, "wk": 0.45, "wv": 1.0, "wo": 0.9,
+              "wgate": 1.1, "wup": 0.9, "wdown": 1.0}
+
+    dense_set = set()
+    for name in prefer_dense:          # greedily keep dense while affordable
+        mn = dict(dims)[name][0] * dict(dims)[name][1]
+        rest = [(nm, d) for nm, d in dims if nm not in dense_set | {name}]
+        min_rest = sum(1 * (m + n) for _, (m, n) in rest)   # rank-1 floor
+        if sum(dict(dims)[d][0] * dict(dims)[d][1] for d in dense_set) + mn \
+                + min_rest <= budget:
+            dense_set.add(name)
+
+    used = sum(dict(dims)[d][0] * dict(dims)[d][1] for d in dense_set)
+    rest = [(nm, d) for nm, d in dims if nm not in dense_set]
+    wsum = sum(weight[nm.split(".")[-1]] * m * n for nm, (m, n) in rest) or 1.0
+
+    mods = {}
+    for name, (m, n) in dims:
+        if name in dense_set:
+            mods[name] = {"dense": True}
+            continue
+        w = weight[name.split(".")[-1]]
+        share = (budget - used) * (w * m * n) / wsum
+        k = max(1, min(int(share / (m + n)), min(m, n)))
+        mods[name] = {"dense": False, "rank": k}
+    return {"name": f"ara-{int(ratio*100)}", "modules": mods}
+
+
+def resolve_alloc(cfg, alloc_name, configs_dir, artifacts_dir):
+    path = os.path.join(configs_dir, "allocations",
+                        f"{cfg['name']}.{alloc_name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            alloc = json.load(f)
+        print(f"  [alloc] {alloc_name}: loaded {path}")
+        return alloc
+    if alloc_name == "dense":
+        alloc = dense_alloc(cfg)
+    elif alloc_name.startswith("uniform-"):
+        alloc = uniform_alloc(cfg, int(alloc_name.split("-")[1]) / 100.0)
+    elif alloc_name.startswith("ara-"):
+        alloc = heuristic_ara_alloc(cfg, int(alloc_name.split("-")[1]) / 100.0)
+        print(f"  [alloc] {alloc_name}: no {path}; using paper-shaped heuristic")
+    else:
+        raise ValueError(alloc_name)
+    dump_dir = os.path.join(artifacts_dir, "allocations")
+    os.makedirs(dump_dir, exist_ok=True)
+    with open(os.path.join(dump_dir, f"{cfg['name']}.{alloc_name}.json"), "w") as f:
+        json.dump(alloc, f, indent=1)
+    return alloc
+
+
+SERVING_ALLOCS = ["dense", "uniform-80", "uniform-60", "ara-80", "ara-60"]
+
+
+def export_model(cfg, outroot, configs_dir, skip_serving=False):
+    outdir = os.path.join(outroot, cfg["name"])
+    print(f"[{cfg['name']}] family={cfg['family']} d={cfg['d_model']} "
+          f"L={cfg['n_layers']}")
+    export(*M.make_train_step(cfg), outdir, "train_step")
+    export(*M.make_calibrate(cfg), outdir, "calibrate")
+    export(*M.make_score_dense(cfg), outdir, "score_dense")
+    export(*M.make_score_masked(cfg), outdir, "score_masked")
+    export(*M.make_mask_fwd_grad(cfg), outdir, "mask_fwd_grad")
+    export(*M.make_lora_step(cfg), outdir, "lora_step")
+    if cfg.get("serving") and not skip_serving:
+        for alloc_name in SERVING_ALLOCS:
+            alloc = resolve_alloc(cfg, alloc_name, configs_dir, outroot)
+            for b in cfg["decode_batches"]:
+                export(*M.make_decode(cfg, alloc, b), outdir,
+                       f"decode_{alloc_name}_b{b}")
+                export(*M.make_prefill(cfg, alloc, b), outdir,
+                       f"prefill_{alloc_name}_b{b}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--configs", default="../configs")
+    ap.add_argument("--only", default=None, help="export a single model preset")
+    ap.add_argument("--skip-serving", action="store_true")
+    args = ap.parse_args()
+
+    with open(os.path.join(args.configs, "models.json")) as f:
+        presets = json.load(f)["models"]
+    exported = []
+    for cfg in presets:
+        if args.only and cfg["name"] != args.only:
+            continue
+        export_model(cfg, args.outdir, args.configs, args.skip_serving)
+        exported.append(cfg["name"])
+    with open(os.path.join(args.outdir, "index.json"), "w") as f:
+        json.dump({"models": exported, "serving_allocs": SERVING_ALLOCS}, f,
+                  indent=1)
+    print(f"exported: {exported}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+# All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+# custom-calls); they lower to plain HLO inside the surrounding jitted model
+# so the rust runtime sees a single executable. Each kernel carries a
+# custom_vjp whose backward is expressed with the jnp reference math — the
+# forward is the hot path that the TPU BlockSpec schedule is designed for,
+# the backward only runs inside build-time-lowered training graphs.
+
+from .masked_lowrank import masked_lowrank
+from .rmsnorm import rmsnorm
+from .attention import causal_attention
+
+__all__ = ["masked_lowrank", "rmsnorm", "causal_attention"]

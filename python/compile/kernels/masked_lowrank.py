@@ -1,0 +1,107 @@
+"""Pallas kernel: fused masked low-rank linear — the paper's compute hot-spot.
+
+Computes `y = ((x @ W_vᵀ) ⊙ m) @ W_uᵀ` (the R<1 branch of Eq. 8) with the
+rank dimension tiled so the low-rank intermediate `t = x·W_vᵀ` never
+round-trips to HBM: each grid step loads a `(br, n)` slab of W_v and a
+`(bm, br)` slab of W_u into VMEM, applies the mask while the tile is
+resident (it rides the same DMA as W_v), and accumulates into the output
+block. This is the TPU re-think of the CUDA shared-memory staging a GPU
+implementation would use (DESIGN.md §Hardware-Adaptation):
+
+  grid = (m_blocks, r_blocks)      — r is the innermost (sequential) axis
+  x      : (rows, n)   block (rows, n)       broadcast over the grid
+  w_v    : (r, n)      block (br, n)         indexed by r-step
+  mask   : (r,)        block (br,)           indexed by r-step
+  w_u    : (m, r)      block (bm, br)        indexed by (m-step, r-step)
+  out    : (rows, m)   block (rows, bm)      revisited across r-steps
+
+VMEM budget per step ≈ rows·n + br·n + bm·br + rows·bm floats; block sizes
+are chosen by `_pick_block` to stay under ~2 MiB for the shapes we compile.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO and correctness is checked
+against `ref.masked_lowrank` by pytest. Real-TPU efficiency is estimated
+from the BlockSpec footprint in EXPERIMENTS.md §Perf.
+
+The backward (custom_vjp) is expressed with jnp matmuls: it only ever runs
+inside the build-time-lowered `mask_fwd_grad` / `lora_step` graphs, where
+XLA fuses it; the forward is the serving/eval hot path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, target):
+    """Largest divisor of `dim` that is <= target (>=1)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel(x_ref, wv_ref, mask_ref, wu_ref, o_ref, *, acc_steps):
+    """One (m-block, r-block) grid step: o += ((x @ wv_blkᵀ) ⊙ m_blk) @ wu_blkᵀ."""
+    rstep = pl.program_id(1)
+
+    @pl.when(rstep == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    t = jnp.dot(x_ref[...], wv_ref[...].T)          # (rows, br) — stays in VMEM
+    t = t * mask_ref[...][None, :]                  # mask applied tile-resident
+    o_ref[...] += jnp.dot(t, wu_ref[...].T)         # (rows, bm) accumulate
+
+
+def _forward(x, w_u, w_v, mask, *, bm_target=128, br_target=64):
+    rows, n = x.shape
+    m, r = w_u.shape
+    bm = _pick_block(m, bm_target)
+    br = _pick_block(r, br_target)
+    grid = (m // bm, r // br)
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_steps=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((br, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((br,), lambda i, j: (j,)),
+            pl.BlockSpec((bm, br), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((rows, bm), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, m), x.dtype),
+        interpret=True,
+    )(x, w_v, mask, w_u)
+
+
+@jax.custom_vjp
+def masked_lowrank(x, w_u, w_v, mask):
+    """Fused masked low-rank linear: ((x @ W_vᵀ) ⊙ m) @ W_uᵀ.
+
+    Shapes: x (rows, n), w_u (m, r), w_v (r, n), mask (r,) → (rows, m).
+    """
+    return _forward(x, w_u, w_v, mask)
+
+
+def _fwd(x, w_u, w_v, mask):
+    y = _forward(x, w_u, w_v, mask)
+    return y, (x, w_u, w_v, mask)
+
+
+def _bwd(res, dy):
+    x, w_u, w_v, mask = res
+    t = x @ w_v.T                       # (rows, r)
+    u = t * mask[None, :]               # post-mask intermediate
+    du = dy @ w_u                       # (rows, r)
+    dmask = jnp.sum(du * t, axis=0)     # (r,) — the STE surrogate ∂L/∂m
+    dt = du * mask[None, :]
+    dx = dt @ w_v
+    dw_u = dy.T @ u                     # (m, r)
+    dw_v = dt.T @ x                     # (r, n)
+    return dx, dw_u, dw_v, dmask
+
+
+masked_lowrank.defvjp(_fwd, _bwd)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here with
+the exact same signature; pytest (python/tests/) asserts allclose between the
+two across shapes/dtypes (hypothesis sweeps). The refs also serve as the
+building blocks of the kernels' custom_vjp backward passes.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_lowrank(x, w_u, w_v, mask):
+    """y = ((x @ W_vᵀ) ⊙ m) @ W_uᵀ — the masked low-rank linear (Eq. 8, R<1).
+
+    Args:
+      x:    (rows, n) input activations.
+      w_u:  (m, r) left factor  (U·√Σ).
+      w_v:  (r, n) right factor (√Σ·Vᵀ·S⁻¹).
+      mask: (r,)   binary/probabilistic rank mask.
+
+    Returns: (rows, m).
+    """
+    t = x @ w_v.T
+    return (t * mask[None, :]) @ w_u.T
+
+
+def rmsnorm(x, gain, eps=1e-6):
+    """RMSNorm over the last dim: x / rms(x) * gain."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gain
+
+
+def causal_attention(q, k, v, scale):
+    """Causal self-attention core over packed heads.
+
+    Args:
+      q, k, v: (bh, t, dh) — batch×heads packed in the leading dim.
+      scale:   scalar, usually 1/sqrt(dh).
+
+    Returns: (bh, t, dh).
+    """
+    t = q.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, jnp.float32(-1e30))
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

@@ -1,0 +1,65 @@
+"""Pallas kernel: RMSNorm over the last dim.
+
+Row-blocked so each grid step normalizes a VMEM-resident `(brows, d)` slab;
+the gain vector rides along broadcast. interpret=True (see package docstring);
+backward via custom_vjp with the standard closed-form expressed in jnp.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-6
+
+
+def _pick_block(dim, target):
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ms + _EPS)) * g_ref[...][None, :]
+
+
+def _forward(x, gain):
+    rows, d = x.shape
+    brows = _pick_block(rows, 256)
+    return pl.pallas_call(
+        _kernel,
+        grid=(rows // brows,),
+        in_specs=[
+            pl.BlockSpec((brows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((brows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, gain)
+
+
+@jax.custom_vjp
+def rmsnorm(x, gain):
+    """RMSNorm: x / sqrt(mean(x², -1) + eps) * gain. x (rows, d), gain (d,)."""
+    return _forward(x, gain)
+
+
+def _fwd(x, gain):
+    return _forward(x, gain), (x, gain)
+
+
+def _bwd(res, dy):
+    x, gain = res
+    d = x.shape[-1]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    r = 1.0 / jnp.sqrt(ms + _EPS)
+    dg = jnp.sum(dy * x * r, axis=0)
+    dyg = dy * gain[None, :]
+    dx = dyg * r - x * (r ** 3) * jnp.sum(dyg * x, axis=-1, keepdims=True) / d
+    return dx, dg
+
+
+rmsnorm.defvjp(_fwd, _bwd)

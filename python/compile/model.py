@@ -1,0 +1,537 @@
+"""L2: JAX transformer families with masked-SVD linear modules.
+
+Two families mirror the paper's model zoo at laptop scale (DESIGN.md §2):
+
+  * ``llama`` — RMSNorm, SwiGLU MLP, RoPE, MHA           (LLaMA2 stand-in)
+  * ``qwen``  — adds GQA (n_kv_heads < n_heads) + QK-norm (Qwen3 stand-in)
+
+Weight convention: every linear module stores ``W`` of shape ``(out, in)``
+and is applied as ``y = x @ Wᵀ``. The seven compressible modules per layer
+are ``attn.{wq,wk,wv,wo}`` and ``mlp.{wgate,wup,wdown}`` — exactly the
+paper's scope (embeddings / head / norms stay dense).
+
+Masked-SVD form: each compressible ``W (m, n)`` becomes factors
+``W_u (m, r)``, ``W_v (r, n)`` with ``r = min(m, n)`` (full rank — the
+R_max > 1 training range of Sec. 3.3) plus a rank mask ``(r,)`` supplied at
+runtime by the rust allocator. An all-ones mask reproduces the dense module
+exactly (up to f32), which is how the R ≥ 1 branch of Eq. 8 is executed with
+static shapes; parameter *accounting* for the R≥1 discontinuity lives in
+rust (``model/params.rs``).
+
+Every exported graph takes a flat, name-ordered list of arrays (the order is
+recorded in the artifact manifest) so the rust runtime binds inputs by name.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_lowrank, rmsnorm, causal_attention
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+def head_dim(cfg):
+    return cfg["d_model"] // cfg["n_heads"]
+
+
+def kv_dim(cfg):
+    return cfg["n_kv_heads"] * head_dim(cfg)
+
+
+def module_dims(cfg):
+    """Ordered list of (name, (m, n)) for the compressible linear modules."""
+    d, ff, kvd = cfg["d_model"], cfg["d_ff"], kv_dim(cfg)
+    out = []
+    for i in range(cfg["n_layers"]):
+        p = f"layers.{i}."
+        out += [
+            (p + "attn.wq", (d, d)),
+            (p + "attn.wk", (kvd, d)),
+            (p + "attn.wv", (kvd, d)),
+            (p + "attn.wo", (d, d)),
+            (p + "mlp.wgate", (ff, d)),
+            (p + "mlp.wup", (ff, d)),
+            (p + "mlp.wdown", (d, ff)),
+        ]
+    return out
+
+
+def aux_params(cfg):
+    """Ordered list of (name, shape) for non-compressible parameters."""
+    d, dh = cfg["d_model"], head_dim(cfg)
+    out = [("embed", (cfg["vocab"], d))]
+    for i in range(cfg["n_layers"]):
+        p = f"layers.{i}."
+        out += [(p + "ln1", (d,)), (p + "ln2", (d,))]
+        if cfg["family"] == "qwen":
+            out += [(p + "qnorm", (dh,)), (p + "knorm", (dh,))]
+    out += [("norm_f", (d,)), ("head", (cfg["vocab"], d))]
+    return out
+
+
+def spec_dense(cfg):
+    """Flat (name, shape) spec of the dense parameterization."""
+    return aux_params(cfg) + [(n, s) for n, s in module_dims(cfg)]
+
+
+def spec_factored(cfg):
+    """Flat (name, shape) spec of the masked-SVD parameterization."""
+    out = list(aux_params(cfg))
+    for name, (m, n) in module_dims(cfg):
+        r = min(m, n)
+        out += [(name + ".u", (m, r)), (name + ".v", (r, n))]
+    for name, (m, n) in module_dims(cfg):
+        out += [("mask:" + name, (min(m, n),))]
+    return out
+
+
+def mask_names(cfg):
+    return ["mask:" + name for name, _ in module_dims(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _rope(x, pos, theta):
+    """Apply rotary embeddings. x: (b, t, h, dh), pos: (b, t) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) * 2.0 / dh))
+    ang = pos[:, :, None].astype(F32) * freqs[None, None, :]     # (b, t, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _linear(params, name, x2d):
+    """Apply module `name` to (rows, n): dense, masked-factored, or overridden.
+
+    A callable under params["__linear__"] (used by the LoRA graph) takes
+    precedence; otherwise a dense `W` entry, otherwise the masked-SVD pair.
+    """
+    ov = params.get("__linear__")
+    if ov is not None:
+        return ov(name, x2d)
+    if name in params:
+        return x2d @ params[name].T
+    return masked_lowrank(x2d, params[name + ".u"], params[name + ".v"],
+                          params["mask:" + name])
+
+
+def _block(cfg, params, i, h, pos):
+    """One transformer block. h: (b, t, d), pos: (b, t)."""
+    b, t, d = h.shape
+    nh, nkv, dh = cfg["n_heads"], cfg["n_kv_heads"], head_dim(cfg)
+    p = f"layers.{i}."
+
+    x = rmsnorm(h.reshape(b * t, d), params[p + "ln1"]).reshape(b, t, d)
+    x2 = x.reshape(b * t, d)
+    q = _linear(params, p + "attn.wq", x2).reshape(b, t, nh, dh)
+    k = _linear(params, p + "attn.wk", x2).reshape(b, t, nkv, dh)
+    v = _linear(params, p + "attn.wv", x2).reshape(b, t, nkv, dh)
+    if cfg["family"] == "qwen":
+        q = rmsnorm(q.reshape(-1, dh), params[p + "qnorm"]).reshape(b, t, nh, dh)
+        k = rmsnorm(k.reshape(-1, dh), params[p + "knorm"]).reshape(b, t, nkv, dh)
+    q = _rope(q, pos, cfg["rope_theta"])
+    k = _rope(k, pos, cfg["rope_theta"])
+    if nkv != nh:
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # pack heads: (b, t, nh, dh) -> (b*nh, t, dh)
+    qp = q.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+    kp = k.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+    vp = v.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+    o = causal_attention(qp, kp, vp, float(dh) ** -0.5)
+    o = o.reshape(b, nh, t, dh).transpose(0, 2, 1, 3).reshape(b * t, d)
+    h = h + _linear(params, p + "attn.wo", o).reshape(b, t, d)
+
+    x = rmsnorm(h.reshape(b * t, d), params[p + "ln2"])
+    g = _linear(params, p + "mlp.wgate", x)
+    u = _linear(params, p + "mlp.wup", x)
+    y = (g * jax.nn.sigmoid(g)) * u                       # SwiGLU
+    h = h + _linear(params, p + "mlp.wdown", y).reshape(b, t, d)
+    return h
+
+
+def forward(cfg, params, tokens):
+    """Logits for tokens (b, t) int32 → (b, t, vocab)."""
+    b, t = tokens.shape
+    d = cfg["d_model"]
+    h = params["embed"][tokens]                           # (b, t, d)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=I32)[None, :], (b, t))
+    for i in range(cfg["n_layers"]):
+        h = _block(cfg, params, i, h, pos)
+    h = rmsnorm(h.reshape(b * t, d), params["norm_f"])
+    return (h @ params["head"].T).reshape(b, t, cfg["vocab"])
+
+
+def nll_tokens(cfg, params, tokens, targets):
+    """Per-position negative log-likelihood (b, t)."""
+    logits = forward(cfg, params, tokens)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - picked
+
+
+def mean_loss(cfg, params, tokens, targets):
+    return jnp.mean(nll_tokens(cfg, params, tokens, targets))
+
+
+# ---------------------------------------------------------------------------
+# Exported graph builders — each returns (fn, input_spec, output_names)
+# where fn takes the flat array list in input_spec order.
+# ---------------------------------------------------------------------------
+
+def _batch_spec(cfg, batch, seq):
+    return [("tokens", (batch, seq), I32), ("targets", (batch, seq), I32)]
+
+
+def _to_spec3(pairs):
+    return [(n, s, F32) for n, s in pairs]
+
+
+def _bind(names):
+    def unflatten(arrays):
+        return dict(zip(names, arrays))
+    return unflatten
+
+
+def make_train_step(cfg):
+    """Dense fwd+bwd: (weights…, tokens, targets) → (loss, grads…)."""
+    wspec = spec_dense(cfg)
+    spec = _to_spec3(wspec) + _batch_spec(cfg, cfg["batch_train"], cfg["seq_train"])
+    names = [n for n, *_ in spec]
+    nw = len(wspec)
+    unflatten = _bind(names)
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, targets = params.pop("tokens"), params.pop("targets")
+
+        def loss_fn(wlist):
+            p = dict(zip([n for n, _ in wspec], wlist))
+            return mean_loss(cfg, p, tokens, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)(list(arrays[:nw]))
+        return (loss, *grads)
+
+    outs = ["loss"] + ["grad:" + n for n, _ in wspec]
+    return fn, spec, outs
+
+
+def make_score_dense(cfg):
+    """Dense per-token NLL: (weights…, tokens, targets) → (nll[b,t],)."""
+    wspec = spec_dense(cfg)
+    spec = _to_spec3(wspec) + _batch_spec(cfg, cfg["batch_eval"], cfg["seq_eval"])
+    names = [n for n, *_ in spec]
+    unflatten = _bind(names)
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, targets = params.pop("tokens"), params.pop("targets")
+        return (nll_tokens(cfg, params, tokens, targets),)
+
+    return fn, spec, ["nll"]
+
+
+def make_score_masked(cfg):
+    """Masked-factored per-token NLL (allocation-time + compressed eval)."""
+    wspec = spec_factored(cfg)
+    spec = _to_spec3(wspec) + _batch_spec(cfg, cfg["batch_eval"], cfg["seq_eval"])
+    names = [n for n, *_ in spec]
+    unflatten = _bind(names)
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, targets = params.pop("tokens"), params.pop("targets")
+        return (nll_tokens(cfg, params, tokens, targets),)
+
+    return fn, spec, ["nll"]
+
+
+def make_mask_fwd_grad(cfg):
+    """The allocation-training step: loss + ∂L/∂mask for every module.
+
+    Masks arrive as runtime inputs (binary under STE — rust decides); the
+    gradient w.r.t. the mask vector is exact, and rust chains it through
+    each method's parameterization (ARA staircase, ARS Gumbel-Sigmoid,
+    Dobi tanh) per Eq. 5.
+    """
+    wspec = spec_factored(cfg)
+    spec = _to_spec3(wspec) + _batch_spec(cfg, cfg["batch_eval"], cfg["seq_eval"])
+    names = [n for n, *_ in spec]
+    mnames = mask_names(cfg)
+    midx = [names.index(mn) for mn in mnames]
+    unflatten = _bind(names)
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, targets = params["tokens"], params["targets"]
+
+        def loss_fn(masks):
+            p = dict(params)
+            p.pop("tokens"), p.pop("targets")
+            for mn, mv in zip(mnames, masks):
+                p[mn] = mv
+            return mean_loss(cfg, p, tokens, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)([arrays[i] for i in midx])
+        return (loss, *grads)
+
+    outs = ["loss"] + ["grad:" + mn for mn in mnames]
+    return fn, spec, outs
+
+
+def make_lora_step(cfg):
+    """LoRA recovery step on the compressed model: loss + grads w.r.t. A,B.
+
+    Forward per module: y = masked_lowrank(x, W_u, W_v, m) + (x@Aᵀ)@Bᵀ with
+    A (lr, n), B (m, lr). Frozen factors+masks are runtime inputs.
+    """
+    lr = cfg["lora_rank"]
+    wspec = spec_factored(cfg)
+    lspec = []
+    for name, (m, n) in module_dims(cfg):
+        lspec += [("lora_a:" + name, (lr, n)), ("lora_b:" + name, (m, lr))]
+    spec = _to_spec3(wspec + lspec) + _batch_spec(cfg, cfg["batch_train"], cfg["seq_train"])
+    names = [n for n, *_ in spec]
+    lnames = [n for n, _ in lspec]
+    lidx = [names.index(ln) for ln in lnames]
+    unflatten = _bind(names)
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, targets = params["tokens"], params["targets"]
+        base = {k: v for k, v in params.items()
+                if not (k.startswith("lora_") or k in ("tokens", "targets"))}
+
+        def loss_fn(loras):
+            lp = dict(zip(lnames, loras))
+
+            # Shadow _linear with a LoRA-augmented version via params dict:
+            def lin(name, x2d):
+                y = masked_lowrank(x2d, base[name + ".u"], base[name + ".v"],
+                                   base["mask:" + name])
+                return y + (x2d @ lp["lora_a:" + name].T) @ lp["lora_b:" + name].T
+
+            p = dict(base)
+            p["__linear__"] = lin
+            return mean_loss(cfg, p, tokens, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)([arrays[i] for i in lidx])
+        return (loss, *grads)
+
+    outs = ["loss"] + ["grad:" + ln for ln in lnames]
+    return fn, spec, outs
+
+
+def make_calibrate(cfg):
+    """Calibration pass: accumulate the per-module input Gram matrices
+    H = Σ xᵀx over a batch (Sec. 3.1 whitening). Rust sums over batches and
+    hands H to the Cholesky/SVD pipeline — activations never leave the
+    device as raw tensors, only as (n, n) statistics."""
+    wspec = spec_dense(cfg)
+    spec = _to_spec3(wspec) + [
+        ("tokens", (cfg["batch_eval"], cfg["seq_eval"]), I32)
+    ]
+    names = [n for n, *_ in spec]
+    unflatten = _bind(names)
+    mods = module_dims(cfg)
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens = params.pop("tokens")
+        caps = {}
+
+        def lin(name, x2d):
+            caps[name] = x2d.T @ x2d
+            return x2d @ params[name].T
+
+        p = dict(params)
+        p["__linear__"] = lin
+        logits = forward(cfg, p, tokens)
+        # keep every weight live: XLA prunes unused parameters from the
+        # compiled signature, which would break name-bound feeding (the
+        # head/final-norm/last-wdown path is otherwise dead code here).
+        anchor = jnp.mean(logits)
+        return tuple(caps[name] for name, _ in mods) + (anchor,)
+
+    outs = ["h:" + name for name, _ in mods] + ["anchor"]
+    return fn, spec, outs
+
+
+# ---------------------------------------------------------------------------
+# Serving graphs: allocation-specialized prefill / decode with KV cache
+# ---------------------------------------------------------------------------
+
+def spec_alloc(cfg, alloc):
+    """Weight spec for an allocation: dense W or truncated (W_u, W_v) per module."""
+    out = list(aux_params(cfg))
+    for name, (m, n) in module_dims(cfg):
+        a = alloc["modules"][name]
+        if a.get("dense", False):
+            out.append((name, (m, n)))
+        else:
+            k = int(a["rank"])
+            out += [(name + ".u", (m, k)), (name + ".v", (k, n))]
+    return out
+
+
+def _linear_alloc(params, name, x2d):
+    if name in params:
+        return x2d @ params[name].T
+    t = x2d @ params[name + ".v"].T
+    return t @ params[name + ".u"].T
+
+
+def _cache_spec(cfg, batch):
+    s, dh, nkv = cfg["max_decode_seq"], head_dim(cfg), cfg["n_kv_heads"]
+    out = []
+    for i in range(cfg["n_layers"]):
+        out += [(f"kcache.{i}", (batch, nkv, s, dh), F32),
+                (f"vcache.{i}", (batch, nkv, s, dh), F32)]
+    return out
+
+
+def _attend_cache(cfg, q, kc, vc, lens):
+    """q: (b, nh, dh); kc/vc: (b, nkv, s, dh); lens: (b,) valid lengths.
+
+    Returns (b, nh, dh) attention over cached positions < lens.
+    """
+    b, nh, dh = q.shape
+    nkv, s = kc.shape[1], kc.shape[2]
+    if nkv != nh:
+        rep = nh // nkv
+        kc = jnp.repeat(kc, rep, axis=1)
+        vc = jnp.repeat(vc, rep, axis=1)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, kc) / jnp.sqrt(F32(dh))
+    valid = jnp.arange(s, dtype=I32)[None, None, :] < lens[:, None, None]
+    scores = jnp.where(valid, scores, jnp.float32(-1e30))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vc)
+
+
+def make_decode(cfg, alloc, batch):
+    """One decode step: (weights…, caches…, tokens[b], lens[b]) →
+    (logits[b,v], caches'…). `lens` counts tokens already in the cache; the
+    new token is written at position `lens` and attended to inclusively.
+    """
+    wspec = _to_spec3(spec_alloc(cfg, alloc))
+    cspec = _cache_spec(cfg, batch)
+    spec = wspec + cspec + [("tokens", (batch,), I32), ("lens", (batch,), I32)]
+    names = [n for n, *_ in spec]
+    unflatten = _bind(names)
+    d, nh, nkv, dh = cfg["d_model"], cfg["n_heads"], cfg["n_kv_heads"], head_dim(cfg)
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, lens = params["tokens"], params["lens"]
+        b = batch
+        h = params["embed"][tokens]                          # (b, d)
+        pos = lens                                           # (b,)
+        new_caches = []
+        for i in range(cfg["n_layers"]):
+            p = f"layers.{i}."
+            x = rmsnorm(h, params[p + "ln1"])
+            q = _linear_alloc(params, p + "attn.wq", x).reshape(b, nh, dh)
+            k = _linear_alloc(params, p + "attn.wk", x).reshape(b, nkv, dh)
+            v = _linear_alloc(params, p + "attn.wv", x).reshape(b, nkv, dh)
+            if cfg["family"] == "qwen":
+                q = rmsnorm(q.reshape(-1, dh), params[p + "qnorm"]).reshape(b, nh, dh)
+                k = rmsnorm(k.reshape(-1, dh), params[p + "knorm"]).reshape(b, nkv, dh)
+            q = _rope(q[:, None], pos[:, None], cfg["rope_theta"])[:, 0]
+            k = _rope(k[:, None], pos[:, None], cfg["rope_theta"])[:, 0]
+            kc, vc = params[f"kcache.{i}"], params[f"vcache.{i}"]
+            # scatter the new k/v at per-seq position `lens`
+            kc = _scatter_cache(kc, k, lens)
+            vc = _scatter_cache(vc, v, lens)
+            new_caches += [kc, vc]
+            o = _attend_cache(cfg, q, kc, vc, lens + 1)
+            h = h + _linear_alloc(params, p + "attn.wo", o.reshape(b, d))
+            x = rmsnorm(h, params[p + "ln2"])
+            g = _linear_alloc(params, p + "mlp.wgate", x)
+            u = _linear_alloc(params, p + "mlp.wup", x)
+            h = h + _linear_alloc(params, p + "mlp.wdown", (g * jax.nn.sigmoid(g)) * u)
+        h = rmsnorm(h, params["norm_f"])
+        logits = h @ params["head"].T
+        return (logits, *new_caches)
+
+    outs = ["logits"] + [n for n, *_ in cspec]
+    return fn, spec, outs
+
+
+def _scatter_cache(cache, kv, lens):
+    """cache (b, nkv, s, dh) ← kv (b, nkv, dh) at per-seq position lens (b,)."""
+    def one(c, x, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, x[:, None, :], i, axis=1)
+    return jax.vmap(one)(cache, kv, lens)
+
+
+def make_prefill(cfg, alloc, batch):
+    """Prompt prefill: (weights…, tokens[b,P]) → (logits_last[b,v], caches…).
+
+    Prompts are fixed-length P = cfg["prefill_len"] (the rust batcher pads);
+    caches are written at positions [0, P).
+    """
+    P = cfg["prefill_len"]
+    wspec = _to_spec3(spec_alloc(cfg, alloc))
+    spec = wspec + [("tokens", (batch, P), I32)]
+    names = [n for n, *_ in spec]
+    unflatten = _bind(names)
+    d, nh, nkv, dh = cfg["d_model"], cfg["n_heads"], cfg["n_kv_heads"], head_dim(cfg)
+    S = cfg["max_decode_seq"]
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens = params["tokens"]
+        b, t = batch, P
+        h = params["embed"][tokens]
+        pos = jnp.broadcast_to(jnp.arange(t, dtype=I32)[None, :], (b, t))
+        caches = []
+        for i in range(cfg["n_layers"]):
+            p = f"layers.{i}."
+            x2 = rmsnorm(h.reshape(b * t, d), params[p + "ln1"])
+            q = _linear_alloc(params, p + "attn.wq", x2).reshape(b, t, nh, dh)
+            k = _linear_alloc(params, p + "attn.wk", x2).reshape(b, t, nkv, dh)
+            v = _linear_alloc(params, p + "attn.wv", x2).reshape(b, t, nkv, dh)
+            if cfg["family"] == "qwen":
+                q = rmsnorm(q.reshape(-1, dh), params[p + "qnorm"]).reshape(b, t, nh, dh)
+                k = rmsnorm(k.reshape(-1, dh), params[p + "knorm"]).reshape(b, t, nkv, dh)
+            q = _rope(q, pos, cfg["rope_theta"])
+            k = _rope(k, pos, cfg["rope_theta"])
+            kr, vr = k, v
+            if nkv != nh:
+                rep = nh // nkv
+                kr = jnp.repeat(k, rep, axis=2)
+                vr = jnp.repeat(v, rep, axis=2)
+            qp = q.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+            kp = kr.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+            vp = vr.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
+            o = causal_attention(qp, kp, vp, float(dh) ** -0.5)
+            o = o.reshape(b, nh, t, dh).transpose(0, 2, 1, 3).reshape(b * t, d)
+            h = h + _linear_alloc(params, p + "attn.wo", o).reshape(b, t, d)
+            x2 = rmsnorm(h.reshape(b * t, d), params[p + "ln2"])
+            g = _linear_alloc(params, p + "mlp.wgate", x2)
+            u = _linear_alloc(params, p + "mlp.wup", x2)
+            h = h + _linear_alloc(params, p + "mlp.wdown",
+                                  (g * jax.nn.sigmoid(g)) * u).reshape(b, t, d)
+            # write caches: (b, t, nkv, dh) -> (b, nkv, S, dh), zero beyond P
+            kc = jnp.zeros((b, nkv, S, dh), F32).at[:, :, :t, :].set(
+                k.transpose(0, 2, 1, 3))
+            vc = jnp.zeros((b, nkv, S, dh), F32).at[:, :, :t, :].set(
+                v.transpose(0, 2, 1, 3))
+            caches += [kc, vc]
+        hf = rmsnorm(h[:, -1, :], params["norm_f"])
+        logits = hf @ params["head"].T
+        return (logits, *caches)
+
+    outs = ["logits"] + [n for n, *_ in _cache_spec(cfg, batch)]
+    return fn, spec, outs

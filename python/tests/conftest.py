@@ -1,0 +1,35 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+MICRO = {
+    "name": "test-llama", "family": "llama",
+    "d_model": 32, "n_layers": 2, "n_heads": 2, "n_kv_heads": 2,
+    "d_ff": 80, "vocab": 64, "max_seq": 32, "rope_theta": 10000.0,
+    "batch_train": 2, "seq_train": 16, "batch_eval": 2, "seq_eval": 16,
+    "lora_rank": 4, "serving": True, "decode_batches": [2],
+    "prefill_len": 8, "max_decode_seq": 24,
+}
+
+MICRO_QWEN = dict(MICRO, name="test-qwen", family="qwen", n_heads=4,
+                  n_kv_heads=2)
+
+
+@pytest.fixture
+def cfg():
+    return dict(MICRO)
+
+
+@pytest.fixture
+def cfg_qwen():
+    return dict(MICRO_QWEN)

@@ -1,0 +1,152 @@
+"""L1 correctness: each Pallas kernel vs its pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; gradients (custom_vjp backward) are checked
+against jax.grad of the reference — these are the surrogates the rust STE
+path consumes, so they are the core correctness signal of the repo.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_lowrank, rmsnorm, causal_attention
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# masked_lowrank
+# ---------------------------------------------------------------------------
+
+@given(rows=st.integers(1, 33), m=st.integers(1, 40), n=st.integers(1, 40),
+       seed=st.integers(0, 2**31 - 1))
+def test_masked_lowrank_matches_ref(rows, m, n, seed):
+    rng = np.random.default_rng(seed)
+    r = min(m, n)
+    x, wu, wv = _arr(rng, rows, n), _arr(rng, m, r), _arr(rng, r, n)
+    mask = jnp.asarray((rng.random(r) > 0.5).astype(np.float32))
+    got = masked_lowrank(x, wu, wv, mask)
+    want = ref.masked_lowrank(x, wu, wv, mask)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_masked_lowrank_probabilistic_mask(seed):
+    """Non-binary masks (the probabilistic p of Eq. 2) must also match."""
+    rng = np.random.default_rng(seed)
+    x, wu, wv = _arr(rng, 8, 24), _arr(rng, 16, 16), _arr(rng, 16, 24)
+    mask = jnp.asarray(rng.random(16).astype(np.float32))
+    np.testing.assert_allclose(masked_lowrank(x, wu, wv, mask),
+                               ref.masked_lowrank(x, wu, wv, mask),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_masked_lowrank_zero_mask_zero_output(rng):
+    x, wu, wv = _arr(rng, 4, 8), _arr(rng, 8, 8), _arr(rng, 8, 8)
+    out = masked_lowrank(x, wu, wv, jnp.zeros(8))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("wrt", [0, 1, 2, 3])
+def test_masked_lowrank_grads_match_ref(rng, wrt):
+    x, wu, wv = _arr(rng, 6, 12), _arr(rng, 10, 12), _arr(rng, 12, 12)
+    mask = jnp.asarray(rng.random(12).astype(np.float32))
+    args = [x, wu, wv, mask]
+
+    def f_k(a):
+        args2 = list(args); args2[wrt] = a
+        return jnp.sum(jnp.sin(masked_lowrank(*args2)))
+
+    def f_r(a):
+        args2 = list(args); args2[wrt] = a
+        return jnp.sum(jnp.sin(ref.masked_lowrank(*args2)))
+
+    gk = jax.grad(f_k)(args[wrt])
+    gr = jax.grad(f_r)(args[wrt])
+    np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-3)
+
+
+def test_masked_lowrank_mask_grad_is_ste_surrogate(rng):
+    """∂L/∂m_i = Σ_rows (dy·W_u)_i · t_i — the quantity rust chains via M."""
+    x, wu, wv = _arr(rng, 5, 8), _arr(rng, 8, 8), _arr(rng, 8, 8)
+    mask = jnp.ones(8)
+    g = jax.grad(lambda mm: 0.5 * jnp.sum(masked_lowrank(x, wu, wv, mm) ** 2))(mask)
+    t = np.asarray(x @ wv.T)
+    y = np.asarray(ref.masked_lowrank(x, wu, wv, mask))
+    du = y @ np.asarray(wu)
+    np.testing.assert_allclose(g, np.sum(du * t, axis=0), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@given(rows=st.integers(1, 64), d=st.integers(2, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g = _arr(rng, rows, d), _arr(rng, d)
+    np.testing.assert_allclose(rmsnorm(x, g), ref.rmsnorm(x, g),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_grads_match_ref(rng):
+    x, g = _arr(rng, 9, 16), _arr(rng, 16)
+    for wrt in (0, 1):
+        def f(a, impl):
+            args = [x, g]; args[wrt] = a
+            return jnp.sum(jnp.cos(impl(*args)))
+        gk = jax.grad(lambda a: f(a, rmsnorm))( [x, g][wrt])
+        gr = jax.grad(lambda a: f(a, ref.rmsnorm))([x, g][wrt])
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_scale_invariance(rng):
+    """rmsnorm(c·x) == rmsnorm(x) for c>0 (up to eps effects)."""
+    x, g = _arr(rng, 4, 32), _arr(rng, 32)
+    a, b = rmsnorm(x, g), rmsnorm(3.7 * x, g)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# causal attention
+# ---------------------------------------------------------------------------
+
+@given(bh=st.integers(1, 6), t=st.integers(1, 24), dh=st.integers(2, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_attention_matches_ref(bh, t, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _arr(rng, bh, t, dh), _arr(rng, bh, t, dh), _arr(rng, bh, t, dh)
+    s = dh ** -0.5
+    np.testing.assert_allclose(causal_attention(q, k, v, s),
+                               ref.causal_attention(q, k, v, s),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_is_causal(rng):
+    """Output at position i must not depend on positions > i."""
+    q, k, v = _arr(rng, 2, 10, 8), _arr(rng, 2, 10, 8), _arr(rng, 2, 10, 8)
+    out1 = np.asarray(causal_attention(q, k, v, 0.3))
+    k2 = k.at[:, 7:, :].set(99.0)
+    v2 = v.at[:, 7:, :].set(-99.0)
+    out2 = np.asarray(causal_attention(q, k2, v2, 0.3))
+    np.testing.assert_allclose(out1[:, :7], out2[:, :7], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_grads_match_ref(rng):
+    q, k, v = _arr(rng, 3, 8, 6), _arr(rng, 3, 8, 6), _arr(rng, 3, 8, 6)
+    for wrt in range(3):
+        def f(a, impl):
+            args = [q, k, v]; args[wrt] = a
+            return jnp.sum(impl(*args, 0.41) ** 2)
+        gk = jax.grad(lambda a: f(a, causal_attention))([q, k, v][wrt])
+        gr = jax.grad(lambda a: f(a, ref.causal_attention))([q, k, v][wrt])
+        np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=2e-4)

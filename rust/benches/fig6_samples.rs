@@ -1,0 +1,46 @@
+//! Fig. 6 (Appendix A.5): PPL vs number of calibration samples at fixed
+//! epochs. Paper shape: rapid improvement up to a knee (~128–256 samples),
+//! marginal gains beyond.
+
+mod common;
+
+use ara_compress::ara::{train_ara, AraConfig};
+use ara_compress::report::Table;
+use common::{claim, pipeline};
+
+fn main() {
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let ws = pl.pretrained().expect("pretrain");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+    let sc = pl.scalecfg.clone();
+
+    let sample_counts = [8usize, 16, 32, 64, 128];
+    let mut t = Table::new(
+        "Fig 6 — PPL vs calibration samples (fixed epochs)",
+        &["Samples", "Wiki2", "C4"],
+    );
+    let mut ppls = Vec::new();
+    for &s in &sample_counts {
+        let ac = AraConfig {
+            target: 0.35,
+            epochs: sc.alloc_epochs,
+            samples: s,
+            ..Default::default()
+        };
+        let (alloc, _) = train_ara(&pl.cfg, &pl.rt, &ws, &fm, &ac).expect("train");
+        let row = pl.evaluate(&format!("{s}"), &ws, &fm, &alloc).expect("eval");
+        t.row(vec![format!("{s}"), format!("{:.2}", row.wiki_ppl), format!("{:.2}", row.c4_ppl)]);
+        ppls.push(row.wiki_ppl);
+    }
+    t.print();
+
+    let early_gain = ppls[0] - ppls[2]; // 8 → 32
+    let late_gain = ppls[3] - ppls[4]; // 64 → 128
+    println!("  early gain (8→32): {early_gain:.3}, late gain (64→128): {late_gain:.3}");
+    claim(
+        "knee shape: early gains ≥ late gains",
+        early_gain >= late_gain - 0.02 * ppls[4],
+    );
+}

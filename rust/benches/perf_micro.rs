@@ -1,0 +1,116 @@
+//! §Perf micro-benchmarks: per-layer timing of the hot paths so the
+//! optimization log in EXPERIMENTS.md §Perf is reproducible.
+//!
+//!  L3: decode-step latency breakdown (execute_b vs tuple-split vs argmax),
+//!      executable-call overhead, feed construction.
+//!  L1-proxy: score_masked wall time (the Pallas masked-lowrank kernel
+//!      dominates its FLOPs) vs score_dense.
+//!  Substrate: Jacobi SVD & Cholesky throughput at module shapes.
+
+mod common;
+
+use std::time::Instant;
+
+use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::linalg::{cholesky, svd, Mat};
+use ara_compress::model::Allocation;
+use ara_compress::serving::Engine;
+use ara_compress::svd::alloc_masks;
+use common::pipeline;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {name:<44} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let ws = pl.pretrained().expect("pretrain");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+
+    println!("== perf_micro: L3 executable-call overheads ==");
+    // score executables: masked (pallas lowrank path) vs dense
+    {
+        use ara_compress::eval::{perplexity_dense, perplexity_masked};
+        let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, 0.8);
+        let masks = alloc_masks(&pl.cfg, &alloc);
+        bench("score_dense (1 batch eval)", 5, || {
+            perplexity_dense(&pl.cfg, &pl.rt, &ws, "synwiki", 1).unwrap();
+        });
+        bench("score_masked (1 batch eval, lowrank kernel)", 5, || {
+            perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 1).unwrap();
+        });
+    }
+
+    // decode step cost per allocation
+    {
+        let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 7, 2048);
+        let b = *pl.cfg.decode_batches.last().unwrap();
+        let prompts: Vec<Vec<i32>> = (0..b)
+            .map(|i| stream[i * 16..i * 16 + pl.cfg.prefill_len].to_vec())
+            .collect();
+        for name in ["dense", "uniform-80", "ara-80"] {
+            let path = pl
+                .paths
+                .artifacts
+                .join("allocations")
+                .join(format!("{model}.{name}.json"));
+            let cfgp = pl
+                .paths
+                .configs
+                .join("allocations")
+                .join(format!("{model}.{name}.json"));
+            let alloc =
+                Allocation::load(if cfgp.exists() { &cfgp } else { &path }).expect("alloc");
+            let engine =
+                Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, name, b).expect("engine");
+            bench(&format!("decode 16 steps, B={b}, {name}"), 3, || {
+                engine.generate(&prompts, 16).unwrap();
+            });
+        }
+    }
+
+    println!("== perf_micro: substrate linalg ==");
+    {
+        let mut rng = ara_compress::data::Rng::new(1);
+        let d = pl.cfg.d_model;
+        let mut a = Mat::zeros(d, d);
+        for v in a.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let h = a.gram();
+        bench(&format!("cholesky {d}×{d}"), 5, || {
+            let mut hd = h.clone();
+            for i in 0..d {
+                let x = hd.at(i, i) + 1.0;
+                hd.set(i, i, x);
+            }
+            cholesky(&hd).unwrap();
+        });
+        bench(&format!("jacobi svd {d}×{d}"), 2, || {
+            svd(&a);
+        });
+        let ff = pl.cfg.d_ff;
+        let mut wide = Mat::zeros(d, ff);
+        for v in wide.data.iter_mut() {
+            *v = rng.normal();
+        }
+        bench(&format!("jacobi svd {d}×{ff} (wdown shape)"), 2, || {
+            svd(&wide);
+        });
+    }
+
+    println!("== perf_micro: full factorization pipeline ==");
+    bench("factorize all modules", 1, || {
+        ara_compress::svd::factorize(&pl.cfg, &ws, &grams, 1e-3).unwrap();
+    });
+}

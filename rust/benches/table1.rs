@@ -1,0 +1,67 @@
+//! Table 1: PPL + zero-shot accuracy for the small model pair across all
+//! methods {Dense, Uniform, DLP, FARMS, STRS, ARS, Dobi-SVD₁, ARA}.
+//!
+//! Ratio mapping (DESIGN.md §2): our scaled models are over-parameterized
+//! for the synthetic grammar, so the paper's 80%/60% operating points
+//! (where the PPL-ratio curve bends on 7B models) correspond to ~35%/25%
+//! here — the bends of our curve. Reproduction target is the *shape*:
+//! mask-trained methods (ARA, Dobi) beat Uniform; layerwise heuristics
+//! (DLP, FARMS) trail.
+
+mod common;
+
+use ara_compress::coordinator::{EvalRow, MethodKind, ALL_METHODS};
+use ara_compress::report::Table;
+use common::{claim, pipeline, push_row, table_headers};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    for model in ["minillama-s", "miniqwen-s"] {
+        let pl = pipeline(model);
+        let ws = pl.pretrained().expect("pretrain");
+        let grams = pl.grams(&ws).expect("calibrate");
+        let fm = pl.factored(&ws, &grams).expect("factorize");
+        let dense = pl.evaluate_dense(&ws).expect("dense eval");
+
+        for ratio in [0.35, 0.25] {
+            let mut t = Table::new(
+                format!("Table 1 — {model} @ {:.0}% compression (≙ paper {}%)", ratio * 100.0, if ratio > 0.3 { 80 } else { 60 }),
+                &table_headers(),
+            );
+            push_row(&mut t, &dense);
+            let mut rows: Vec<(MethodKind, EvalRow)> = Vec::new();
+            for m in ALL_METHODS {
+                let alloc = match pl.allocate(m, ratio, &ws, &grams, &fm) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        eprintln!("  {} failed: {e}", m.name());
+                        continue;
+                    }
+                };
+                let row = pl.evaluate(m.name(), &ws, &fm, &alloc).expect("eval");
+                push_row(&mut t, &row);
+                rows.push((m, row));
+            }
+            t.print();
+
+            let get = |k: MethodKind| rows.iter().find(|(m, _)| *m == k).map(|(_, r)| r);
+            if let (Some(ara), Some(uni)) = (get(MethodKind::Ara), get(MethodKind::Uniform)) {
+                claim(
+                    &format!("{model}@{ratio}: ARA wiki2 PPL ≤ Uniform"),
+                    ara.wiki_ppl <= uni.wiki_ppl * 1.02,
+                );
+                claim(
+                    &format!("{model}@{ratio}: ARA avg acc ≥ Uniform"),
+                    ara.avg_acc >= uni.avg_acc - 1.0,
+                );
+            }
+            if let (Some(ara), Some(dobi)) = (get(MethodKind::Ara), get(MethodKind::Dobi)) {
+                claim(
+                    &format!("{model}@{ratio}: ARA C4 PPL ≤ Dobi-SVD1"),
+                    ara.c4_ppl <= dobi.c4_ppl * 1.02,
+                );
+            }
+        }
+    }
+    println!("table1 wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

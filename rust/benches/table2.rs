@@ -1,0 +1,46 @@
+//! Table 2: the larger model pair at 80% compression — scalability of the
+//! method ordering (paper Table 2: ARA best on both LLaMA2-13B and
+//! Qwen3-14B stand-ins; Dobi strongest baseline; STRS unstable).
+
+mod common;
+
+use ara_compress::coordinator::{EvalRow, MethodKind, ALL_METHODS};
+use ara_compress::report::Table;
+use common::{claim, pipeline, push_row, table_headers};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    for model in ["minillama-m", "miniqwen-m"] {
+        let pl = pipeline(model);
+        let ws = pl.pretrained().expect("pretrain");
+        let grams = pl.grams(&ws).expect("calibrate");
+        let fm = pl.factored(&ws, &grams).expect("factorize");
+        let dense = pl.evaluate_dense(&ws).expect("dense eval");
+
+        let mut t = Table::new(format!("Table 2 — {model} @ 35% compression (≙ paper 80%)"), &table_headers());
+        push_row(&mut t, &dense);
+        let mut rows: Vec<(MethodKind, EvalRow)> = Vec::new();
+        for m in ALL_METHODS {
+            let alloc = match pl.allocate(m, 0.35, &ws, &grams, &fm) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("  {} failed: {e}", m.name());
+                    continue;
+                }
+            };
+            let row = pl.evaluate(m.name(), &ws, &fm, &alloc).expect("eval");
+            push_row(&mut t, &row);
+            rows.push((m, row));
+        }
+        t.print();
+
+        let get = |k: MethodKind| rows.iter().find(|(m, _)| *m == k).map(|(_, r)| r);
+        if let (Some(ara), Some(uni)) = (get(MethodKind::Ara), get(MethodKind::Uniform)) {
+            claim(
+                &format!("{model}: ARA wiki2 PPL ≤ Uniform"),
+                ara.wiki_ppl <= uni.wiki_ppl * 1.02,
+            );
+        }
+    }
+    println!("table2 wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

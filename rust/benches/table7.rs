@@ -1,0 +1,40 @@
+//! Table 7 (Appendix A.5): ablation on the staircase parameter count D.
+//! Paper shape: quality saturates once D is large enough (100 ≈ 1000 >
+//! 10); at our rank counts the sweep is {4, 16, 64}.
+
+mod common;
+
+use ara_compress::ara::{train_ara, AraConfig};
+use ara_compress::report::Table;
+use common::{claim, pipeline};
+
+fn main() {
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let ws = pl.pretrained().expect("pretrain");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+    let sc = pl.scalecfg.clone();
+
+    let mut t = Table::new("Table 7 — ablation on D (staircase steps)", &["D", "Wiki2", "C4"]);
+    let mut ppls = Vec::new();
+    for d in [4usize, 16, 64] {
+        let ac = AraConfig {
+            target: 0.35,
+            d,
+            epochs: sc.alloc_epochs,
+            samples: sc.alloc_samples,
+            ..Default::default()
+        };
+        let (alloc, _) = train_ara(&pl.cfg, &pl.rt, &ws, &fm, &ac).expect("train");
+        let row = pl.evaluate(&format!("D={d}"), &ws, &fm, &alloc).expect("eval");
+        t.row(vec![format!("{d}"), format!("{:.2}", row.wiki_ppl), format!("{:.2}", row.c4_ppl)]);
+        ppls.push(row.wiki_ppl);
+    }
+    t.print();
+
+    claim(
+        "quality saturates: D=16 within 5% of D=64",
+        (ppls[1] - ppls[2]).abs() <= 0.05 * ppls[2],
+    );
+}

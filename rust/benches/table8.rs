@@ -1,0 +1,49 @@
+//! Table 8 (Appendix A.5): sensitivity to λ₁ = λ₂ = λ. Paper shape: final
+//! quality is NOT very sensitive to λ across {50, 100, 200}.
+
+mod common;
+
+use ara_compress::ara::{train_ara, AraConfig};
+use ara_compress::report::Table;
+use common::{claim, pipeline};
+
+fn main() {
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let ws = pl.pretrained().expect("pretrain");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+    let sc = pl.scalecfg.clone();
+
+    let mut t = Table::new(
+        "Table 8 — ablation on λ (λ1 = λ2)",
+        &["λ", "Wiki2", "C4", "Avg%"],
+    );
+    let mut ppls = Vec::new();
+    for lam in [50.0, 100.0, 200.0] {
+        let ac = AraConfig {
+            target: 0.35,
+            lambda1: lam,
+            lambda2: lam,
+            epochs: sc.alloc_epochs,
+            samples: sc.alloc_samples,
+            ..Default::default()
+        };
+        let (alloc, _) = train_ara(&pl.cfg, &pl.rt, &ws, &fm, &ac).expect("train");
+        let row = pl
+            .evaluate(&format!("λ={lam}"), &ws, &fm, &alloc)
+            .expect("eval");
+        t.row(vec![
+            format!("{lam}"),
+            format!("{:.2}", row.wiki_ppl),
+            format!("{:.2}", row.c4_ppl),
+            format!("{:.2}", row.avg_acc),
+        ]);
+        ppls.push(row.wiki_ppl);
+    }
+    t.print();
+
+    let maxp = ppls.iter().cloned().fold(f64::MIN, f64::max);
+    let minp = ppls.iter().cloned().fold(f64::MAX, f64::min);
+    claim("λ-insensitive: spread ≤ 10%", (maxp - minp) <= 0.10 * minp);
+}

@@ -1,0 +1,107 @@
+//! Full-rank guidance (Sec. 3.3): the metric G_R — fraction of (whitened)
+//! output norm preserved at ratio R — and the loss L_g that pushes modules
+//! whose compression is not "worth it" (G_R ≤ R) toward the dense matrix.
+
+use crate::model::ModuleDim;
+use crate::svd::ModuleFactors;
+
+/// Eq. 6: G_R = (L₀ − L_R)/L₀ with L_R the truncation tail at the
+/// parameter-consistent retained rank k(R) = ⌊R·mn/(m+n)⌋ (see masks.rs on
+/// the Eq. 4 rank convention).
+pub fn guidance_metric(dim: &ModuleDim, f: &ModuleFactors, ratio: f64) -> f64 {
+    let r = dim.r_full();
+    // k ≥ 1: the largest singular value is always preserved (v₁ = D)
+    let k = ((ratio * dim.dense_params() as f64 / (dim.m + dim.n) as f64).floor() as usize)
+        .clamp(1, r);
+    let l0 = f.total_norm();
+    if l0 <= 0.0 {
+        return 1.0;
+    }
+    (l0 - f.tail_norm(k)) / l0
+}
+
+/// Eq. 7 plus its STE gradient w.r.t. R:
+/// L_g = 0 if G_R > R else (1 − R); dL_g/dR = 0 or −1 respectively.
+pub fn guidance_loss(dim: &ModuleDim, f: &ModuleFactors, ratio: f64) -> (f64, f64) {
+    let g = guidance_metric(dim, f, ratio);
+    if g > ratio {
+        (0.0, 0.0)
+    } else {
+        ((1.0 - ratio).max(0.0), -1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn factors(sigma: Vec<f64>) -> ModuleFactors {
+        let r = sigma.len();
+        ModuleFactors {
+            wu: Tensor::zeros(&[r, r]),
+            wv: Tensor::zeros(&[r, r]),
+            sigma,
+        }
+    }
+
+    fn dim(r: usize) -> ModuleDim {
+        ModuleDim { name: "t".into(), m: r, n: r }
+    }
+
+    #[test]
+    fn metric_bounds() {
+        // parameter-consistent convention: at ratio R the factorized
+        // alternative retains k = R·mn/(m+n) components (= r/2 for square
+        // modules at R=1) — G_R < 1 there unless the spectrum collapses,
+        // which is exactly why the guidance can fire near R = 1.
+        let f = factors(vec![4.0, 2.0, 1.0, 0.5]);
+        let d = dim(4);
+        let g1 = guidance_metric(&d, &f, 1.0);
+        assert!(g1 > 0.0 && g1 <= 1.0);
+        assert!(g1 < 1.0, "flat-ish square spectrum can't be fully preserved at R=1");
+        let g_half = guidance_metric(&d, &f, 0.5);
+        assert!(g_half > 0.0 && g_half <= g1);
+    }
+
+    #[test]
+    fn metric_monotone_in_ratio() {
+        let f = factors(vec![5.0, 3.0, 2.0, 1.0, 0.5, 0.1]);
+        let d = dim(6);
+        let mut prev = -1.0;
+        for i in 0..=6 {
+            let g = guidance_metric(&d, &f, i as f64 / 6.0);
+            assert!(g >= prev - 1e-12);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn fast_decay_spectrum_prefers_compression() {
+        // nearly rank-1: G_R at small R is already ≈ 1 > R ⇒ no guidance
+        let f = factors(vec![100.0, 0.01, 0.01, 0.01]);
+        let d = dim(4);
+        let (lg, dr) = guidance_loss(&d, &f, 0.25);
+        assert_eq!(lg, 0.0);
+        assert_eq!(dr, 0.0);
+    }
+
+    #[test]
+    fn flat_spectrum_triggers_guidance() {
+        // flat spectrum at R=0.5 ⇒ k=1 of 4 kept: G = 1 − √3/2 ≈ 0.134 ≤ 0.5
+        // ⇒ guidance active with loss 1 − R
+        let f = factors(vec![1.0, 1.0, 1.0, 1.0]);
+        let d = dim(4);
+        let (lg, dr) = guidance_loss(&d, &f, 0.5);
+        assert!((lg - 0.5).abs() < 1e-12);
+        assert_eq!(dr, -1.0);
+    }
+
+    #[test]
+    fn guidance_vanishes_at_dense() {
+        let f = factors(vec![1.0, 1.0, 1.0]);
+        let d = dim(3);
+        let (lg, _) = guidance_loss(&d, &f, 1.0);
+        assert_eq!(lg, 0.0, "1 − R = 0 at the dense point");
+    }
+}

@@ -1,0 +1,138 @@
+//! Per-module mask state: compression ratio (Eq. 3), binary mask (Eq. 4),
+//! and the R ≥ 1 → dense computation-flow switch (Eq. 8).
+
+use crate::model::ModuleDim;
+use crate::tensor::Tensor;
+
+/// Everything derived from one module's probabilistic mask at one step.
+#[derive(Debug, Clone)]
+pub struct MaskState {
+    /// Probabilistic mask p (Eq. 2), length r_full.
+    pub p: Vec<f64>,
+    /// Compression ratio R = (Σp)(m+n)/(mn) — may exceed 1 (Sec. 3.3).
+    pub ratio: f64,
+    /// Retained rank ⌊R·r⌋ (clamped to [1, r]); meaningful when R < 1.
+    pub k: usize,
+    /// R ≥ 1: the module runs (and is counted) as the dense matrix.
+    pub dense: bool,
+}
+
+/// Eq. 3: R = (Σ_i p_i)(m+n)/(mn).
+pub fn module_ratio(dim: &ModuleDim, p: &[f64]) -> f64 {
+    let sum: f64 = p.iter().sum();
+    sum * (dim.m + dim.n) as f64 / (dim.m as f64 * dim.n as f64)
+}
+
+/// Eq. 4 + Eq. 8: binary mask over the full rank; all-ones when dense.
+///
+/// Rank conversion: the retained rank equals the probability mass,
+/// k = round(Σp) — the binary mask then stores k(m+n) parameters, exactly
+/// the expected parameter count of the probabilistic mask, so R (Eq. 3) is
+/// consistent between the two. (Eq. 4 as literally printed, k = ⌊R·r⌋, is
+/// dimensionally inconsistent for square modules — R = 1 would retain the
+/// full rank at 2× the dense parameter count; see DESIGN.md §7.)
+pub fn binary_mask(dim: &ModuleDim, p: &[f64]) -> MaskState {
+    let r = dim.r_full();
+    assert_eq!(p.len(), r);
+    let ratio = module_ratio(dim, p);
+    let dense = ratio >= 1.0;
+    let sum: f64 = p.iter().sum();
+    let k = (sum.round() as usize).clamp(1, r);
+    MaskState { p: p.to_vec(), ratio, k, dense }
+}
+
+impl MaskState {
+    /// The f32 mask tensor fed to the AOT executable: all-ones in the dense
+    /// regime (numerically identical to W at full rank), top-k otherwise.
+    pub fn mask_tensor(&self, dim: &ModuleDim) -> Tensor {
+        let r = dim.r_full();
+        let mut t = Tensor::zeros(&[r]);
+        let k = if self.dense { r } else { self.k };
+        for i in 0..k {
+            t.data[i] = 1.0;
+        }
+        t
+    }
+
+    /// Parameters this module contributes under Eq. 8 accounting:
+    /// dense ⇒ mn, factored ⇒ k(m+n).
+    pub fn params(&self, dim: &ModuleDim) -> usize {
+        if self.dense {
+            dim.dense_params()
+        } else {
+            dim.factored_params(self.k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dim(m: usize, n: usize) -> ModuleDim {
+        ModuleDim { name: "t".into(), m, n }
+    }
+
+    #[test]
+    fn ratio_formula() {
+        let d = dim(10, 10);
+        let p = vec![1.0; 10]; // Σp = 10 ⇒ R = 10·20/100 = 2
+        assert!((module_ratio(&d, &p) - 2.0).abs() < 1e-12);
+        let p = vec![0.5; 10]; // R = 1
+        assert!((module_ratio(&d, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_simplex_mask_exceeds_one() {
+        // with α on the simplex, p_1 = 1 … always Σp ≥ 1, and for square
+        // modules R ≥ (m+n)/(mn) — the R_max > 1 range needs Σp ≥ mn/(m+n),
+        // reachable since Σp can approach r > mn/(m+n).
+        let d = dim(8, 8);
+        let p = vec![1.0; 8];
+        let st = binary_mask(&d, &p);
+        assert!(st.dense);
+        assert_eq!(st.mask_tensor(&d).data.iter().sum::<f32>() as usize, 8);
+        assert_eq!(st.params(&d), 64);
+    }
+
+    #[test]
+    fn low_ratio_masks_topk() {
+        let d = dim(16, 16);
+        let mut p = vec![0.0; 16];
+        p[0] = 1.0;
+        p[1] = 1.0; // Σp = 2 ⇒ R = 2·32/256 = 0.25, retained rank k = Σp = 2
+        let st = binary_mask(&d, &p);
+        assert!(!st.dense);
+        assert_eq!(st.k, 2);
+        let m = st.mask_tensor(&d);
+        assert_eq!(&m.data[..2], &[1.0, 1.0]);
+        assert!(m.data[2..].iter().all(|&x| x == 0.0));
+        assert_eq!(st.params(&d), 2 * 32);
+        // storage consistency: k(m+n) = R·mn
+        assert!((st.params(&d) as f64 - st.ratio * 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_clamped_to_at_least_one() {
+        let d = dim(16, 16);
+        let st = binary_mask(&d, &vec![0.0; 16]);
+        assert_eq!(st.k, 1);
+    }
+
+    #[test]
+    fn params_discontinuity_at_one() {
+        // crossing R=1 flips to the dense branch: equal-or-cheaper storage
+        // but the *exact* matrix instead of a rank-r/2 approximation — the
+        // paper's non-smooth gain, expressed in quality at equal bytes.
+        let d = dim(12, 12);
+        let p_lo = vec![0.49; 12]; // R ≈ 0.98 → factored, k = 6
+        let p_hi = vec![0.51; 12]; // R ≈ 1.02 → dense
+        let lo = binary_mask(&d, &p_lo);
+        let hi = binary_mask(&d, &p_hi);
+        assert!(!lo.dense && hi.dense);
+        assert!(hi.params(&d) <= lo.params(&d) + (d.m + d.n));
+        // dense mask enables everything; factored keeps only k
+        assert_eq!(hi.mask_tensor(&d).data.iter().sum::<f32>() as usize, 12);
+        assert_eq!(lo.mask_tensor(&d).data.iter().sum::<f32>() as usize, lo.k);
+    }
+}

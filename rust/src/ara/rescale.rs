@@ -1,0 +1,147 @@
+//! Post-training proportional rescale (Alg. 1 step 26): the soft L_c
+//! constraint cannot hit the target exactly, so all module ratios are
+//! scaled by a common factor s — modules pushed to/past the dense point are
+//! capped at mn — and s is found by bisection so the global parameter count
+//! meets the target within one rank unit.
+
+use crate::model::{Allocation, ModuleAlloc, ModuleDim};
+
+/// Scale per-module ratios to meet `target` (global, compressible scope).
+///
+/// `ratios[i]` is module i's learned R (may exceed 1). Returns the final
+/// allocation: `s·R ≥ 1` (or k past the break-even rank) ⇒ Dense, else
+/// Rank(⌊s·R·r⌋ clamped to ≥1).
+pub fn rescale_to_target(dims: &[ModuleDim], ratios: &[f64], target: f64, name: &str) -> Allocation {
+    assert_eq!(dims.len(), ratios.len());
+    let total: usize = dims.iter().map(|d| d.dense_params()).sum();
+    let want = target * total as f64;
+
+    let params_at = |s: f64| -> f64 {
+        dims.iter()
+            .zip(ratios)
+            .map(|(d, &r)| module_params_at(d, s * r) as f64)
+            .sum()
+    };
+
+    // params_at is monotone non-decreasing in s; bisection over s.
+    let (mut lo, mut hi) = (0.0, 1.0);
+    while params_at(hi) < want && hi < 1e6 {
+        hi *= 2.0;
+    }
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if params_at(mid) < want {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let s = 0.5 * (lo + hi);
+
+    let mut alloc = Allocation::new(name);
+    for (d, &r) in dims.iter().zip(ratios) {
+        alloc.set(&d.name, decide(d, s * r));
+    }
+    alloc
+}
+
+fn decide(d: &ModuleDim, ratio: f64) -> ModuleAlloc {
+    if ratio >= 1.0 {
+        return ModuleAlloc::Dense;
+    }
+    // parameter-consistent rank: k(m+n) ≈ ratio·mn
+    let k = ((ratio * d.dense_params() as f64 / (d.m + d.n) as f64).floor() as usize)
+        .clamp(1, d.r_full());
+    if d.factored_params(k) >= d.dense_params() {
+        ModuleAlloc::Dense
+    } else {
+        ModuleAlloc::Rank(k)
+    }
+}
+
+fn module_params_at(d: &ModuleDim, ratio: f64) -> usize {
+    match decide(d, ratio) {
+        ModuleAlloc::Dense => d.dense_params(),
+        ModuleAlloc::Rank(k) => d.factored_params(k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::alloc_params_for_dims;
+
+    fn dims() -> Vec<ModuleDim> {
+        vec![
+            ModuleDim { name: "a".into(), m: 32, n: 32 },
+            ModuleDim { name: "b".into(), m: 16, n: 32 },
+            ModuleDim { name: "c".into(), m: 80, n: 32 },
+            ModuleDim { name: "d".into(), m: 32, n: 80 },
+        ]
+    }
+
+    fn achieved(dims: &[ModuleDim], alloc: &Allocation) -> f64 {
+        let total: usize = dims.iter().map(|d| d.dense_params()).sum();
+        alloc_params_for_dims(dims, alloc) as f64 / total as f64
+    }
+
+    #[test]
+    fn hits_target_within_tolerance() {
+        let dims = dims();
+        for target in [0.8, 0.6, 0.4] {
+            let ratios = vec![0.9, 0.5, 1.2, 0.7];
+            let alloc = rescale_to_target(&dims, &ratios, target, "t");
+            let got = achieved(&dims, &alloc);
+            // within one rank-unit of every module
+            let slack: f64 = dims
+                .iter()
+                .map(|d| (d.m + d.n) as f64)
+                .sum::<f64>()
+                / dims.iter().map(|d| d.dense_params()).sum::<usize>() as f64;
+            assert!(
+                (got - target).abs() <= slack + 1e-9,
+                "target {target} got {got} slack {slack}"
+            );
+        }
+    }
+
+    #[test]
+    fn preserves_relative_ordering() {
+        let dims = dims();
+        let ratios = vec![0.2, 0.4, 0.6, 0.8];
+        let alloc = rescale_to_target(&dims, &ratios, 0.5, "t");
+        let ks: Vec<f64> = dims
+            .iter()
+            .map(|d| match alloc.get(&d.name) {
+                ModuleAlloc::Dense => 1.0,
+                ModuleAlloc::Rank(k) => d.factored_params(k) as f64 / d.dense_params() as f64,
+            })
+            .collect();
+        // module with larger learned R keeps a larger achieved ratio
+        for i in 1..ks.len() {
+            assert!(ks[i] >= ks[i - 1] - 0.05);
+        }
+    }
+
+    #[test]
+    fn dense_modules_stay_dense_when_budget_allows() {
+        let dims = dims();
+        // a: way past 1 ⇒ dense; generous global target
+        let ratios = vec![1.5, 0.9, 0.9, 0.9];
+        let alloc = rescale_to_target(&dims, &ratios, 0.95, "t");
+        assert_eq!(alloc.get("a"), ModuleAlloc::Dense);
+    }
+
+    #[test]
+    fn tiny_target_still_valid() {
+        let dims = dims();
+        let ratios = vec![1.0, 1.0, 1.0, 1.0];
+        let alloc = rescale_to_target(&dims, &ratios, 0.05, "t");
+        for d in &dims {
+            match alloc.get(&d.name) {
+                ModuleAlloc::Rank(k) => assert!(k >= 1),
+                ModuleAlloc::Dense => panic!("5% target cannot keep dense modules"),
+            }
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Shared executor for mask-training methods: wraps the AOT `mask_fwd_grad`
+//! executable with the calibration batches, returning (loss, ∂L/∂mask per
+//! module). ARA, ARS and Dobi-SVD₁ all train through this single interface,
+//! which is what makes the Table 5 mask-ablation a controlled comparison.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::config::ModelCfg;
+use crate::data::{batches, corpus_spec, generate_tokens};
+use crate::model::{module_dims, ModuleDim, WeightStore};
+use crate::runtime::{Feed, Runtime};
+use crate::svd::{factored_feeds, FactoredModel};
+use crate::tensor::{IntTensor, Tensor};
+use crate::Result;
+
+pub struct MaskGradRunner<'a> {
+    pub cfg: &'a ModelCfg,
+    pub ws: &'a WeightStore,
+    pub fm: &'a FactoredModel,
+    exe: std::rc::Rc<crate::runtime::Exe>,
+    data: Vec<(IntTensor, IntTensor)>,
+    pub dims: Vec<ModuleDim>,
+}
+
+impl<'a> MaskGradRunner<'a> {
+    /// `samples` calibration sequences (paper: 256×512 tokens of C4 →
+    /// scaled `sync4` batches here), seeded.
+    pub fn new(
+        cfg: &'a ModelCfg,
+        rt: &Runtime,
+        ws: &'a WeightStore,
+        fm: &'a FactoredModel,
+        corpus: &str,
+        samples: usize,
+        seed: u64,
+    ) -> Result<MaskGradRunner<'a>> {
+        let exe = rt.load("mask_fwd_grad")?;
+        let spec = corpus_spec(corpus);
+        let n_batches = samples.div_ceil(cfg.batch_eval).max(1);
+        let need = n_batches * cfg.batch_eval * (cfg.seq_eval + 1) + 1;
+        let stream = generate_tokens(cfg.vocab, spec, seed, need);
+        let data = batches(&stream, cfg.batch_eval, cfg.seq_eval);
+        Ok(MaskGradRunner { cfg, ws, fm, exe, data, dims: module_dims(cfg) })
+    }
+
+    /// Number of batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.len()
+    }
+
+    /// One fwd+bwd over batch `idx` with the given binary/probabilistic
+    /// masks. Returns (CE loss, ∂L/∂mask per module in f64).
+    pub fn step(
+        &self,
+        masks: &BTreeMap<String, Tensor>,
+        idx: usize,
+    ) -> Result<(f64, BTreeMap<String, Vec<f64>>)> {
+        let (toks, tgts) = &self.data[idx % self.data.len()];
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        factored_feeds(self.ws, self.fm, masks, &mut feeds);
+        feeds.insert("tokens", Feed::I32(toks));
+        feeds.insert("targets", Feed::I32(tgts));
+        let out = self.exe.run(&feeds)?;
+        let loss = out.scalar("loss")? as f64;
+        let mut grads = BTreeMap::new();
+        for d in &self.dims {
+            let g = out.tensor(&format!("grad:mask:{}", d.name))?;
+            grads.insert(d.name.clone(), g.data.iter().map(|&x| x as f64).collect());
+        }
+        Ok((loss, grads))
+    }
+}

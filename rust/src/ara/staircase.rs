@@ -1,0 +1,187 @@
+//! The staircase mapping matrix M ∈ {0,1}^{D×r} (Eq. 2 and Appendix A.5).
+//!
+//! Column i has v_i ones (bottom-aligned), v non-increasing with v_1 = D
+//! and v_r = 1, so p = α·M is non-increasing whenever α ≥ 0 — the
+//! monotonicity property — and ∂p_i/∂α_j = 1[j ≥ D − v_i] gives every α_j
+//! a global, non-vanishing influence (the paper's fix for tanh locality).
+//! M is never materialized: both the mask map and its transpose-chain are
+//! O(D + r) via the v vector.
+
+/// Staircase structure for one module: D trainable parameters over r ranks.
+#[derive(Debug, Clone)]
+pub struct Staircase {
+    pub d: usize,
+    pub r: usize,
+    /// v[i] = number of ones in column i (non-increasing, v[0]=D, v[r-1]=1).
+    v: Vec<usize>,
+}
+
+impl Staircase {
+    pub fn new(d: usize, r: usize) -> Staircase {
+        assert!(d >= 1 && r >= 1);
+        let mut v = Vec::with_capacity(r);
+        for i in 0..r {
+            // linear descent from D to 1 across columns (every ~r/D columns
+            // share a step, per Appendix A.5)
+            let frac = (r - i) as f64 / r as f64;
+            let vi = (frac * d as f64).ceil() as usize;
+            v.push(vi.clamp(1, d));
+        }
+        v[0] = d;
+        if r > 1 {
+            v[r - 1] = 1; // r = 1 keeps v = [D]: the lone column sums all of α
+        }
+        // enforce non-increasing (ceil rounding can create tiny bumps)
+        for i in 1..r {
+            if v[i] > v[i - 1] {
+                v[i] = v[i - 1];
+            }
+        }
+        Staircase { d, r, v }
+    }
+
+    /// p = α·M: p_i = Σ_{j ≥ D−v_i} α_j (suffix sums of α).
+    pub fn prob_mask(&self, alpha: &[f64]) -> Vec<f64> {
+        assert_eq!(alpha.len(), self.d);
+        // suffix[j] = Σ_{t ≥ j} α_t
+        let mut suffix = vec![0.0; self.d + 1];
+        for j in (0..self.d).rev() {
+            suffix[j] = suffix[j + 1] + alpha[j];
+        }
+        self.v.iter().map(|&vi| suffix[self.d - vi]).collect()
+    }
+
+    /// Chain rule (Eq. 5): dL/dα_j = Σ_i 1[j ≥ D−v_i]·dL/dp_i.
+    /// Column i contributes to the suffix starting at D−v_i, so we scatter
+    /// into prefix-difference form and integrate.
+    pub fn chain_grad(&self, dmask: &[f64]) -> Vec<f64> {
+        assert_eq!(dmask.len(), self.r);
+        let mut start_acc = vec![0.0; self.d + 1];
+        for (i, &g) in dmask.iter().enumerate() {
+            start_acc[self.d - self.v[i]] += g;
+        }
+        // dα_j = Σ over columns whose start ≤ j  ⇒ prefix sum
+        let mut out = vec![0.0; self.d];
+        let mut run = 0.0;
+        for j in 0..self.d {
+            run += start_acc[j];
+            out[j] = run;
+        }
+        out
+    }
+
+    /// Column heights (for inspection / tests).
+    pub fn heights(&self) -> &[usize] {
+        &self.v
+    }
+
+    /// α initialization targeting retained rank `k_init`: a near-delta at
+    /// the staircase step whose suffix covers exactly the first ~k columns
+    /// (so p ≈ 1[i < k]), mixed with 10% uniform mass for gradient flow —
+    /// the analogue of Dobi starting its boundary at the target rank.
+    pub fn init_alpha(&self, k_init: usize) -> Vec<f64> {
+        let k = k_init.clamp(1, self.r);
+        // p_i = 1 for all i with v_i ≥ D − j*; pick j* from the height at
+        // the first column we want OFF.
+        let v_off = if k < self.r { self.v[k] } else { 1 };
+        let jstar = (self.d - v_off).min(self.d - 1);
+        let mut a = vec![0.1 / self.d as f64; self.d];
+        a[jstar] += 0.9;
+        let s: f64 = a.iter().sum();
+        for x in a.iter_mut() {
+            *x /= s;
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn boundary_heights() {
+        for (d, r) in [(4, 8), (16, 48), (100, 64), (3, 3), (1, 5), (8, 1)] {
+            let s = Staircase::new(d, r);
+            let v = s.heights();
+            assert_eq!(v[0], d);
+            if r > 1 {
+                assert_eq!(v[r - 1], 1);
+            }
+            for i in 1..r {
+                assert!(v[i] <= v[i - 1], "heights must be non-increasing");
+            }
+        }
+    }
+
+    #[test]
+    fn mask_is_monotone_for_nonneg_alpha() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let d = 1 + rng.below(20);
+            let r = 1 + rng.below(40);
+            let s = Staircase::new(d, r);
+            let mut alpha: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let sum: f64 = alpha.iter().sum();
+            alpha.iter_mut().for_each(|x| *x /= sum);
+            let p = s.prob_mask(&alpha);
+            for i in 1..r {
+                assert!(p[i - 1] >= p[i] - 1e-12, "monotonicity violated");
+            }
+            // simplex α ⇒ p_1 = 1 (v_1 = D: sums all of α)
+            assert!((p[0] - 1.0).abs() < 1e-9);
+            assert!(p[r - 1] >= 0.0 && p[r - 1] <= 1.0);
+        }
+    }
+
+    #[test]
+    fn mask_matches_dense_matrix_multiply() {
+        let mut rng = Rng::new(2);
+        let s = Staircase::new(7, 13);
+        let alpha: Vec<f64> = (0..7).map(|_| rng.f64()).collect();
+        let p = s.prob_mask(&alpha);
+        // dense M: M[j][i] = 1 iff j >= D - v_i
+        for i in 0..13 {
+            let mut want = 0.0;
+            for j in 0..7 {
+                if j >= 7 - s.heights()[i] {
+                    want += alpha[j];
+                }
+            }
+            assert!((p[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn chain_grad_is_transpose_of_forward() {
+        // <chain_grad(g), α> must equal <g, prob_mask(α)> for all α, g
+        // (adjoint identity — the exact STE chain of Eq. 5).
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let d = 1 + rng.below(15);
+            let r = 1 + rng.below(30);
+            let s = Staircase::new(d, r);
+            let alpha: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let g: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+            let lhs: f64 = s.chain_grad(&g).iter().zip(&alpha).map(|(a, b)| a * b).sum();
+            let rhs: f64 = g.iter().zip(&s.prob_mask(&alpha)).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-9, "adjoint identity violated");
+        }
+    }
+
+    #[test]
+    fn every_alpha_has_global_influence() {
+        // the anti-tanh property: each α_j influences a contiguous top
+        // segment of p, and α_{D-1} influences every p_i.
+        let s = Staircase::new(5, 10);
+        let g = vec![1.0; 10];
+        let da = s.chain_grad(&g);
+        assert!(da.iter().all(|&x| x > 0.0));
+        // later α entries touch more columns
+        for j in 1..5 {
+            assert!(da[j] >= da[j - 1]);
+        }
+        assert_eq!(da[4], 10.0); // α_D contributes to every column
+    }
+}

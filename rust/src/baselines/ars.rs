@@ -1,0 +1,120 @@
+//! ARS (Adaptive Rank Selection): per-singular-value Gumbel-Sigmoid mask
+//! training. Each rank index gets an independent logit θᵢ; the training
+//! mask is σ((θᵢ + g)/τ) with Gumbel noise g. No monotonicity is enforced —
+//! exactly the deficiency Fig. 1(b) illustrates — so the learned masks can
+//! scatter across the spectrum and convergence is slow (Table 5).
+
+use std::collections::BTreeMap;
+
+use crate::ara::{rescale_to_target, MaskGradRunner};
+use crate::config::ModelCfg;
+use crate::data::Rng;
+use crate::model::{module_dims, Allocation};
+use crate::training::{AdamW, AdamWConfig};
+use crate::tensor::Tensor;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ArsConfig {
+    pub target: f64,
+    pub lambda: f64,
+    pub temperature: f64,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for ArsConfig {
+    fn default() -> Self {
+        ArsConfig { target: 0.8, lambda: 100.0, temperature: 0.4, epochs: 10, lr: 5e-2, seed: 11 }
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Train Gumbel-Sigmoid masks; final ranks from the expected retained mass.
+pub fn ars_alloc(
+    cfg: &ModelCfg,
+    runner: &MaskGradRunner,
+    ac: &ArsConfig,
+) -> Result<Allocation> {
+    let dims = module_dims(cfg);
+    let total_c: f64 = dims.iter().map(|d| d.dense_params() as f64).sum();
+    let mut rng = Rng::new(ac.seed);
+    // logits start mildly positive: masks begin near-keep
+    let mut thetas: Vec<Vec<f64>> = dims.iter().map(|d| vec![1.0; d.r_full()]).collect();
+    let mut opt = AdamW::new(AdamWConfig { lr: ac.lr, weight_decay: 0.0, ..Default::default() });
+
+    let steps = runner.batches_per_epoch();
+    for epoch in 0..ac.epochs {
+        for step in 0..steps {
+            // sample soft masks with Gumbel noise
+            let mut masks = BTreeMap::new();
+            let mut soft: Vec<Vec<f64>> = Vec::with_capacity(dims.len());
+            for (i, d) in dims.iter().enumerate() {
+                let m: Vec<f64> = thetas[i]
+                    .iter()
+                    .map(|&t| {
+                        let u = rng.f64().clamp(1e-9, 1.0 - 1e-9);
+                        let g = -(-(u.ln())).ln(); // Gumbel(0,1)
+                        sigmoid((t + g) / ac.temperature)
+                    })
+                    .collect();
+                masks.insert(
+                    d.name.clone(),
+                    Tensor::from_vec(&[d.r_full()], m.iter().map(|&x| x as f32).collect()),
+                );
+                soft.push(m);
+            }
+
+            let (_loss, dmasks) = runner.step(&masks, epoch * steps + step)?;
+
+            // ratio penalty: (Σ_l R_l·mn_l/C_t − target)², R_l from soft mask
+            let achieved: f64 = dims
+                .iter()
+                .zip(&soft)
+                .map(|(d, m)| {
+                    let r = m.iter().sum::<f64>() * (d.m + d.n) as f64
+                        / (d.m as f64 * d.n as f64);
+                    r.min(1.0) * d.dense_params() as f64
+                })
+                .sum::<f64>()
+                / total_c;
+            let dpen = 2.0 * (achieved - ac.target) * ac.lambda;
+
+            opt.step();
+            for (i, d) in dims.iter().enumerate() {
+                let dm = &dmasks[&d.name];
+                let drdm = (d.m + d.n) as f64 / (d.m as f64 * d.n as f64);
+                let grad: Vec<f64> = thetas[i]
+                    .iter()
+                    .zip(dm)
+                    .zip(&soft[i])
+                    .map(|((_t, &g_ce), &s)| {
+                        let dsig = s * (1.0 - s) / ac.temperature;
+                        (g_ce + dpen * (d.dense_params() as f64 / total_c) * drdm) * dsig
+                    })
+                    .collect();
+                opt.update_f64(&d.name, &mut thetas[i], &grad, 1.0);
+            }
+        }
+    }
+
+    // final per-module ratio from expected retained mass Σσ(θ)
+    let ratios: Vec<f64> = dims
+        .iter()
+        .zip(&thetas)
+        .map(|(d, th)| {
+            let keep: f64 = th.iter().map(|&t| sigmoid(t)).sum();
+            keep * (d.m + d.n) as f64 / (d.m as f64 * d.n as f64)
+        })
+        .collect();
+    Ok(rescale_to_target(
+        &dims,
+        &ratios,
+        ac.target,
+        &format!("ars-{}", (ac.target * 100.0).round() as usize),
+    ))
+}

@@ -1,0 +1,108 @@
+//! Dobi-SVD₁: tanh-parameterized truncation boundary. Each module has one
+//! trainable scalar b with mask mᵢ = 0.5·tanh(β(b − i)) + 0.5 — monotone by
+//! construction (Fig. 1(c)) but with gradients concentrated around i ≈ b:
+//! the "local update" weakness ARA's staircase fixes. Trains on the same
+//! loss surface as ARA via MaskGradRunner.
+
+use std::collections::BTreeMap;
+
+use crate::ara::{rescale_to_target, MaskGradRunner};
+use crate::config::ModelCfg;
+use crate::model::{module_dims, Allocation};
+use crate::tensor::Tensor;
+use crate::training::{AdamW, AdamWConfig};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct DobiConfig {
+    pub target: f64,
+    pub lambda: f64,
+    /// tanh sharpness β (paper's Dobi baseline: α=200 on 4096 ranks ⇒ keep
+    /// the same *relative* sharpness at our rank counts).
+    pub beta: f64,
+    pub epochs: usize,
+    pub lr: f64,
+}
+
+impl Default for DobiConfig {
+    fn default() -> Self {
+        DobiConfig { target: 0.8, lambda: 100.0, beta: 0.5, epochs: 20, lr: 2.0 }
+    }
+}
+
+/// Train per-module truncation boundaries.
+pub fn dobi_alloc(
+    cfg: &ModelCfg,
+    runner: &MaskGradRunner,
+    dc: &DobiConfig,
+) -> Result<Allocation> {
+    let dims = module_dims(cfg);
+    let total_c: f64 = dims.iter().map(|d| d.dense_params() as f64).sum();
+    // boundary starts at the target rank position
+    let mut bs: Vec<f64> = dims
+        .iter()
+        .map(|d| dc.target * d.dense_params() as f64 / (d.m + d.n) as f64)
+        .collect();
+    let mut opt = AdamW::new(AdamWConfig { lr: dc.lr, weight_decay: 0.0, ..Default::default() });
+
+    let steps = runner.batches_per_epoch();
+    for epoch in 0..dc.epochs {
+        for step in 0..steps {
+            let mut masks = BTreeMap::new();
+            let mut soft: Vec<Vec<f64>> = Vec::with_capacity(dims.len());
+            for (i, d) in dims.iter().enumerate() {
+                let m: Vec<f64> = (0..d.r_full())
+                    .map(|j| 0.5 * (dc.beta * (bs[i] - j as f64)).tanh() + 0.5)
+                    .collect();
+                masks.insert(
+                    d.name.clone(),
+                    Tensor::from_vec(&[d.r_full()], m.iter().map(|&x| x as f32).collect()),
+                );
+                soft.push(m);
+            }
+
+            let (_loss, dmasks) = runner.step(&masks, epoch * steps + step)?;
+
+            let achieved: f64 = dims
+                .iter()
+                .zip(&soft)
+                .map(|(d, m)| {
+                    let r = m.iter().sum::<f64>() * (d.m + d.n) as f64
+                        / (d.m as f64 * d.n as f64);
+                    r.min(1.0) * d.dense_params() as f64
+                })
+                .sum::<f64>()
+                / total_c;
+            let dpen = 2.0 * (achieved - dc.target) * dc.lambda;
+
+            opt.step();
+            for (i, d) in dims.iter().enumerate() {
+                let dm = &dmasks[&d.name];
+                let drdm = (d.m + d.n) as f64 / (d.m as f64 * d.n as f64);
+                // dm_j/db = 0.5·β·sech²(β(b−j)) — sharply peaked at j≈b
+                let mut g = 0.0;
+                for (j, &gm) in dm.iter().enumerate() {
+                    let t = (dc.beta * (bs[i] - j as f64)).tanh();
+                    let dsig = 0.5 * dc.beta * (1.0 - t * t);
+                    let gtot = gm + dpen * (d.dense_params() as f64 / total_c) * drdm;
+                    g += gtot * dsig;
+                }
+                let mut b = [bs[i]];
+                opt.update_f64(&d.name, &mut b, &[g], 1.0);
+                bs[i] = b[0].clamp(1.0, d.r_full() as f64);
+            }
+        }
+    }
+
+    let ratios: Vec<f64> = dims
+        .iter()
+        .zip(&bs)
+        .map(|(d, &b)| b * (d.m + d.n) as f64 / (d.m as f64 * d.n as f64))
+        .collect();
+    Ok(rescale_to_target(
+        &dims,
+        &ratios,
+        dc.target,
+        &format!("dobi-{}", (dc.target * 100.0).round() as usize),
+    ))
+}

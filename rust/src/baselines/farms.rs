@@ -1,0 +1,97 @@
+//! FARMS-style allocation: heavy-tailed self-regularization theory. The
+//! Hill estimator of each layer's empirical spectral density (eigenvalues
+//! λ = σ² of the weight matrices, aspect-ratio-normalized by using the
+//! module SVD spectra directly) estimates training quality: small α =
+//! heavy tail = well-trained ⇒ keep more; large α = light tail =
+//! under-trained ⇒ compress harder. `eps` bounds the deviation (paper: 0.3).
+
+use crate::config::ModelCfg;
+use crate::model::{module_dims, Allocation, ModuleAlloc};
+use crate::svd::FactoredModel;
+
+/// Hill estimator over the top half of the spectrum:
+/// α = 1 + k / Σ_{i<k} ln(λᵢ/λ_k).
+pub fn hill_alpha(sigma: &[f64]) -> f64 {
+    let lambdas: Vec<f64> = sigma.iter().map(|s| (s * s).max(1e-300)).collect();
+    let k = (lambdas.len() / 2).max(1);
+    let lk = lambdas[k - 1];
+    let mut s = 0.0;
+    for l in lambdas.iter().take(k) {
+        s += (l / lk).ln();
+    }
+    if s <= 1e-12 {
+        return 10.0; // degenerate flat spectrum ⇒ treat as very light tail
+    }
+    1.0 + k as f64 / s
+}
+
+pub fn farms_alloc(cfg: &ModelCfg, fm: &FactoredModel, target: f64, eps: f64) -> Allocation {
+    let dims = module_dims(cfg);
+
+    // per-layer α: average of the layer's module spectra
+    let mut alphas = vec![0.0f64; cfg.n_layers];
+    for layer in 0..cfg.n_layers {
+        let prefix = format!("layers.{layer}.");
+        let mods: Vec<_> = dims.iter().filter(|d| d.name.starts_with(&prefix)).collect();
+        let sum: f64 = mods
+            .iter()
+            .map(|d| hill_alpha(&fm.factors[&d.name].sigma))
+            .sum();
+        alphas[layer] = sum / mods.len() as f64;
+    }
+
+    let mean = alphas.iter().sum::<f64>() / alphas.len() as f64;
+    let spread = alphas
+        .iter()
+        .map(|a| (a - mean).abs())
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    // larger α ⇒ under-trained ⇒ lower ratio (compress harder)
+    let layer_ratio: Vec<f64> = alphas
+        .iter()
+        .map(|a| (target - eps * target * (a - mean) / spread).clamp(0.05, 0.98))
+        .collect();
+
+    let weights: Vec<f64> = (0..cfg.n_layers)
+        .map(|l| {
+            let prefix = format!("layers.{l}.");
+            dims.iter()
+                .filter(|d| d.name.starts_with(&prefix))
+                .map(|d| d.dense_params() as f64)
+                .sum()
+        })
+        .collect();
+    let got: f64 = layer_ratio.iter().zip(&weights).map(|(r, w)| r * w).sum::<f64>()
+        / weights.iter().sum::<f64>();
+    let fix = target / got;
+
+    let mut alloc = Allocation::new(format!("farms-{}", (target * 100.0).round() as usize));
+    for d in &dims {
+        let layer: usize = d.name.split('.').nth(1).unwrap().parse().unwrap();
+        let ratio = (layer_ratio[layer] * fix).clamp(0.02, 0.98);
+        let k = ((ratio * d.dense_params() as f64 / (d.m + d.n) as f64).floor() as usize)
+            .clamp(1, d.r_full());
+        alloc.set(&d.name, ModuleAlloc::Rank(k));
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hill_alpha_orders_tail_heaviness() {
+        // power-law-ish decaying spectrum ⇒ heavier tail ⇒ smaller α than
+        // a near-flat spectrum
+        let heavy: Vec<f64> = (1..=64).map(|i| 10.0 / (i as f64).powf(1.2)).collect();
+        let light: Vec<f64> = (1..=64).map(|i| 10.0 / (1.0 + 0.01 * i as f64)).collect();
+        assert!(hill_alpha(&heavy) < hill_alpha(&light));
+    }
+
+    #[test]
+    fn hill_alpha_handles_degenerate() {
+        assert!(hill_alpha(&[1.0, 1.0, 1.0, 1.0]).is_finite());
+        assert!(hill_alpha(&[5.0]).is_finite());
+    }
+}

@@ -1,0 +1,27 @@
+//! Every comparison method from the paper's evaluation:
+//!
+//! * [`uniform`]  — SVD-LLM-style uniform per-module ratio (the "Uniform" row);
+//! * [`strs`]     — Sensitivity-based Truncation Rank Searching (ASVD);
+//! * [`ars`]      — Gumbel-Sigmoid mask training (no monotonicity);
+//! * [`dobi`]     — Dobi-SVD₁ tanh-mask training (monotone, local updates);
+//! * [`dlp`]      — outlier-based layerwise ratio allocation;
+//! * [`farms`]    — heavy-tailed ESD (Hill estimator) layerwise allocation;
+//! * [`pruning`]  — structured-pruning comparators for Table 4.
+//!
+//! All methods emit a [`crate::model::Allocation`] normalized to the target
+//! budget through the same rescale as ARA, so comparisons are controlled.
+
+mod ars;
+mod dlp;
+mod dobi;
+mod farms;
+pub mod pruning;
+mod strs;
+mod uniform;
+
+pub use ars::{ars_alloc, ArsConfig};
+pub use dlp::dlp_alloc;
+pub use dobi::{dobi_alloc, DobiConfig};
+pub use farms::farms_alloc;
+pub use strs::{strs_alloc, StrsConfig};
+pub use uniform::uniform_alloc;

@@ -1,0 +1,128 @@
+//! STRS (Sensitivity-based Truncation Rank Searching, from ASVD): probe
+//! each module independently at a discrete set of ratios, record the loss
+//! increase, then pick the per-module ratio whose sensitivity stays under a
+//! uniform threshold — the threshold itself found by bisection against the
+//! global budget. Inter-module dependencies are ignored by construction
+//! (the paper's criticism; it shows in the Qwen rows of Table 1).
+
+use std::collections::BTreeMap;
+
+use crate::ara::MaskGradRunner;
+use crate::config::ModelCfg;
+use crate::model::{module_dims, Allocation, ModuleAlloc};
+use crate::svd::FactoredModel;
+use crate::tensor::Tensor;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct StrsConfig {
+    /// Candidate per-module parameter ratios (paper: {0.1, …, 0.9}).
+    pub ratios: Vec<f64>,
+    /// Probe batches per measurement.
+    pub probe_batches: usize,
+}
+
+impl Default for StrsConfig {
+    fn default() -> Self {
+        StrsConfig { ratios: (1..=9).map(|i| i as f64 / 10.0).collect(), probe_batches: 1 }
+    }
+}
+
+/// Run the STRS search. `runner` supplies the shared loss surface.
+pub fn strs_alloc(
+    cfg: &ModelCfg,
+    runner: &MaskGradRunner,
+    _fm: &FactoredModel,
+    target: f64,
+    sc: &StrsConfig,
+) -> Result<Allocation> {
+    let dims = module_dims(cfg);
+
+    // all-ones masks = every module at full quality
+    let full_masks: BTreeMap<String, Tensor> = dims
+        .iter()
+        .map(|d| (d.name.clone(), Tensor::ones(&[d.r_full()])))
+        .collect();
+    let base_loss = probe(runner, &full_masks, sc.probe_batches)?;
+
+    // sensitivity[l][j] = loss increase when ONLY module l is truncated to
+    // ratios[j]
+    let mut sens: Vec<Vec<f64>> = Vec::with_capacity(dims.len());
+    for d in &dims {
+        let mut per_ratio = Vec::with_capacity(sc.ratios.len());
+        for &rho in &sc.ratios {
+            let k = ((rho * d.dense_params() as f64 / (d.m + d.n) as f64).floor() as usize)
+                .clamp(1, d.r_full());
+            let mut masks = full_masks.clone();
+            let mut t = Tensor::zeros(&[d.r_full()]);
+            for i in 0..k {
+                t.data[i] = 1.0;
+            }
+            masks.insert(d.name.clone(), t);
+            let loss = probe(runner, &masks, sc.probe_batches)?;
+            per_ratio.push((loss - base_loss).max(0.0));
+        }
+        sens.push(per_ratio);
+    }
+
+    // bisection on the sensitivity threshold τ: each module takes the
+    // SMALLEST ratio with sensitivity ≤ τ; params(τ) is monotone in τ.
+    let total: usize = dims.iter().map(|d| d.dense_params()).sum();
+    let want = target * total as f64;
+    let pick = |tau: f64| -> Vec<usize> {
+        sens.iter()
+            .map(|per| {
+                per.iter().position(|&s| s <= tau).unwrap_or(per.len() - 1)
+            })
+            .collect()
+    };
+    let params_of = |choice: &[usize]| -> f64 {
+        dims.iter()
+            .zip(choice)
+            .map(|(d, &j)| {
+                let k = ((sc.ratios[j] * d.dense_params() as f64 / (d.m + d.n) as f64)
+                    .floor() as usize)
+                    .clamp(1, d.r_full());
+                d.factored_params(k) as f64
+            })
+            .sum()
+    };
+
+    let max_sens = sens
+        .iter()
+        .flat_map(|p| p.iter().copied())
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let (mut lo, mut hi) = (0.0f64, max_sens);
+    for _ in 0..50 {
+        let mid = 0.5 * (lo + hi);
+        if params_of(&pick(mid)) > want {
+            // too many params kept ⇒ need a harsher (higher) threshold
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let choice = pick(hi);
+
+    let mut alloc = Allocation::new(format!("strs-{}", (target * 100.0).round() as usize));
+    for (d, &j) in dims.iter().zip(&choice) {
+        let k = ((sc.ratios[j] * d.dense_params() as f64 / (d.m + d.n) as f64).floor() as usize)
+            .clamp(1, d.r_full());
+        alloc.set(&d.name, ModuleAlloc::Rank(k));
+    }
+    Ok(alloc)
+}
+
+fn probe(
+    runner: &MaskGradRunner,
+    masks: &BTreeMap<String, Tensor>,
+    batches: usize,
+) -> Result<f64> {
+    let mut sum = 0.0;
+    for i in 0..batches.max(1) {
+        let (loss, _) = runner.step(masks, i)?;
+        sum += loss;
+    }
+    Ok(sum / batches.max(1) as f64)
+}

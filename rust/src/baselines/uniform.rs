@@ -1,0 +1,47 @@
+//! Uniform allocation (the paper's "Uniform" baseline = SVD-LLM): every
+//! module gets the same parameter ratio; no allocation intelligence.
+
+use crate::config::ModelCfg;
+use crate::model::{module_dims, Allocation, ModuleAlloc};
+
+/// k_l = ⌊target·mn/(m+n)⌋, clamped to [1, r_full].
+pub fn uniform_alloc(cfg: &ModelCfg, target: f64) -> Allocation {
+    let mut alloc = Allocation::new(format!("uniform-{}", (target * 100.0).round() as usize));
+    for d in module_dims(cfg) {
+        let k = ((target * d.dense_params() as f64 / (d.m + d.n) as f64).floor() as usize)
+            .clamp(1, d.r_full());
+        alloc.set(&d.name, ModuleAlloc::Rank(k));
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_by_name, Paths};
+    use crate::model::alloc_ratio;
+
+    #[test]
+    fn achieves_target_approximately() {
+        let paths = Paths::discover().unwrap();
+        let cfg = model_by_name(&paths.configs, "minillama-s").unwrap();
+        for target in [0.8, 0.6, 0.3] {
+            let a = uniform_alloc(&cfg, target);
+            let got = alloc_ratio(&cfg, &a);
+            assert!((got - target).abs() < 0.05, "target {target} got {got}");
+        }
+    }
+
+    #[test]
+    fn never_dense_never_zero() {
+        let paths = Paths::discover().unwrap();
+        let cfg = model_by_name(&paths.configs, "micro-llama").unwrap();
+        let a = uniform_alloc(&cfg, 0.8);
+        for (_, m) in &a.modules {
+            match m {
+                ModuleAlloc::Rank(k) => assert!(*k >= 1),
+                ModuleAlloc::Dense => panic!("uniform never keeps dense"),
+            }
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Model presets and run recipes, shared with the python AOT path through
+//! `configs/models.json` (parsed with the in-crate [`crate::json`] module).
+
+use std::path::{Path, PathBuf};
+
+use crate::json::{parse, Json};
+use crate::Result;
+
+/// One model preset (a scaled-down stand-in for the paper's LLaMA2/Qwen3
+/// models — see DESIGN.md §2).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub family: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub batch_train: usize,
+    pub seq_train: usize,
+    pub batch_eval: usize,
+    pub seq_eval: usize,
+    pub lora_rank: usize,
+    pub serving: bool,
+    pub decode_batches: Vec<usize>,
+    pub prefill_len: usize,
+    pub max_decode_seq: usize,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    fn from_json(j: &Json) -> Result<ModelCfg> {
+        Ok(ModelCfg {
+            name: j.req("name")?.as_str()?.to_string(),
+            family: j.req("family")?.as_str()?.to_string(),
+            d_model: j.req("d_model")?.as_usize()?,
+            n_layers: j.req("n_layers")?.as_usize()?,
+            n_heads: j.req("n_heads")?.as_usize()?,
+            n_kv_heads: j.req("n_kv_heads")?.as_usize()?,
+            d_ff: j.req("d_ff")?.as_usize()?,
+            vocab: j.req("vocab")?.as_usize()?,
+            max_seq: j.req("max_seq")?.as_usize()?,
+            rope_theta: j.req("rope_theta")?.as_f64()?,
+            batch_train: j.req("batch_train")?.as_usize()?,
+            seq_train: j.req("seq_train")?.as_usize()?,
+            batch_eval: j.req("batch_eval")?.as_usize()?,
+            seq_eval: j.req("seq_eval")?.as_usize()?,
+            lora_rank: j.req("lora_rank")?.as_usize()?,
+            serving: j.req("serving")?.as_bool()?,
+            decode_batches: j
+                .req("decode_batches")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            prefill_len: j.req("prefill_len")?.as_usize()?,
+            max_decode_seq: j.req("max_decode_seq")?.as_usize()?,
+        })
+    }
+}
+
+/// Repository paths: where configs, artifacts and cached runs live.
+#[derive(Debug, Clone)]
+pub struct Paths {
+    pub configs: PathBuf,
+    pub artifacts: PathBuf,
+    pub runs: PathBuf,
+}
+
+impl Paths {
+    /// Resolve from env (`ARA_ROOT`, `ARA_ARTIFACTS`, `ARA_RUNS`) or by
+    /// walking up from cwd until a `configs/models.json` is found.
+    pub fn discover() -> Result<Paths> {
+        let root = if let Ok(r) = std::env::var("ARA_ROOT") {
+            PathBuf::from(r)
+        } else {
+            let mut dir = std::env::current_dir()?;
+            loop {
+                if dir.join("configs/models.json").exists() {
+                    break dir;
+                }
+                if !dir.pop() {
+                    return Err(crate::anyhow!(
+                        "could not locate repo root (configs/models.json); set ARA_ROOT"
+                    ));
+                }
+            }
+        };
+        Ok(Paths {
+            configs: root.join("configs"),
+            artifacts: std::env::var("ARA_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| root.join("artifacts")),
+            runs: std::env::var("ARA_RUNS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| root.join("runs")),
+        })
+    }
+
+    pub fn artifact_dir(&self, model: &str) -> PathBuf {
+        self.artifacts.join(model)
+    }
+    pub fn run_dir(&self, model: &str) -> PathBuf {
+        self.runs.join(model)
+    }
+}
+
+/// Load all model presets from `configs/models.json`.
+pub fn load_models(configs: &Path) -> Result<Vec<ModelCfg>> {
+    let text = std::fs::read_to_string(configs.join("models.json"))?;
+    let j = parse(&text)?;
+    j.req("models")?
+        .as_arr()?
+        .iter()
+        .map(ModelCfg::from_json)
+        .collect()
+}
+
+/// Look up one preset by name.
+pub fn model_by_name(configs: &Path, name: &str) -> Result<ModelCfg> {
+    load_models(configs)?
+        .into_iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| crate::anyhow!("unknown model preset: {name}"))
+}
+
+/// Global scale knob for benches: `ARA_SCALE=0.25` shrinks step counts and
+/// sample counts of the experiment recipes (never model shapes — those are
+/// baked into the AOT artifacts).
+pub fn scale() -> f64 {
+    std::env::var("ARA_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Apply the global scale to a count with a floor.
+pub fn scaled(count: usize, floor: usize) -> usize {
+    ((count as f64 * scale()).round() as usize).max(floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_are_consistent() {
+        let paths = Paths::discover().unwrap();
+        let models = load_models(&paths.configs).unwrap();
+        assert!(models.len() >= 5);
+        for m in &models {
+            assert_eq!(m.d_model % m.n_heads, 0, "{}", m.name);
+            assert_eq!(m.n_heads % m.n_kv_heads, 0, "{}", m.name);
+            assert!(m.vocab > 0 && m.max_seq >= m.seq_eval);
+            if m.serving {
+                assert!(!m.decode_batches.is_empty());
+                assert!(m.prefill_len < m.max_decode_seq);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let paths = Paths::discover().unwrap();
+        let m = model_by_name(&paths.configs, "micro-llama").unwrap();
+        assert_eq!(m.family, "llama");
+        assert!(model_by_name(&paths.configs, "nonexistent").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment coordinator: the staged pipeline every table/figure harness
+//! drives — pretrain (disk-cached) → calibrate → factorize → allocate
+//! (any method) → evaluate — plus the method registry.
+
+mod pipeline;
+
+pub use pipeline::{EvalRow, MethodKind, Pipeline, RunScale, ALL_METHODS};

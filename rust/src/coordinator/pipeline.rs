@@ -1,0 +1,251 @@
+//! The staged experiment pipeline with disk caching of the expensive
+//! stages (pre-trained weights under runs/<model>/), so the 12 bench
+//! harnesses share substrate work instead of repeating it.
+
+use std::collections::BTreeMap;
+
+use crate::ara::{train_ara, AraConfig, MaskGradRunner};
+use crate::baselines::{
+    ars_alloc, dlp_alloc, dobi_alloc, farms_alloc, strs_alloc, uniform_alloc, ArsConfig,
+    DobiConfig, StrsConfig,
+};
+use crate::config::{model_by_name, scaled, ModelCfg, Paths};
+use crate::eval::zeroshot::Scorer;
+use crate::eval::{perplexity_masked, zero_shot_suite};
+use crate::linalg::Mat;
+use crate::model::{alloc_ratio, Allocation, WeightStore};
+use crate::runtime::Runtime;
+use crate::svd::{alloc_masks, calibrate, factorize, FactoredModel};
+use crate::training::{pretrain, PretrainConfig};
+use crate::Result;
+
+/// Experiment-scale knobs (all counts, no shapes) with bench defaults.
+#[derive(Debug, Clone)]
+pub struct RunScale {
+    pub pretrain_steps: usize,
+    pub calib_batches: usize,
+    pub alloc_samples: usize,
+    pub alloc_epochs: usize,
+    pub eval_batches: usize,
+    pub zs_items: usize,
+}
+
+impl Default for RunScale {
+    fn default() -> Self {
+        // scaled by ARA_SCALE (config::scaled)
+        RunScale {
+            // NOT scaled by ARA_SCALE: the pre-trained substrate is cached
+            // on disk and shared by every harness regardless of scale
+            // (override with ARA_PRETRAIN_STEPS)
+            pretrain_steps: std::env::var("ARA_PRETRAIN_STEPS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1200),
+            calib_batches: scaled(8, 2),
+            alloc_samples: scaled(96, 16),
+            alloc_epochs: scaled(10, 3),
+            eval_batches: scaled(6, 2),
+            zs_items: scaled(24, 8),
+        }
+    }
+}
+
+/// All allocation methods of Table 1/2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodKind {
+    Uniform,
+    Dlp,
+    Farms,
+    Strs,
+    Ars,
+    Dobi,
+    Ara,
+    /// ARA without the guidance loss (Table 5 / Fig. 4b ablation).
+    AraNoGuidance,
+}
+
+pub const ALL_METHODS: [MethodKind; 7] = [
+    MethodKind::Uniform,
+    MethodKind::Dlp,
+    MethodKind::Farms,
+    MethodKind::Strs,
+    MethodKind::Ars,
+    MethodKind::Dobi,
+    MethodKind::Ara,
+];
+
+impl MethodKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Uniform => "Uniform",
+            MethodKind::Dlp => "DLP",
+            MethodKind::Farms => "FARMS",
+            MethodKind::Strs => "STRS",
+            MethodKind::Ars => "ARS",
+            MethodKind::Dobi => "Dobi-SVD1",
+            MethodKind::Ara => "ARA",
+            MethodKind::AraNoGuidance => "ARA(noLg)",
+        }
+    }
+}
+
+/// One evaluated configuration: the Table 1 row.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub method: String,
+    pub ratio: f64,
+    pub wiki_ppl: f64,
+    pub c4_ppl: f64,
+    pub task_accs: Vec<(&'static str, f64)>,
+    pub avg_acc: f64,
+}
+
+/// The coordinator: one model's runtime + cached substrate state.
+pub struct Pipeline {
+    pub cfg: ModelCfg,
+    pub rt: Runtime,
+    pub paths: Paths,
+    pub scalecfg: RunScale,
+}
+
+impl Pipeline {
+    pub fn new(model: &str) -> Result<Pipeline> {
+        let paths = Paths::discover()?;
+        let cfg = model_by_name(&paths.configs, model)?;
+        let rt = Runtime::new(paths.artifact_dir(model))?;
+        Ok(Pipeline { cfg, rt, paths, scalecfg: RunScale::default() })
+    }
+
+    /// Pre-trained weights (disk-cached under runs/<model>/weights-<steps>.bin).
+    pub fn pretrained(&self) -> Result<WeightStore> {
+        let steps = self.scalecfg.pretrain_steps;
+        let path = self.paths.run_dir(&self.cfg.name).join(format!("weights-{steps}.bin"));
+        if path.exists() {
+            return crate::model::load_weights(&path);
+        }
+        let pc = PretrainConfig { steps, ..Default::default() };
+        let (ws, report) = pretrain(&self.cfg, &self.rt, &pc)?;
+        eprintln!(
+            "[pipeline {}] pretrained {} steps: loss {:.3} → {:.3}",
+            self.cfg.name, steps, report.initial_loss, report.final_loss
+        );
+        crate::model::save_weights(&ws, &path)?;
+        Ok(ws)
+    }
+
+    pub fn grams(&self, ws: &WeightStore) -> Result<BTreeMap<String, Mat>> {
+        calibrate(&self.cfg, &self.rt, ws, "sync4", self.scalecfg.calib_batches, 0xCAFE)
+    }
+
+    pub fn factored(
+        &self,
+        ws: &WeightStore,
+        grams: &BTreeMap<String, Mat>,
+    ) -> Result<FactoredModel> {
+        factorize(&self.cfg, ws, grams, 1e-3)
+    }
+
+    /// Run one allocation method at `target`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn allocate(
+        &self,
+        method: MethodKind,
+        target: f64,
+        ws: &WeightStore,
+        grams: &BTreeMap<String, Mat>,
+        fm: &FactoredModel,
+    ) -> Result<Allocation> {
+        let sc = &self.scalecfg;
+        match method {
+            MethodKind::Uniform => Ok(uniform_alloc(&self.cfg, target)),
+            MethodKind::Dlp => Ok(dlp_alloc(&self.cfg, ws, grams, target, 0.15)),
+            MethodKind::Farms => Ok(farms_alloc(&self.cfg, fm, target, 0.3)),
+            MethodKind::Strs => {
+                let runner =
+                    MaskGradRunner::new(&self.cfg, &self.rt, ws, fm, "sync4", sc.alloc_samples, 3)?;
+                strs_alloc(&self.cfg, &runner, fm, target, &StrsConfig::default())
+            }
+            MethodKind::Ars => {
+                let runner =
+                    MaskGradRunner::new(&self.cfg, &self.rt, ws, fm, "sync4", sc.alloc_samples, 4)?;
+                let ac = ArsConfig { target, epochs: sc.alloc_epochs, ..Default::default() };
+                ars_alloc(&self.cfg, &runner, &ac)
+            }
+            MethodKind::Dobi => {
+                let runner =
+                    MaskGradRunner::new(&self.cfg, &self.rt, ws, fm, "sync4", sc.alloc_samples, 5)?;
+                let dc = DobiConfig { target, epochs: sc.alloc_epochs * 2, ..Default::default() };
+                dobi_alloc(&self.cfg, &runner, &dc)
+            }
+            MethodKind::Ara | MethodKind::AraNoGuidance => {
+                let ac = AraConfig {
+                    target,
+                    epochs: sc.alloc_epochs,
+                    samples: sc.alloc_samples,
+                    use_guidance: method == MethodKind::Ara,
+                    ..Default::default()
+                };
+                let (alloc, _) = train_ara(&self.cfg, &self.rt, ws, fm, &ac)?;
+                Ok(alloc)
+            }
+        }
+    }
+
+    /// Evaluate a compressed configuration into a table row.
+    pub fn evaluate(
+        &self,
+        label: &str,
+        ws: &WeightStore,
+        fm: &FactoredModel,
+        alloc: &Allocation,
+    ) -> Result<EvalRow> {
+        let masks = alloc_masks(&self.cfg, alloc);
+        self.evaluate_masks(label, alloc_ratio(&self.cfg, alloc), ws, fm, &masks)
+    }
+
+    /// Evaluate with explicit masks (LoRA-merged models etc.).
+    pub fn evaluate_masks(
+        &self,
+        label: &str,
+        ratio: f64,
+        ws: &WeightStore,
+        fm: &FactoredModel,
+        masks: &BTreeMap<String, crate::tensor::Tensor>,
+    ) -> Result<EvalRow> {
+        let sc = &self.scalecfg;
+        let wiki = perplexity_masked(&self.cfg, &self.rt, ws, fm, masks, "synwiki", sc.eval_batches)?;
+        let c4 = perplexity_masked(&self.cfg, &self.rt, ws, fm, masks, "sync4", sc.eval_batches)?;
+        let zs = zero_shot_suite(
+            &self.cfg,
+            &self.rt,
+            &Scorer::Masked { ws, fm, masks },
+            sc.zs_items,
+            99,
+        )?;
+        Ok(EvalRow {
+            method: label.to_string(),
+            ratio,
+            wiki_ppl: wiki.ppl,
+            c4_ppl: c4.ppl,
+            task_accs: zs.tasks,
+            avg_acc: zs.average,
+        })
+    }
+
+    /// Evaluate the *dense* model (the "Dense" reference row).
+    pub fn evaluate_dense(&self, ws: &WeightStore) -> Result<EvalRow> {
+        let sc = &self.scalecfg;
+        let wiki =
+            crate::eval::perplexity_dense(&self.cfg, &self.rt, ws, "synwiki", sc.eval_batches)?;
+        let c4 = crate::eval::perplexity_dense(&self.cfg, &self.rt, ws, "sync4", sc.eval_batches)?;
+        let zs = zero_shot_suite(&self.cfg, &self.rt, &Scorer::Dense { ws }, sc.zs_items, 99)?;
+        Ok(EvalRow {
+            method: "Dense".to_string(),
+            ratio: 1.0,
+            wiki_ppl: wiki.ppl,
+            c4_ppl: c4.ppl,
+            task_accs: zs.tasks,
+            avg_acc: zs.average,
+        })
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic data substrate: corpora standing in for WikiText-2 / C4 and a
+//! seven-task zero-shot suite standing in for the paper's LM-eval-harness
+//! benchmarks (DESIGN.md §2 documents the substitution).
+//!
+//! Everything is deterministic given a seed, so every experiment in
+//! EXPERIMENTS.md reproduces bit-for-bit.
+
+mod corpus;
+pub(crate) mod grammar;
+mod rng;
+mod tasks;
+
+pub use corpus::{batches, corpus_spec, generate_tokens, CorpusSpec, EVAL_SEED, TRAIN_SEED};
+pub use grammar::{Grammar, Vocab, BOS as BOS_TOKEN, PERIOD as PERIOD_TOKEN};
+pub use rng::Rng;
+pub use tasks::{generate_task, task_names, TaskItem, TaskKind, ALL_TASKS};

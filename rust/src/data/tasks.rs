@@ -1,0 +1,264 @@
+//! The zero-shot task suite: seven synthetic multiple-choice tasks mirroring
+//! the paper's ARC-e/ARC-c/HellaSwag/OBQA/WinoGrande/MathQA/PIQA in spirit —
+//! each is answerable from corpus statistics, so accuracy is monotone in
+//! model quality and the paper's *relative* method ordering reproduces.
+//!
+//! Scoring (eval/zeroshot.rs) follows LM-eval-harness: average per-token
+//! log-prob of each choice continuation given the context; argmax wins.
+
+use super::grammar::{Grammar, DIGIT0, EQ, PERIOD, PLUS, REL};
+use super::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Choose a noun continuation (wrong classes as distractors).
+    ArcEasy,
+    /// Choose the same-topic noun among other-topic nouns (longer context).
+    ArcChallenge,
+    /// Choose the grammatical sentence continuation vs shuffled variants.
+    Hella,
+    /// Fact lookup: NAME REL → correct OBJ.
+    Obqa,
+    /// Number agreement: plural subject → plural verb form.
+    Wino,
+    /// Digit arithmetic: a + b = ?
+    MathQa,
+    /// Adjective-noun topical plausibility (2 choices).
+    Piqa,
+}
+
+pub const ALL_TASKS: [TaskKind; 7] = [
+    TaskKind::ArcEasy,
+    TaskKind::ArcChallenge,
+    TaskKind::Hella,
+    TaskKind::Obqa,
+    TaskKind::Wino,
+    TaskKind::MathQa,
+    TaskKind::Piqa,
+];
+
+pub fn task_names(kind: TaskKind) -> &'static str {
+    match kind {
+        TaskKind::ArcEasy => "ARC-e",
+        TaskKind::ArcChallenge => "ARC-c",
+        TaskKind::Hella => "Hella",
+        TaskKind::Obqa => "OBQA",
+        TaskKind::Wino => "Wino",
+        TaskKind::MathQa => "MathQA",
+        TaskKind::Piqa => "PIQA",
+    }
+}
+
+/// One multiple-choice item.
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub ctx: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+/// Generate `n` items of a task over the grammar (seeded).
+pub fn generate_task(kind: TaskKind, g: &Grammar, seed: u64, n: usize) -> Vec<TaskItem> {
+    let mut rng = Rng::new(seed ^ (kind as u64).wrapping_mul(0xABCD_1234));
+    (0..n).map(|_| item(kind, g, &mut rng)).collect()
+}
+
+fn shuffled_with_answer(rng: &mut Rng, correct: Vec<i32>, distractors: Vec<Vec<i32>>) -> (Vec<Vec<i32>>, usize) {
+    let mut all = vec![correct];
+    all.extend(distractors);
+    let mut idx: Vec<usize> = (0..all.len()).collect();
+    rng.shuffle(&mut idx);
+    let answer = idx.iter().position(|&i| i == 0).unwrap();
+    let choices = idx.into_iter().map(|i| all[i].clone()).collect();
+    (choices, answer)
+}
+
+fn item(kind: TaskKind, g: &Grammar, rng: &mut Rng) -> TaskItem {
+    let v = &g.vocab;
+    match kind {
+        TaskKind::ArcEasy => {
+            // ctx: DET_sg NOUN_sg VERB_sg DET_sg → next should be a noun.
+            let topic = rng.below(g.n_topics);
+            let s = g.topic_word(rng, topic, v.n_nouns);
+            let vb = g.topic_word(rng, topic, v.n_verbs);
+            let o = g.topic_word(rng, topic, v.n_nouns);
+            let ctx = vec![v.det_sg(0), v.noun_sg(s), v.verb_sg(vb), v.det_sg(0)];
+            let correct = vec![v.noun_sg(o)];
+            let distractors = vec![
+                vec![v.verb_sg(g.topic_word(rng, topic, v.n_verbs))],
+                vec![v.adj(g.topic_word(rng, topic, v.n_adjs))],
+                vec![v.det_pl(rng.below(2))],
+            ];
+            let (choices, answer) = shuffled_with_answer(rng, correct, distractors);
+            TaskItem { ctx, choices, answer }
+        }
+        TaskKind::ArcChallenge => {
+            // same-class distractors from other topics; 2-sentence context.
+            let topic = rng.below(g.n_topics);
+            let mut ctx = vec![];
+            g.sentence(rng, topic, &mut ctx);
+            ctx.extend([v.det_sg(0), v.noun_sg(g.topic_word(rng, topic, v.n_nouns)),
+                        v.verb_sg(g.topic_word(rng, topic, v.n_verbs)), v.det_sg(0)]);
+            let correct = vec![v.noun_sg(g.topic_word(rng, topic, v.n_nouns))];
+            let mut distractors = vec![];
+            for k in 1..4 {
+                let other = (topic + k) % g.n_topics.max(2);
+                distractors.push(vec![v.noun_sg(g.topic_word(rng, other, v.n_nouns))]);
+            }
+            let (choices, answer) = shuffled_with_answer(rng, correct, distractors);
+            TaskItem { ctx, choices, answer }
+        }
+        TaskKind::Hella => {
+            // continuation: correct = DET NOUN VERB PERIOD; distractors are
+            // ungrammatical permutations of the same tokens.
+            let topic = rng.below(g.n_topics);
+            let mut ctx = vec![];
+            g.sentence(rng, topic, &mut ctx);
+            g.sentence(rng, topic, &mut ctx);
+            let det = v.det_sg(rng.below(2));
+            let noun = v.noun_sg(g.topic_word(rng, topic, v.n_nouns));
+            let verb = v.verb_sg(g.topic_word(rng, topic, v.n_verbs));
+            let correct = vec![det, noun, verb, PERIOD];
+            let distractors = vec![
+                vec![verb, det, noun, PERIOD],
+                vec![noun, verb, det, PERIOD],
+                vec![verb, noun, det, PERIOD],
+            ];
+            let (choices, answer) = shuffled_with_answer(rng, correct, distractors);
+            TaskItem { ctx, choices, answer }
+        }
+        TaskKind::Obqa => {
+            let i = rng.below(v.n_names);
+            let ctx = vec![v.name(i), REL];
+            let correct = vec![v.obj(g.facts[i])];
+            let mut distractors = vec![];
+            let mut used = vec![g.facts[i]];
+            while distractors.len() < 3 {
+                let o = rng.below(v.n_objs);
+                if !used.contains(&o) {
+                    used.push(o);
+                    distractors.push(vec![v.obj(o)]);
+                }
+                if v.n_objs <= 4 {
+                    break;
+                }
+            }
+            let (choices, answer) = shuffled_with_answer(rng, correct, distractors);
+            TaskItem { ctx, choices, answer }
+        }
+        TaskKind::Wino => {
+            let topic = rng.below(g.n_topics);
+            let s = g.topic_word(rng, topic, v.n_nouns);
+            let vb = g.topic_word(rng, topic, v.n_verbs);
+            let plural = rng.f64() < 0.5;
+            let (ctx, correct, wrong) = if plural {
+                (vec![v.det_pl(0), v.noun_pl(s)], vec![v.verb_pl(vb)], vec![v.verb_sg(vb)])
+            } else {
+                (vec![v.det_sg(0), v.noun_sg(s)], vec![v.verb_sg(vb)], vec![v.verb_pl(vb)])
+            };
+            let (choices, answer) = shuffled_with_answer(rng, correct, vec![wrong]);
+            TaskItem { ctx, choices, answer }
+        }
+        TaskKind::MathQa => {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            let ctx = vec![DIGIT0 + a as i32, PLUS, DIGIT0 + b as i32, EQ];
+            let correct = vec![v.digit((a + b) % 10)];
+            let mut distractors = vec![];
+            let mut used = vec![(a + b) % 10];
+            while distractors.len() < 3 {
+                let d = rng.below(10);
+                if !used.contains(&d) {
+                    used.push(d);
+                    distractors.push(vec![v.digit(d)]);
+                }
+            }
+            let (choices, answer) = shuffled_with_answer(rng, correct, distractors);
+            TaskItem { ctx, choices, answer }
+        }
+        TaskKind::Piqa => {
+            let topic = rng.below(g.n_topics);
+            let a = g.topic_word(rng, topic, v.n_adjs);
+            let ctx = vec![v.det_sg(0), v.adj(a)];
+            let correct = vec![v.noun_sg(g.topic_word(rng, topic, v.n_nouns))];
+            let other = (topic + 1 + rng.below(g.n_topics.max(2) - 1)) % g.n_topics.max(2);
+            let distractor = vec![v.noun_sg(g.topic_word(rng, other, v.n_nouns))];
+            let (choices, answer) = shuffled_with_answer(rng, correct, vec![distractor]);
+            TaskItem { ctx, choices, answer }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grammar() -> Grammar {
+        Grammar::new(256, 4, 0.0, 77)
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_items() {
+        let g = grammar();
+        for kind in ALL_TASKS {
+            let items = generate_task(kind, &g, 9, 40);
+            assert_eq!(items.len(), 40);
+            for it in &items {
+                assert!(it.answer < it.choices.len());
+                assert!(it.choices.len() >= 2);
+                assert!(!it.ctx.is_empty());
+                for ch in &it.choices {
+                    assert!(!ch.is_empty());
+                    for &t in ch.iter().chain(it.ctx.iter()) {
+                        assert!((t as usize) < g.vocab.size);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn answers_not_constant() {
+        // shuffling must distribute the answer position
+        let g = grammar();
+        for kind in ALL_TASKS {
+            let items = generate_task(kind, &g, 3, 60);
+            let first = items[0].answer;
+            assert!(items.iter().any(|i| i.answer != first), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn obqa_answer_matches_fact_table() {
+        let g = grammar();
+        let items = generate_task(TaskKind::Obqa, &g, 5, 50);
+        for it in &items {
+            let name_tok = it.ctx[0];
+            let i = (0..g.vocab.n_names)
+                .find(|&i| g.vocab.name(i) == name_tok)
+                .unwrap();
+            assert_eq!(it.choices[it.answer], vec![g.vocab.obj(g.facts[i])]);
+        }
+    }
+
+    #[test]
+    fn mathqa_answer_is_mod10_sum() {
+        let g = grammar();
+        for it in generate_task(TaskKind::MathQa, &g, 6, 50) {
+            let a = it.ctx[0] - DIGIT0;
+            let b = it.ctx[2] - DIGIT0;
+            assert_eq!(it.choices[it.answer][0], DIGIT0 + (a + b) % 10);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let g = grammar();
+        let a = generate_task(TaskKind::Hella, &g, 11, 10);
+        let b = generate_task(TaskKind::Hella, &g, 11, 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ctx, y.ctx);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

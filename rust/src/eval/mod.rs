@@ -1,0 +1,8 @@
+//! Evaluation harness: perplexity on the synthetic corpora and the
+//! LM-eval-harness-style zero-shot suite.
+
+mod ppl;
+pub mod zeroshot;
+
+pub use ppl::{perplexity_dense, perplexity_masked, PplReport};
+pub use zeroshot::{zero_shot_suite, Scorer, ZeroShotReport};

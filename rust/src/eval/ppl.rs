@@ -1,0 +1,89 @@
+//! Perplexity: exp(mean NLL) over held-out eval streams, via the AOT
+//! `score_dense` / `score_masked` executables.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::config::ModelCfg;
+use crate::data::{batches, corpus_spec, generate_tokens, EVAL_SEED};
+use crate::model::WeightStore;
+use crate::runtime::{Feed, Runtime};
+use crate::svd::{factored_feeds, FactoredModel};
+use crate::tensor::Tensor;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct PplReport {
+    pub corpus: String,
+    pub ppl: f64,
+    pub mean_nll: f64,
+    pub tokens: usize,
+}
+
+fn eval_batches(cfg: &ModelCfg, corpus: &str, n_batches: usize) -> Vec<(crate::tensor::IntTensor, crate::tensor::IntTensor)> {
+    let spec = corpus_spec(corpus);
+    let need = n_batches * cfg.batch_eval * (cfg.seq_eval + 1) + 1;
+    let stream = generate_tokens(cfg.vocab, spec, EVAL_SEED, need);
+    batches(&stream, cfg.batch_eval, cfg.seq_eval)
+}
+
+/// PPL of the dense model.
+pub fn perplexity_dense(
+    cfg: &ModelCfg,
+    rt: &Runtime,
+    ws: &WeightStore,
+    corpus: &str,
+    n_batches: usize,
+) -> Result<PplReport> {
+    let exe = rt.load("score_dense")?;
+    let data = eval_batches(cfg, corpus, n_batches);
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for (toks, tgts) in data.iter().take(n_batches) {
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        for (name, t) in &ws.tensors {
+            feeds.insert(name.as_str(), Feed::F32(t));
+        }
+        feeds.insert("tokens", Feed::I32(toks));
+        feeds.insert("targets", Feed::I32(tgts));
+        let out = exe.run(&feeds)?;
+        let nll = out.tensor("nll")?;
+        sum += nll.data.iter().map(|&x| x as f64).sum::<f64>();
+        count += nll.data.len();
+    }
+    finish(corpus, sum, count)
+}
+
+/// PPL of a compressed model (factored weights + binary masks).
+pub fn perplexity_masked(
+    cfg: &ModelCfg,
+    rt: &Runtime,
+    ws: &WeightStore,
+    fm: &FactoredModel,
+    masks: &BTreeMap<String, Tensor>,
+    corpus: &str,
+    n_batches: usize,
+) -> Result<PplReport> {
+    let exe = rt.load("score_masked")?;
+    let data = eval_batches(cfg, corpus, n_batches);
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for (toks, tgts) in data.iter().take(n_batches) {
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        factored_feeds(ws, fm, masks, &mut feeds);
+        feeds.insert("tokens", Feed::I32(toks));
+        feeds.insert("targets", Feed::I32(tgts));
+        let out = exe.run(&feeds)?;
+        let nll = out.tensor("nll")?;
+        sum += nll.data.iter().map(|&x| x as f64).sum::<f64>();
+        count += nll.data.len();
+    }
+    finish(corpus, sum, count)
+}
+
+fn finish(corpus: &str, sum: f64, count: usize) -> Result<PplReport> {
+    if count == 0 {
+        return Err(crate::anyhow!("no eval batches"));
+    }
+    let mean = sum / count as f64;
+    Ok(PplReport { corpus: corpus.to_string(), ppl: mean.exp(), mean_nll: mean, tokens: count })
+}

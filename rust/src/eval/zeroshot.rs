@@ -1,0 +1,195 @@
+//! Zero-shot evaluation, LM-eval-harness style: each multiple-choice item is
+//! scored by the average per-token log-probability of every choice
+//! continuation given the context; the highest-scoring choice wins.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::config::ModelCfg;
+use crate::data::{generate_task, task_names, Grammar, TaskItem, ALL_TASKS};
+use crate::model::WeightStore;
+use crate::runtime::{Exe, Feed, Runtime};
+use crate::svd::{factored_feeds, FactoredModel};
+use crate::tensor::{IntTensor, Tensor};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ZeroShotReport {
+    /// (task name, accuracy %)
+    pub tasks: Vec<(&'static str, f64)>,
+    pub average: f64,
+}
+
+/// Which parameterization to score with.
+pub enum Scorer<'a> {
+    Dense { ws: &'a WeightStore },
+    Masked { ws: &'a WeightStore, fm: &'a FactoredModel, masks: &'a BTreeMap<String, Tensor> },
+}
+
+impl<'a> Scorer<'a> {
+    fn exe(&self, rt: &Runtime) -> Result<std::rc::Rc<Exe>> {
+        match self {
+            Scorer::Dense { .. } => rt.load("score_dense"),
+            Scorer::Masked { .. } => rt.load("score_masked"),
+        }
+    }
+
+    fn feeds<'b>(&'b self, feeds: &mut HashMap<&'b str, Feed<'b>>) {
+        match self {
+            Scorer::Dense { ws } => {
+                for (name, t) in &ws.tensors {
+                    feeds.insert(name.as_str(), Feed::F32(t));
+                }
+            }
+            Scorer::Masked { ws, fm, masks } => factored_feeds(ws, fm, masks, feeds),
+        }
+    }
+}
+
+/// One scoring row: a (ctx ‖ choice) sequence with the choice span marked.
+struct Row {
+    tokens: Vec<i32>,
+    targets: Vec<i32>,
+    span: (usize, usize), // [start, end) positions whose NLL counts
+    item: usize,
+    choice: usize,
+}
+
+fn build_rows(items: &[TaskItem], seq: usize) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for (ii, it) in items.iter().enumerate() {
+        for (ci, ch) in it.choices.iter().enumerate() {
+            let mut s = Vec::with_capacity(it.ctx.len() + ch.len() + 1);
+            s.push(crate::data::BOS_TOKEN);
+            s.extend_from_slice(&it.ctx);
+            s.extend_from_slice(ch);
+            if s.len() > seq + 1 {
+                let cut = s.len() - (seq + 1);
+                s.drain(1..1 + cut); // keep BOS, trim oldest context
+            }
+            let start = s.len() - 1 - ch.len();
+            let end = s.len() - 1;
+            let mut tokens: Vec<i32> = s[..s.len() - 1].to_vec();
+            let mut targets: Vec<i32> = s[1..].to_vec();
+            tokens.resize(seq, crate::data::BOS_TOKEN);
+            targets.resize(seq, crate::data::BOS_TOKEN);
+            rows.push(Row { tokens, targets, span: (start, end), item: ii, choice: ci });
+        }
+    }
+    rows
+}
+
+/// Run the full 7-task suite; returns per-task accuracy + macro average.
+pub fn zero_shot_suite(
+    cfg: &ModelCfg,
+    rt: &Runtime,
+    scorer: &Scorer,
+    items_per_task: usize,
+    seed: u64,
+) -> Result<ZeroShotReport> {
+    let exe = scorer.exe(rt)?;
+    let g = Grammar::new(cfg.vocab, 4, 0.0, 77);
+    let (b, t) = (cfg.batch_eval, cfg.seq_eval);
+
+    let mut tasks = Vec::new();
+    let mut total = 0.0;
+    for kind in ALL_TASKS {
+        let items = generate_task(kind, &g, seed, items_per_task);
+        let rows = build_rows(&items, t);
+
+        // score per (item, choice): average logprob over the choice span
+        let mut scores: Vec<Vec<f64>> =
+            items.iter().map(|it| vec![f64::NEG_INFINITY; it.choices.len()]).collect();
+        for chunk in rows.chunks(b) {
+            let mut toks = Vec::with_capacity(b * t);
+            let mut tgts = Vec::with_capacity(b * t);
+            for r in chunk {
+                toks.extend_from_slice(&r.tokens);
+                tgts.extend_from_slice(&r.targets);
+            }
+            // pad the final partial batch by repeating the last row
+            while toks.len() < b * t {
+                toks.extend_from_slice(&chunk.last().unwrap().tokens);
+                tgts.extend_from_slice(&chunk.last().unwrap().targets);
+            }
+            let toks = IntTensor::from_vec(&[b, t], toks);
+            let tgts = IntTensor::from_vec(&[b, t], tgts);
+            let mut feeds: HashMap<&str, Feed> = HashMap::new();
+            scorer.feeds(&mut feeds);
+            feeds.insert("tokens", Feed::I32(&toks));
+            feeds.insert("targets", Feed::I32(&tgts));
+            let out = exe.run(&feeds)?;
+            let nll = out.tensor("nll")?;
+            for (ri, r) in chunk.iter().enumerate() {
+                let (s, e) = r.span;
+                let span_nll: f64 = (s..e)
+                    .map(|p| nll.data[ri * t + p] as f64)
+                    .sum::<f64>();
+                scores[r.item][r.choice] = -(span_nll / (e - s).max(1) as f64);
+            }
+        }
+
+        let mut correct = 0usize;
+        for (it, sc) in items.iter().zip(&scores) {
+            let best = sc
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if best == it.answer {
+                correct += 1;
+            }
+        }
+        let acc = 100.0 * correct as f64 / items.len() as f64;
+        total += acc;
+        tasks.push((task_names(kind), acc));
+    }
+    let average = total / ALL_TASKS.len() as f64;
+    Ok(ZeroShotReport { tasks, average })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskKind;
+
+    #[test]
+    fn rows_mark_choice_span() {
+        let items = vec![TaskItem {
+            ctx: vec![5, 6, 7],
+            choices: vec![vec![8], vec![9, 10]],
+            answer: 0,
+        }];
+        let rows = build_rows(&items, 16);
+        assert_eq!(rows.len(), 2);
+        // row 0: seq = BOS 5 6 7 8 → targets span predicts token 8
+        let r = &rows[0];
+        assert_eq!(r.targets[r.span.0], 8);
+        let r = &rows[1];
+        assert_eq!(r.targets[r.span.0], 9);
+        assert_eq!(r.targets[r.span.1 - 1], 10);
+    }
+
+    #[test]
+    fn rows_trim_long_contexts() {
+        let items = vec![TaskItem {
+            ctx: (0..40).collect(),
+            choices: vec![vec![50]],
+            answer: 0,
+        }];
+        let rows = build_rows(&items, 16);
+        assert_eq!(rows[0].tokens.len(), 16);
+        assert_eq!(rows[0].targets[rows[0].span.0], 50);
+    }
+
+    #[test]
+    fn suite_covers_all_tasks() {
+        let g = Grammar::new(256, 4, 0.0, 77);
+        for kind in ALL_TASKS {
+            let items = generate_task(kind, &g, 1, 4);
+            let rows = build_rows(&items, 32);
+            assert!(rows.len() >= items.len() * 2);
+        }
+        let _ = TaskKind::ArcEasy;
+    }
+}

@@ -1,0 +1,403 @@
+//! Minimal JSON substrate (the offline build has no serde): a recursive-
+//! descent parser to a [`Json`] value tree plus a compact serializer.
+//! Covers everything the repo exchanges with the python AOT layer —
+//! configs, artifact manifests, allocation files.
+
+use crate::Result;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    // ---------- accessors ----------
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| crate::anyhow!("missing key `{key}`"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(crate::anyhow!("expected string, got {other:?}")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            other => Err(crate::anyhow!("expected number, got {other:?}")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(crate::anyhow!("expected non-negative integer, got {x}"));
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(crate::anyhow!("expected bool, got {other:?}")),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => Err(crate::anyhow!("expected array, got {other:?}")),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&[(String, Json)]> {
+        match self {
+            Json::Obj(v) => Ok(v),
+            other => Err(crate::anyhow!("expected object, got {other:?}")),
+        }
+    }
+
+    // ---------- serializer ----------
+
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != bytes.len() {
+        return Err(crate::anyhow!("trailing garbage at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| crate::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            return Err(crate::anyhow!(
+                "expected `{}` at byte {}, found `{}`",
+                c as char,
+                self.i,
+                self.peek()? as char
+            ));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(crate::anyhow!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let v = self.value()?;
+            pairs.push((k, v));
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                c => return Err(crate::anyhow!("expected , or }} found `{}`", c as char)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => return Err(crate::anyhow!("expected , or ] found `{}`", c as char)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(crate::anyhow!("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| crate::anyhow!("bad \\u escape {hex}"))?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        c => return Err(crate::anyhow!("bad escape \\{}", c as char)),
+                    }
+                }
+                c => {
+                    // multi-byte UTF-8: copy raw bytes until a boundary
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c);
+                        let end = start + len;
+                        if end > self.b.len() {
+                            return Err(crate::anyhow!("truncated utf8"));
+                        }
+                        s.push_str(std::str::from_utf8(&self.b[start..end])?);
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| crate::anyhow!("bad number `{text}` at byte {start}"))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    if first >= 0xF0 {
+        4
+    } else if first >= 0xE0 {
+        3
+    } else {
+        2
+    }
+}
+
+// ---------- builders ----------
+
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn s(x: impl Into<String>) -> Json {
+    Json::Str(x.into())
+}
+
+pub fn n(x: f64) -> Json {
+    Json::Num(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let t = r#"{"name": "x", "inputs": [{"name": "a", "shape": [2, 3], "dtype": "f32"}], "outputs": ["loss"]}"#;
+        let j = parse(t).unwrap();
+        assert_eq!(j.req("name").unwrap().as_str().unwrap(), "x");
+        let ins = j.req("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(ins[0].req("shape").unwrap().as_arr().unwrap()[1].as_usize().unwrap(), 3);
+        assert_eq!(j.req("outputs").unwrap().as_arr().unwrap()[0].as_str().unwrap(), "loss");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let v = obj(vec![
+            ("a", n(1.0)),
+            ("b", Json::Arr(vec![n(2.5), Json::Bool(true), Json::Null])),
+            ("c", s("hi \"there\"\n")),
+        ]);
+        let text = v.dump();
+        let back = parse(&text).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(parse("-3.5e2").unwrap().as_f64().unwrap(), -350.0);
+        assert_eq!(parse("42").unwrap().as_usize().unwrap(), 42);
+        assert!(parse("1.5").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{}extra").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let j = parse(r#""δ₁ ≥ δ₂ A""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "δ₁ ≥ δ₂ A");
+    }
+
+    #[test]
+    fn nested_python_output() {
+        // exactly what aot.py json.dump emits (indent=1)
+        let t = "{\n \"name\": \"uniform-80\",\n \"modules\": {\n  \"layers.0.attn.wq\": {\n   \"dense\": false,\n   \"rank\": 19\n  }\n }\n}";
+        let j = parse(t).unwrap();
+        let m = j.req("modules").unwrap();
+        let q = m.req("layers.0.attn.wq").unwrap();
+        assert!(!q.req("dense").unwrap().as_bool().unwrap());
+        assert_eq!(q.req("rank").unwrap().as_usize().unwrap(), 19);
+    }
+}

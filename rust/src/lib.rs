@@ -1,0 +1,35 @@
+//! ara-compress: a reproduction of "ARA: Adaptive Rank Allocation for
+//! Efficient Large Language Model SVD Compression" (2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate) — every runtime loop: LM pre-training, calibration,
+//!   SVD factorization, allocation training (ARA + all baselines),
+//!   evaluation, quantization, LoRA recovery, and a batched serving engine.
+//! * L2/L1 (python/compile, build time only) — JAX transformer families and
+//!   Pallas kernels, AOT-lowered to HLO text consumed by [`runtime`].
+//!
+//! The public API is organized bottom-up: substrates ([`tensor`], [`linalg`],
+//! [`data`], [`model`], [`runtime`]), the compression stack ([`svd`],
+//! [`ara`], [`baselines`], [`quant`], [`lora`]), and the harnesses
+//! ([`training`], [`eval`], [`serving`], [`coordinator`], [`report`]).
+
+pub mod ara;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod json;
+pub mod linalg;
+pub mod lora;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serving;
+pub mod svd;
+pub mod tensor;
+pub mod training;
+
+pub use anyhow::{anyhow, Result};

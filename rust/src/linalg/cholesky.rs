@@ -1,0 +1,122 @@
+//! Cholesky factorization and lower-triangular inversion — the whitening
+//! half of the activation-aware SVD (Sec. 3.1: H = S·Sᵀ, W_v uses S⁻¹).
+
+use super::Mat;
+use crate::Result;
+
+/// Cholesky factor `S` (lower triangular) of a symmetric PD matrix `H = S·Sᵀ`.
+///
+/// Fails on non-positive pivots; callers are expected to dampen `H`
+/// (`H + εI`) first — the calibration pipeline does (svd/calib.rs).
+pub fn cholesky(h: &Mat) -> Result<Mat> {
+    let n = h.rows;
+    assert_eq!(h.rows, h.cols);
+    let mut s = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = h.at(i, j);
+            for k in 0..j {
+                sum -= s.at(i, k) * s.at(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(crate::anyhow!(
+                        "cholesky: non-positive pivot {sum:.3e} at {i} (dampen H)"
+                    ));
+                }
+                s.set(i, j, sum.sqrt());
+            } else {
+                s.set(i, j, sum / s.at(j, j));
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// Invert a lower-triangular matrix by forward substitution.
+pub fn invert_lower_triangular(l: &Mat) -> Result<Mat> {
+    let n = l.rows;
+    assert_eq!(l.rows, l.cols);
+    let mut inv = Mat::zeros(n, n);
+    for col in 0..n {
+        // solve L x = e_col
+        for i in col..n {
+            let mut sum = if i == col { 1.0 } else { 0.0 };
+            for k in col..i {
+                sum -= l.at(i, k) * inv.at(k, col);
+            }
+            let d = l.at(i, i);
+            if d == 0.0 {
+                return Err(crate::anyhow!("singular triangular matrix at {i}"));
+            }
+            inv.set(i, col, sum / d);
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut state = seed | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        };
+        let mut a = Mat::zeros(n, n);
+        for v in a.data.iter_mut() {
+            *v = next();
+        }
+        let mut h = a.gram(); // AᵀA is PSD
+        for i in 0..n {
+            let d = h.at(i, i) + 0.5;
+            h.set(i, i, d); // make strictly PD
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        for n in [1, 2, 5, 17] {
+            let h = random_spd(n, 42 + n as u64);
+            let s = cholesky(&h).unwrap();
+            let back = s.matmul(&s.transpose());
+            for (x, y) in back.data.iter().zip(&h.data) {
+                assert!((x - y).abs() < 1e-9, "n={n}");
+            }
+            // strictly lower triangular above diagonal must be zero
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(s.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut h = Mat::eye(3);
+        h.set(2, 2, -1.0);
+        assert!(cholesky(&h).is_err());
+    }
+
+    #[test]
+    fn triangular_inverse() {
+        for n in [1, 3, 9] {
+            let h = random_spd(n, 7 + n as u64);
+            let s = cholesky(&h).unwrap();
+            let si = invert_lower_triangular(&s).unwrap();
+            let prod = s.matmul(&si);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((prod.at(i, j) - want).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices — the workhorse behind
+//! the SVD (via the Gram matrix of the smaller side) and the SliceGPT-like
+//! pruning baseline (PCA of activation covariance).
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: `a = V · diag(w) · Vᵀ`.
+///
+/// Returns `(w, v)` with eigenvalues sorted descending and eigenvectors as
+/// *columns* of `v`. Cyclic Jacobi with a convergence threshold on the
+/// off-diagonal Frobenius mass; O(n³) per sweep, typically 6–12 sweeps.
+pub fn jacobi_eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        let scale = m.fro().max(1e-300);
+        if off.sqrt() <= 1e-13 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let w: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    order.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+    let w_sorted: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    let mut v_sorted = Mat::zeros(n, n);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for r in 0..n {
+            v_sorted.set(r, new_col, v.at(r, old_col));
+        }
+    }
+    (w_sorted, v_sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_sym(n: usize, seed: u64) -> Mat {
+        let mut state = seed | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        };
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = next();
+                a.set(i, j, x);
+                a.set(j, i, x);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        for n in [1, 2, 4, 12, 33] {
+            let a = random_sym(n, 3 + n as u64);
+            let (w, v) = jacobi_eigh(&a);
+            // A ≈ V diag(w) Vᵀ
+            let mut vd = v.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    let x = vd.at(i, j) * w[j];
+                    vd.set(i, j, x);
+                }
+            }
+            let back = vd.matmul(&v.transpose());
+            for (x, y) in back.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_sym(16, 99);
+        let (_, v) = jacobi_eigh(&a);
+        let vtv = v.transpose().matmul(&v);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let a = random_sym(20, 5);
+        let (w, _) = jacobi_eigh(&a);
+        for i in 1..w.len() {
+            assert!(w[i - 1] >= w[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Mat::zeros(3, 3);
+        a.set(0, 0, 2.0);
+        a.set(1, 1, -1.0);
+        a.set(2, 2, 5.0);
+        let (w, _) = jacobi_eigh(&a);
+        assert!((w[0] - 5.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+        assert!((w[2] + 1.0).abs() < 1e-12);
+    }
+}

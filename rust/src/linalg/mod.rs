@@ -1,0 +1,144 @@
+//! Dense numerical linear algebra, implemented from scratch (no BLAS/LAPACK
+//! dependency): Cholesky factorization, triangular inversion, a cyclic
+//! Jacobi symmetric eigensolver, and the SVD built on top of it. Everything
+//! runs in f64 — these routines execute once per module during the
+//! compression pipeline, not on the request path, so robustness beats speed.
+
+mod cholesky;
+mod eig;
+mod simplex;
+mod svd;
+
+pub use cholesky::{cholesky, invert_lower_triangular};
+pub use eig::jacobi_eigh;
+pub use simplex::project_simplex;
+pub use svd::{svd, Svd};
+
+/// A dense f64 matrix in row-major order (internal to linalg and svd).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        let c = self.cols;
+        self.data[i * c + j] = v;
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Gram matrix AᵀA (cols × cols), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let (m, n) = (self.rows, self.cols);
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let mut s = 0.0;
+                for r in 0..m {
+                    s += self.data[r * n + i] * self.data[r * n + j];
+                }
+                g.set(i, j, s);
+                g.set(j, i, s);
+            }
+        }
+        g
+    }
+
+    /// Outer Gram AAᵀ (rows × rows), exploiting symmetry.
+    pub fn gram_outer(&self) -> Mat {
+        let (m, n) = (self.rows, self.cols);
+        let mut g = Mat::zeros(m, m);
+        for i in 0..m {
+            let ri = &self.data[i * n..(i + 1) * n];
+            for j in i..m {
+                let rj = &self.data[j * n..(j + 1) * n];
+                let s: f64 = ri.iter().zip(rj).map(|(a, b)| a * b).sum();
+                g.set(i, j, s);
+                g.set(j, i, s);
+            }
+        }
+        g
+    }
+
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_matches_explicit() {
+        let a = Mat { rows: 3, cols: 2, data: vec![1., 2., 3., 4., 5., 6.] };
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        for (x, y) in g.data.iter().zip(&g2.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        let go = a.gram_outer();
+        let go2 = a.matmul(&a.transpose());
+        for (x, y) in go.data.iter().zip(&go2.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

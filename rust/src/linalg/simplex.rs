@@ -1,0 +1,107 @@
+//! Euclidean projection onto the probability simplex — keeps the ARA
+//! trainable vectors α on Δ^D after every AdamW step (Sec. 3.2 requires
+//! α ≥ 0, Σα = 1 so that p = αM is a valid monotone probability mask).
+
+/// Project `v` onto the probability simplex `{x : x ≥ 0, Σx = 1}` in place.
+///
+/// Held/Wolfe/Crowder algorithm: sort descending, find the pivot, shift.
+/// O(D log D).
+pub fn project_simplex(v: &mut [f64]) {
+    let d = v.len();
+    assert!(d > 0);
+    let mut sorted: Vec<f64> = v.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cum = 0.0;
+    let mut theta = 0.0;
+    let mut found = false;
+    for (i, &u) in sorted.iter().enumerate() {
+        cum += u;
+        let t = (cum - 1.0) / (i + 1) as f64;
+        if u - t > 0.0 {
+            theta = t;
+            found = true;
+        } else {
+            break;
+        }
+    }
+    if !found {
+        // all mass on the largest coordinate
+        theta = sorted[0] - 1.0;
+    }
+    for x in v.iter_mut() {
+        *x = (*x - theta).max(0.0);
+    }
+    // guard against accumulated fp drift
+    let s: f64 = v.iter().sum();
+    if s > 0.0 {
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+    } else {
+        let u = 1.0 / d as f64;
+        for x in v.iter_mut() {
+            *x = u;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_on_simplex(v: &[f64]) {
+        let s: f64 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9, "sum={s}");
+        for &x in v {
+            assert!(x >= 0.0);
+        }
+    }
+
+    #[test]
+    fn already_on_simplex_unchanged() {
+        let mut v = vec![0.25, 0.25, 0.25, 0.25];
+        project_simplex(&mut v);
+        for &x in &v {
+            assert!((x - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn negative_entries_clipped() {
+        let mut v = vec![1.5, -0.5, 0.2];
+        project_simplex(&mut v);
+        assert_on_simplex(&v);
+        assert_eq!(v[1], 0.0);
+    }
+
+    #[test]
+    fn preserves_order() {
+        let mut v = vec![0.9, 0.5, 0.1, -2.0];
+        project_simplex(&mut v);
+        assert_on_simplex(&v);
+        for i in 1..v.len() {
+            assert!(v[i - 1] >= v[i]);
+        }
+    }
+
+    #[test]
+    fn large_uniform_input() {
+        let mut v = vec![100.0; 64];
+        project_simplex(&mut v);
+        assert_on_simplex(&v);
+        for &x in &v {
+            assert!((x - 1.0 / 64.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let mut v = vec![3.0, -1.0, 0.5, 0.25, 7.0];
+        project_simplex(&mut v);
+        let once = v.clone();
+        project_simplex(&mut v);
+        for (a, b) in v.iter().zip(&once) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}

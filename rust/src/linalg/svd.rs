@@ -1,0 +1,149 @@
+//! Singular value decomposition via the symmetric eigendecomposition of the
+//! Gram matrix of the smaller side — robust and O(min(m,n)³) for the module
+//! shapes this repo factorizes (≤ a few hundred).
+
+use super::{jacobi_eigh, Mat};
+
+/// Thin SVD `a = U · diag(s) · Vᵀ`, `U: m×r`, `Vᵀ: r×n`, `r = min(m, n)`,
+/// singular values descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub vt: Mat,
+}
+
+/// Compute the thin SVD of `a` (m×n).
+///
+/// If m ≤ n: eigendecompose A·Aᵀ → U, then Vᵀ = Σ⁺·Uᵀ·A; otherwise the
+/// transpose route. Singular vectors for near-zero singular values are
+/// completed deterministically so U/V stay full column rank (they get a
+/// zero row in Vᵀ — harmless for truncation use).
+pub fn svd(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    if m <= n {
+        let g = a.gram_outer(); // A Aᵀ, m×m
+        let (w, u) = jacobi_eigh(&g);
+        let s: Vec<f64> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        // Vᵀ = Σ⁺ Uᵀ A  (r×n)
+        let uta = u.transpose().matmul(a);
+        let mut vt = Mat::zeros(m, n);
+        for i in 0..m {
+            let inv = if s[i] > 1e-12 * s[0].max(1e-300) { 1.0 / s[i] } else { 0.0 };
+            for j in 0..n {
+                vt.set(i, j, uta.at(i, j) * inv);
+            }
+        }
+        Svd { u, s, vt }
+    } else {
+        let at = a.transpose();
+        let sv = svd(&at); // at = U' Σ V'ᵀ  ⇒  a = V' Σ U'ᵀ
+        Svd { u: sv.vt.transpose(), s: sv.s, vt: sv.u.transpose() }
+    }
+}
+
+impl Svd {
+    /// Truncation loss √(Σ_{i≥k} σ_i²) — Eq. (1) tail, used by G_R (Eq. 6).
+    pub fn tail_norm(&self, k: usize) -> f64 {
+        self.s[k.min(self.s.len())..].iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_mat(m: usize, n: usize, seed: u64) -> Mat {
+        let mut state = seed | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        };
+        let mut a = Mat::zeros(m, n);
+        for v in a.data.iter_mut() {
+            *v = next();
+        }
+        a
+    }
+
+    fn check_reconstruction(m: usize, n: usize, seed: u64) {
+        let a = random_mat(m, n, seed);
+        let d = svd(&a);
+        let r = m.min(n);
+        assert_eq!(d.u.rows, m);
+        assert_eq!(d.u.cols, r);
+        assert_eq!(d.vt.rows, r);
+        assert_eq!(d.vt.cols, n);
+        let mut us = d.u.clone();
+        for i in 0..m {
+            for j in 0..r {
+                let x = us.at(i, j) * d.s[j];
+                us.set(i, j, x);
+            }
+        }
+        let back = us.matmul(&d.vt);
+        for (x, y) in back.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-8, "m={m} n={n}");
+        }
+        for i in 1..r {
+            assert!(d.s[i - 1] >= d.s[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn reconstructs_wide_tall_square() {
+        check_reconstruction(6, 6, 1);
+        check_reconstruction(4, 11, 2);
+        check_reconstruction(11, 4, 3);
+        check_reconstruction(1, 7, 4);
+        check_reconstruction(23, 17, 5);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // a = outer(u, v) has rank 1
+        let m = 8;
+        let n = 5;
+        let mut a = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                a.set(i, j, (i + 1) as f64 * (j as f64 - 2.0));
+            }
+        }
+        let d = svd(&a);
+        assert!(d.s[0] > 1.0);
+        for &s in &d.s[1..] {
+            assert!(s < 1e-8 * d.s[0]);
+        }
+    }
+
+    #[test]
+    fn eckart_young_truncation_is_optimal_direction() {
+        // truncating to k keeps the largest σ: tail_norm must be the exact
+        // Frobenius error of the rank-k reconstruction.
+        let a = random_mat(10, 7, 9);
+        let d = svd(&a);
+        for k in 0..=7 {
+            let mut us = Mat::zeros(10, k);
+            for i in 0..10 {
+                for j in 0..k {
+                    us.set(i, j, d.u.at(i, j) * d.s[j]);
+                }
+            }
+            let mut vt = Mat::zeros(k, 7);
+            for i in 0..k {
+                for j in 0..7 {
+                    vt.set(i, j, d.vt.at(i, j));
+                }
+            }
+            let back = us.matmul(&vt);
+            let mut err = 0.0;
+            for (x, y) in back.data.iter().zip(&a.data) {
+                err += (x - y) * (x - y);
+            }
+            assert!((err.sqrt() - d.tail_norm(k)).abs() < 1e-8, "k={k}");
+        }
+    }
+}

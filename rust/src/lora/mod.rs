@@ -1,0 +1,132 @@
+//! LoRA recovery fine-tuning (Table 6): train low-rank adapters A, B on the
+//! compressed model through the AOT `lora_step` executable, then merge.
+//!
+//! Merge strategy: for a factored module at rank k with k + lr ≤ r_full,
+//! the adapter is written into the *masked-out* rank slots — columns
+//! [k, k+lr) of W_u take B, rows [k, k+lr) of W_v take A, and their mask
+//! bits flip to 1. This is exact (the masked slots contribute 0 before the
+//! merge) and costs no new executable. Dense modules (R ≥ 1) fold W += B·A
+//! directly and are re-factorized through their calibration Gram.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::config::ModelCfg;
+use crate::data::{batches, corpus_spec, generate_tokens, Rng};
+use crate::linalg::Mat;
+use crate::model::{module_dims, WeightStore};
+use crate::runtime::{Feed, Runtime};
+use crate::svd::{factored_feeds, factorize_module, FactoredModel};
+use crate::tensor::Tensor;
+use crate::training::{AdamW, AdamWConfig};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct LoraConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub corpus: String,
+    pub seed: u64,
+}
+
+impl Default for LoraConfig {
+    fn default() -> Self {
+        LoraConfig { steps: 40, lr: 1e-3, corpus: "synwiki".to_string(), seed: 21 }
+    }
+}
+
+/// Fine-tune adapters and merge them; returns the updated factored model
+/// and masks (mask bits for merged slots are enabled).
+pub fn lora_finetune_and_merge(
+    cfg: &ModelCfg,
+    rt: &Runtime,
+    ws: &WeightStore,
+    fm: &FactoredModel,
+    masks: &BTreeMap<String, Tensor>,
+    grams: &BTreeMap<String, Mat>,
+    lc: &LoraConfig,
+) -> Result<(FactoredModel, BTreeMap<String, Tensor>)> {
+    let exe = rt.load("lora_step")?;
+    let dims = module_dims(cfg);
+    let lr_rank = cfg.lora_rank;
+    let mut rng = Rng::new(lc.seed);
+
+    // A ~ N(0, 0.02²), B = 0 (standard LoRA init)
+    let mut loras: BTreeMap<String, (Tensor, Tensor)> = BTreeMap::new();
+    for d in &dims {
+        let a = Tensor::from_vec(
+            &[lr_rank, d.n],
+            (0..lr_rank * d.n).map(|_| (rng.normal() * 0.02) as f32).collect(),
+        );
+        let b = Tensor::zeros(&[d.m, lr_rank]);
+        loras.insert(d.name.clone(), (a, b));
+    }
+
+    let spec = corpus_spec(&lc.corpus);
+    let need = lc.steps * cfg.batch_train * (cfg.seq_train + 1) + 1;
+    let stream = generate_tokens(cfg.vocab, spec, 0x10A_u64 ^ lc.seed, need);
+    let data = batches(&stream, cfg.batch_train, cfg.seq_train);
+    let mut opt = AdamW::new(AdamWConfig { lr: lc.lr, weight_decay: 0.0, ..Default::default() });
+
+    for step in 0..lc.steps {
+        let (toks, tgts) = &data[step % data.len()];
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        factored_feeds(ws, fm, masks, &mut feeds);
+        for (name, (a, b)) in &loras {
+            feeds.insert(crate::svd::intern_key(format!("lora_a:{name}")), Feed::F32(a));
+            feeds.insert(crate::svd::intern_key(format!("lora_b:{name}")), Feed::F32(b));
+        }
+        feeds.insert("tokens", Feed::I32(toks));
+        feeds.insert("targets", Feed::I32(tgts));
+        let out = exe.run(&feeds)?;
+        opt.step();
+        for d in &dims {
+            let ga = out.tensor(&format!("grad:lora_a:{}", d.name))?;
+            let gb = out.tensor(&format!("grad:lora_b:{}", d.name))?;
+            let (a, b) = loras.get_mut(&d.name).unwrap();
+            opt.update_f32(&format!("a:{}", d.name), &mut a.data, &ga.data, 1.0);
+            opt.update_f32(&format!("b:{}", d.name), &mut b.data, &gb.data, 1.0);
+        }
+    }
+
+    // merge
+    let mut fm2 = fm.clone();
+    let mut masks2 = masks.clone();
+    for d in &dims {
+        let (a, b) = &loras[&d.name];
+        let mask = masks2.get_mut(&d.name).unwrap();
+        let k = mask.data.iter().filter(|&&x| x > 0.5).count();
+        let r = d.r_full();
+        let f = fm2.factors.get_mut(&d.name).unwrap();
+        if k + lr_rank <= r {
+            // write B into W_u columns [k, k+lr), A into W_v rows [k, k+lr)
+            for row in 0..d.m {
+                for j in 0..lr_rank {
+                    f.wu.set2(row, k + j, b.at2(row, j));
+                }
+            }
+            for j in 0..lr_rank {
+                for col in 0..d.n {
+                    f.wv.set2(k + j, col, a.at2(j, col));
+                }
+            }
+            for j in 0..lr_rank {
+                mask.data[k + j] = 1.0;
+            }
+        } else {
+            // dense-regime module: fold W + BA and re-factorize
+            let w = f.wu.matmul(&f.wv); // (m, n) ≈ W (all-ones mask)
+            let ba = b.matmul(a);
+            let mut wnew = w.clone();
+            for i in 0..wnew.data.len() {
+                wnew.data[i] += ba.data[i];
+            }
+            *f = factorize_module(&wnew, &grams[&d.name], 1e-4)?;
+            // dense modules keep the all-ones mask
+            for x in mask.data.iter_mut() {
+                *x = 1.0;
+            }
+        }
+    }
+    Ok((fm2, masks2))
+}
+

@@ -1,0 +1,252 @@
+//! `ara` — the leader CLI: drives the full compression pipeline over the
+//! AOT artifacts. Python never runs here; `make artifacts` must have been
+//! executed once beforehand.
+//!
+//! Argument parsing is hand-rolled (the offline vendor set has no clap):
+//! `ara <subcommand> [--key value]…`.
+
+use std::collections::HashMap;
+
+use ara_compress::config::Paths;
+use ara_compress::coordinator::{MethodKind, Pipeline};
+use ara_compress::model::{alloc_ratio, Allocation};
+use ara_compress::report::{f2, Table};
+use ara_compress::Result;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| ara_compress::anyhow!("expected --flag, got {}", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .ok_or_else(|| ara_compress::anyhow!("--{k} needs a value"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ara_compress::anyhow!("--{key}: bad number {v}")),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ara_compress::anyhow!("--{key}: bad number {v}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+ara — Adaptive Rank Allocation for SVD LLM compression
+
+USAGE: ara <command> [--flag value]...
+
+COMMANDS:
+  pretrain  --model M [--steps N]           pre-train the substrate LM (cached)
+  compress  --model M --method X --ratio R  run an allocation method
+            [--out PATH]                    write allocation JSON for aot.py
+  eval      --model M --method X --ratio R  PPL + zero-shot vs dense
+  serve     --model M --alloc A --batch B   batched generation demo
+            [--gen-len N] [--requests N]
+  info                                      list presets and artifacts
+
+METHODS: uniform dlp farms strs ars dobi ara ara-nolg
+";
+
+fn parse_method(s: &str) -> Result<MethodKind> {
+    Ok(match s.to_lowercase().as_str() {
+        "uniform" => MethodKind::Uniform,
+        "dlp" => MethodKind::Dlp,
+        "farms" => MethodKind::Farms,
+        "strs" => MethodKind::Strs,
+        "ars" => MethodKind::Ars,
+        "dobi" | "dobi-svd1" => MethodKind::Dobi,
+        "ara" => MethodKind::Ara,
+        "ara-nolg" => MethodKind::AraNoGuidance,
+        other => return Err(ara_compress::anyhow!("unknown method {other}")),
+    })
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "pretrain" => {
+            let model = args.get("model", "minillama-s");
+            let mut pl = Pipeline::new(&model)?;
+            if let Some(s) = args.flags.get("steps") {
+                pl.scalecfg.pretrain_steps = s.parse()?;
+            }
+            let ws = pl.pretrained()?;
+            println!("pretrained {} ({} tensors)", model, ws.tensors.len());
+        }
+        "compress" => {
+            let model = args.get("model", "minillama-s");
+            let method = parse_method(&args.get("method", "ara"))?;
+            let ratio = args.get_f64("ratio", 0.8)?;
+            let pl = Pipeline::new(&model)?;
+            let ws = pl.pretrained()?;
+            let grams = pl.grams(&ws)?;
+            let fm = pl.factored(&ws, &grams)?;
+            let alloc = pl.allocate(method, ratio, &ws, &grams, &fm)?;
+            println!(
+                "{}: achieved ratio {:.4}, dense modules {}/{}",
+                alloc.name,
+                alloc_ratio(&pl.cfg, &alloc),
+                alloc.dense_count(),
+                alloc.modules.len()
+            );
+            for (name, a) in &alloc.modules {
+                println!("  {name}: {a:?}");
+            }
+            if let Some(path) = args.flags.get("out") {
+                let path = std::path::PathBuf::from(path);
+                alloc.save(&path)?;
+                println!("wrote {path:?} — re-run `make artifacts` to specialize serving");
+            }
+        }
+        "eval" => {
+            let model = args.get("model", "minillama-s");
+            let method = parse_method(&args.get("method", "ara"))?;
+            let ratio = args.get_f64("ratio", 0.8)?;
+            let pl = Pipeline::new(&model)?;
+            let ws = pl.pretrained()?;
+            let grams = pl.grams(&ws)?;
+            let fm = pl.factored(&ws, &grams)?;
+            let dense = pl.evaluate_dense(&ws)?;
+            let alloc = pl.allocate(method, ratio, &ws, &grams, &fm)?;
+            let row = pl.evaluate(method.name(), &ws, &fm, &alloc)?;
+            let mut t = Table::new(
+                format!("{model} @ {:.0}%", ratio * 100.0),
+                &["Method", "Wiki2 PPL", "C4 PPL", "Avg acc %"],
+            );
+            for r in [&dense, &row] {
+                t.row(vec![r.method.clone(), f2(r.wiki_ppl), f2(r.c4_ppl), f2(r.avg_acc)]);
+            }
+            t.print();
+        }
+        "serve" => {
+            serve(
+                &args.get("model", "minillama-s"),
+                &args.get("alloc", "uniform-80"),
+                args.get_usize("batch", 4)?,
+                args.get_usize("gen-len", 32)?,
+                args.get_usize("requests", 16)?,
+            )?;
+        }
+        "info" => {
+            let paths = Paths::discover()?;
+            for m in ara_compress::config::load_models(&paths.configs)? {
+                let adir = paths.artifact_dir(&m.name);
+                let n = std::fs::read_dir(&adir)
+                    .map(|d| d.filter(|e| e.is_ok()).count() / 2)
+                    .unwrap_or(0);
+                println!(
+                    "{:<14} {:<6} d={} L={} vocab={} serving={} artifacts={}",
+                    m.name, m.family, m.d_model, m.n_layers, m.vocab, m.serving, n
+                );
+            }
+        }
+        other => {
+            return Err(ara_compress::anyhow!("unknown command `{other}`\n{USAGE}"));
+        }
+    }
+    Ok(())
+}
+
+fn serve(model: &str, alloc_name: &str, batch: usize, gen_len: usize, requests: usize) -> Result<()> {
+    use ara_compress::data::{corpus_spec, generate_tokens};
+    use ara_compress::serving::Engine;
+
+    let pl = Pipeline::new(model)?;
+    let ws = pl.pretrained()?;
+    let grams = pl.grams(&ws)?;
+    let fm = pl.factored(&ws, &grams)?;
+
+    // allocation must match what the serving artifacts were specialized to
+    let cfg_path = pl
+        .paths
+        .configs
+        .join("allocations")
+        .join(format!("{model}.{alloc_name}.json"));
+    let art_path = pl
+        .paths
+        .artifacts
+        .join("allocations")
+        .join(format!("{model}.{alloc_name}.json"));
+    let alloc = if cfg_path.exists() {
+        Allocation::load(&cfg_path)?
+    } else {
+        Allocation::load(&art_path)?
+    };
+
+    let engine = Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, alloc_name, batch)?;
+    let stream = generate_tokens(
+        pl.cfg.vocab,
+        corpus_spec("synwiki"),
+        55,
+        (requests + batch) * pl.cfg.prefill_len,
+    );
+    let mut done = 0;
+    let mut total_tps = 0.0;
+    let mut rounds = 0;
+    while done < requests {
+        let mut prompts = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let off = ((done + i) * pl.cfg.prefill_len) % (stream.len() - pl.cfg.prefill_len);
+            prompts.push(stream[off..off + pl.cfg.prefill_len].to_vec());
+        }
+        let (tokens, stats) = engine.generate(&prompts, gen_len)?;
+        done += batch;
+        rounds += 1;
+        total_tps += stats.tok_per_s();
+        println!(
+            "batch {rounds}: {} seqs × {} tokens, decode {:.1} tok/s (first seq: {:?}…)",
+            batch,
+            tokens[0].len(),
+            stats.tok_per_s(),
+            &tokens[0][..tokens[0].len().min(8)]
+        );
+    }
+    println!(
+        "served {done} requests, mean decode throughput {:.1} tok/s",
+        total_tps / rounds as f64
+    );
+    Ok(())
+}

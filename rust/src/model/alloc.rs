@@ -1,0 +1,127 @@
+//! Rank allocations — the *output* of every allocation method (ARA and all
+//! baselines) and the *input* to evaluation, serving specialization, and
+//! parameter accounting. Serialized to the JSON schema shared with
+//! python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::json::{self, Json};
+use crate::Result;
+
+/// Per-module decision: keep the dense matrix (the R ≥ 1 branch of Eq. 8)
+/// or factorize at rank k.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleAlloc {
+    Dense,
+    Rank(usize),
+}
+
+/// A full allocation: module name → decision (BTreeMap for stable output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub name: String,
+    pub modules: BTreeMap<String, ModuleAlloc>,
+}
+
+impl Allocation {
+    pub fn new(name: impl Into<String>) -> Allocation {
+        Allocation { name: name.into(), modules: BTreeMap::new() }
+    }
+
+    pub fn set(&mut self, module: &str, a: ModuleAlloc) {
+        self.modules.insert(module.to_string(), a);
+    }
+
+    pub fn get(&self, module: &str) -> ModuleAlloc {
+        self.modules[module]
+    }
+
+    pub fn to_json(&self) -> String {
+        let mods = Json::Obj(
+            self.modules
+                .iter()
+                .map(|(k, v)| {
+                    let mj = match v {
+                        ModuleAlloc::Dense => json::obj(vec![("dense", Json::Bool(true))]),
+                        ModuleAlloc::Rank(r) => json::obj(vec![
+                            ("dense", Json::Bool(false)),
+                            ("rank", json::n(*r as f64)),
+                        ]),
+                    };
+                    (k.clone(), mj)
+                })
+                .collect(),
+        );
+        json::obj(vec![("name", json::s(&self.name)), ("modules", mods)]).dump()
+    }
+
+    pub fn from_json(text: &str) -> Result<Allocation> {
+        let j = json::parse(text)?;
+        let mut modules = BTreeMap::new();
+        for (k, v) in j.req("modules")?.as_obj()? {
+            let a = if v.req("dense")?.as_bool()? {
+                ModuleAlloc::Dense
+            } else {
+                ModuleAlloc::Rank(
+                    v.get("rank")
+                        .ok_or_else(|| crate::anyhow!("module {k}: dense=false requires rank"))?
+                        .as_usize()?,
+                )
+            };
+            modules.insert(k.clone(), a);
+        }
+        Ok(Allocation { name: j.req("name")?.as_str()?.to_string(), modules })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Allocation> {
+        Allocation::from_json(
+            &std::fs::read_to_string(path).map_err(|e| crate::anyhow!("read {path:?}: {e}"))?,
+        )
+    }
+
+    /// Count of modules kept dense (the Fig. 4 headline statistic).
+    pub fn dense_count(&self) -> usize {
+        self.modules.values().filter(|a| matches!(a, ModuleAlloc::Dense)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut a = Allocation::new("test-80");
+        a.set("layers.0.attn.wq", ModuleAlloc::Rank(12));
+        a.set("layers.0.attn.wv", ModuleAlloc::Dense);
+        let b = Allocation::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.dense_count(), 1);
+    }
+
+    #[test]
+    fn python_schema_compat() {
+        // must parse the exact shape aot.py writes
+        let text = r#"{"name": "uniform-80", "modules": {
+            "layers.0.attn.wq": {"dense": false, "rank": 19},
+            "layers.0.mlp.wdown": {"dense": true}}}"#;
+        let a = Allocation::from_json(text).unwrap();
+        assert_eq!(a.get("layers.0.attn.wq"), ModuleAlloc::Rank(19));
+        assert_eq!(a.get("layers.0.mlp.wdown"), ModuleAlloc::Dense);
+    }
+
+    #[test]
+    fn rejects_missing_rank() {
+        let text = r#"{"name": "x", "modules": {"m": {"dense": false}}}"#;
+        assert!(Allocation::from_json(text).is_err());
+    }
+}

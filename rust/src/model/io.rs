@@ -1,0 +1,102 @@
+//! Weight (de)serialization: a small self-describing binary format
+//! (`ARAW1`: count, then per tensor name/ndim/dims/f32 data, little-endian).
+//! Used to cache pre-trained substrate models under runs/<model>/.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::weights::WeightStore;
+use crate::tensor::Tensor;
+use crate::Result;
+
+const MAGIC: &[u8; 5] = b"ARAW1";
+
+pub fn save_weights(ws: &WeightStore, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(ws.tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in &ws.tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_weights(path: &Path) -> Result<WeightStore> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 5];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(crate::anyhow!("{path:?}: bad magic (not an ARAW1 file)"));
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut ws = WeightStore::default();
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut bytes = vec![0u8; numel * 4];
+        r.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        ws.insert(String::from_utf8(name)?, Tensor::from_vec(&shape, data));
+    }
+    Ok(ws)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ws = WeightStore::default();
+        ws.insert("a.b", Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        ws.insert("c", Tensor::from_vec(&[4], vec![-1., 0., 1.5, 2.5]));
+        let dir = std::env::temp_dir().join("ara_io_test");
+        let path = dir.join("w.bin");
+        save_weights(&ws, &path).unwrap();
+        let back = load_weights(&path).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("a.b"), ws.get("a.b"));
+        assert_eq!(back.get("c"), ws.get("c"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("ara_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTAWEIGHTFILE").unwrap();
+        assert!(load_weights(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

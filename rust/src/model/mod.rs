@@ -1,0 +1,17 @@
+//! Model state: topology (mirrors python/compile/model.py), weight storage,
+//! rank allocations, parameter accounting, and (de)serialization.
+
+mod alloc;
+mod io;
+mod params;
+mod topology;
+mod weights;
+
+pub use alloc::{Allocation, ModuleAlloc};
+pub use io::{load_weights, save_weights};
+pub use params::{
+    alloc_params, alloc_params_for_dims, alloc_ratio, compressible_params, module_params,
+    total_params,
+};
+pub use topology::{aux_param_shapes, module_dims, ModuleDim};
+pub use weights::{init_weights, WeightStore};

@@ -1,0 +1,104 @@
+//! Parameter accounting — where the paper's R = 1 discontinuity lives.
+//!
+//! The compression ratio (paper Sec. 4.1) is the compressed parameter count
+//! of the *compressible* linear modules divided by their dense count;
+//! embeddings/norms/head are excluded from both sides (they are never
+//! compressed), matching the per-module ratio definition of Eq. 3.
+
+use super::alloc::{Allocation, ModuleAlloc};
+use super::topology::{aux_param_shapes, module_dims, ModuleDim};
+use crate::config::ModelCfg;
+
+/// Parameters of one module under a decision — `min` is NOT applied here:
+/// a Rank(k) choice really stores k(m+n) floats even when wasteful. The
+/// allocator is responsible for flipping to Dense (that's the point of the
+/// paper's guidance loss).
+pub fn module_params(dim: &ModuleDim, a: ModuleAlloc) -> usize {
+    match a {
+        ModuleAlloc::Dense => dim.dense_params(),
+        ModuleAlloc::Rank(k) => dim.factored_params(k),
+    }
+}
+
+/// Dense parameter count of all compressible modules.
+pub fn compressible_params(cfg: &ModelCfg) -> usize {
+    module_dims(cfg).iter().map(|d| d.dense_params()).sum()
+}
+
+/// Total model parameters (aux + compressible, dense form).
+pub fn total_params(cfg: &ModelCfg) -> usize {
+    let aux: usize = aux_param_shapes(cfg)
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    aux + compressible_params(cfg)
+}
+
+/// Parameters stored by an allocation over the compressible modules.
+pub fn alloc_params(cfg: &ModelCfg, alloc: &Allocation) -> usize {
+    alloc_params_for_dims(&module_dims(cfg), alloc)
+}
+
+/// Same, over an explicit module list (used by rescale and tests).
+pub fn alloc_params_for_dims(dims: &[ModuleDim], alloc: &Allocation) -> usize {
+    dims.iter().map(|d| module_params(d, alloc.get(&d.name))).sum()
+}
+
+/// Achieved compression ratio of an allocation (compressible scope).
+pub fn alloc_ratio(cfg: &ModelCfg, alloc: &Allocation) -> f64 {
+    alloc_params(cfg, alloc) as f64 / compressible_params(cfg) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_by_name, Paths};
+
+    fn cfg() -> ModelCfg {
+        let paths = Paths::discover().unwrap();
+        model_by_name(&paths.configs, "micro-llama").unwrap()
+    }
+
+    #[test]
+    fn dense_allocation_has_ratio_one() {
+        let c = cfg();
+        let mut a = Allocation::new("dense");
+        for d in module_dims(&c) {
+            a.set(&d.name, ModuleAlloc::Dense);
+        }
+        assert!((alloc_ratio(&c, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factored_full_rank_exceeds_dense() {
+        // the R_max > 1 property that motivates the guidance loss
+        let c = cfg();
+        let mut a = Allocation::new("full-rank-factored");
+        for d in module_dims(&c) {
+            a.set(&d.name, ModuleAlloc::Rank(d.r_full()));
+        }
+        assert!(alloc_ratio(&c, &a) > 1.0);
+    }
+
+    #[test]
+    fn ratio_is_monotone_in_rank() {
+        let c = cfg();
+        let dims = module_dims(&c);
+        let mut prev = 0.0;
+        for k in [1, 4, 8, 16] {
+            let mut a = Allocation::new("k");
+            for d in &dims {
+                a.set(&d.name, ModuleAlloc::Rank(k.min(d.r_full())));
+            }
+            let r = alloc_ratio(&c, &a);
+            assert!(r > prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn total_includes_embeddings() {
+        let c = cfg();
+        assert!(total_params(&c) > compressible_params(&c));
+    }
+}

@@ -1,0 +1,116 @@
+//! Module topology — MUST mirror python/compile/model.py exactly (names,
+//! shapes, ordering); a unit test in runtime/manifest.rs cross-checks this
+//! against the AOT manifests.
+
+use crate::config::ModelCfg;
+
+/// One compressible linear module: applied as `y = x · Wᵀ`, `W: (m, n)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModuleDim {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl ModuleDim {
+    /// Full rank of the masked-SVD parameterization.
+    pub fn r_full(&self) -> usize {
+        self.m.min(self.n)
+    }
+    /// Dense parameter count.
+    pub fn dense_params(&self) -> usize {
+        self.m * self.n
+    }
+    /// Factored parameter count at rank k.
+    pub fn factored_params(&self, k: usize) -> usize {
+        k * (self.m + self.n)
+    }
+    /// Rank above which the factorization stores more than the dense matrix
+    /// (the paper's R=1 discontinuity): smallest k with k(m+n) > mn.
+    pub fn breakeven_rank(&self) -> usize {
+        self.m * self.n / (self.m + self.n)
+    }
+}
+
+/// The seven compressible modules per layer, in python order.
+pub fn module_dims(cfg: &ModelCfg) -> Vec<ModuleDim> {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let kvd = cfg.kv_dim();
+    let mut out = Vec::with_capacity(cfg.n_layers * 7);
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        for (suffix, m, n) in [
+            ("attn.wq", d, d),
+            ("attn.wk", kvd, d),
+            ("attn.wv", kvd, d),
+            ("attn.wo", d, d),
+            ("mlp.wgate", ff, d),
+            ("mlp.wup", ff, d),
+            ("mlp.wdown", d, ff),
+        ] {
+            out.push(ModuleDim { name: format!("{p}{suffix}"), m, n });
+        }
+    }
+    out
+}
+
+/// Non-compressible parameters (embeddings, norms, head), in python order.
+pub fn aux_param_shapes(cfg: &ModelCfg) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d_model;
+    let dh = cfg.head_dim();
+    let mut out = vec![("embed".to_string(), vec![cfg.vocab, d])];
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        out.push((format!("{p}ln1"), vec![d]));
+        out.push((format!("{p}ln2"), vec![d]));
+        if cfg.family == "qwen" {
+            out.push((format!("{p}qnorm"), vec![dh]));
+            out.push((format!("{p}knorm"), vec![dh]));
+        }
+    }
+    out.push(("norm_f".to_string(), vec![d]));
+    out.push(("head".to_string(), vec![cfg.vocab, d]));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_by_name, Paths};
+
+    fn cfg(name: &str) -> ModelCfg {
+        let paths = Paths::discover().unwrap();
+        model_by_name(&paths.configs, name).unwrap()
+    }
+
+    #[test]
+    fn seven_modules_per_layer() {
+        let c = cfg("micro-llama");
+        let dims = module_dims(&c);
+        assert_eq!(dims.len(), 7 * c.n_layers);
+        assert_eq!(dims[0].name, "layers.0.attn.wq");
+        assert_eq!(dims[0].m, c.d_model);
+    }
+
+    #[test]
+    fn qwen_has_qk_norms_and_gqa_shapes() {
+        let c = cfg("miniqwen-s");
+        let aux = aux_param_shapes(&c);
+        assert!(aux.iter().any(|(n, _)| n == "layers.0.qnorm"));
+        let dims = module_dims(&c);
+        let wk = dims.iter().find(|d| d.name == "layers.0.attn.wk").unwrap();
+        assert_eq!(wk.m, c.kv_dim());
+        assert!(wk.m < c.d_model, "GQA must shrink kv projections");
+    }
+
+    #[test]
+    fn breakeven_rank_is_the_r1_discontinuity() {
+        let md = ModuleDim { name: "x".into(), m: 100, n: 60 };
+        let k = md.breakeven_rank();
+        assert!(md.factored_params(k) <= md.dense_params());
+        assert!(md.factored_params(k + 1) > md.dense_params());
+        // and full rank always overshoots for m≠n
+        assert!(md.factored_params(md.r_full()) > md.dense_params());
+    }
+}

@@ -1,0 +1,113 @@
+//! Weight storage: an ordered name → tensor map holding either the dense or
+//! the factored parameterization, plus seeded initialization for
+//! pre-training from scratch.
+
+use std::collections::BTreeMap;
+
+use super::topology::{aux_param_shapes, module_dims};
+use crate::config::ModelCfg;
+use crate::data::Rng;
+use crate::tensor::Tensor;
+
+/// Ordered weight map (BTreeMap: deterministic iteration for hashing/io).
+#[derive(Debug, Clone, Default)]
+pub struct WeightStore {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight tensor: {name}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.tensors
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("missing weight tensor: {name}"))
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+}
+
+/// Initialize dense weights for pre-training: N(0, 0.02²) matrices with
+/// 1/√(2L) scaling on residual-output projections (GPT-2 style), unit norms.
+pub fn init_weights(cfg: &ModelCfg, seed: u64) -> WeightStore {
+    let mut rng = Rng::new(seed);
+    let mut ws = WeightStore::default();
+    let resid_scale = 1.0 / ((2 * cfg.n_layers) as f64).sqrt();
+
+    for (name, shape) in aux_param_shapes(cfg) {
+        let t = if shape.len() == 1 {
+            Tensor::ones(&shape)
+        } else {
+            random_tensor(&mut rng, &shape, 0.02)
+        };
+        ws.insert(name, t);
+    }
+    for d in module_dims(cfg) {
+        let scale = if d.name.ends_with(".wo") || d.name.ends_with(".wdown") {
+            0.02 * resid_scale
+        } else {
+            0.02
+        };
+        ws.insert(d.name.clone(), random_tensor(&mut rng, &[d.m, d.n], scale));
+    }
+    ws
+}
+
+fn random_tensor(rng: &mut Rng, shape: &[usize], std: f64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| (rng.normal() * std) as f32).collect();
+    Tensor::from_vec(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_by_name, Paths};
+    use crate::model::total_params;
+
+    fn cfg() -> ModelCfg {
+        let paths = Paths::discover().unwrap();
+        model_by_name(&paths.configs, "micro-llama").unwrap()
+    }
+
+    #[test]
+    fn init_covers_full_topology() {
+        let c = cfg();
+        let ws = init_weights(&c, 1);
+        assert_eq!(ws.numel(), total_params(&c));
+        assert!(ws.contains("embed"));
+        assert!(ws.contains("layers.0.attn.wq"));
+        assert!(ws.contains("norm_f"));
+    }
+
+    #[test]
+    fn init_is_seeded() {
+        let c = cfg();
+        let a = init_weights(&c, 7);
+        let b = init_weights(&c, 7);
+        assert_eq!(a.get("embed").data, b.get("embed").data);
+        let c2 = init_weights(&c, 8);
+        assert_ne!(a.get("embed").data, c2.get("embed").data);
+    }
+
+    #[test]
+    fn norms_initialized_to_one() {
+        let c = cfg();
+        let ws = init_weights(&c, 1);
+        assert!(ws.get("layers.0.ln1").data.iter().all(|&x| x == 1.0));
+    }
+}

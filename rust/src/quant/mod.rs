@@ -1,0 +1,84 @@
+//! Weight quantization substrate for Table 3: GPTQ (Hessian-aware,
+//! column-by-column with error feedback) and round-to-nearest, both
+//! group-wise symmetric. Quantized weights are dequantized back to f32 for
+//! execution (the CPU PJRT path has no int kernels); *memory accounting*
+//! uses the real packed sizes.
+
+mod gptq;
+mod rtn;
+
+pub use gptq::gptq_quantize;
+pub use rtn::rtn_quantize;
+
+use crate::tensor::Tensor;
+
+/// Quantization settings: `bits` per weight, `group` columns per scale.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantCfg {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl Default for QuantCfg {
+    fn default() -> Self {
+        QuantCfg { bits: 4, group: 32 }
+    }
+}
+
+impl QuantCfg {
+    /// Bytes to store a quantized (m, n) matrix: packed ints + f16 scales.
+    pub fn bytes(&self, m: usize, n: usize) -> usize {
+        let ints = (m * n * self.bits as usize).div_ceil(8);
+        let groups = m * n.div_ceil(self.group);
+        ints + 2 * groups
+    }
+}
+
+/// Symmetric per-group quantize/dequantize of one row segment.
+pub(crate) fn quant_dequant(vals: &mut [f32], bits: u32) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let amax = vals.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    if amax == 0.0 {
+        return;
+    }
+    let scale = amax / qmax;
+    for v in vals.iter_mut() {
+        let q = (*v / scale).round().clamp(-qmax - 1.0, qmax);
+        *v = q * scale;
+    }
+}
+
+/// Mean-squared quantization error (for tests/reporting).
+pub fn mse(a: &Tensor, b: &Tensor) -> f64 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_accounting() {
+        let q = QuantCfg { bits: 4, group: 32 };
+        // 64×64 at 4 bits = 2048 bytes ints + 2·(64·2) scales
+        assert_eq!(q.bytes(64, 64), 64 * 64 / 2 + 2 * 64 * 2);
+        let q3 = QuantCfg { bits: 3, group: 32 };
+        assert!(q3.bytes(64, 64) < q.bytes(64, 64));
+    }
+
+    #[test]
+    fn quant_dequant_bounded_error() {
+        let mut v: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 7.0).collect();
+        let orig = v.clone();
+        quant_dequant(&mut v, 4);
+        let step = orig.iter().fold(0.0f32, |a, &b| a.max(b.abs())) / 7.0;
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() <= 0.5 * step + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Round-to-nearest baseline quantizer: group-wise symmetric, no Hessian.
+
+use super::{quant_dequant, QuantCfg};
+use crate::tensor::Tensor;
+
+/// Quantize-dequantize a (m, n) weight matrix in place-copy.
+pub fn rtn_quantize(w: &Tensor, qc: QuantCfg) -> Tensor {
+    let (m, n) = (w.shape[0], w.shape[1]);
+    let mut out = w.clone();
+    for r in 0..m {
+        let row = &mut out.data[r * n..(r + 1) * n];
+        for chunk in row.chunks_mut(qc.group) {
+            quant_dequant(chunk, qc.bits);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn lower_bits_more_error() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::from_vec(
+            &[16, 64],
+            (0..16 * 64).map(|_| rng.normal() as f32).collect(),
+        );
+        let e4 = super::super::mse(&w, &rtn_quantize(&w, QuantCfg { bits: 4, group: 32 }));
+        let e3 = super::super::mse(&w, &rtn_quantize(&w, QuantCfg { bits: 3, group: 32 }));
+        let e8 = super::super::mse(&w, &rtn_quantize(&w, QuantCfg { bits: 8, group: 32 }));
+        assert!(e8 < e4 && e4 < e3);
+    }
+}

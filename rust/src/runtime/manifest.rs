@@ -1,0 +1,124 @@
+//! Artifact manifests: the name/shape/dtype contract between the python AOT
+//! exporter and the rust runtime.
+
+use std::path::Path;
+
+use crate::json::parse;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::anyhow!("read {path:?}: {e}"))?;
+        let j = parse(&text)?;
+        let inputs = j
+            .req("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|i| {
+                Ok(TensorSpec {
+                    name: i.req("name")?.as_str()?.to_string(),
+                    shape: i
+                        .req("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    dtype: i.req("dtype")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|o| Ok(o.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { name: j.req("name")?.as_str()?.to_string(), inputs, outputs })
+    }
+
+    pub fn input(&self, name: &str) -> Option<&TensorSpec> {
+        self.inputs.iter().find(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|o| o == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Paths;
+    use crate::model::{aux_param_shapes, module_dims};
+
+    /// Cross-check: the rust topology must match the python-exported
+    /// manifest exactly (names AND shapes) — this is the contract test that
+    /// catches any drift between model/topology.rs and compile/model.py.
+    #[test]
+    fn topology_matches_aot_manifest() {
+        let paths = Paths::discover().unwrap();
+        let man_path = paths
+            .artifact_dir("micro-llama")
+            .join("train_step.manifest.json");
+        if !man_path.exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let man = Manifest::load(&man_path).unwrap();
+        let cfg = crate::config::model_by_name(&paths.configs, "micro-llama").unwrap();
+
+        for (name, shape) in aux_param_shapes(&cfg) {
+            let spec = man.input(&name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(spec.shape, shape, "{name}");
+            assert_eq!(spec.dtype, "f32");
+        }
+        for d in module_dims(&cfg) {
+            let spec = man.input(&d.name).unwrap();
+            assert_eq!(spec.shape, vec![d.m, d.n], "{}", d.name);
+        }
+        let toks = man.input("tokens").unwrap();
+        assert_eq!(toks.dtype, "i32");
+        assert_eq!(toks.shape, vec![cfg.batch_train, cfg.seq_train]);
+        assert_eq!(man.outputs[0], "loss");
+    }
+
+    #[test]
+    fn factored_manifest_has_masks() {
+        let paths = Paths::discover().unwrap();
+        let man_path = paths
+            .artifact_dir("micro-llama")
+            .join("mask_fwd_grad.manifest.json");
+        if !man_path.exists() {
+            return;
+        }
+        let man = Manifest::load(&man_path).unwrap();
+        let cfg = crate::config::model_by_name(&paths.configs, "micro-llama").unwrap();
+        for d in module_dims(&cfg) {
+            let u = man.input(&format!("{}.u", d.name)).unwrap();
+            assert_eq!(u.shape, vec![d.m, d.r_full()]);
+            let v = man.input(&format!("{}.v", d.name)).unwrap();
+            assert_eq!(v.shape, vec![d.r_full(), d.n]);
+            let m = man.input(&format!("mask:{}", d.name)).unwrap();
+            assert_eq!(m.shape, vec![d.r_full()]);
+            assert_eq!(
+                man.output_index(&format!("grad:mask:{}", d.name)).is_some(),
+                true
+            );
+        }
+    }
+}

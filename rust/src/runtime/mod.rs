@@ -1,0 +1,67 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them from the rust hot paths. Inputs are bound **by name**
+//! through the artifact manifest — never by guessed position.
+
+mod exec;
+mod manifest;
+
+pub use exec::{
+    buffer_to_tensor, feed_to_buffer, literal_to_tensor, split_output_buffers, Exe, Feed, Outputs,
+};
+pub use manifest::{Manifest, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::Result;
+
+/// A PJRT client plus a cache of compiled executables for one model's
+/// artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Exe>>>,
+}
+
+impl Runtime {
+    /// CPU client over `artifacts/<model>/`.
+    pub fn new(artifact_dir: PathBuf) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::anyhow!("{e}"))?;
+        if !artifact_dir.exists() {
+            return Err(crate::anyhow!(
+                "artifact dir {artifact_dir:?} missing — run `make artifacts`"
+            ));
+        }
+        Ok(Runtime { client, dir: artifact_dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Exe>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let man = self.dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().ok_or_else(|| crate::anyhow!("bad path"))?,
+        )
+        .map_err(|e| crate::anyhow!("parse {hlo:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| crate::anyhow!("compile {name}: {e}"))?;
+        let e = Rc::new(Exe { exe, manifest });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Does an artifact exist (without compiling it)?
+    pub fn has(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}

@@ -1,0 +1,105 @@
+//! Dynamic batcher: groups incoming requests into fixed-size engine batches
+//! (the AOT decode executables are compiled per batch size), padding partial
+//! batches with dummy prompts and choosing the largest compiled batch size
+//! that the queue can fill — the vLLM-style policy at static-shape scale.
+
+/// A planned batch: request indices + padded slot count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Indices into the pending queue (missing slots are padding).
+    pub requests: Vec<usize>,
+    /// The engine batch size to use.
+    pub batch: usize,
+}
+
+/// Batching policy over the compiled batch sizes.
+#[derive(Debug, Clone)]
+pub struct DynamicBatcher {
+    /// Available engine batch sizes (ascending, from the model config).
+    sizes: Vec<usize>,
+    /// Max padding fraction tolerated before falling back to a smaller size.
+    pub max_pad_frac: f64,
+}
+
+impl DynamicBatcher {
+    pub fn new(mut sizes: Vec<usize>) -> DynamicBatcher {
+        sizes.sort_unstable();
+        assert!(!sizes.is_empty(), "need at least one compiled batch size");
+        DynamicBatcher { sizes, max_pad_frac: 0.5 }
+    }
+
+    /// Plan batches for `pending` queued requests (returns plans covering
+    /// all of them; the tail batch may be padded).
+    pub fn plan(&self, pending: usize) -> Vec<BatchPlan> {
+        let mut plans = Vec::new();
+        let mut next = 0usize;
+        let mut left = pending;
+        while left > 0 {
+            let b = self.pick(left);
+            let take = left.min(b);
+            plans.push(BatchPlan {
+                requests: (next..next + take).collect(),
+                batch: b,
+            });
+            next += take;
+            left -= take;
+        }
+        plans
+    }
+
+    /// Largest compiled size fully fillable; otherwise the smallest size
+    /// whose padding stays under `max_pad_frac`, otherwise the smallest.
+    fn pick(&self, queued: usize) -> usize {
+        if let Some(&b) = self.sizes.iter().rev().find(|&&b| b <= queued) {
+            return b;
+        }
+        for &b in &self.sizes {
+            let pad = (b - queued) as f64 / b as f64;
+            if pad <= self.max_pad_frac {
+                return b;
+            }
+        }
+        self.sizes[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_largest_first() {
+        let b = DynamicBatcher::new(vec![1, 2, 4]);
+        let plans = b.plan(7);
+        assert_eq!(plans[0].batch, 4);
+        assert_eq!(plans[0].requests, vec![0, 1, 2, 3]);
+        assert_eq!(plans[1].batch, 2);
+        // last request: batch 1, no padding
+        assert_eq!(plans[2].batch, 1);
+        let covered: usize = plans.iter().map(|p| p.requests.len()).sum();
+        assert_eq!(covered, 7);
+    }
+
+    #[test]
+    fn pads_within_tolerance() {
+        let b = DynamicBatcher::new(vec![4]);
+        let plans = b.plan(3);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].batch, 4);
+        assert_eq!(plans[0].requests.len(), 3); // one padded slot
+    }
+
+    #[test]
+    fn empty_queue_no_plans() {
+        let b = DynamicBatcher::new(vec![1, 2]);
+        assert!(b.plan(0).is_empty());
+    }
+
+    #[test]
+    fn single_request_uses_smallest() {
+        let b = DynamicBatcher::new(vec![1, 2, 4]);
+        let plans = b.plan(1);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].batch, 1);
+    }
+}

@@ -1,0 +1,228 @@
+//! The decode engine: owns device-resident weight buffers for one
+//! (allocation, batch-size) specialization and runs prefill + greedy decode
+//! loops entirely through `execute_b`.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::config::ModelCfg;
+use crate::model::{Allocation, ModuleAlloc, WeightStore};
+use crate::runtime::{buffer_to_tensor, feed_to_buffer, split_output_buffers, Exe, Feed, Runtime};
+use crate::svd::FactoredModel;
+use crate::tensor::{IntTensor, Tensor};
+use crate::Result;
+
+/// Generation statistics for throughput reporting (Fig. 5).
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub tokens_generated: usize,
+    pub steps: usize,
+}
+
+impl GenStats {
+    /// Decode throughput in tokens/second.
+    pub fn tok_per_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.decode_s.max(1e-9)
+    }
+}
+
+/// One (allocation, batch) specialization with device-resident weights.
+pub struct Engine {
+    cfg: ModelCfg,
+    pub batch: usize,
+    pub alloc_name: String,
+    prefill: Rc<Exe>,
+    decode: Rc<Exe>,
+    /// Device buffers for the weight prefix, in decode-manifest order.
+    dec_weights: Vec<xla::PjRtBuffer>,
+    /// Device buffers for the weight prefix, in prefill-manifest order.
+    pre_weights: Vec<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+}
+
+/// Materialize the host tensor for a weight input name under an allocation.
+fn weight_tensor(
+    name: &str,
+    ws: &WeightStore,
+    fm: &FactoredModel,
+    alloc: &Allocation,
+) -> Result<Tensor> {
+    if let Some(base) = name.strip_suffix(".u") {
+        let k = match alloc.get(base) {
+            ModuleAlloc::Rank(k) => k,
+            ModuleAlloc::Dense => return Err(crate::anyhow!("{base} is dense, no .u")),
+        };
+        return Ok(fm.factors[base].truncate(k).0);
+    }
+    if let Some(base) = name.strip_suffix(".v") {
+        let k = match alloc.get(base) {
+            ModuleAlloc::Rank(k) => k,
+            ModuleAlloc::Dense => return Err(crate::anyhow!("{base} is dense, no .v")),
+        };
+        return Ok(fm.factors[base].truncate(k).1);
+    }
+    // dense module or aux param: straight from the weight store
+    Ok(ws.get(name).clone())
+}
+
+impl Engine {
+    /// Compile (cached) and upload weights for `alloc` at batch size `b`.
+    pub fn new(
+        cfg: &ModelCfg,
+        rt: &Runtime,
+        ws: &WeightStore,
+        fm: &FactoredModel,
+        alloc: &Allocation,
+        alloc_artifact: &str,
+        batch: usize,
+    ) -> Result<Engine> {
+        let prefill = rt.load(&format!("prefill_{alloc_artifact}_b{batch}"))?;
+        let decode = rt.load(&format!("decode_{alloc_artifact}_b{batch}"))?;
+
+        let upload = |exe: &Exe| -> Result<Vec<xla::PjRtBuffer>> {
+            let mut bufs = Vec::new();
+            for spec in &exe.manifest.inputs {
+                if spec.name == "tokens"
+                    || spec.name == "lens"
+                    || spec.name.starts_with("kcache")
+                    || spec.name.starts_with("vcache")
+                {
+                    break; // weights are the manifest prefix by construction
+                }
+                let t = weight_tensor(&spec.name, ws, fm, alloc)?;
+                if t.shape != spec.shape {
+                    return Err(crate::anyhow!(
+                        "{}: shape {:?} != manifest {:?} (alloc/artifact mismatch?)",
+                        spec.name,
+                        t.shape,
+                        spec.shape
+                    ));
+                }
+                bufs.push(feed_to_buffer(&rt.client, &Feed::F32(&t))?);
+            }
+            Ok(bufs)
+        };
+
+        Ok(Engine {
+            cfg: cfg.clone(),
+            batch,
+            alloc_name: alloc.name.clone(),
+            dec_weights: upload(&decode)?,
+            pre_weights: upload(&prefill)?,
+            prefill,
+            decode,
+            client: rt.client.clone(),
+        })
+    }
+
+    /// Greedy-generate `gen_len` tokens for a batch of equal-length prompts
+    /// (padded/truncated to cfg.prefill_len by the batcher).
+    pub fn generate(&self, prompts: &[Vec<i32>], gen_len: usize) -> Result<(Vec<Vec<i32>>, GenStats)> {
+        let b = self.batch;
+        let p = self.cfg.prefill_len;
+        assert_eq!(prompts.len(), b, "prompt count must equal engine batch");
+        let mut stats = GenStats::default();
+
+        // ---- prefill ----
+        let t0 = Instant::now();
+        let mut toks = Vec::with_capacity(b * p);
+        for pr in prompts {
+            assert_eq!(pr.len(), p, "prompts must be prefill_len long");
+            toks.extend_from_slice(pr);
+        }
+        let toks = IntTensor::from_vec(&[b, p], toks);
+        let tok_buf = feed_to_buffer(&self.client, &Feed::I32(&toks))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.pre_weights.iter().collect();
+        args.push(&tok_buf);
+        let outs = self
+            .prefill
+            .run_buffers_ref(&args)
+            .map_err(|e| crate::anyhow!("prefill: {e}"))?;
+        let outs = split_output_buffers(&self.client, outs, self.prefill.manifest.outputs.len())?;
+        stats.prefill_s = t0.elapsed().as_secs_f64();
+
+        // outputs: [logits, kcache.0, vcache.0, ...] stay on device
+        let mut logits = buffer_to_tensor(&outs[0])?;
+        let mut caches: Vec<xla::PjRtBuffer> = outs.into_iter().skip(1).collect();
+
+        // ---- decode loop ----
+        let t1 = Instant::now();
+        let mut generated: Vec<Vec<i32>> = vec![Vec::with_capacity(gen_len); b];
+        let mut lens_host = vec![p as i32; b];
+        let vocab = self.cfg.vocab;
+        for step in 0..gen_len {
+            // greedy next token from last logits
+            let mut next = Vec::with_capacity(b);
+            for s in 0..b {
+                let row = &logits.data[s * vocab..(s + 1) * vocab];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                next.push(arg as i32);
+                generated[s].push(arg as i32);
+            }
+            if step + 1 == gen_len {
+                break;
+            }
+            if lens_host[0] as usize + 1 >= self.cfg.max_decode_seq {
+                break; // cache full
+            }
+            let tok_t = IntTensor::from_vec(&[b], next);
+            let lens_t = IntTensor::from_vec(&[b], lens_host.clone());
+            let tok_b = feed_to_buffer(&self.client, &Feed::I32(&tok_t))?;
+            let lens_b = feed_to_buffer(&self.client, &Feed::I32(&lens_t))?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.dec_weights.iter().collect();
+            for c in &caches {
+                args.push(c);
+            }
+            args.push(&tok_b);
+            args.push(&lens_b);
+            let outs = self
+                .decode
+                .run_buffers_ref(&args)
+                .map_err(|e| crate::anyhow!("decode step {step}: {e}"))?;
+            let outs =
+                split_output_buffers(&self.client, outs, self.decode.manifest.outputs.len())?;
+            let mut it = outs.into_iter();
+            let logit_buf = it.next().unwrap();
+            logits = buffer_to_tensor(&logit_buf)?;
+            caches = it.collect();
+            for l in lens_host.iter_mut() {
+                *l += 1;
+            }
+            stats.steps += 1;
+        }
+        stats.decode_s = t1.elapsed().as_secs_f64();
+        stats.tokens_generated = b * generated[0].len();
+        Ok((generated, stats))
+    }
+
+    pub fn config(&self) -> &ModelCfg {
+        &self.cfg
+    }
+}
+
+/// Masks → Allocation helper for serving (masks carry the final ranks).
+#[allow(dead_code)]
+pub fn alloc_from_masks(
+    alloc_name: &str,
+    masks: &BTreeMap<String, Tensor>,
+    dims: &[crate::model::ModuleDim],
+) -> Allocation {
+    let mut a = Allocation::new(alloc_name);
+    for d in dims {
+        let k = masks[&d.name].data.iter().filter(|&&x| x > 0.5).count();
+        if k >= d.r_full() {
+            a.set(&d.name, ModuleAlloc::Dense);
+        } else {
+            a.set(&d.name, ModuleAlloc::Rank(k.max(1)));
+        }
+    }
+    a
+}

@@ -1,0 +1,15 @@
+//! Batched serving engine (Appendix A.4 / Fig. 5): allocation-specialized
+//! prefill + decode executables with device-resident weights and KV caches,
+//! a dynamic batcher, and a threaded router front-end.
+//!
+//! The engine is the L3 hot path: after construction, a decode step is one
+//! `execute_b` call — weights and caches never leave the device; only the
+//! (batch,) token/length vectors cross the host boundary each step.
+
+mod batcher;
+mod engine;
+mod router;
+
+pub use batcher::{BatchPlan, DynamicBatcher};
+pub use engine::{Engine, GenStats};
+pub use router::{Router, ServeRequest, ServeResponse};

@@ -1,0 +1,117 @@
+//! Threaded router front-end: the engine (PJRT handles are not Sync) lives
+//! on a dedicated worker thread; callers submit requests over a channel and
+//! receive generated tokens over per-request reply channels. This is the
+//! process topology a multi-engine deployment would shard over.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+}
+
+/// One generation response.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub tokens: Vec<i32>,
+    pub decode_tok_per_s: f64,
+}
+
+enum Msg {
+    Req(ServeRequest, mpsc::Sender<ServeResponse>),
+    Shutdown,
+}
+
+/// Router handle: submit requests, receive responses.
+pub struct Router {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spawn the engine worker. `engine_builder` runs on the worker thread
+    /// (PJRT state never crosses threads) and returns a closure that
+    /// generates a batch of prompt→tokens.
+    pub fn spawn<F>(engine_builder: F, batch: usize, prefill_len: usize, max_wait_ms: u64) -> Router
+    where
+        F: FnOnce() -> Box<dyn FnMut(&[Vec<i32>], usize) -> crate::Result<(Vec<Vec<i32>>, f64)>>
+            + Send
+            + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || {
+            let mut generate = engine_builder();
+            let mut queue: Vec<(ServeRequest, mpsc::Sender<ServeResponse>)> = Vec::new();
+            loop {
+                // block for the first request, then drain within max_wait
+                match rx.recv() {
+                    Ok(Msg::Req(r, reply)) => queue.push((r, reply)),
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                }
+                let deadline = std::time::Instant::now()
+                    + std::time::Duration::from_millis(max_wait_ms);
+                while queue.len() < batch {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(Msg::Req(r, reply)) => queue.push((r, reply)),
+                        Ok(Msg::Shutdown) => break,
+                        Err(_) => break,
+                    }
+                }
+                // run one padded batch
+                let n = queue.len().min(batch);
+                let mut prompts: Vec<Vec<i32>> = queue[..n]
+                    .iter()
+                    .map(|(r, _)| {
+                        let mut p = r.prompt.clone();
+                        p.resize(prefill_len, crate::data::BOS_TOKEN);
+                        p
+                    })
+                    .collect();
+                while prompts.len() < batch {
+                    prompts.push(vec![crate::data::BOS_TOKEN; prefill_len]);
+                }
+                let gen_len = queue[..n].iter().map(|(r, _)| r.gen_len).max().unwrap_or(1);
+                match generate(&prompts, gen_len) {
+                    Ok((tokens, tps)) => {
+                        for (i, (req, reply)) in queue.drain(..n).enumerate() {
+                            let mut t = tokens[i].clone();
+                            t.truncate(req.gen_len);
+                            let _ = reply.send(ServeResponse {
+                                tokens: t,
+                                decode_tok_per_s: tps,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("[router] batch failed: {e}");
+                        queue.drain(..n);
+                    }
+                }
+            }
+        });
+        Router { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, req: ServeRequest) -> mpsc::Receiver<ServeResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Req(req, tx)).expect("router worker gone");
+        rx
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

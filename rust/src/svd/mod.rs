@@ -1,0 +1,332 @@
+//! Activation-aware SVD pipeline (paper Sec. 3.1, following SVD-LLM):
+//!
+//!   1. calibration — accumulate per-module input Gram matrices H = Σ XXᵀ
+//!      by running the AOT `calibrate` executable over calibration batches;
+//!   2. whitening — H + εI = S·Sᵀ (Cholesky), factor the product W·S;
+//!   3. factorization — SVD(W·S) = U·Σ·Vᵀ gives W_u = U√Σ and
+//!      W_v = √Σ·Vᵀ·S⁻¹ with W = W_u·W_v exactly at full rank.
+//!
+//! The whitened singular values δ are kept per module: they drive the
+//! truncation loss L_R, the guidance metric G_R (Eq. 6), and several
+//! baselines (STRS thresholds, FARMS spectra).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::config::ModelCfg;
+use crate::data::{batches, corpus_spec, generate_tokens};
+use crate::linalg::{cholesky, invert_lower_triangular, svd, Mat};
+use crate::model::{module_dims, Allocation, ModuleAlloc, WeightStore};
+use crate::runtime::{Feed, Runtime};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Full-rank whitened factorization of one module.
+#[derive(Debug, Clone)]
+pub struct ModuleFactors {
+    /// (m, r) = U·√Σ
+    pub wu: Tensor,
+    /// (r, n) = √Σ·Vᵀ·S⁻¹
+    pub wv: Tensor,
+    /// Whitened singular values δ₁ ≥ … ≥ δ_r.
+    pub sigma: Vec<f64>,
+}
+
+impl ModuleFactors {
+    pub fn r_full(&self) -> usize {
+        self.sigma.len()
+    }
+
+    /// Physically truncated factors (serving / export): (m,k) and (k,n).
+    pub fn truncate(&self, k: usize) -> (Tensor, Tensor) {
+        (self.wu.left_cols(k), self.wv.top_rows(k))
+    }
+
+    /// Truncation loss √(Σ_{i>k} δᵢ²) — the L_R of Sec. 3.3.
+    pub fn tail_norm(&self, k: usize) -> f64 {
+        self.sigma[k.min(self.sigma.len())..]
+            .iter()
+            .map(|x| x * x)
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Total output norm L₀ = √(Σ δᵢ²).
+    pub fn total_norm(&self) -> f64 {
+        self.tail_norm(0)
+    }
+}
+
+/// All modules' factors + the calibration seed used.
+#[derive(Debug, Clone, Default)]
+pub struct FactoredModel {
+    pub factors: BTreeMap<String, ModuleFactors>,
+}
+
+/// Accumulate the per-module Gram matrices over `n_batches` calibration
+/// batches (the paper calibrates on C4 → our `sync4`).
+pub fn calibrate(
+    cfg: &ModelCfg,
+    rt: &Runtime,
+    ws: &WeightStore,
+    corpus: &str,
+    n_batches: usize,
+    seed: u64,
+) -> Result<BTreeMap<String, Mat>> {
+    let exe = rt.load("calibrate")?;
+    let spec = corpus_spec(corpus);
+    let need = n_batches * cfg.batch_eval * (cfg.seq_eval + 1) + 1;
+    let stream = generate_tokens(cfg.vocab, spec, seed, need);
+    let data = batches(&stream, cfg.batch_eval, cfg.seq_eval);
+    let dims = module_dims(cfg);
+    let mut acc: BTreeMap<String, Mat> = dims
+        .iter()
+        .map(|d| (d.name.clone(), Mat::zeros(d.n, d.n)))
+        .collect();
+
+    for (toks, _) in data.iter().take(n_batches) {
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        for (name, t) in &ws.tensors {
+            feeds.insert(name.as_str(), Feed::F32(t));
+        }
+        feeds.insert("tokens", Feed::I32(toks));
+        let out = exe.run(&feeds)?;
+        for d in &dims {
+            let h = out.tensor(&format!("h:{}", d.name))?;
+            let a = acc.get_mut(&d.name).unwrap();
+            for (dst, &src) in a.data.iter_mut().zip(&h.data) {
+                *dst += src as f64;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+/// Factorize every compressible module given its Gram matrix.
+///
+/// `damp` is the relative diagonal damping ε/mean(diag) that keeps H
+/// positive definite (calibration streams shorter than n would otherwise
+/// make H singular).
+pub fn factorize(
+    cfg: &ModelCfg,
+    ws: &WeightStore,
+    grams: &BTreeMap<String, Mat>,
+    damp: f64,
+) -> Result<FactoredModel> {
+    let mut fm = FactoredModel::default();
+    for d in module_dims(cfg) {
+        let w = ws.get(&d.name);
+        let h = grams
+            .get(&d.name)
+            .ok_or_else(|| crate::anyhow!("no gram for {}", d.name))?;
+        fm.factors.insert(d.name.clone(), factorize_module(w, h, damp)?);
+    }
+    Ok(fm)
+}
+
+/// Whitened SVD of one module (see module docs).
+pub fn factorize_module(w: &Tensor, h: &Mat, damp: f64) -> Result<ModuleFactors> {
+    let (m, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(h.rows, n);
+    // dampen: H + εI
+    let mean_diag = (0..n).map(|i| h.at(i, i)).sum::<f64>() / n as f64;
+    let eps = (damp * mean_diag).max(1e-10);
+    let mut hd = h.clone();
+    for i in 0..n {
+        let v = hd.at(i, i) + eps;
+        hd.set(i, i, v);
+    }
+    let s = cholesky(&hd)?;
+    let s_inv = invert_lower_triangular(&s)?;
+
+    let wmat = Mat::from_f32(m, n, &w.data);
+    let ws_prod = wmat.matmul(&s);
+    let dec = svd(&ws_prod);
+    let r = m.min(n);
+
+    // wu = U √Σ (m, r)
+    let mut wu = Mat::zeros(m, r);
+    for i in 0..m {
+        for j in 0..r {
+            wu.set(i, j, dec.u.at(i, j) * dec.s[j].max(0.0).sqrt());
+        }
+    }
+    // wv = √Σ Vᵀ S⁻¹ (r, n)
+    let mut sv = Mat::zeros(r, n);
+    for i in 0..r {
+        let sq = dec.s[i].max(0.0).sqrt();
+        for j in 0..n {
+            sv.set(i, j, sq * dec.vt.at(i, j));
+        }
+    }
+    let wv = sv.matmul(&s_inv);
+
+    Ok(ModuleFactors {
+        wu: Tensor::from_vec(&[m, r], wu.to_f32()),
+        wv: Tensor::from_vec(&[r, n], wv.to_f32()),
+        sigma: dec.s,
+    })
+}
+
+/// Binary rank masks for an allocation: Dense ⇒ all ones over r_full (the
+/// R ≥ 1 branch of Eq. 8 under the masked-max-rank parameterization),
+/// Rank(k) ⇒ ones on the top-k singular directions.
+pub fn alloc_masks(cfg: &ModelCfg, alloc: &Allocation) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    for d in module_dims(cfg) {
+        let r = d.r_full();
+        let mask = match alloc.get(&d.name) {
+            ModuleAlloc::Dense => Tensor::ones(&[r]),
+            ModuleAlloc::Rank(k) => {
+                let mut t = Tensor::zeros(&[r]);
+                for i in 0..k.min(r) {
+                    t.data[i] = 1.0;
+                }
+                t
+            }
+        };
+        out.insert(d.name.clone(), mask);
+    }
+    out
+}
+
+/// Build the feed map for a factored-parameterization executable
+/// (score_masked / mask_fwd_grad / lora_step): aux weights + factors + masks.
+pub fn factored_feeds<'a>(
+    ws: &'a WeightStore,
+    fm: &'a FactoredModel,
+    masks: &'a BTreeMap<String, Tensor>,
+    feeds: &mut HashMap<&'a str, Feed<'a>>,
+) {
+    for (name, t) in &ws.tensors {
+        // only aux params exist in the factored spec; compressible dense
+        // tensors are superseded by their factors — harmless to skip.
+        if fm.factors.contains_key(name) {
+            continue;
+        }
+        feeds.insert(name.as_str(), Feed::F32(t));
+    }
+    for (name, f) in &fm.factors {
+        // keys "name.u" / "name.v" / "mask:name" must live as long as 'a:
+        // we lean on the fact that manifests own the spec names; the feed
+        // map is keyed by &str borrowed from these leaked-in-place strings.
+        feeds.insert(intern_key(format!("{name}.u")), Feed::F32(&f.wu));
+        feeds.insert(intern_key(format!("{name}.v")), Feed::F32(&f.wv));
+    }
+    for (name, m) in masks {
+        feeds.insert(intern_key(format!("mask:{name}")), Feed::F32(m));
+    }
+}
+
+/// Intern feed keys: module-name-derived keys are a small closed set, so a
+/// process-lifetime intern table avoids per-call allocation churn without
+/// unbounded leaking.
+pub(crate) fn intern_key(s: String) -> &'static str {
+    use std::collections::HashSet;
+    use std::sync::{Mutex, OnceLock};
+    static INTERN: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let table = INTERN.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut guard = table.lock().unwrap();
+    if let Some(&k) = guard.get(s.as_str()) {
+        return k;
+    }
+    let k: &'static str = Box::leak(s.into_boxed_str());
+    guard.insert(k);
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn random_tensor(rng: &mut Rng, m: usize, n: usize) -> Tensor {
+        Tensor::from_vec(
+            &[m, n],
+            (0..m * n).map(|_| rng.normal() as f32 * 0.1).collect(),
+        )
+    }
+
+    fn random_gram(rng: &mut Rng, n: usize, samples: usize) -> Mat {
+        // H = Σ x xᵀ over `samples` random activations
+        let mut h = Mat::zeros(n, n);
+        for _ in 0..samples {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for i in 0..n {
+                for j in 0..n {
+                    h.data[i * n + j] += x[i] * x[j];
+                }
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn full_rank_factorization_reconstructs_w() {
+        let mut rng = Rng::new(3);
+        for (m, n) in [(12, 12), (8, 20), (20, 8)] {
+            let w = random_tensor(&mut rng, m, n);
+            let h = random_gram(&mut rng, n, 4 * n);
+            let f = factorize_module(&w, &h, 1e-4).unwrap();
+            let back = f.wu.matmul(&f.wv);
+            for (a, b) in back.data.iter().zip(&w.data) {
+                assert!((a - b).abs() < 1e-3, "({m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_sorted_and_tail_monotone() {
+        let mut rng = Rng::new(5);
+        let w = random_tensor(&mut rng, 10, 14);
+        let h = random_gram(&mut rng, 14, 60);
+        let f = factorize_module(&w, &h, 1e-4).unwrap();
+        for i in 1..f.sigma.len() {
+            assert!(f.sigma[i - 1] >= f.sigma[i] - 1e-12);
+        }
+        for k in 1..f.sigma.len() {
+            assert!(f.tail_norm(k) <= f.tail_norm(k - 1) + 1e-12);
+        }
+        assert!(f.tail_norm(f.sigma.len()) < 1e-12);
+    }
+
+    #[test]
+    fn truncated_factors_shapes() {
+        let mut rng = Rng::new(7);
+        let w = random_tensor(&mut rng, 6, 10);
+        let h = random_gram(&mut rng, 10, 50);
+        let f = factorize_module(&w, &h, 1e-4).unwrap();
+        let (u, v) = f.truncate(3);
+        assert_eq!(u.shape, vec![6, 3]);
+        assert_eq!(v.shape, vec![3, 10]);
+    }
+
+    #[test]
+    fn singular_gram_is_handled_by_damping() {
+        // fewer samples than n ⇒ H rank deficient; damping must save it
+        let mut rng = Rng::new(9);
+        let w = random_tensor(&mut rng, 6, 16);
+        let h = random_gram(&mut rng, 16, 3);
+        let f = factorize_module(&w, &h, 1e-2).unwrap();
+        let back = f.wu.matmul(&f.wv);
+        for (a, b) in back.data.iter().zip(&w.data) {
+            assert!((a - b).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn alloc_masks_shapes_and_counts() {
+        let paths = crate::config::Paths::discover().unwrap();
+        let cfg = crate::config::model_by_name(&paths.configs, "micro-llama").unwrap();
+        let mut alloc = Allocation::new("t");
+        for d in module_dims(&cfg) {
+            alloc.set(&d.name, ModuleAlloc::Rank(d.r_full() / 2));
+        }
+        let masks = alloc_masks(&cfg, &alloc);
+        for d in module_dims(&cfg) {
+            let m = &masks[&d.name];
+            assert_eq!(m.shape, vec![d.r_full()]);
+            let ones: f32 = m.data.iter().sum();
+            assert_eq!(ones as usize, d.r_full() / 2);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Host-side tensors: the lingua franca between the substrates and the PJRT
+//! runtime. Deliberately minimal — heavy compute goes through the AOT HLO
+//! executables; these types cover weight management, calibration statistics
+//! and glue math.
+
+/// A dense f32 tensor in row-major order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// 2-D accessor (row-major). Debug-asserted; hot paths index directly.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        self.data[i * c + j] = v;
+    }
+
+    /// Matrix rows/cols for 2-D tensors.
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+    pub fn cols(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// C = A · B for 2-D tensors (ikj loop order, f32).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Take the leading `k` rows of a 2-D tensor.
+    pub fn top_rows(&self, k: usize) -> Tensor {
+        let n = self.shape[1];
+        Tensor::from_vec(&[k, n], self.data[..k * n].to_vec())
+    }
+
+    /// Take the leading `k` columns of a 2-D tensor.
+    pub fn left_cols(&self, k: usize) -> Tensor {
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(m * k);
+        for i in 0..m {
+            out.extend_from_slice(&self.data[i * n..i * n + k]);
+        }
+        Tensor::from_vec(&[m, k], out)
+    }
+}
+
+/// A dense i32 tensor (token ids, lengths).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> IntTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor { shape: shape.to_vec(), data }
+    }
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        IntTensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            eye.set2(i, i, 1.0);
+        }
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(a.matmul(&b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn slicing() {
+        let a = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.top_rows(2).data, vec![1., 2., 3., 4.]);
+        assert_eq!(a.left_cols(1).data, vec![1., 3., 5.]);
+        assert_eq!(a.left_cols(1).shape, vec![3, 1]);
+    }
+}

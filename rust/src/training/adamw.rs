@@ -1,0 +1,160 @@
+//! AdamW (decoupled weight decay) over named tensor collections — used for
+//! pre-training (f32 weights), allocation training (f64 α vectors via the
+//! scalar variant), and LoRA recovery.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct AdamWConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+impl Default for AdamWConfig {
+    fn default() -> Self {
+        AdamWConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.01 }
+    }
+}
+
+/// AdamW state for a set of named parameter vectors.
+#[derive(Debug, Default)]
+pub struct AdamW {
+    pub cfg: AdamWConfig,
+    m: BTreeMap<String, Vec<f64>>,
+    v: BTreeMap<String, Vec<f64>>,
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(cfg: AdamWConfig) -> AdamW {
+        AdamW { cfg, m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+    }
+
+    /// Advance the step counter (call once per optimization step, before
+    /// updating the parameter groups of that step).
+    pub fn step(&mut self) {
+        self.t += 1;
+    }
+
+    /// Update one named f32 parameter tensor in place. `lr_scale` lets a
+    /// schedule modulate the base lr per step; decay is decoupled.
+    pub fn update_f32(&mut self, name: &str, param: &mut [f32], grad: &[f32], lr_scale: f64) {
+        assert_eq!(param.len(), grad.len(), "{name}: grad size mismatch");
+        let n = param.len();
+        let m = self.m.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
+        let v = self.v.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
+        assert_eq!(m.len(), n);
+        let c = &self.cfg;
+        let t = self.t.max(1) as f64;
+        let bc1 = 1.0 - c.beta1.powf(t);
+        let bc2 = 1.0 - c.beta2.powf(t);
+        let lr = c.lr * lr_scale;
+        for i in 0..n {
+            let g = grad[i] as f64;
+            m[i] = c.beta1 * m[i] + (1.0 - c.beta1) * g;
+            v[i] = c.beta2 * v[i] + (1.0 - c.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            let mut p = param[i] as f64;
+            p -= lr * (mhat / (vhat.sqrt() + c.eps) + c.weight_decay * p);
+            param[i] = p as f32;
+        }
+    }
+
+    /// f64 variant (allocation α vectors).
+    pub fn update_f64(&mut self, name: &str, param: &mut [f64], grad: &[f64], lr_scale: f64) {
+        assert_eq!(param.len(), grad.len(), "{name}: grad size mismatch");
+        let n = param.len();
+        let m = self.m.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
+        let v = self.v.entry(name.to_string()).or_insert_with(|| vec![0.0; n]);
+        let c = &self.cfg;
+        let t = self.t.max(1) as f64;
+        let bc1 = 1.0 - c.beta1.powf(t);
+        let bc2 = 1.0 - c.beta2.powf(t);
+        let lr = c.lr * lr_scale;
+        for i in 0..n {
+            let g = grad[i];
+            m[i] = c.beta1 * m[i] + (1.0 - c.beta1) * g;
+            v[i] = c.beta2 * v[i] + (1.0 - c.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            param[i] -= lr * (mhat / (vhat.sqrt() + c.eps) + c.weight_decay * param[i]);
+        }
+    }
+}
+
+/// Cosine learning-rate schedule with linear warmup, returning a scale in
+/// (0, 1] to multiply the base lr.
+pub fn cosine_schedule(step: usize, total: usize, warmup: usize) -> f64 {
+    if total == 0 {
+        return 1.0;
+    }
+    if step < warmup {
+        return (step + 1) as f64 / warmup.max(1) as f64;
+    }
+    let p = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+    0.5 * (1.0 + (std::f64::consts::PI * p.min(1.0)).cos()).max(0.02)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(x) = Σ (x_i - i)²
+        let mut opt = AdamW::new(AdamWConfig { lr: 0.1, weight_decay: 0.0, ..Default::default() });
+        let mut x = vec![0.0f32; 4];
+        for _ in 0..500 {
+            let grad: Vec<f32> = x.iter().enumerate().map(|(i, &v)| 2.0 * (v - i as f32)).collect();
+            opt.step();
+            opt.update_f32("x", &mut x, &grad, 1.0);
+        }
+        for (i, &v) in x.iter().enumerate() {
+            assert!((v - i as f32).abs() < 0.05, "x[{i}]={v}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = AdamW::new(AdamWConfig { lr: 0.01, weight_decay: 0.5, ..Default::default() });
+        let mut x = vec![1.0f32];
+        for _ in 0..100 {
+            opt.step();
+            opt.update_f32("x", &mut x, &[0.0], 1.0);
+        }
+        assert!(x[0] < 0.7, "decay should shrink x: {}", x[0]);
+    }
+
+    #[test]
+    fn schedule_shape() {
+        assert!(cosine_schedule(0, 100, 10) < 0.2);
+        assert!((cosine_schedule(10, 100, 10) - 1.0).abs() < 1e-9);
+        assert!(cosine_schedule(99, 100, 10) < 0.1);
+        // monotone decreasing after warmup
+        let a = cosine_schedule(20, 100, 10);
+        let b = cosine_schedule(60, 100, 10);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn f64_variant_matches_f32() {
+        let g = vec![0.3, -0.2];
+        let mut a32 = AdamW::new(AdamWConfig::default());
+        let mut a64 = AdamW::new(AdamWConfig::default());
+        let mut x32 = vec![0.5f32, -0.1];
+        let mut x64 = vec![0.5f64, -0.1];
+        for _ in 0..10 {
+            a32.step();
+            a64.step();
+            a32.update_f32("p", &mut x32, &[g[0] as f32, g[1] as f32], 1.0);
+            a64.update_f64("p", &mut x64, &g, 1.0);
+        }
+        for (a, b) in x32.iter().zip(&x64) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate LM pre-training: AdamW + cosine schedule driving the AOT
+//! `train_step` executable. This is how the models we compress come to
+//! exist — no pre-trained checkpoints are shipped (DESIGN.md §2).
+
+mod adamw;
+mod pretrain;
+
+pub use adamw::{AdamW, AdamWConfig};
+pub use pretrain::{pretrain, PretrainConfig, PretrainReport};

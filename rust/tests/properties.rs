@@ -1,0 +1,167 @@
+//! Property-based tests over the coordinator invariants (routing, batching,
+//! allocation state) — randomized sweeps with the in-crate PRNG (the
+//! offline vendor set has no proptest; the generate→check loops below play
+//! the same role, 100+ cases per property).
+
+use ara_compress::ara::{binary_mask, rescale_to_target, Staircase};
+use ara_compress::data::Rng;
+use ara_compress::linalg::project_simplex;
+use ara_compress::model::{alloc_params_for_dims, ModuleAlloc, ModuleDim};
+use ara_compress::serving::DynamicBatcher;
+
+fn random_dims(rng: &mut Rng, n: usize) -> Vec<ModuleDim> {
+    (0..n)
+        .map(|i| ModuleDim {
+            name: format!("m{i}"),
+            m: 8 + rng.below(120),
+            n: 8 + rng.below(120),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_rescale_meets_budget_and_caps() {
+    let mut rng = Rng::new(11);
+    for case in 0..120 {
+        let n_mods = 2 + rng.below(20);
+        let dims = random_dims(&mut rng, n_mods);
+        let ratios: Vec<f64> = dims.iter().map(|_| rng.f64() * 1.5).collect();
+        let target = 0.1 + rng.f64() * 0.85;
+        let alloc = rescale_to_target(&dims, &ratios, target, "t");
+        let total: usize = dims.iter().map(|d| d.dense_params()).sum();
+        let got = alloc_params_for_dims(&dims, &alloc) as f64 / total as f64;
+        // within one rank unit of every module + dense-cap slack
+        let slack: f64 =
+            dims.iter().map(|d| (d.m + d.n) as f64).sum::<f64>() / total as f64;
+        assert!(
+            got <= 1.0 + 1e-9 && (got - target).abs() <= slack + 0.02,
+            "case {case}: target {target:.3} got {got:.3} slack {slack:.3}"
+        );
+        for (d, _) in dims.iter().zip(&ratios) {
+            match alloc.get(&d.name) {
+                ModuleAlloc::Rank(k) => {
+                    assert!(k >= 1 && k <= d.r_full());
+                    // never store more than dense
+                    assert!(d.factored_params(k) < d.dense_params());
+                }
+                ModuleAlloc::Dense => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rescale_monotone_in_target() {
+    let mut rng = Rng::new(12);
+    for _ in 0..60 {
+        let n_mods = 2 + rng.below(12);
+        let dims = random_dims(&mut rng, n_mods);
+        let ratios: Vec<f64> = dims.iter().map(|_| 0.2 + rng.f64()).collect();
+        let lo = rescale_to_target(&dims, &ratios, 0.3, "lo");
+        let hi = rescale_to_target(&dims, &ratios, 0.8, "hi");
+        assert!(
+            alloc_params_for_dims(&dims, &lo) <= alloc_params_for_dims(&dims, &hi),
+            "params must grow with target"
+        );
+    }
+}
+
+#[test]
+fn prop_staircase_mask_monotone_and_adjoint() {
+    let mut rng = Rng::new(13);
+    for _ in 0..150 {
+        let d = 1 + rng.below(40);
+        let r = 1 + rng.below(80);
+        let st = Staircase::new(d, r);
+        let mut alpha: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        project_simplex(&mut alpha);
+        let p = st.prob_mask(&alpha);
+        for i in 1..r {
+            assert!(p[i - 1] >= p[i] - 1e-12);
+        }
+        assert!(p.iter().all(|&x| (-1e-12..=1.0 + 1e-9).contains(&x)));
+        // adjoint identity <Mᵀg, α> = <g, Mα>
+        let g: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+        let lhs: f64 = st.chain_grad(&g).iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        let rhs: f64 = g.iter().zip(&p).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_binary_mask_param_consistency() {
+    // the binary mask must store (≈) the expected parameter count of the
+    // probabilistic mask: |k − Σp| ≤ 0.5
+    let mut rng = Rng::new(14);
+    for _ in 0..150 {
+        let d = ModuleDim { name: "x".into(), m: 4 + rng.below(90), n: 4 + rng.below(90) };
+        let r = d.r_full();
+        let mut p: Vec<f64> = (0..r).map(|_| rng.f64()).collect();
+        p.sort_by(|a, b| b.partial_cmp(a).unwrap()); // monotone like αM
+        let st = binary_mask(&d, &p);
+        let sum: f64 = p.iter().sum();
+        if st.k > 1 && st.k < r {
+            assert!((st.k as f64 - sum).abs() <= 0.5 + 1e-9, "k={} Σp={sum}", st.k);
+        }
+        // dense flag consistent with Eq. 3 ratio
+        assert_eq!(st.dense, st.ratio >= 1.0);
+    }
+}
+
+#[test]
+fn prop_batcher_covers_all_requests_exactly_once() {
+    let mut rng = Rng::new(15);
+    for _ in 0..200 {
+        let mut sizes: Vec<usize> = vec![1, 2, 4, 8, 16];
+        sizes.truncate(1 + rng.below(5));
+        let b = DynamicBatcher::new(sizes.clone());
+        let pending = rng.below(70);
+        let plans = b.plan(pending);
+        let mut seen = vec![false; pending];
+        for plan in &plans {
+            assert!(sizes.contains(&plan.batch), "unknown batch size");
+            assert!(plan.requests.len() <= plan.batch);
+            for &r in &plan.requests {
+                assert!(!seen[r], "request {r} scheduled twice");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "requests dropped: {pending} pending");
+    }
+}
+
+#[test]
+fn prop_simplex_projection_is_projection() {
+    let mut rng = Rng::new(16);
+    for _ in 0..200 {
+        let n = 1 + rng.below(50);
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal() * 3.0).collect();
+        project_simplex(&mut v);
+        let s: f64 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(v.iter().all(|&x| x >= 0.0));
+        let w = v.clone();
+        project_simplex(&mut v);
+        for (a, b) in v.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-9, "idempotence");
+        }
+    }
+}
+
+#[test]
+fn prop_corpus_batches_never_cross_windows() {
+    let mut rng = Rng::new(17);
+    for _ in 0..50 {
+        let len = 200 + rng.below(2000);
+        let stream: Vec<i32> = (0..len as i32).collect();
+        let batch = 1 + rng.below(6);
+        let seq = 2 + rng.below(40);
+        for (toks, tgts) in ara_compress::data::batches(&stream, batch, seq) {
+            for s in 0..batch {
+                for t in 0..seq {
+                    assert_eq!(tgts.data[s * seq + t], toks.data[s * seq + t] + 1);
+                }
+            }
+        }
+    }
+}
