@@ -1,0 +1,63 @@
+//! In-crate error substrate (the offline vendor set has no `anyhow`): a
+//! string-typed error with a format-macro constructor, mirroring the
+//! `anyhow!` / `Result` surface the rest of the crate was written against.
+//!
+//! `Error` deliberately does NOT implement `std::error::Error`; that keeps
+//! the blanket `From<E: std::error::Error>` conversion below coherent, so
+//! `?` works on `io::Error`, `Utf8Error`, parse errors, etc. — the same
+//! trick `anyhow` itself uses.
+
+use std::fmt;
+
+/// A human-readable error message carried up the pipeline.
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result type (drop-in for the previous `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string — drop-in for `anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/real/path/xyz")?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.0.is_empty());
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = crate::anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+    }
+}

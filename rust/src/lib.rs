@@ -19,6 +19,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod json;
 pub mod linalg;
@@ -32,4 +33,4 @@ pub mod svd;
 pub mod tensor;
 pub mod training;
 
-pub use anyhow::{anyhow, Result};
+pub use error::{Error, Result};

@@ -1,0 +1,383 @@
+//! The default execution backend: a pure-Rust interpreter over the artifact
+//! programs in [`super::programs`]. Zero native dependencies — `cargo test`
+//! exercises the full pipeline (train → calibrate → factorize → allocate →
+//! eval → serve) on any machine.
+//!
+//! "Device" memory is host memory here, so the buffer path is move-only:
+//! uploads wrap tensors, downloads clone them back, and multi-output
+//! executions hand back one buffer per output with no tuple-decompose or
+//! literal round-trip (the PJRT path needs both).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::exec::{check_feed, DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
+use super::programs::{build, Program};
+use crate::config::{model_by_name, Paths};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Backend facade trait — see [`super::Backend`].
+use super::Backend;
+
+pub struct CpuBackend {
+    paths: Paths,
+}
+
+impl CpuBackend {
+    pub fn new() -> Result<CpuBackend> {
+        Ok(CpuBackend { paths: Paths::discover()? })
+    }
+
+    /// Model preset for an artifact directory `…/artifacts/<model>`.
+    fn model_of(&self, dir: &Path) -> Result<crate::config::ModelCfg> {
+        let model = dir
+            .file_name()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| crate::anyhow!("artifact dir {dir:?} has no model name"))?;
+        model_by_name(&self.paths.configs, model)
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn load(&self, dir: &Path, name: &str) -> Result<Exe> {
+        let cfg = self.model_of(dir)?;
+        let program = build(&cfg, &self.paths, name)?;
+        Ok(Exe::new(Box::new(CpuExe { program })))
+    }
+
+    fn has(&self, dir: &Path, name: &str) -> bool {
+        // name-pattern check only: no graph construction, no allocation
+        // resolution side effects for a read-only query
+        self.model_of(dir).is_ok() && super::programs::is_known_artifact(name)
+    }
+
+    fn upload(&self, feed: &Feed) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Host(match feed {
+            Feed::F32(t) => Value::F32((*t).clone()),
+            Feed::I32(t) => Value::I32((*t).clone()),
+        }))
+    }
+
+    fn download(&self, buf: &DeviceBuffer) -> Result<Tensor> {
+        match buf {
+            DeviceBuffer::Host(v) => Ok(v.to_f32_tensor()),
+            #[cfg(feature = "pjrt")]
+            DeviceBuffer::Pjrt(_) => {
+                Err(crate::anyhow!("cpu backend cannot download a pjrt buffer"))
+            }
+        }
+    }
+}
+
+/// One interpreted artifact.
+pub struct CpuExe {
+    program: Program,
+}
+
+impl CpuExe {
+    fn eval_feeds(&self, feeds: &[Feed]) -> Result<Vec<Value>> {
+        self.program
+            .graph
+            .eval(feeds, &self.program.outputs, &self.program.plan)
+            .map_err(|e| crate::anyhow!("{}: {e}", self.program.manifest.name))
+    }
+}
+
+impl Executable for CpuExe {
+    fn manifest(&self) -> &super::manifest::Manifest {
+        &self.program.manifest
+    }
+
+    fn run(&self, feeds: &HashMap<&str, Feed>) -> Result<Outputs> {
+        let man = &self.program.manifest;
+        let mut args: Vec<Feed> = Vec::with_capacity(man.inputs.len());
+        for spec in &man.inputs {
+            let feed = feeds.get(spec.name.as_str()).ok_or_else(|| {
+                crate::anyhow!("missing input `{}` for {}", spec.name, man.name)
+            })?;
+            check_feed(feed, spec)?;
+            args.push(match feed {
+                Feed::F32(t) => Feed::F32(*t),
+                Feed::I32(t) => Feed::I32(*t),
+            });
+        }
+        let values = self.eval_feeds(&args)?;
+        Ok(Outputs::new(man.outputs.clone(), values))
+    }
+
+    fn run_device(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        let man = &self.program.manifest;
+        if args.len() != man.inputs.len() {
+            return Err(crate::anyhow!(
+                "{}: expected {} buffer args, got {}",
+                man.name,
+                man.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut feeds: Vec<Feed> = Vec::with_capacity(args.len());
+        for (buf, spec) in args.iter().zip(&man.inputs) {
+            match buf {
+                DeviceBuffer::Host(v) => {
+                    let feed = v.as_feed();
+                    check_feed(&feed, spec)?;
+                    feeds.push(feed);
+                }
+                #[cfg(feature = "pjrt")]
+                DeviceBuffer::Pjrt(_) => {
+                    return Err(crate::anyhow!(
+                        "{}: pjrt buffer passed to the cpu backend",
+                        man.name
+                    ));
+                }
+            }
+        }
+        let values = self.eval_feeds(&feeds)?;
+        Ok(values.into_iter().map(DeviceBuffer::Host).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_by_name;
+    use crate::data::Rng;
+    use crate::model::{init_weights, module_dims};
+    use crate::tensor::IntTensor;
+
+    fn setup() -> (crate::config::ModelCfg, CpuBackend) {
+        let be = CpuBackend::new().unwrap();
+        let cfg = model_by_name(&be.paths.configs, "micro-llama").unwrap();
+        (cfg, be)
+    }
+
+    fn artifact_dir(be: &CpuBackend, model: &str) -> std::path::PathBuf {
+        be.paths.artifact_dir(model)
+    }
+
+    #[test]
+    fn score_dense_runs_and_nll_is_sane() {
+        let (cfg, be) = setup();
+        let exe = be.load(&artifact_dir(&be, "micro-llama"), "score_dense").unwrap();
+        let ws = init_weights(&cfg, 3);
+        let mut rng = Rng::new(5);
+        let toks = IntTensor::from_vec(
+            &[cfg.batch_eval, cfg.seq_eval],
+            (0..cfg.batch_eval * cfg.seq_eval)
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect(),
+        );
+        let tgts = toks.clone();
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        for (name, t) in &ws.tensors {
+            feeds.insert(name.as_str(), Feed::F32(t));
+        }
+        feeds.insert("tokens", Feed::I32(&toks));
+        feeds.insert("targets", Feed::I32(&tgts));
+        let out = exe.run(&feeds).unwrap();
+        let nll = out.tensor("nll").unwrap();
+        assert_eq!(nll.shape, vec![cfg.batch_eval, cfg.seq_eval]);
+        // fresh random weights ⇒ NLL ≈ ln(vocab) per token
+        let mean = nll.data.iter().map(|&x| x as f64).sum::<f64>() / nll.data.len() as f64;
+        let ln_v = (cfg.vocab as f64).ln();
+        assert!(
+            (mean - ln_v).abs() < 1.0,
+            "mean NLL {mean:.3} far from ln(vocab) {ln_v:.3}"
+        );
+        assert!(nll.data.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    /// interpreter-vs-ref.py semantics: a full-rank exact factorization
+    /// (u·v = W, all-ones mask) must reproduce the dense NLL bit-tight.
+    #[test]
+    fn masked_full_rank_identity_matches_dense() {
+        let (cfg, be) = setup();
+        let dense = be.load(&artifact_dir(&be, "micro-llama"), "score_dense").unwrap();
+        let masked = be.load(&artifact_dir(&be, "micro-llama"), "score_masked").unwrap();
+        let ws = init_weights(&cfg, 11);
+        let mut rng = Rng::new(6);
+        let toks = IntTensor::from_vec(
+            &[cfg.batch_eval, cfg.seq_eval],
+            (0..cfg.batch_eval * cfg.seq_eval)
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect(),
+        );
+        let tgts = toks.clone();
+
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        for (name, t) in &ws.tensors {
+            feeds.insert(name.as_str(), Feed::F32(t));
+        }
+        feeds.insert("tokens", Feed::I32(&toks));
+        feeds.insert("targets", Feed::I32(&tgts));
+        let nll_dense = dense.run(&feeds).unwrap().tensor("nll").unwrap();
+
+        // exact factors: W (m,n) with r = min(m,n) → u·v = W via identity
+        let dims = module_dims(&cfg);
+        let mut store: Vec<(String, Tensor)> = Vec::new();
+        for d in &dims {
+            let w = ws.get(&d.name);
+            let r = d.r_full();
+            let eye = {
+                let mut t = Tensor::zeros(&[r, r]);
+                for i in 0..r {
+                    t.set2(i, i, 1.0);
+                }
+                t
+            };
+            if d.m <= d.n {
+                store.push((format!("{}.u", d.name), eye));
+                store.push((format!("{}.v", d.name), w.clone()));
+            } else {
+                store.push((format!("{}.u", d.name), w.clone()));
+                store.push((format!("{}.v", d.name), eye));
+            }
+            store.push((format!("mask:{}", d.name), Tensor::ones(&[r])));
+        }
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        for (name, t) in &ws.tensors {
+            if dims.iter().any(|d| &d.name == name) {
+                continue; // superseded by factors
+            }
+            feeds.insert(name.as_str(), Feed::F32(t));
+        }
+        for (name, t) in &store {
+            feeds.insert(name.as_str(), Feed::F32(t));
+        }
+        feeds.insert("tokens", Feed::I32(&toks));
+        feeds.insert("targets", Feed::I32(&tgts));
+        let nll_masked = masked.run(&feeds).unwrap().tensor("nll").unwrap();
+
+        for (a, b) in nll_dense.data.iter().zip(&nll_masked.data) {
+            assert!((a - b).abs() < 1e-3, "dense {a} vs masked-identity {b}");
+        }
+    }
+
+    #[test]
+    fn train_step_gradients_match_finite_differences() {
+        // the end-to-end fwd+bwd consistency check: for the weight
+        // coordinates with the largest gradient, a central finite
+        // difference of the loss must match the reported gradient
+        let (cfg, be) = setup();
+        let exe = be.load(&artifact_dir(&be, "micro-llama"), "train_step").unwrap();
+        let mut ws = init_weights(&cfg, 7);
+        let mut rng = Rng::new(8);
+        let toks = IntTensor::from_vec(
+            &[cfg.batch_train, cfg.seq_train],
+            (0..cfg.batch_train * cfg.seq_train)
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect(),
+        );
+        let tgts = IntTensor::from_vec(
+            &[cfg.batch_train, cfg.seq_train],
+            toks.data.iter().map(|&t| (t + 1) % cfg.vocab as i32).collect(),
+        );
+        let loss_of = |ws: &crate::model::WeightStore| -> f32 {
+            let mut feeds: HashMap<&str, Feed> = HashMap::new();
+            for (name, t) in &ws.tensors {
+                feeds.insert(name.as_str(), Feed::F32(t));
+            }
+            feeds.insert("tokens", Feed::I32(&toks));
+            feeds.insert("targets", Feed::I32(&tgts));
+            exe.run(&feeds).unwrap().scalar("loss").unwrap()
+        };
+        let mut feeds: HashMap<&str, Feed> = HashMap::new();
+        for (name, t) in &ws.tensors {
+            feeds.insert(name.as_str(), Feed::F32(t));
+        }
+        feeds.insert("tokens", Feed::I32(&toks));
+        feeds.insert("targets", Feed::I32(&tgts));
+        let out = exe.run(&feeds).unwrap();
+        drop(feeds);
+        let loss = out.scalar("loss").unwrap();
+        assert!((loss as f64 - (cfg.vocab as f64).ln()).abs() < 1.0, "init loss {loss}");
+
+        for wname in ["head", "embed", "layers.0.mlp.wup", "layers.1.attn.wq"] {
+            // directional derivative along the gradient: for unit direction
+            // d = g/‖g‖ the finite difference must equal ‖g‖ — much better
+            // f32 signal-to-noise than per-coordinate differences
+            let g = out.tensor(&format!("grad:{wname}")).unwrap();
+            let norm = (g.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
+            assert!(norm > 1e-7, "{wname}: zero gradient");
+            let h = 2e-2f32;
+            let orig = ws.get(wname).data.clone();
+            {
+                let t = ws.get_mut(wname);
+                for (w, gv) in t.data.iter_mut().zip(&g.data) {
+                    *w += h * (*gv as f64 / norm) as f32;
+                }
+            }
+            let lp = loss_of(&ws);
+            {
+                let t = ws.get_mut(wname);
+                for ((w, gv), o) in t.data.iter_mut().zip(&g.data).zip(&orig) {
+                    *w = o - h * (*gv as f64 / norm) as f32;
+                }
+            }
+            let lm = loss_of(&ws);
+            ws.get_mut(wname).data = orig;
+            let fd = (lp - lm) as f64 / (2.0 * h as f64);
+            assert!(
+                (fd - norm).abs() <= 0.1 * norm.max(1e-4),
+                "{wname}: directional fd {fd} vs ‖grad‖ {norm}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_step_runs_through_device_buffers() {
+        let (cfg, be) = setup();
+        let dir = artifact_dir(&be, "micro-llama");
+        let exe = be.load(&dir, "decode_dense_b1").unwrap();
+        let man = exe.manifest().clone();
+        let ws = init_weights(&cfg, 9);
+        let mut bufs: Vec<DeviceBuffer> = Vec::new();
+        for spec in &man.inputs {
+            match spec.name.as_str() {
+                "tokens" => {
+                    let t = IntTensor::from_vec(&[1], vec![5]);
+                    bufs.push(be.upload(&Feed::I32(&t)).unwrap());
+                }
+                "lens" => {
+                    let t = IntTensor::from_vec(&[1], vec![3]);
+                    bufs.push(be.upload(&Feed::I32(&t)).unwrap());
+                }
+                n if n.starts_with("kcache") || n.starts_with("vcache") => {
+                    let t = Tensor::zeros(&spec.shape);
+                    bufs.push(be.upload(&Feed::F32(&t)).unwrap());
+                }
+                n => {
+                    bufs.push(be.upload(&Feed::F32(ws.get(n))).unwrap());
+                }
+            }
+        }
+        let refs: Vec<&DeviceBuffer> = bufs.iter().collect();
+        let outs = exe.run_device(&refs).unwrap();
+        assert_eq!(outs.len(), man.outputs.len());
+        let logits = be.download(&outs[0]).unwrap();
+        assert_eq!(logits.shape, vec![1, cfg.vocab]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+        // the cache row at position `lens` must have been written
+        let kc = be.download(&outs[1]).unwrap();
+        let (nkv, s, dh) = (cfg.n_kv_heads, cfg.max_decode_seq, cfg.head_dim());
+        assert_eq!(kc.shape, vec![1, nkv, s, dh]);
+        let row = &kc.data[3 * dh..4 * dh]; // head 0, position 3
+        assert!(row.iter().any(|&x| x != 0.0), "cache not written at lens");
+    }
+
+    #[test]
+    fn scalar_on_empty_output_errors_not_panics() {
+        let out = Outputs::new(
+            vec!["empty".to_string()],
+            vec![Value::F32(Tensor::zeros(&[0]))],
+        );
+        let err = out.scalar("empty").unwrap_err();
+        assert!(err.to_string().contains("empty"));
+        assert!(out.scalar("missing").is_err());
+    }
+}

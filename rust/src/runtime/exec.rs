@@ -1,7 +1,10 @@
-//! Executable wrapper: name-bound execution of a compiled artifact, with
-//! both a literal path (convenient, copies host↔device each call) and a
-//! device-resident buffer path (`run_buffers`) used by the serving engine to
-//! keep weights and KV caches on device across decode steps.
+//! Backend-neutral execution types: named feeds, named outputs, the
+//! [`Executable`] trait every backend implements, and the [`DeviceBuffer`]
+//! handle used by the serving hot path to keep weights and KV caches
+//! resident on the executing device between steps.
+//!
+//! Inputs are always bound **by name** through the artifact manifest —
+//! never by guessed position.
 
 use std::collections::HashMap;
 
@@ -9,37 +12,100 @@ use super::manifest::Manifest;
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
 
-/// One compiled artifact + its manifest.
-pub struct Exe {
-    pub exe: xla::PjRtLoadedExecutable,
-    pub manifest: Manifest,
-}
-
 /// A named input: host tensors borrowed from the caller.
 pub enum Feed<'a> {
     F32(&'a Tensor),
     I32(&'a IntTensor),
 }
 
-/// Named outputs of one execution (host literals).
+impl Feed<'_> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Feed::F32(t) => &t.shape,
+            Feed::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Feed::F32(_) => "f32",
+            Feed::I32(_) => "i32",
+        }
+    }
+}
+
+/// An owned runtime value (host memory).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    /// View as an f32 tensor, converting i32 values (mirrors how the PJRT
+    /// path converts S32 output literals).
+    pub fn to_f32_tensor(&self) -> Tensor {
+        match self {
+            Value::F32(t) => t.clone(),
+            Value::I32(t) => Tensor::from_vec(
+                &t.shape,
+                t.data.iter().map(|&x| x as f32).collect(),
+            ),
+        }
+    }
+
+    pub fn as_feed(&self) -> Feed<'_> {
+        match self {
+            Value::F32(t) => Feed::F32(t),
+            Value::I32(t) => Feed::I32(t),
+        }
+    }
+}
+
+/// A backend-owned device-resident value. On the default CPU backend
+/// "device" memory *is* host memory, so this wraps a [`Value`] directly —
+/// no copies, no tuple splitting. The PJRT variant wraps a real device
+/// buffer handle.
+pub enum DeviceBuffer {
+    Host(Value),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+/// Named outputs of one execution (host values).
 pub struct Outputs {
-    names: Vec<String>,
-    literals: Vec<xla::Literal>,
+    pub(crate) names: Vec<String>,
+    pub(crate) values: Vec<Value>,
 }
 
 impl Outputs {
+    pub fn new(names: Vec<String>, values: Vec<Value>) -> Outputs {
+        Outputs { names, values }
+    }
+
     pub fn tensor(&self, name: &str) -> Result<Tensor> {
         let idx = self
             .names
             .iter()
             .position(|n| n == name)
             .ok_or_else(|| crate::anyhow!("no output named {name}"))?;
-        literal_to_tensor(&self.literals[idx])
+        Ok(self.values[idx].to_f32_tensor())
     }
 
+    /// Scalar output accessor; errors (instead of panicking) when the
+    /// output tensor is empty.
     pub fn scalar(&self, name: &str) -> Result<f32> {
         let t = self.tensor(name)?;
-        Ok(t.data[0])
+        t.data.first().copied().ok_or_else(|| {
+            crate::anyhow!("output `{name}` is empty (shape {:?}), no scalar to read", t.shape)
+        })
     }
 
     pub fn names(&self) -> &[String] {
@@ -47,178 +113,66 @@ impl Outputs {
     }
 }
 
+/// One loaded artifact on some backend: name-bound host execution plus the
+/// device-resident path used by the serving engine.
+pub trait Executable {
+    /// The artifact's input/output contract.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute with host tensors, binding inputs by manifest name.
+    fn run(&self, feeds: &HashMap<&str, Feed>) -> Result<Outputs>;
+
+    /// Execute with device-resident buffers supplied in manifest input
+    /// order. Returns exactly one buffer per manifest output (backends
+    /// normalize tuple-rooted results internally); outputs stay on device.
+    fn run_device(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>>;
+}
+
+/// The concrete executable handle call sites hold (`Rc<Exe>`): a thin
+/// wrapper over a backend's [`Executable`] with inherent forwarding
+/// methods, so consumers never depend on having the trait in scope.
+pub struct Exe {
+    inner: Box<dyn Executable>,
+}
+
 impl Exe {
+    pub fn new(inner: Box<dyn Executable>) -> Exe {
+        Exe { inner }
+    }
+
+    /// The artifact's input/output contract.
+    pub fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
     /// Execute with host tensors, binding inputs by manifest name.
     pub fn run(&self, feeds: &HashMap<&str, Feed>) -> Result<Outputs> {
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.manifest.inputs.len());
-        for spec in &self.manifest.inputs {
-            let feed = feeds.get(spec.name.as_str()).ok_or_else(|| {
-                crate::anyhow!("missing input `{}` for {}", spec.name, self.manifest.name)
-            })?;
-            args.push(feed_to_literal(feed, &spec.shape, &spec.dtype, &spec.name)?);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| crate::anyhow!("execute {}: {e}", self.manifest.name))?;
-        let replica = &result[0];
-        let expected = self.manifest.outputs.len();
-        // PJRT either untuples multi-output roots into separate buffers or
-        // hands back one tuple buffer; accept both.
-        let literals: Vec<xla::Literal> = if replica.len() == expected {
-            let mut v = Vec::with_capacity(expected);
-            for b in replica {
-                v.push(b.to_literal_sync().map_err(|e| crate::anyhow!("fetch: {e}"))?);
-            }
-            v
-        } else if replica.len() == 1 {
-            let lit = replica[0]
-                .to_literal_sync()
-                .map_err(|e| crate::anyhow!("fetch: {e}"))?;
-            if expected == 1 {
-                vec![lit]
-            } else {
-                lit.to_tuple().map_err(|e| crate::anyhow!("untuple: {e}"))?
-            }
-        } else {
-            return Err(crate::anyhow!(
-                "{}: expected {} outputs, got {} buffers",
-                self.manifest.name,
-                expected,
-                replica.len()
-            ));
-        };
-        if literals.len() != expected {
-            return Err(crate::anyhow!(
-                "{}: expected {} outputs, got {}",
-                self.manifest.name,
-                expected,
-                literals.len()
-            ));
-        }
-        Ok(Outputs { names: self.manifest.outputs.clone(), literals })
+        self.inner.run(feeds)
     }
 
-    /// Execute with device-resident buffers (serving hot path). The caller
-    /// supplies borrowed buffers in manifest order; outputs stay on device.
-    pub fn run_buffers_ref(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
-        if args.len() != self.manifest.inputs.len() {
-            return Err(crate::anyhow!(
-                "{}: expected {} buffer args, got {}",
-                self.manifest.name,
-                self.manifest.inputs.len(),
-                args.len()
-            ));
-        }
-        let mut result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(args)
-            .map_err(|e| crate::anyhow!("execute_b {}: {e}", self.manifest.name))?;
-        Ok(result.swap_remove(0))
+    /// Execute with device-resident buffers in manifest input order.
+    pub fn run_device(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        self.inner.run_device(args)
     }
 }
 
-fn feed_to_literal(feed: &Feed, shape: &[usize], dtype: &str, name: &str) -> Result<xla::Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    match (feed, dtype) {
-        (Feed::F32(t), "f32") => {
-            if t.shape != shape {
-                return Err(crate::anyhow!(
-                    "input {name}: shape {:?} != manifest {:?}",
-                    t.shape,
-                    shape
-                ));
-            }
-            xla::Literal::vec1(&t.data)
-                .reshape(&dims)
-                .map_err(|e| crate::anyhow!("reshape {name}: {e}"))
-        }
-        (Feed::I32(t), "i32") => {
-            if t.shape != shape {
-                return Err(crate::anyhow!(
-                    "input {name}: shape {:?} != manifest {:?}",
-                    t.shape,
-                    shape
-                ));
-            }
-            xla::Literal::vec1(&t.data)
-                .reshape(&dims)
-                .map_err(|e| crate::anyhow!("reshape {name}: {e}"))
-        }
-        _ => Err(crate::anyhow!("input {name}: dtype mismatch (manifest {dtype})")),
+/// Validate a feed against a manifest spec (shared by backends).
+pub fn check_feed(feed: &Feed, spec: &super::manifest::TensorSpec) -> Result<()> {
+    if feed.shape() != spec.shape.as_slice() {
+        return Err(crate::anyhow!(
+            "input {}: shape {:?} != manifest {:?}",
+            spec.name,
+            feed.shape(),
+            spec.shape
+        ));
     }
-}
-
-/// Convert a host literal to a Tensor (f32; i32 outputs are converted).
-pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape().map_err(|e| crate::anyhow!("shape: {e}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let ty = lit.ty().map_err(|e| crate::anyhow!("ty: {e}"))?;
-    let data: Vec<f32> = match ty {
-        xla::ElementType::F32 => lit.to_vec::<f32>().map_err(|e| crate::anyhow!("{e}"))?,
-        xla::ElementType::S32 => lit
-            .to_vec::<i32>()
-            .map_err(|e| crate::anyhow!("{e}"))?
-            .into_iter()
-            .map(|x| x as f32)
-            .collect(),
-        other => return Err(crate::anyhow!("unsupported output dtype {other:?}")),
-    };
-    Ok(Tensor::from_vec(&dims, data))
-}
-
-/// Normalize executable outputs to one device buffer per manifest output.
-///
-/// This build's XLA wrapper always tuples multi-output roots into a single
-/// buffer; on the CPU plugin "device" memory is host memory, so the
-/// decompose + re-upload is a memcpy, not a transfer (measured in §Perf).
-pub fn split_output_buffers(
-    client: &xla::PjRtClient,
-    outs: Vec<xla::PjRtBuffer>,
-    expected: usize,
-) -> Result<Vec<xla::PjRtBuffer>> {
-    if outs.len() == expected {
-        return Ok(outs);
+    if feed.dtype_name() != spec.dtype {
+        return Err(crate::anyhow!(
+            "input {}: dtype {} != manifest {}",
+            spec.name,
+            feed.dtype_name(),
+            spec.dtype
+        ));
     }
-    if outs.len() == 1 && expected > 1 {
-        let lit = outs[0]
-            .to_literal_sync()
-            .map_err(|e| crate::anyhow!("fetch tuple: {e}"))?;
-        let parts = lit.to_tuple().map_err(|e| crate::anyhow!("untuple: {e}"))?;
-        if parts.len() != expected {
-            return Err(crate::anyhow!("tuple arity {} != {expected}", parts.len()));
-        }
-        // buffer_from_host_literal is an async transfer with no await in
-        // this wrapper (UAF once the literal drops); go through the
-        // synchronous-copy host-buffer path instead.
-        return parts
-            .into_iter()
-            .map(|p| {
-                let t = literal_to_tensor(&p)?;
-                feed_to_buffer(client, &Feed::F32(&t))
-            })
-            .collect();
-    }
-    Err(crate::anyhow!("got {} output buffers, expected {expected}", outs.len()))
-}
-
-/// Upload a host feed to a device buffer (serving setup path).
-pub fn feed_to_buffer(
-    client: &xla::PjRtClient,
-    feed: &Feed,
-) -> Result<xla::PjRtBuffer> {
-    match feed {
-        Feed::F32(t) => client
-            .buffer_from_host_buffer(&t.data, &t.shape, None)
-            .map_err(|e| crate::anyhow!("upload: {e}")),
-        Feed::I32(t) => client
-            .buffer_from_host_buffer(&t.data, &t.shape, None)
-            .map_err(|e| crate::anyhow!("upload: {e}")),
-    }
-}
-
-/// Download a device buffer to a host Tensor.
-pub fn buffer_to_tensor(buf: &xla::PjRtBuffer) -> Result<Tensor> {
-    let lit = buf.to_literal_sync().map_err(|e| crate::anyhow!("fetch: {e}"))?;
-    literal_to_tensor(&lit)
+    Ok(())
 }

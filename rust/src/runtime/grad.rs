@@ -1,0 +1,504 @@
+//! Reverse-mode autodiff over the interpreter IR: given a scalar loss node,
+//! append the gradient subgraph for a chosen set of differentiable inputs
+//! (the `jax.value_and_grad` role for the AOT train/mask/LoRA graphs).
+//!
+//! Coverage matches what the exported graphs need. `ReduceMax` has no VJP
+//! on purpose — the graph builders only use it behind `StopGrad` (softmax /
+//! logsumexp shifts), which is mathematically exact there.
+
+use super::interp::{Graph, Id, Op};
+use crate::tensor::Tensor;
+
+/// Append gradient nodes of `loss` (a scalar node) w.r.t. each id in `wrt`;
+/// returns the gradient node ids in `wrt` order. Ids not on any
+/// differentiable path get an explicit zeros node of matching shape.
+pub fn append_gradients(g: &mut Graph, loss: Id, wrt: &[Id]) -> Vec<Id> {
+    assert!(
+        g.shape(loss).iter().product::<usize>() == 1,
+        "loss must be scalar, got {:?}",
+        g.shape(loss)
+    );
+
+    // Forward closure: nodes whose value depends on some wrt id.
+    let n_fwd = g.nodes.len();
+    let mut needs = vec![false; n_fwd];
+    for &w in wrt {
+        needs[w] = true;
+    }
+    for id in 0..n_fwd {
+        if needs[id] {
+            continue;
+        }
+        if matches!(g.nodes[id].op, Op::StopGrad(_)) {
+            continue; // gradient barrier
+        }
+        if g.nodes[id].op.operands().iter().any(|&o| needs[o]) {
+            needs[id] = true;
+        }
+    }
+    assert!(
+        needs[loss],
+        "loss does not depend on any requested gradient input"
+    );
+
+    // Adjoint accumulation, reverse topological order (ids are topo-sorted).
+    let mut adj: Vec<Option<Id>> = vec![None; n_fwd];
+    let ones = g.constant(Tensor::from_vec(&[], vec![1.0]));
+    let loss_shape = g.shape(loss).to_vec();
+    adj[loss] = Some(if loss_shape.is_empty() {
+        ones
+    } else {
+        g.broadcast(ones, &loss_shape)
+    });
+
+    for id in (0..=loss).rev() {
+        let Some(gid) = adj[id] else { continue };
+        if !needs[id] {
+            continue;
+        }
+        let op = g.nodes[id].op.clone();
+        match op {
+            Op::Input(_) | Op::Const(_) | Op::Iota { .. } => {}
+            Op::StopGrad(_) => {}
+            Op::Neg(x) => {
+                let c = g.neg(gid);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Exp(x) => {
+                // y = exp(x) is node `id`
+                let c = g.mul(gid, id);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Log(x) => {
+                let c = g.div(gid, x);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Sqrt(x) => {
+                // d/dx sqrt = 0.5 / y
+                let half = g.scalar(0.5);
+                let t = g.div(gid, id);
+                let c = g.mul(half, t);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Rsqrt(x) => {
+                // y = x^{-1/2}; dy/dx = -0.5 x^{-3/2} = -0.5 y^3
+                let y2 = g.mul(id, id);
+                let y3 = g.mul(y2, id);
+                let mh = g.scalar(-0.5);
+                let t = g.mul(mh, y3);
+                let c = g.mul(gid, t);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Tanh(x) => {
+                // 1 - y^2
+                let y2 = g.mul(id, id);
+                let one = g.scalar(1.0);
+                let t = g.sub(one, y2);
+                let c = g.mul(gid, t);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Sigmoid(x) => {
+                // y (1 - y)
+                let one = g.scalar(1.0);
+                let om = g.sub(one, id);
+                let t = g.mul(id, om);
+                let c = g.mul(gid, t);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Cos(x) => {
+                let s = g.sin(x);
+                let ns = g.neg(s);
+                let c = g.mul(gid, ns);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Sin(x) => {
+                let cs = g.cos(x);
+                let c = g.mul(gid, cs);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::CastF32(_) => {} // integer inputs are not differentiable
+            Op::Add(a, b) => {
+                if needs[a] {
+                    let ca = unbroadcast(g, gid, a);
+                    acc(g, &mut adj, &needs, a, ca);
+                }
+                if needs[b] {
+                    let cb = unbroadcast(g, gid, b);
+                    acc(g, &mut adj, &needs, b, cb);
+                }
+            }
+            Op::Sub(a, b) => {
+                if needs[a] {
+                    let ca = unbroadcast(g, gid, a);
+                    acc(g, &mut adj, &needs, a, ca);
+                }
+                if needs[b] {
+                    let ng = g.neg(gid);
+                    let cb = unbroadcast(g, ng, b);
+                    acc(g, &mut adj, &needs, b, cb);
+                }
+            }
+            Op::Mul(a, b) => {
+                if needs[a] {
+                    let t = g.mul(gid, b);
+                    let c = unbroadcast(g, t, a);
+                    acc(g, &mut adj, &needs, a, c);
+                }
+                if needs[b] {
+                    let t = g.mul(gid, a);
+                    let c = unbroadcast(g, t, b);
+                    acc(g, &mut adj, &needs, b, c);
+                }
+            }
+            Op::Div(a, b) => {
+                if needs[a] {
+                    let t = g.div(gid, b);
+                    let c = unbroadcast(g, t, a);
+                    acc(g, &mut adj, &needs, a, c);
+                }
+                if needs[b] {
+                    // -g·a / b²
+                    let num = g.mul(gid, a);
+                    let b2 = g.mul(b, b);
+                    let t = g.div(num, b2);
+                    let nt = g.neg(t);
+                    let c = unbroadcast(g, nt, b);
+                    acc(g, &mut adj, &needs, b, c);
+                }
+            }
+            Op::Maximum(a, b) => {
+                // subgradient: route to the larger side (ties go to `a`)
+                let m = g.less(a, b); // 1 where a < b
+                if needs[a] {
+                    let one = g.scalar(1.0);
+                    let inv = g.sub(one, m);
+                    let t = g.mul(gid, inv);
+                    let c = unbroadcast(g, t, a);
+                    acc(g, &mut adj, &needs, a, c);
+                }
+                if needs[b] {
+                    let t = g.mul(gid, m);
+                    let c = unbroadcast(g, t, b);
+                    acc(g, &mut adj, &needs, b, c);
+                }
+            }
+            Op::Less(_, _) => {} // piecewise-constant mask
+            Op::Matmul { a, b, ta, tb } => {
+                if needs[a] {
+                    // dA' = g·B'ᵀ, transposed back if ta
+                    let c = if ta {
+                        g.matmul(b, gid, tb, true)
+                    } else {
+                        g.matmul(gid, b, false, !tb)
+                    };
+                    acc(g, &mut adj, &needs, a, c);
+                }
+                if needs[b] {
+                    let c = if tb {
+                        g.matmul(gid, a, true, ta)
+                    } else {
+                        g.matmul(a, gid, !ta, false)
+                    };
+                    acc(g, &mut adj, &needs, b, c);
+                }
+            }
+            Op::Bmm { a, b, ta, tb } => {
+                if needs[a] {
+                    let c = if ta {
+                        g.bmm(b, gid, tb, true)
+                    } else {
+                        g.bmm(gid, b, false, !tb)
+                    };
+                    acc(g, &mut adj, &needs, a, c);
+                }
+                if needs[b] {
+                    let c = if tb {
+                        g.bmm(gid, a, true, ta)
+                    } else {
+                        g.bmm(a, gid, !ta, false)
+                    };
+                    acc(g, &mut adj, &needs, b, c);
+                }
+            }
+            Op::Reshape(x, _) => {
+                let xs = g.shape(x).to_vec();
+                let c = g.reshape(gid, &xs);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Transpose(x, perm) => {
+                let mut inv = vec![0usize; perm.len()];
+                for (d, &p) in perm.iter().enumerate() {
+                    inv[p] = d;
+                }
+                let c = g.transpose(gid, &inv);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Broadcast(x, _) => {
+                let c = unbroadcast(g, gid, x);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::Concat(xs, axis) => {
+                let mut start = 0usize;
+                for &x in &xs {
+                    let len = g.shape(x)[axis];
+                    if needs[x] {
+                        let c = g.slice(gid, axis, start, len);
+                        acc(g, &mut adj, &needs, x, c);
+                    }
+                    start += len;
+                }
+            }
+            Op::Slice { x, axis, start, .. } => {
+                let full = g.shape(x)[axis];
+                let c = g.pad_zero(gid, axis, start, full);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::PadZero { x, axis, start, .. } => {
+                let len = g.shape(x)[axis];
+                let c = g.slice(gid, axis, start, len);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::ReduceSum(x, axis) => {
+                // g (shape minus axis) → keepdims → broadcast to input
+                let xs = g.shape(x).to_vec();
+                let mut keep = xs.clone();
+                keep[axis] = 1;
+                let r = g.reshape(gid, &keep);
+                let c = g.broadcast(r, &xs);
+                acc(g, &mut adj, &needs, x, c);
+            }
+            Op::ReduceMax(_, _) => {
+                panic!("no VJP for ReduceMax: wrap the max in stop_grad (softmax shift)")
+            }
+            Op::Gather { table, idx } => {
+                if needs[table] {
+                    let rows = g.shape(table)[0];
+                    let c = g.scatter_add_rows(idx, gid, rows);
+                    acc(g, &mut adj, &needs, table, c);
+                }
+            }
+            Op::TakeLast { x, idx } => {
+                if needs[x] {
+                    let n = *g.shape(x).last().unwrap();
+                    let c = g.scatter_last(idx, gid, n);
+                    acc(g, &mut adj, &needs, x, c);
+                }
+            }
+            Op::ScatterAddRows { .. } | Op::ScatterLast { .. } | Op::UpdateAt { .. } => {
+                panic!("no VJP for scatter ops (serving/adjoint-only)")
+            }
+        }
+    }
+
+    wrt.iter()
+        .map(|&w| {
+            adj[w].unwrap_or_else(|| {
+                let shape = g.shape(w).to_vec();
+                g.constant(Tensor::zeros(&shape))
+            })
+        })
+        .collect()
+}
+
+/// Accumulate contribution `c` into the adjoint of `target`.
+fn acc(g: &mut Graph, adj: &mut [Option<Id>], needs: &[bool], target: Id, c: Id) {
+    if !needs[target] {
+        return;
+    }
+    adj[target] = Some(match adj[target] {
+        None => c,
+        Some(prev) => g.add(prev, c),
+    });
+}
+
+/// Reduce a gradient of broadcast shape back to the shape of node `target`
+/// (sum over expanded axes, then reshape to the exact target shape).
+fn unbroadcast(g: &mut Graph, grad: Id, target: Id) -> Id {
+    let ts = g.shape(target).to_vec();
+    let gs = g.shape(grad).to_vec();
+    if ts == gs {
+        return grad;
+    }
+    let mut cur = grad;
+    // sum away extra leading axes
+    while g.shape(cur).len() > ts.len() {
+        cur = g.reduce_sum(cur, 0);
+    }
+    // sum axes where the target had size 1 (right-aligned now)
+    let cs = g.shape(cur).to_vec();
+    for d in 0..ts.len() {
+        if ts[d] == 1 && cs[d] != 1 {
+            cur = g.reduce_sum_keep(cur, d);
+        }
+    }
+    if g.shape(cur) != ts.as_slice() {
+        cur = g.reshape(cur, &ts);
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::exec::Feed;
+    use crate::runtime::interp::DType;
+    use crate::tensor::IntTensor;
+
+    /// Evaluate loss + grads for a graph with a single f32 input.
+    fn loss_and_grad(g: &Graph, loss: Id, grads: &[Id], x: &Tensor) -> (f32, Vec<Tensor>) {
+        let mut outs = vec![loss];
+        outs.extend_from_slice(grads);
+        let plan = g.free_plan(&outs);
+        let vals = g.eval(&[Feed::F32(x)], &outs, &plan).unwrap();
+        let l = vals[0].to_f32_tensor().data[0];
+        let gs = vals[1..].iter().map(|v| v.to_f32_tensor()).collect();
+        (l, gs)
+    }
+
+    /// Central finite differences against the autodiff gradient.
+    fn finite_diff_check(build: impl Fn(&mut Graph, Id) -> Id, x0: Tensor, tol: f32) {
+        let mut g = Graph::default();
+        let x = g.input(&x0.shape, DType::F32);
+        let loss = build(&mut g, x);
+        let grads = append_gradients(&mut g, loss, &[x]);
+        let (_, gs) = loss_and_grad(&g, loss, &grads, &x0);
+        let analytic = &gs[0];
+        let h = 1e-2f32;
+        for i in 0..x0.data.len() {
+            let mut xp = x0.clone();
+            xp.data[i] += h;
+            let mut xm = x0.clone();
+            xm.data[i] -= h;
+            let (lp, _) = loss_and_grad(&g, loss, &[], &xp);
+            let (lm, _) = loss_and_grad(&g, loss, &[], &xm);
+            let fd = (lp - lm) / (2.0 * h);
+            let ad = analytic.data[i];
+            assert!(
+                (fd - ad).abs() <= tol * (1.0 + fd.abs().max(ad.abs())),
+                "coord {i}: fd {fd} vs autodiff {ad}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_of_quadratic_chain() {
+        // loss = sum((x*x + 3x) * 0.5)
+        finite_diff_check(
+            |g, x| {
+                let x2 = g.mul(x, x);
+                let three = g.scalar(3.0);
+                let tx = g.mul(three, x);
+                let s = g.add(x2, tx);
+                let half = g.scalar(0.5);
+                let s2 = g.mul(s, half);
+                let flat = g.reshape(s2, &[6]);
+                g.reduce_sum(flat, 0)
+            },
+            Tensor::from_vec(&[2, 3], vec![0.5, -1.0, 2.0, 0.3, 1.5, -0.7]),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn grad_through_matmul_and_transcendentals() {
+        // loss = sum(sigmoid(x @ c) + exp(-x @ c))
+        let c = Tensor::from_vec(&[3, 2], vec![0.5, -0.2, 0.1, 0.4, -0.3, 0.25]);
+        finite_diff_check(
+            move |g, x| {
+                let cc = g.constant(c.clone());
+                let y = g.matmul(x, cc, false, false);
+                let s = g.sigmoid(y);
+                let ny = g.neg(y);
+                let e = g.exp(ny);
+                let t = g.add(s, e);
+                let flat = g.reshape(t, &[4]);
+                g.reduce_sum(flat, 0)
+            },
+            Tensor::from_vec(&[2, 3], vec![0.2, -0.4, 0.6, 1.0, -0.8, 0.1]),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn grad_through_softmax_style_block() {
+        // mean of softmax-weighted values — exercises stop_grad(max), exp,
+        // div, reduce, broadcast paths exactly like the attention graph
+        finite_diff_check(
+            |g, x| {
+                let m = g.reduce_max_keep(x, 1);
+                let ms = g.stop_grad(m);
+                let sh = g.sub(x, ms);
+                let e = g.exp(sh);
+                let s = g.reduce_sum_keep(e, 1);
+                let p = g.div(e, s);
+                let w = g.iota(4); // weights 0..3
+                let pw = g.mul(p, w);
+                let flat = g.reshape(pw, &[8]);
+                g.reduce_sum(flat, 0)
+            },
+            Tensor::from_vec(&[2, 4], vec![0.1, 0.5, -0.3, 0.8, 1.2, -0.5, 0.0, 0.4]),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn grad_through_rmsnorm_block() {
+        // y = x * rsqrt(mean(x²)+eps) * gain; loss = sum(y)
+        let gain = Tensor::from_vec(&[3], vec![1.0, 0.5, 2.0]);
+        finite_diff_check(
+            move |g, x| {
+                let x2 = g.mul(x, x);
+                let ssum = g.reduce_sum_keep(x2, 1);
+                let third = g.scalar(1.0 / 3.0);
+                let ms = g.mul(ssum, third);
+                let eps = g.scalar(1e-6);
+                let mse = g.add(ms, eps);
+                let inv = g.rsqrt(mse);
+                let xn = g.mul(x, inv);
+                let gn = g.constant(gain.clone());
+                let y = g.mul(xn, gn);
+                let flat = g.reshape(y, &[6]);
+                g.reduce_sum(flat, 0)
+            },
+            Tensor::from_vec(&[2, 3], vec![0.4, -0.9, 1.3, 0.7, 0.2, -1.1]),
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_through_gather_is_scatter() {
+        // loss = sum(table[idx] * w): d(table) accumulates w rows by index
+        let mut g = Graph::default();
+        let table = g.input(&[3, 2], DType::F32);
+        let idx = g.constant_i32(IntTensor::from_vec(&[2], vec![2, 2]));
+        let picked = g.gather(table, idx);
+        let flat = g.reshape(picked, &[4]);
+        let loss = g.reduce_sum(flat, 0);
+        let grads = append_gradients(&mut g, loss, &[table]);
+        let tt = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let plan = g.free_plan(&[loss, grads[0]]);
+        let out = g.eval(&[Feed::F32(&tt)], &[loss, grads[0]], &plan).unwrap();
+        assert_eq!(out[0].to_f32_tensor().data[0], 22.0); // 2×(5+6)
+        // both gathers hit row 2 → gradient 2 on row 2, 0 elsewhere
+        assert_eq!(out[1].to_f32_tensor().data, vec![0., 0., 0., 0., 2., 2.]);
+    }
+
+    #[test]
+    fn unbroadcast_sums_expanded_axes() {
+        // z = x (2,3) * m (3,): d(m) must sum over the leading axis
+        let mut g = Graph::default();
+        let x = g.input(&[2, 3], DType::F32);
+        let m = g.input(&[3], DType::F32);
+        let z = g.mul(x, m);
+        let flat = g.reshape(z, &[6]);
+        let loss = g.reduce_sum(flat, 0);
+        let grads = append_gradients(&mut g, loss, &[m]);
+        let xt = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mt = Tensor::from_vec(&[3], vec![1., 1., 1.]);
+        let plan = g.free_plan(&[grads[0]]);
+        let out = g
+            .eval(&[Feed::F32(&xt), Feed::F32(&mt)], &[grads[0]], &plan)
+            .unwrap();
+        assert_eq!(out[0].to_f32_tensor().data, vec![5., 7., 9.]);
+    }
+}

@@ -1,0 +1,1248 @@
+//! The pure-Rust execution substrate of the default [`CpuBackend`]: a tiny
+//! static-shape tensor IR covering the op set the AOT graphs lower to
+//! (dot/matmul, elementwise arithmetic, exp/tanh/rsqrt, reductions,
+//! broadcast/reshape/transpose, select-style masking, iota, gather/scatter)
+//! plus an interpreter that executes a [`Graph`] against name-bound feeds.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` / `jax.numpy`:
+//! row-major tensors, numpy-style right-aligned broadcasting, f32 compute.
+//! Shapes are fully static and inferred at graph-construction time, so
+//! every kernel below runs without per-element shape checks.
+//!
+//! [`CpuBackend`]: super::cpu::CpuBackend
+
+use crate::runtime::exec::{Feed, Value};
+use crate::tensor::{IntTensor, Tensor};
+use crate::Result;
+
+/// Node id inside one [`Graph`] (ids are topologically ordered by
+/// construction: every operand id is smaller than its consumer's).
+pub type Id = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One IR operation. Structural parameters (shapes, axes, permutations)
+/// are baked in; tensor operands are node ids.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Placeholder bound to manifest input `k` at execution time.
+    Input(usize),
+    /// Baked constant (causal masks, rope frequency tables, scalars).
+    Const(Value),
+
+    // ---- unary (f32) ----
+    Neg(Id),
+    Exp(Id),
+    Log(Id),
+    Sqrt(Id),
+    Rsqrt(Id),
+    Tanh(Id),
+    Sigmoid(Id),
+    Cos(Id),
+    Sin(Id),
+    /// Identity forward; blocks gradient flow (softmax/logsumexp shifts).
+    StopGrad(Id),
+    /// i32 → f32 cast (positions, lengths).
+    CastF32(Id),
+
+    // ---- binary with numpy broadcasting (f32) ----
+    Add(Id, Id),
+    Sub(Id, Id),
+    Mul(Id, Id),
+    Div(Id, Id),
+    Maximum(Id, Id),
+    /// 1.0 where a < b else 0.0 (mask construction).
+    Less(Id, Id),
+
+    // ---- contractions ----
+    /// 2-D matmul with transpose flags: C = op(A) · op(B).
+    Matmul { a: Id, b: Id, ta: bool, tb: bool },
+    /// Batched 3-D matmul over the leading dim.
+    Bmm { a: Id, b: Id, ta: bool, tb: bool },
+
+    // ---- structure ----
+    Reshape(Id, Vec<usize>),
+    Transpose(Id, Vec<usize>),
+    /// Numpy-broadcast to an explicit shape.
+    Broadcast(Id, Vec<usize>),
+    Concat(Vec<Id>, usize),
+    Slice { x: Id, axis: usize, start: usize, len: usize },
+    /// Embed into zeros along `axis` at `start` (adjoint of `Slice`; also
+    /// the static prefill KV-cache write).
+    PadZero { x: Id, axis: usize, start: usize, full: usize },
+
+    // ---- reductions (single axis, no keepdims) ----
+    ReduceSum(Id, usize),
+    ReduceMax(Id, usize),
+
+    // ---- indexing ----
+    /// out[j, :] = table[idx[j], :] — embedding lookup.
+    Gather { table: Id, idx: Id },
+    /// out[j] = x[j, idx[j]] over the last axis — target-logit pick.
+    TakeLast { x: Id, idx: Id },
+    /// Adjoint of `Gather`: rows of `upd` summed into zeros[rows, d].
+    ScatterAddRows { idx: Id, upd: Id, rows: usize },
+    /// Adjoint of `TakeLast`: upd[j] written at [j, idx[j]] in zeros[.., n].
+    ScatterLast { idx: Id, upd: Id, n: usize },
+    /// KV-cache write: cache (b,h,s,d) ← kv (b,h,d) at per-batch position
+    /// pos (b,) — the decode-step dynamic-update-slice.
+    UpdateAt { cache: Id, kv: Id, pos: Id },
+    /// f32 ramp [0, len).
+    Iota { len: usize },
+}
+
+impl Op {
+    /// Tensor operand ids, in order.
+    pub fn operands(&self) -> Vec<Id> {
+        match self {
+            Op::Input(_) | Op::Const(_) | Op::Iota { .. } => vec![],
+            Op::Neg(x)
+            | Op::Exp(x)
+            | Op::Log(x)
+            | Op::Sqrt(x)
+            | Op::Rsqrt(x)
+            | Op::Tanh(x)
+            | Op::Sigmoid(x)
+            | Op::Cos(x)
+            | Op::Sin(x)
+            | Op::StopGrad(x)
+            | Op::CastF32(x)
+            | Op::Reshape(x, _)
+            | Op::Transpose(x, _)
+            | Op::Broadcast(x, _)
+            | Op::Slice { x, .. }
+            | Op::PadZero { x, .. }
+            | Op::ReduceSum(x, _)
+            | Op::ReduceMax(x, _) => vec![*x],
+            Op::Add(a, b)
+            | Op::Sub(a, b)
+            | Op::Mul(a, b)
+            | Op::Div(a, b)
+            | Op::Maximum(a, b)
+            | Op::Less(a, b)
+            | Op::Matmul { a, b, .. }
+            | Op::Bmm { a, b, .. } => vec![*a, *b],
+            Op::Concat(xs, _) => xs.clone(),
+            Op::Gather { table, idx } => vec![*table, *idx],
+            Op::TakeLast { x, idx } => vec![*x, *idx],
+            Op::ScatterAddRows { idx, upd, .. } => vec![*idx, *upd],
+            Op::ScatterLast { idx, upd, .. } => vec![*idx, *upd],
+            Op::UpdateAt { cache, kv, pos } => vec![*cache, *kv, *pos],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// A static-shape computation graph under construction / execution.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Number of declared inputs (Input(k) for k < n_inputs).
+    pub n_inputs: usize,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Numpy broadcast of two shapes (right-aligned), or None if incompatible.
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+    let r = a.len().max(b.len());
+    let mut out = vec![0usize; r];
+    for i in 0..r {
+        let da = if i < r - a.len() { 1 } else { a[i - (r - a.len())] };
+        let db = if i < r - b.len() { 1 } else { b[i - (r - b.len())] };
+        if da == db || da == 1 || db == 1 {
+            out[i] = da.max(db);
+        } else {
+            return None;
+        }
+    }
+    Some(out)
+}
+
+impl Graph {
+    pub fn shape(&self, id: Id) -> &[usize] {
+        &self.nodes[id].shape
+    }
+
+    pub fn dtype(&self, id: Id) -> DType {
+        self.nodes[id].dtype
+    }
+
+    fn push(&mut self, op: Op, shape: Vec<usize>, dtype: DType) -> Id {
+        self.nodes.push(Node { op, shape, dtype });
+        self.nodes.len() - 1
+    }
+
+    // ---------------- construction API ----------------
+
+    /// Declare the next manifest input (call in manifest order).
+    pub fn input(&mut self, shape: &[usize], dtype: DType) -> Id {
+        let k = self.n_inputs;
+        self.n_inputs += 1;
+        self.push(Op::Input(k), shape.to_vec(), dtype)
+    }
+
+    pub fn constant(&mut self, t: Tensor) -> Id {
+        let shape = t.shape.clone();
+        self.push(Op::Const(Value::F32(t)), shape, DType::F32)
+    }
+
+    pub fn scalar(&mut self, v: f32) -> Id {
+        self.constant(Tensor::from_vec(&[], vec![v]))
+    }
+
+    pub fn constant_i32(&mut self, t: IntTensor) -> Id {
+        let shape = t.shape.clone();
+        self.push(Op::Const(Value::I32(t)), shape, DType::I32)
+    }
+
+    fn unary(&mut self, f: impl Fn(Id) -> Op, x: Id) -> Id {
+        assert_eq!(self.dtype(x), DType::F32, "unary op on non-f32 node {x}");
+        let shape = self.shape(x).to_vec();
+        self.push(f(x), shape, DType::F32)
+    }
+
+    pub fn neg(&mut self, x: Id) -> Id {
+        self.unary(Op::Neg, x)
+    }
+    pub fn exp(&mut self, x: Id) -> Id {
+        self.unary(Op::Exp, x)
+    }
+    pub fn log(&mut self, x: Id) -> Id {
+        self.unary(Op::Log, x)
+    }
+    pub fn sqrt(&mut self, x: Id) -> Id {
+        self.unary(Op::Sqrt, x)
+    }
+    pub fn rsqrt(&mut self, x: Id) -> Id {
+        self.unary(Op::Rsqrt, x)
+    }
+    pub fn tanh(&mut self, x: Id) -> Id {
+        self.unary(Op::Tanh, x)
+    }
+    pub fn sigmoid(&mut self, x: Id) -> Id {
+        self.unary(Op::Sigmoid, x)
+    }
+    pub fn cos(&mut self, x: Id) -> Id {
+        self.unary(Op::Cos, x)
+    }
+    pub fn sin(&mut self, x: Id) -> Id {
+        self.unary(Op::Sin, x)
+    }
+    pub fn stop_grad(&mut self, x: Id) -> Id {
+        self.unary(Op::StopGrad, x)
+    }
+
+    pub fn cast_f32(&mut self, x: Id) -> Id {
+        let shape = self.shape(x).to_vec();
+        self.push(Op::CastF32(x), shape, DType::F32)
+    }
+
+    fn binary(&mut self, f: impl Fn(Id, Id) -> Op, a: Id, b: Id) -> Id {
+        assert_eq!(self.dtype(a), DType::F32, "binary op lhs must be f32");
+        assert_eq!(self.dtype(b), DType::F32, "binary op rhs must be f32");
+        let shape = broadcast_shapes(self.shape(a), self.shape(b)).unwrap_or_else(|| {
+            panic!("broadcast mismatch: {:?} vs {:?}", self.shape(a), self.shape(b))
+        });
+        self.push(f(a, b), shape, DType::F32)
+    }
+
+    pub fn add(&mut self, a: Id, b: Id) -> Id {
+        self.binary(Op::Add, a, b)
+    }
+    pub fn sub(&mut self, a: Id, b: Id) -> Id {
+        self.binary(Op::Sub, a, b)
+    }
+    pub fn mul(&mut self, a: Id, b: Id) -> Id {
+        self.binary(Op::Mul, a, b)
+    }
+    pub fn div(&mut self, a: Id, b: Id) -> Id {
+        self.binary(Op::Div, a, b)
+    }
+    pub fn maximum(&mut self, a: Id, b: Id) -> Id {
+        self.binary(Op::Maximum, a, b)
+    }
+    pub fn less(&mut self, a: Id, b: Id) -> Id {
+        self.binary(Op::Less, a, b)
+    }
+
+    pub fn matmul(&mut self, a: Id, b: Id, ta: bool, tb: bool) -> Id {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 2, "matmul lhs must be 2-D, got {sa:?}");
+        assert_eq!(sb.len(), 2, "matmul rhs must be 2-D, got {sb:?}");
+        let (m, ka) = if ta { (sa[1], sa[0]) } else { (sa[0], sa[1]) };
+        let (kb, n) = if tb { (sb[1], sb[0]) } else { (sb[0], sb[1]) };
+        assert_eq!(ka, kb, "matmul inner dim: {sa:?} (ta={ta}) vs {sb:?} (tb={tb})");
+        self.push(Op::Matmul { a, b, ta, tb }, vec![m, n], DType::F32)
+    }
+
+    pub fn bmm(&mut self, a: Id, b: Id, ta: bool, tb: bool) -> Id {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 3, "bmm lhs must be 3-D, got {sa:?}");
+        assert_eq!(sb.len(), 3, "bmm rhs must be 3-D, got {sb:?}");
+        assert_eq!(sa[0], sb[0], "bmm batch dims differ");
+        let (m, ka) = if ta { (sa[2], sa[1]) } else { (sa[1], sa[2]) };
+        let (kb, n) = if tb { (sb[2], sb[1]) } else { (sb[1], sb[2]) };
+        assert_eq!(ka, kb, "bmm inner dim: {sa:?} (ta={ta}) vs {sb:?} (tb={tb})");
+        self.push(Op::Bmm { a, b, ta, tb }, vec![sa[0], m, n], DType::F32)
+    }
+
+    pub fn reshape(&mut self, x: Id, shape: &[usize]) -> Id {
+        assert_eq!(
+            numel(self.shape(x)),
+            numel(shape),
+            "reshape {:?} -> {shape:?}",
+            self.shape(x)
+        );
+        let dt = self.dtype(x);
+        self.push(Op::Reshape(x, shape.to_vec()), shape.to_vec(), dt)
+    }
+
+    pub fn transpose(&mut self, x: Id, perm: &[usize]) -> Id {
+        let s = self.shape(x).to_vec();
+        assert_eq!(perm.len(), s.len(), "transpose perm rank");
+        let mut seen = vec![false; s.len()];
+        for &p in perm {
+            assert!(!seen[p], "transpose perm not a permutation");
+            seen[p] = true;
+        }
+        let shape: Vec<usize> = perm.iter().map(|&p| s[p]).collect();
+        let dt = self.dtype(x);
+        self.push(Op::Transpose(x, perm.to_vec()), shape, dt)
+    }
+
+    pub fn broadcast(&mut self, x: Id, shape: &[usize]) -> Id {
+        let got = broadcast_shapes(self.shape(x), shape).unwrap_or_else(|| {
+            panic!("cannot broadcast {:?} to {shape:?}", self.shape(x))
+        });
+        assert_eq!(got, shape, "broadcast of {:?} to {shape:?} would grow", self.shape(x));
+        self.push(Op::Broadcast(x, shape.to_vec()), shape.to_vec(), DType::F32)
+    }
+
+    pub fn concat(&mut self, xs: &[Id], axis: usize) -> Id {
+        assert!(!xs.is_empty());
+        let mut shape = self.shape(xs[0]).to_vec();
+        for &x in &xs[1..] {
+            let s = self.shape(x);
+            assert_eq!(s.len(), shape.len(), "concat rank");
+            for (d, (&a, &b)) in shape.iter().zip(s.iter()).enumerate() {
+                if d != axis {
+                    assert_eq!(a, b, "concat non-axis dims must match");
+                }
+            }
+            shape[axis] += s[axis];
+        }
+        self.push(Op::Concat(xs.to_vec(), axis), shape, DType::F32)
+    }
+
+    pub fn slice(&mut self, x: Id, axis: usize, start: usize, len: usize) -> Id {
+        let mut shape = self.shape(x).to_vec();
+        assert!(start + len <= shape[axis], "slice out of range");
+        shape[axis] = len;
+        self.push(Op::Slice { x, axis, start, len }, shape, DType::F32)
+    }
+
+    pub fn pad_zero(&mut self, x: Id, axis: usize, start: usize, full: usize) -> Id {
+        let mut shape = self.shape(x).to_vec();
+        assert!(start + shape[axis] <= full, "pad_zero out of range");
+        shape[axis] = full;
+        self.push(Op::PadZero { x, axis, start, full }, shape, DType::F32)
+    }
+
+    pub fn reduce_sum(&mut self, x: Id, axis: usize) -> Id {
+        let mut shape = self.shape(x).to_vec();
+        assert!(axis < shape.len());
+        shape.remove(axis);
+        self.push(Op::ReduceSum(x, axis), shape, DType::F32)
+    }
+
+    pub fn reduce_max(&mut self, x: Id, axis: usize) -> Id {
+        let mut shape = self.shape(x).to_vec();
+        assert!(axis < shape.len());
+        shape.remove(axis);
+        self.push(Op::ReduceMax(x, axis), shape, DType::F32)
+    }
+
+    /// Reduce-sum keeping the axis as size 1 (keepdims=True).
+    pub fn reduce_sum_keep(&mut self, x: Id, axis: usize) -> Id {
+        let mut shape = self.shape(x).to_vec();
+        let r = self.reduce_sum(x, axis);
+        shape[axis] = 1;
+        self.reshape(r, &shape)
+    }
+
+    pub fn reduce_max_keep(&mut self, x: Id, axis: usize) -> Id {
+        let mut shape = self.shape(x).to_vec();
+        let r = self.reduce_max(x, axis);
+        shape[axis] = 1;
+        self.reshape(r, &shape)
+    }
+
+    pub fn gather(&mut self, table: Id, idx: Id) -> Id {
+        assert_eq!(self.shape(table).len(), 2, "gather table must be 2-D");
+        assert_eq!(self.dtype(idx), DType::I32, "gather index must be i32");
+        let d = self.shape(table)[1];
+        let mut shape = self.shape(idx).to_vec();
+        shape.push(d);
+        self.push(Op::Gather { table, idx }, shape, DType::F32)
+    }
+
+    pub fn take_last(&mut self, x: Id, idx: Id) -> Id {
+        let sx = self.shape(x).to_vec();
+        assert!(!sx.is_empty());
+        assert_eq!(self.dtype(idx), DType::I32, "take_last index must be i32");
+        assert_eq!(&sx[..sx.len() - 1], self.shape(idx), "take_last index shape");
+        self.push(Op::TakeLast { x, idx }, sx[..sx.len() - 1].to_vec(), DType::F32)
+    }
+
+    pub fn scatter_add_rows(&mut self, idx: Id, upd: Id, rows: usize) -> Id {
+        let su = self.shape(upd).to_vec();
+        let d = *su.last().expect("scatter_add_rows upd rank");
+        assert_eq!(&su[..su.len() - 1], self.shape(idx), "scatter_add_rows shapes");
+        self.push(Op::ScatterAddRows { idx, upd, rows }, vec![rows, d], DType::F32)
+    }
+
+    pub fn scatter_last(&mut self, idx: Id, upd: Id, n: usize) -> Id {
+        assert_eq!(self.shape(idx), self.shape(upd), "scatter_last shapes");
+        let mut shape = self.shape(upd).to_vec();
+        shape.push(n);
+        self.push(Op::ScatterLast { idx, upd, n }, shape, DType::F32)
+    }
+
+    pub fn update_at(&mut self, cache: Id, kv: Id, pos: Id) -> Id {
+        let sc = self.shape(cache).to_vec();
+        let sk = self.shape(kv);
+        assert_eq!(sc.len(), 4, "update_at cache must be (b,h,s,d)");
+        assert_eq!(sk, &[sc[0], sc[1], sc[3]][..], "update_at kv shape");
+        assert_eq!(self.shape(pos), &[sc[0]][..], "update_at pos shape");
+        assert_eq!(self.dtype(pos), DType::I32);
+        self.push(Op::UpdateAt { cache, kv, pos }, sc, DType::F32)
+    }
+
+    pub fn iota(&mut self, len: usize) -> Id {
+        self.push(Op::Iota { len }, vec![len], DType::F32)
+    }
+
+    // ---------------- execution ----------------
+
+    /// Memory plan: for each node, which earlier values die after it runs.
+    pub fn free_plan(&self, outputs: &[Id]) -> Vec<Vec<Id>> {
+        let mut last_use = vec![usize::MAX; self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            for o in node.op.operands() {
+                if last_use[o] == usize::MAX || last_use[o] < id {
+                    last_use[o] = id;
+                }
+            }
+        }
+        let mut plan = vec![Vec::new(); self.nodes.len()];
+        for (o, &lu) in last_use.iter().enumerate() {
+            let is_input = matches!(self.nodes[o].op, Op::Input(_));
+            let is_output = outputs.contains(&o);
+            if lu != usize::MAX && !is_input && !is_output {
+                plan[lu].push(o);
+            }
+        }
+        plan
+    }
+
+    /// Execute the graph over manifest-ordered feeds, returning the values
+    /// of `outputs` in order.
+    pub fn eval(&self, inputs: &[Feed], outputs: &[Id], plan: &[Vec<Id>]) -> Result<Vec<Value>> {
+        if inputs.len() != self.n_inputs {
+            return Err(crate::anyhow!(
+                "graph expects {} inputs, got {}",
+                self.n_inputs,
+                inputs.len()
+            ));
+        }
+        let mut vals: Vec<Option<Value>> = vec![None; self.nodes.len()];
+        for id in 0..self.nodes.len() {
+            if matches!(self.nodes[id].op, Op::Input(_)) {
+                continue; // read through `inputs`, never materialized
+            }
+            let v = self.exec_node(id, &vals, inputs)?;
+            debug_assert_eq!(
+                v.shape(),
+                self.nodes[id].shape.as_slice(),
+                "node {id} ({:?}) produced wrong shape",
+                self.nodes[id].op
+            );
+            vals[id] = Some(v);
+            for &f in &plan[id] {
+                vals[f] = None;
+            }
+        }
+        let mut out = Vec::with_capacity(outputs.len());
+        for &o in outputs {
+            match &self.nodes[o].op {
+                Op::Input(k) => out.push(match &inputs[*k] {
+                    Feed::F32(t) => Value::F32((*t).clone()),
+                    Feed::I32(t) => Value::I32((*t).clone()),
+                }),
+                _ => out.push(
+                    vals[o]
+                        .take()
+                        .ok_or_else(|| crate::anyhow!("output node {o} was freed"))?,
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    fn f32_of<'a>(
+        &self,
+        vals: &'a [Option<Value>],
+        inputs: &'a [Feed<'a>],
+        id: Id,
+    ) -> Result<&'a Tensor> {
+        match &self.nodes[id].op {
+            Op::Input(k) => match &inputs[*k] {
+                Feed::F32(t) => Ok(t),
+                Feed::I32(_) => Err(crate::anyhow!("node {id}: expected f32 input")),
+            },
+            _ => match vals[id].as_ref() {
+                Some(Value::F32(t)) => Ok(t),
+                Some(Value::I32(_)) => Err(crate::anyhow!("node {id}: expected f32 value")),
+                None => Err(crate::anyhow!("node {id}: value missing (freed too early?)")),
+            },
+        }
+    }
+
+    fn i32_of<'a>(
+        &self,
+        vals: &'a [Option<Value>],
+        inputs: &'a [Feed<'a>],
+        id: Id,
+    ) -> Result<&'a IntTensor> {
+        match &self.nodes[id].op {
+            Op::Input(k) => match &inputs[*k] {
+                Feed::I32(t) => Ok(t),
+                Feed::F32(_) => Err(crate::anyhow!("node {id}: expected i32 input")),
+            },
+            _ => match vals[id].as_ref() {
+                Some(Value::I32(t)) => Ok(t),
+                Some(Value::F32(_)) => Err(crate::anyhow!("node {id}: expected i32 value")),
+                None => Err(crate::anyhow!("node {id}: value missing (freed too early?)")),
+            },
+        }
+    }
+
+    fn exec_node(&self, id: Id, vals: &[Option<Value>], inputs: &[Feed]) -> Result<Value> {
+        let node = &self.nodes[id];
+        let out_shape = &node.shape;
+        let v = match &node.op {
+            Op::Input(_) => unreachable!("inputs are not materialized"),
+            Op::Const(v) => v.clone(),
+            Op::Neg(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, |v| -v)),
+            Op::Exp(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::exp)),
+            Op::Log(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::ln)),
+            Op::Sqrt(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::sqrt)),
+            Op::Rsqrt(x) => {
+                Value::F32(map1(self.f32_of(vals, inputs, *x)?, |v| 1.0 / v.sqrt()))
+            }
+            Op::Tanh(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::tanh)),
+            Op::Sigmoid(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, |v| {
+                1.0 / (1.0 + (-v).exp())
+            })),
+            Op::Cos(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::cos)),
+            Op::Sin(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::sin)),
+            Op::StopGrad(x) => Value::F32(self.f32_of(vals, inputs, *x)?.clone()),
+            Op::CastF32(x) => {
+                let t = self.i32_of(vals, inputs, *x)?;
+                Value::F32(Tensor::from_vec(
+                    &t.shape,
+                    t.data.iter().map(|&v| v as f32).collect(),
+                ))
+            }
+            Op::Add(a, b) => Value::F32(ew2(
+                self.f32_of(vals, inputs, *a)?,
+                self.f32_of(vals, inputs, *b)?,
+                out_shape,
+                |x, y| x + y,
+            )),
+            Op::Sub(a, b) => Value::F32(ew2(
+                self.f32_of(vals, inputs, *a)?,
+                self.f32_of(vals, inputs, *b)?,
+                out_shape,
+                |x, y| x - y,
+            )),
+            Op::Mul(a, b) => Value::F32(ew2(
+                self.f32_of(vals, inputs, *a)?,
+                self.f32_of(vals, inputs, *b)?,
+                out_shape,
+                |x, y| x * y,
+            )),
+            Op::Div(a, b) => Value::F32(ew2(
+                self.f32_of(vals, inputs, *a)?,
+                self.f32_of(vals, inputs, *b)?,
+                out_shape,
+                |x, y| x / y,
+            )),
+            Op::Maximum(a, b) => Value::F32(ew2(
+                self.f32_of(vals, inputs, *a)?,
+                self.f32_of(vals, inputs, *b)?,
+                out_shape,
+                f32::max,
+            )),
+            Op::Less(a, b) => Value::F32(ew2(
+                self.f32_of(vals, inputs, *a)?,
+                self.f32_of(vals, inputs, *b)?,
+                out_shape,
+                |x, y| if x < y { 1.0 } else { 0.0 },
+            )),
+            Op::Matmul { a, b, ta, tb } => {
+                let at = self.f32_of(vals, inputs, *a)?;
+                let bt = self.f32_of(vals, inputs, *b)?;
+                let (m, n) = (out_shape[0], out_shape[1]);
+                let k = if *ta { at.shape[0] } else { at.shape[1] };
+                let mut out = vec![0.0f32; m * n];
+                mm(&at.data, &bt.data, m, k, n, *ta, *tb, &mut out);
+                Value::F32(Tensor::from_vec(out_shape, out))
+            }
+            Op::Bmm { a, b, ta, tb } => {
+                let at = self.f32_of(vals, inputs, *a)?;
+                let bt = self.f32_of(vals, inputs, *b)?;
+                let (bs, m, n) = (out_shape[0], out_shape[1], out_shape[2]);
+                let k = if *ta { at.shape[1] } else { at.shape[2] };
+                let (sa, sb) = (at.shape[1] * at.shape[2], bt.shape[1] * bt.shape[2]);
+                let mut out = vec![0.0f32; bs * m * n];
+                for i in 0..bs {
+                    mm(
+                        &at.data[i * sa..(i + 1) * sa],
+                        &bt.data[i * sb..(i + 1) * sb],
+                        m,
+                        k,
+                        n,
+                        *ta,
+                        *tb,
+                        &mut out[i * m * n..(i + 1) * m * n],
+                    );
+                }
+                Value::F32(Tensor::from_vec(out_shape, out))
+            }
+            Op::Reshape(x, shape) => match &self.nodes[*x].dtype {
+                DType::F32 => {
+                    let t = self.f32_of(vals, inputs, *x)?;
+                    Value::F32(Tensor::from_vec(shape, t.data.clone()))
+                }
+                DType::I32 => {
+                    let t = self.i32_of(vals, inputs, *x)?;
+                    Value::I32(IntTensor::from_vec(shape, t.data.clone()))
+                }
+            },
+            Op::Transpose(x, perm) => {
+                let t = self.f32_of(vals, inputs, *x)?;
+                Value::F32(transpose(t, perm, out_shape))
+            }
+            Op::Broadcast(x, shape) => {
+                let t = self.f32_of(vals, inputs, *x)?;
+                Value::F32(broadcast_to(t, shape))
+            }
+            Op::Concat(xs, axis) => {
+                let mut parts = Vec::with_capacity(xs.len());
+                for &x in xs {
+                    parts.push(self.f32_of(vals, inputs, x)?);
+                }
+                Value::F32(concat(&parts, *axis, out_shape))
+            }
+            Op::Slice { x, axis, start, len } => {
+                let t = self.f32_of(vals, inputs, *x)?;
+                Value::F32(slice(t, *axis, *start, *len))
+            }
+            Op::PadZero { x, axis, start, full } => {
+                let t = self.f32_of(vals, inputs, *x)?;
+                Value::F32(pad_zero(t, *axis, *start, *full))
+            }
+            Op::ReduceSum(x, axis) => {
+                let t = self.f32_of(vals, inputs, *x)?;
+                Value::F32(reduce(t, *axis, out_shape, 0.0, |acc, v| acc + v))
+            }
+            Op::ReduceMax(x, axis) => {
+                let t = self.f32_of(vals, inputs, *x)?;
+                Value::F32(reduce(t, *axis, out_shape, f32::NEG_INFINITY, f32::max))
+            }
+            Op::Gather { table, idx } => {
+                let tt = self.f32_of(vals, inputs, *table)?;
+                let it = self.i32_of(vals, inputs, *idx)?;
+                let (v, d) = (tt.shape[0], tt.shape[1]);
+                let mut out = Vec::with_capacity(it.data.len() * d);
+                for &i in &it.data {
+                    let i = i as usize;
+                    if i >= v {
+                        return Err(crate::anyhow!("gather index {i} out of range (rows {v})"));
+                    }
+                    out.extend_from_slice(&tt.data[i * d..(i + 1) * d]);
+                }
+                Value::F32(Tensor::from_vec(out_shape, out))
+            }
+            Op::TakeLast { x, idx } => {
+                let xt = self.f32_of(vals, inputs, *x)?;
+                let it = self.i32_of(vals, inputs, *idx)?;
+                let n = *xt.shape.last().unwrap();
+                let mut out = Vec::with_capacity(it.data.len());
+                for (j, &i) in it.data.iter().enumerate() {
+                    let i = i as usize;
+                    if i >= n {
+                        return Err(crate::anyhow!("take_last index {i} out of range ({n})"));
+                    }
+                    out.push(xt.data[j * n + i]);
+                }
+                Value::F32(Tensor::from_vec(out_shape, out))
+            }
+            Op::ScatterAddRows { idx, upd, rows } => {
+                let it = self.i32_of(vals, inputs, *idx)?;
+                let ut = self.f32_of(vals, inputs, *upd)?;
+                let d = *ut.shape.last().unwrap();
+                let mut out = vec![0.0f32; rows * d];
+                for (j, &i) in it.data.iter().enumerate() {
+                    let i = i as usize;
+                    if i >= *rows {
+                        return Err(crate::anyhow!("scatter index {i} out of range ({rows})"));
+                    }
+                    let dst = &mut out[i * d..(i + 1) * d];
+                    let src = &ut.data[j * d..(j + 1) * d];
+                    for (a, b) in dst.iter_mut().zip(src) {
+                        *a += b;
+                    }
+                }
+                Value::F32(Tensor::from_vec(out_shape, out))
+            }
+            Op::ScatterLast { idx, upd, n } => {
+                let it = self.i32_of(vals, inputs, *idx)?;
+                let ut = self.f32_of(vals, inputs, *upd)?;
+                let mut out = vec![0.0f32; ut.data.len() * n];
+                for (j, (&i, &u)) in it.data.iter().zip(&ut.data).enumerate() {
+                    let i = i as usize;
+                    if i >= *n {
+                        return Err(crate::anyhow!("scatter index {i} out of range ({n})"));
+                    }
+                    out[j * n + i] = u;
+                }
+                Value::F32(Tensor::from_vec(out_shape, out))
+            }
+            Op::UpdateAt { cache, kv, pos } => {
+                let ct = self.f32_of(vals, inputs, *cache)?;
+                let kt = self.f32_of(vals, inputs, *kv)?;
+                let pt = self.i32_of(vals, inputs, *pos)?;
+                let (b, h, s, d) = (ct.shape[0], ct.shape[1], ct.shape[2], ct.shape[3]);
+                let mut out = ct.data.clone();
+                for bb in 0..b {
+                    let p = pt.data[bb] as usize;
+                    if p >= s {
+                        return Err(crate::anyhow!("update_at position {p} out of range ({s})"));
+                    }
+                    for hh in 0..h {
+                        let dst = (bb * h + hh) * s * d + p * d;
+                        let src = (bb * h + hh) * d;
+                        out[dst..dst + d].copy_from_slice(&kt.data[src..src + d]);
+                    }
+                }
+                Value::F32(Tensor::from_vec(out_shape, out))
+            }
+            Op::Iota { len } => {
+                Value::F32(Tensor::from_vec(&[*len], (0..*len).map(|i| i as f32).collect()))
+            }
+        };
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+fn map1(t: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::from_vec(&t.shape, t.data.iter().map(|&x| f(x)).collect())
+}
+
+/// Right-aligned broadcast strides of `shape` against `out` (0 where the
+/// input dimension is 1 or absent).
+fn bcast_strides(shape: &[usize], out: &[usize]) -> Vec<usize> {
+    let r = out.len();
+    let pad = r - shape.len();
+    // row-major strides of the (padded) input shape
+    let mut strides = vec![0usize; r];
+    let mut acc = 1usize;
+    for d in (0..shape.len()).rev() {
+        strides[pad + d] = if shape[d] == 1 { 0 } else { acc };
+        acc *= shape[d];
+    }
+    // padded leading dims broadcast with stride 0 (already zeroed)
+    for (d, s) in strides.iter_mut().enumerate() {
+        if out[d] == 1 {
+            *s = 0; // degenerate output dim; stride irrelevant
+        }
+    }
+    strides
+}
+
+/// Elementwise binary with numpy broadcasting to `out_shape`.
+fn ew2(a: &Tensor, b: &Tensor, out_shape: &[usize], f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let n = numel(out_shape);
+    // fast paths
+    if a.shape == b.shape && a.shape.as_slice() == out_shape {
+        let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+        return Tensor::from_vec(out_shape, data);
+    }
+    if b.data.len() == 1 && a.shape.as_slice() == out_shape {
+        let y = b.data[0];
+        return Tensor::from_vec(out_shape, a.data.iter().map(|&x| f(x, y)).collect());
+    }
+    if a.data.len() == 1 && b.shape.as_slice() == out_shape {
+        let x = a.data[0];
+        return Tensor::from_vec(out_shape, b.data.iter().map(|&y| f(x, y)).collect());
+    }
+    let r = out_shape.len();
+    let sa = bcast_strides(&a.shape, out_shape);
+    let sb = bcast_strides(&b.shape, out_shape);
+    let mut out = Vec::with_capacity(n);
+    let mut idx = vec![0usize; r];
+    let (mut oa, mut ob) = (0usize, 0usize);
+    for _ in 0..n {
+        out.push(f(a.data[oa], b.data[ob]));
+        for d in (0..r).rev() {
+            idx[d] += 1;
+            oa += sa[d];
+            ob += sb[d];
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+            oa -= sa[d] * out_shape[d];
+            ob -= sb[d] * out_shape[d];
+        }
+    }
+    Tensor::from_vec(out_shape, out)
+}
+
+fn broadcast_to(t: &Tensor, out_shape: &[usize]) -> Tensor {
+    if t.shape.as_slice() == out_shape {
+        return t.clone();
+    }
+    let n = numel(out_shape);
+    let r = out_shape.len();
+    let s = bcast_strides(&t.shape, out_shape);
+    let mut out = Vec::with_capacity(n);
+    let mut idx = vec![0usize; r];
+    let mut off = 0usize;
+    for _ in 0..n {
+        out.push(t.data[off]);
+        for d in (0..r).rev() {
+            idx[d] += 1;
+            off += s[d];
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+            off -= s[d] * out_shape[d];
+        }
+    }
+    Tensor::from_vec(out_shape, out)
+}
+
+/// C = op(A)·op(B) into `out` (len m*n, pre-zeroed by the caller).
+#[allow(clippy::too_many_arguments)]
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, ta: bool, tb: bool, out: &mut [f32]) {
+    match (ta, tb) {
+        (false, false) => {
+            // A (m,k) · B (k,n): ikj with row accumulation
+            for i in 0..m {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+        (true, false) => {
+            // A stored (k,m); C = Aᵀ·B: kij with row accumulation
+            for kk in 0..k {
+                let arow = &a[kk * m..(kk + 1) * m];
+                let brow = &b[kk * n..(kk + 1) * n];
+                for i in 0..m {
+                    let av = arow[i];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+        (false, true) => {
+            // B stored (n,k); C[i,j] = dot(A row i, B row j)
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += arow[kk] * brow[kk];
+                    }
+                    orow[j] = acc;
+                }
+            }
+        }
+        (true, true) => {
+            // A (k,m), B (n,k); C[i,j] = Σ_k A[k,i]·B[j,k]
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    let brow = &b[j * k..(j + 1) * k];
+                    for kk in 0..k {
+                        acc += a[kk * m + i] * brow[kk];
+                    }
+                    out[i * n + j] = acc;
+                }
+            }
+        }
+    }
+}
+
+fn transpose(t: &Tensor, perm: &[usize], out_shape: &[usize]) -> Tensor {
+    let r = out_shape.len();
+    // row-major strides of the input
+    let mut in_strides = vec![1usize; r];
+    for d in (0..r.saturating_sub(1)).rev() {
+        in_strides[d] = in_strides[d + 1] * t.shape[d + 1];
+    }
+    // stride of out dim d is the input stride of perm[d]
+    let s: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+    let n = numel(out_shape);
+    let mut out = Vec::with_capacity(n);
+    let mut idx = vec![0usize; r];
+    let mut off = 0usize;
+    for _ in 0..n {
+        out.push(t.data[off]);
+        for d in (0..r).rev() {
+            idx[d] += 1;
+            off += s[d];
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+            off -= s[d] * out_shape[d];
+        }
+    }
+    Tensor::from_vec(out_shape, out)
+}
+
+fn reduce(
+    t: &Tensor,
+    axis: usize,
+    out_shape: &[usize],
+    init: f32,
+    f: impl Fn(f32, f32) -> f32,
+) -> Tensor {
+    let n = t.shape[axis];
+    let outer: usize = t.shape[..axis].iter().product();
+    let inner: usize = t.shape[axis + 1..].iter().product();
+    let mut out = vec![init; outer * inner];
+    for o in 0..outer {
+        for kk in 0..n {
+            let base = (o * n + kk) * inner;
+            let orow = &mut out[o * inner..(o + 1) * inner];
+            for i in 0..inner {
+                orow[i] = f(orow[i], t.data[base + i]);
+            }
+        }
+    }
+    Tensor::from_vec(out_shape, out)
+}
+
+fn concat(parts: &[&Tensor], axis: usize, out_shape: &[usize]) -> Tensor {
+    let inner: usize = out_shape[axis + 1..].iter().product();
+    let outer: usize = out_shape[..axis].iter().product();
+    let mut out = Vec::with_capacity(numel(out_shape));
+    for o in 0..outer {
+        for p in parts {
+            let len_p = p.shape[axis];
+            let start = o * len_p * inner;
+            out.extend_from_slice(&p.data[start..start + len_p * inner]);
+        }
+    }
+    Tensor::from_vec(out_shape, out)
+}
+
+fn slice(t: &Tensor, axis: usize, start: usize, len: usize) -> Tensor {
+    let n = t.shape[axis];
+    let inner: usize = t.shape[axis + 1..].iter().product();
+    let outer: usize = t.shape[..axis].iter().product();
+    let mut shape = t.shape.clone();
+    shape[axis] = len;
+    let mut out = Vec::with_capacity(outer * len * inner);
+    for o in 0..outer {
+        let base = (o * n + start) * inner;
+        out.extend_from_slice(&t.data[base..base + len * inner]);
+    }
+    Tensor::from_vec(&shape, out)
+}
+
+fn pad_zero(t: &Tensor, axis: usize, start: usize, full: usize) -> Tensor {
+    let len = t.shape[axis];
+    let inner: usize = t.shape[axis + 1..].iter().product();
+    let outer: usize = t.shape[..axis].iter().product();
+    let mut shape = t.shape.clone();
+    shape[axis] = full;
+    let mut out = vec![0.0f32; outer * full * inner];
+    for o in 0..outer {
+        let dst = (o * full + start) * inner;
+        let src = o * len * inner;
+        out[dst..dst + len * inner].copy_from_slice(&t.data[src..src + len * inner]);
+    }
+    Tensor::from_vec(&shape, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::from_vec(shape, data)
+    }
+
+    fn run1(g: &Graph, out: Id, feeds: &[Feed]) -> Tensor {
+        let plan = g.free_plan(&[out]);
+        match g.eval(feeds, &[out], &plan).unwrap().remove(0) {
+            Value::F32(t) => t,
+            Value::I32(_) => panic!("expected f32"),
+        }
+    }
+
+    #[test]
+    fn broadcast_shapes_numpy_rules() {
+        assert_eq!(broadcast_shapes(&[4, 1], &[3]), Some(vec![4, 3]));
+        assert_eq!(broadcast_shapes(&[2, 3], &[2, 3]), Some(vec![2, 3]));
+        assert_eq!(broadcast_shapes(&[], &[5]), Some(vec![5]));
+        assert_eq!(broadcast_shapes(&[2, 1, 4], &[3, 1]), Some(vec![2, 3, 4]));
+        assert_eq!(broadcast_shapes(&[2, 3], &[4]), None);
+    }
+
+    #[test]
+    fn elementwise_broadcast_matches_manual() {
+        let mut g = Graph::default();
+        let a = g.input(&[2, 3], DType::F32);
+        let b = g.input(&[3], DType::F32);
+        let c = g.mul(a, b);
+        let at = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let bt = t(&[3], vec![10., 100., 1000.]);
+        let got = run1(&g, c, &[Feed::F32(&at), Feed::F32(&bt)]);
+        assert_eq!(got.data, vec![10., 200., 3000., 40., 500., 6000.]);
+    }
+
+    #[test]
+    fn matmul_all_transpose_combos() {
+        // A (2,3), B (3,2) — compare every flag combo against the plain one
+        let a = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = t(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let expect = a.matmul(&b); // (2,2)
+
+        let mut g = Graph::default();
+        let ia = g.input(&[2, 3], DType::F32);
+        let ib = g.input(&[3, 2], DType::F32);
+        let c0 = g.matmul(ia, ib, false, false);
+        assert_eq!(run1(&g, c0, &[Feed::F32(&a), Feed::F32(&b)]).data, expect.data);
+
+        let at = a.transpose2(); // (3,2)
+        let mut g = Graph::default();
+        let ia = g.input(&[3, 2], DType::F32);
+        let ib = g.input(&[3, 2], DType::F32);
+        let c1 = g.matmul(ia, ib, true, false);
+        assert_eq!(run1(&g, c1, &[Feed::F32(&at), Feed::F32(&b)]).data, expect.data);
+
+        let bt = b.transpose2(); // (2,3)
+        let mut g = Graph::default();
+        let ia = g.input(&[2, 3], DType::F32);
+        let ib = g.input(&[2, 3], DType::F32);
+        let c2 = g.matmul(ia, ib, false, true);
+        assert_eq!(run1(&g, c2, &[Feed::F32(&a), Feed::F32(&bt)]).data, expect.data);
+
+        let mut g = Graph::default();
+        let ia = g.input(&[3, 2], DType::F32);
+        let ib = g.input(&[2, 3], DType::F32);
+        let c3 = g.matmul(ia, ib, true, true);
+        assert_eq!(run1(&g, c3, &[Feed::F32(&at), Feed::F32(&bt)]).data, expect.data);
+    }
+
+    #[test]
+    fn bmm_matches_per_slice_matmul() {
+        let a = t(&[2, 2, 3], (0..12).map(|x| x as f32).collect());
+        let b = t(&[2, 3, 2], (0..12).map(|x| (x as f32) * 0.5).collect());
+        let mut g = Graph::default();
+        let ia = g.input(&[2, 2, 3], DType::F32);
+        let ib = g.input(&[2, 3, 2], DType::F32);
+        let c = g.bmm(ia, ib, false, false);
+        let got = run1(&g, c, &[Feed::F32(&a), Feed::F32(&b)]);
+        for s in 0..2 {
+            let a2 = t(&[2, 3], a.data[s * 6..(s + 1) * 6].to_vec());
+            let b2 = t(&[3, 2], b.data[s * 6..(s + 1) * 6].to_vec());
+            let e = a2.matmul(&b2);
+            assert_eq!(&got.data[s * 4..(s + 1) * 4], e.data.as_slice(), "slice {s}");
+        }
+    }
+
+    #[test]
+    fn reduce_and_keepdims() {
+        let x = t(&[2, 3], vec![1., 5., 2., -1., 0., 4.]);
+        let mut g = Graph::default();
+        let ix = g.input(&[2, 3], DType::F32);
+        let s = g.reduce_sum(ix, 1);
+        let m = g.reduce_max(ix, 0);
+        let plan = g.free_plan(&[s, m]);
+        let out = g.eval(&[Feed::F32(&x)], &[s, m], &plan).unwrap();
+        assert_eq!(out[0].to_f32_tensor().data, vec![8., 3.]);
+        assert_eq!(out[1].to_f32_tensor().data, vec![1., 5., 4.]);
+    }
+
+    #[test]
+    fn transpose_reshape_slice_pad_roundtrip() {
+        let x = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut g = Graph::default();
+        let ix = g.input(&[2, 3], DType::F32);
+        let tr = g.transpose(ix, &[1, 0]);
+        let got = run1(&g, tr, &[Feed::F32(&x)]);
+        assert_eq!(got.data, vec![1., 4., 2., 5., 3., 6.]);
+
+        let mut g = Graph::default();
+        let ix = g.input(&[2, 4], DType::F32);
+        let sl = g.slice(ix, 1, 1, 2);
+        let pd = g.pad_zero(sl, 1, 1, 4);
+        let x = t(&[2, 4], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let got = run1(&g, pd, &[Feed::F32(&x)]);
+        assert_eq!(got.data, vec![0., 2., 3., 0., 0., 6., 7., 0.]);
+    }
+
+    #[test]
+    fn gather_take_scatter() {
+        let table = t(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let idx = IntTensor::from_vec(&[2, 2], vec![2, 0, 1, 2]);
+        let mut g = Graph::default();
+        let it = g.input(&[3, 2], DType::F32);
+        let ii = g.input(&[2, 2], DType::I32);
+        let gat = g.gather(it, ii);
+        let got = run1(&g, gat, &[Feed::F32(&table), Feed::I32(&idx)]);
+        assert_eq!(got.shape, vec![2, 2, 2]);
+        assert_eq!(got.data, vec![5., 6., 1., 2., 3., 4., 5., 6.]);
+
+        // scatter_add_rows is the adjoint: sum of rows per index
+        let upd = t(&[2, 2, 2], vec![1.; 8]);
+        let mut g = Graph::default();
+        let ii = g.input(&[2, 2], DType::I32);
+        let iu = g.input(&[2, 2, 2], DType::F32);
+        let sc = g.scatter_add_rows(ii, iu, 3);
+        let got = run1(&g, sc, &[Feed::I32(&idx), Feed::F32(&upd)]);
+        // index 2 hit twice, 0 and 1 once each
+        assert_eq!(got.data, vec![1., 1., 1., 1., 2., 2.]);
+
+        // take_last / scatter_last
+        let x = t(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let ti = IntTensor::from_vec(&[2], vec![2, 0]);
+        let mut g = Graph::default();
+        let ix = g.input(&[2, 3], DType::F32);
+        let ii = g.input(&[2], DType::I32);
+        let tk = g.take_last(ix, ii);
+        let got = run1(&g, tk, &[Feed::F32(&x), Feed::I32(&ti)]);
+        assert_eq!(got.data, vec![3., 4.]);
+    }
+
+    #[test]
+    fn update_at_writes_per_batch_position() {
+        // cache (2,1,3,2), kv (2,1,2), pos [2,0]
+        let cache = t(&[2, 1, 3, 2], vec![0.0; 12]);
+        let kv = t(&[2, 1, 2], vec![1., 2., 3., 4.]);
+        let pos = IntTensor::from_vec(&[2], vec![2, 0]);
+        let mut g = Graph::default();
+        let ic = g.input(&[2, 1, 3, 2], DType::F32);
+        let ik = g.input(&[2, 1, 2], DType::F32);
+        let ip = g.input(&[2], DType::I32);
+        let up = g.update_at(ic, ik, ip);
+        let got = run1(&g, up, &[Feed::F32(&cache), Feed::F32(&kv), Feed::I32(&pos)]);
+        assert_eq!(got.data, vec![0., 0., 0., 0., 1., 2., 3., 4., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn softmax_composed_from_ops_matches_manual() {
+        // softmax over the last axis, composed exactly like the attention graph
+        let x = t(&[2, 3], vec![1., 2., 3., 0., 0., 0.]);
+        let mut g = Graph::default();
+        let ix = g.input(&[2, 3], DType::F32);
+        let m = g.reduce_max_keep(ix, 1);
+        let ms = g.stop_grad(m);
+        let sh = g.sub(ix, ms);
+        let e = g.exp(sh);
+        let s = g.reduce_sum_keep(e, 1);
+        let p = g.div(e, s);
+        let got = run1(&g, p, &[Feed::F32(&x)]);
+        let z: f32 = (1.0f32).exp() + (2.0f32).exp() + (3.0f32).exp();
+        let e1 = (1.0f32).exp() / z;
+        assert!((got.data[0] - e1).abs() < 1e-6);
+        let row1: f32 = got.data[3..].iter().sum();
+        assert!((row1 - 1.0).abs() < 1e-6);
+        for v in &got.data[3..] {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tanh_rsqrt_maximum_elementwise() {
+        let x = t(&[3], vec![0.25, 1.0, 4.0]);
+        let y = t(&[3], vec![1.0, -1.0, 5.0]);
+        let mut g = Graph::default();
+        let ix = g.input(&[3], DType::F32);
+        let iy = g.input(&[3], DType::F32);
+        let r = g.rsqrt(ix);
+        let th = g.tanh(iy);
+        let mx = g.maximum(ix, iy);
+        let plan = g.free_plan(&[r, th, mx]);
+        let out = g
+            .eval(&[Feed::F32(&x), Feed::F32(&y)], &[r, th, mx], &plan)
+            .unwrap();
+        let rt = out[0].to_f32_tensor();
+        assert!((rt.data[0] - 2.0).abs() < 1e-6);
+        assert!((rt.data[1] - 1.0).abs() < 1e-6);
+        assert!((rt.data[2] - 0.5).abs() < 1e-6);
+        let tt = out[1].to_f32_tensor();
+        assert!((tt.data[0] - (1.0f32).tanh()).abs() < 1e-6);
+        assert_eq!(out[2].to_f32_tensor().data, vec![1.0, 1.0, 5.0]);
+    }
+
+    #[test]
+    fn free_plan_never_frees_outputs_or_inputs() {
+        let mut g = Graph::default();
+        let a = g.input(&[2], DType::F32);
+        let b = g.add(a, a);
+        let c = g.mul(b, b);
+        let plan = g.free_plan(&[c, b]);
+        // b is an output — must never appear in any free list
+        for l in &plan {
+            assert!(!l.contains(&b));
+            assert!(!l.contains(&a));
+        }
+        let x = t(&[2], vec![1., 2.]);
+        let out = g.eval(&[Feed::F32(&x)], &[c, b], &plan).unwrap();
+        assert_eq!(out[0].to_f32_tensor().data, vec![4., 16.]);
+        assert_eq!(out[1].to_f32_tensor().data, vec![2., 4.]);
+    }
+}

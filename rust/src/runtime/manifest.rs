@@ -66,6 +66,45 @@ mod tests {
     use crate::config::Paths;
     use crate::model::{aux_param_shapes, module_dims};
 
+    /// Golden-file parse: the exact JSON shape `aot.py:export` writes.
+    #[test]
+    fn loads_golden_manifest_file() {
+        let dir = std::env::temp_dir().join("ara_manifest_golden");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.manifest.json");
+        std::fs::write(
+            &path,
+            "{\n \"name\": \"toy\",\n \"inputs\": [\n  {\n   \"name\": \"w\",\n   \"shape\": [4, 2],\n   \"dtype\": \"f32\"\n  },\n  {\n   \"name\": \"tokens\",\n   \"shape\": [1, 8],\n   \"dtype\": \"i32\"\n  }\n ],\n \"outputs\": [\"loss\", \"grad:w\"]\n}",
+        )
+        .unwrap();
+        let man = Manifest::load(&path).unwrap();
+        assert_eq!(man.name, "toy");
+        assert_eq!(man.inputs.len(), 2);
+        assert_eq!(man.input("w").unwrap().shape, vec![4, 2]);
+        assert_eq!(man.input("tokens").unwrap().dtype, "i32");
+        assert!(man.input("nope").is_none());
+        assert_eq!(man.output_index("grad:w"), Some(1));
+        assert_eq!(man.output_index("nope"), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed_manifests() {
+        let dir = std::env::temp_dir().join("ara_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (fname, text) in [
+            ("no_inputs.json", r#"{"name": "x", "outputs": []}"#),
+            ("bad_shape.json", r#"{"name": "x", "inputs": [{"name": "a", "shape": [1.5], "dtype": "f32"}], "outputs": []}"#),
+            ("not_json.json", "not json at all"),
+        ] {
+            let p = dir.join(fname);
+            std::fs::write(&p, text).unwrap();
+            assert!(Manifest::load(&p).is_err(), "{fname} should fail");
+        }
+        assert!(Manifest::load(&dir.join("missing.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     /// Cross-check: the rust topology must match the python-exported
     /// manifest exactly (names AND shapes) — this is the contract test that
     /// catches any drift between model/topology.rs and compile/model.py.

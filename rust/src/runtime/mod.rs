@@ -1,67 +1,155 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
-//! executes them from the rust hot paths. Inputs are bound **by name**
-//! through the artifact manifest — never by guessed position.
+//! Pluggable execution runtime: loads artifacts by name and executes them
+//! on one of two [`Backend`]s, binding inputs **by name** through the
+//! artifact manifest — never by guessed position.
+//!
+//! * [`CpuBackend`] (default) — a pure-Rust interpreter that builds each
+//!   artifact's graph directly from the model preset (`runtime/programs.rs`,
+//!   mirroring `python/compile/model.py`) and executes it in-process
+//!   (`runtime/interp.rs`). No artifacts on disk, no native dependencies:
+//!   `cargo build && cargo test` work on a clean checkout.
+//! * `XlaBackend` (`--features pjrt`, `ARA_BACKEND=pjrt`) — compiles the
+//!   AOT HLO-text artifacts produced by `python/compile/aot.py` on the
+//!   PJRT CPU client and executes them through `execute`/`execute_b`.
+//!
+//! Both backends serve the same [`Manifest`] name/shape/dtype contract, so
+//! every harness above this layer (training, allocation, eval, serving) is
+//! backend-agnostic. See DESIGN.md for the backend matrix.
 
+mod cpu;
 mod exec;
+mod grad;
+mod interp;
 mod manifest;
+mod programs;
+#[cfg(feature = "pjrt")]
+mod xla;
 
-pub use exec::{
-    buffer_to_tensor, feed_to_buffer, literal_to_tensor, split_output_buffers, Exe, Feed, Outputs,
-};
+pub use cpu::CpuBackend;
+pub use exec::{DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
 pub use manifest::{Manifest, TensorSpec};
+pub use programs::{heuristic_ara_alloc, resolve_alloc};
+#[cfg(feature = "pjrt")]
+pub use xla::XlaBackend;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
+use crate::tensor::Tensor;
 use crate::Result;
 
-/// A PJRT client plus a cache of compiled executables for one model's
-/// artifact directory.
+/// An execution backend: owns loading/compiling artifacts and moving data
+/// on/off its device.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Load (and compile) artifact `name` from `dir`.
+    fn load(&self, dir: &Path, name: &str) -> Result<Exe>;
+
+    /// Is the artifact available (without loading it)?
+    fn has(&self, dir: &Path, name: &str) -> bool;
+
+    /// Upload a host feed to a device-resident buffer.
+    fn upload(&self, feed: &Feed) -> Result<DeviceBuffer>;
+
+    /// Download a device-resident buffer to a host tensor.
+    fn download(&self, buf: &DeviceBuffer) -> Result<Tensor>;
+}
+
+/// A backend plus a cache of loaded executables for one model's artifact
+/// directory.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
+    backend: Rc<dyn Backend>,
     dir: PathBuf,
     cache: RefCell<HashMap<String, Rc<Exe>>>,
 }
 
 impl Runtime {
-    /// CPU client over `artifacts/<model>/`.
+    /// Runtime over `artifacts/<model>/`, selecting the backend from
+    /// `ARA_BACKEND` (`cpu` default; `pjrt`/`xla` with the pjrt feature).
     pub fn new(artifact_dir: PathBuf) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| crate::anyhow!("{e}"))?;
-        if !artifact_dir.exists() {
-            return Err(crate::anyhow!(
-                "artifact dir {artifact_dir:?} missing — run `make artifacts`"
-            ));
+        let choice = std::env::var("ARA_BACKEND").unwrap_or_else(|_| "cpu".to_string());
+        if choice == "cpu" {
+            return Ok(Runtime::with_backend(Rc::new(CpuBackend::new()?), artifact_dir));
         }
-        Ok(Runtime { client, dir: artifact_dir, cache: RefCell::new(HashMap::new()) })
+        if choice == "pjrt" || choice == "xla" {
+            #[cfg(feature = "pjrt")]
+            {
+                let be = XlaBackend::new(&artifact_dir)?;
+                return Ok(Runtime::with_backend(Rc::new(be), artifact_dir));
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                return Err(crate::anyhow!(
+                    "ARA_BACKEND={choice} requires building with `--features pjrt`"
+                ));
+            }
+        }
+        Err(crate::anyhow!("unknown ARA_BACKEND `{choice}` (expected `cpu` or `pjrt`)"))
     }
 
-    /// Load + compile an artifact by name (cached).
+    /// Runtime over an explicit backend (tests, embedders).
+    pub fn with_backend(backend: Rc<dyn Backend>, dir: PathBuf) -> Runtime {
+        Runtime { backend, dir, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// The active backend handle (shared with serving engines).
+    pub fn backend(&self) -> Rc<dyn Backend> {
+        self.backend.clone()
+    }
+
+    /// Load an artifact by name (cached per runtime).
     pub fn load(&self, name: &str) -> Result<Rc<Exe>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
-        let hlo = self.dir.join(format!("{name}.hlo.txt"));
-        let man = self.dir.join(format!("{name}.manifest.json"));
-        let manifest = Manifest::load(&man)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo.to_str().ok_or_else(|| crate::anyhow!("bad path"))?,
-        )
-        .map_err(|e| crate::anyhow!("parse {hlo:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| crate::anyhow!("compile {name}: {e}"))?;
-        let e = Rc::new(Exe { exe, manifest });
+        let e = Rc::new(self.backend.load(&self.dir, name)?);
         self.cache.borrow_mut().insert(name.to_string(), e.clone());
         Ok(e)
     }
 
     /// Does an artifact exist (without compiling it)?
     pub fn has(&self, name: &str) -> bool {
-        self.dir.join(format!("{name}.hlo.txt")).exists()
+        self.cache.borrow().contains_key(name) || self.backend.has(&self.dir, name)
+    }
+
+    /// Upload a host feed through the active backend.
+    pub fn upload(&self, feed: &Feed) -> Result<DeviceBuffer> {
+        self.backend.upload(feed)
+    }
+
+    /// Download a device buffer through the active backend.
+    pub fn download(&self, buf: &DeviceBuffer) -> Result<Tensor> {
+        self.backend.download(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Paths;
+
+    #[test]
+    fn default_backend_is_cpu_and_needs_no_artifacts() {
+        let paths = Paths::discover().unwrap();
+        // a directory that definitely has no exported artifacts
+        let rt = Runtime::new(paths.artifact_dir("micro-llama")).unwrap();
+        assert_eq!(rt.backend().name(), "cpu");
+        assert!(rt.has("train_step"));
+        assert!(rt.has("score_masked"));
+        assert!(!rt.has("not_an_artifact"));
+        let exe = rt.load("score_dense").unwrap();
+        assert_eq!(exe.manifest().name, "score_dense");
+        // cache returns the same handle
+        let exe2 = rt.load("score_dense").unwrap();
+        assert!(Rc::ptr_eq(&exe, &exe2));
+    }
+
+    #[test]
+    fn unknown_model_dir_fails_at_load() {
+        let paths = Paths::discover().unwrap();
+        let rt = Runtime::new(paths.artifact_dir("no-such-model")).unwrap();
+        assert!(rt.load("train_step").is_err());
     }
 }

@@ -1,0 +1,1006 @@
+//! Artifact programs for the CPU backend: builds, per artifact name, the
+//! same computation graph `python/compile/model.py` lowers to HLO — same
+//! manifest input order, same names, same shapes, same math — expressed in
+//! the interpreter IR with gradients from [`append_gradients`].
+//!
+//! Covered artifacts (see python/compile/aot.py):
+//!   train_step, calibrate, score_dense, score_masked, mask_fwd_grad,
+//!   lora_step, prefill_<alloc>_b<B>, decode_<alloc>_b<B>
+//!
+//! Serving allocations resolve exactly like `aot.py:resolve_alloc`:
+//! configs/allocations/<model>.<alloc>.json, then artifacts/allocations/,
+//! then computed (dense / uniform-R / paper-shaped ara-R heuristic) with the
+//! resolved JSON dumped to artifacts/allocations/ for inspection.
+
+use std::collections::HashMap;
+
+use super::grad::append_gradients;
+use super::interp::{DType, Graph, Id};
+use super::manifest::{Manifest, TensorSpec};
+use crate::config::{ModelCfg, Paths};
+use crate::model::{aux_param_shapes, module_dims, Allocation, ModuleAlloc, ModuleDim};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// A compiled-for-the-interpreter artifact.
+pub struct Program {
+    pub graph: Graph,
+    pub manifest: Manifest,
+    pub outputs: Vec<Id>,
+    pub plan: Vec<Vec<Id>>,
+}
+
+/// Build the program for an artifact name.
+pub fn build(cfg: &ModelCfg, paths: &Paths, name: &str) -> Result<Program> {
+    match name {
+        "train_step" => Ok(train_step(cfg)),
+        "calibrate" => Ok(calibrate(cfg)),
+        "score_dense" => Ok(score(cfg, false)),
+        "score_masked" => Ok(score(cfg, true)),
+        "mask_fwd_grad" => Ok(mask_fwd_grad(cfg)),
+        "lora_step" => Ok(lora_step(cfg)),
+        _ => {
+            if let Some(rest) = name.strip_prefix("prefill_") {
+                let (alloc_name, batch) = parse_serving(rest, name)?;
+                let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
+                Ok(prefill(cfg, &alloc, batch, name))
+            } else if let Some(rest) = name.strip_prefix("decode_") {
+                let (alloc_name, batch) = parse_serving(rest, name)?;
+                let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
+                Ok(decode(cfg, &alloc, batch, name))
+            } else {
+                Err(crate::anyhow!("unknown artifact `{name}` (cpu backend)"))
+            }
+        }
+    }
+}
+
+/// Cheap name check: would [`build`] recognize this artifact name?
+/// (Does not validate that a named allocation actually resolves.)
+pub(crate) fn is_known_artifact(name: &str) -> bool {
+    matches!(
+        name,
+        "train_step" | "calibrate" | "score_dense" | "score_masked" | "mask_fwd_grad" | "lora_step"
+    ) || name
+        .strip_prefix("prefill_")
+        .or_else(|| name.strip_prefix("decode_"))
+        .is_some_and(|rest| parse_serving(rest, name).is_ok())
+}
+
+/// Split `"<alloc>_b<B>"` into (alloc, B).
+fn parse_serving(rest: &str, full: &str) -> Result<(String, usize)> {
+    let pos = rest
+        .rfind("_b")
+        .ok_or_else(|| crate::anyhow!("bad serving artifact name `{full}`"))?;
+    let alloc = rest[..pos].to_string();
+    let batch: usize = rest[pos + 2..]
+        .parse()
+        .map_err(|_| crate::anyhow!("bad batch in artifact name `{full}`"))?;
+    if alloc.is_empty() || batch == 0 {
+        return Err(crate::anyhow!("bad serving artifact name `{full}`"));
+    }
+    Ok((alloc, batch))
+}
+
+/// Resolve a serving allocation by name (mirrors aot.py:resolve_alloc).
+pub fn resolve_alloc(cfg: &ModelCfg, paths: &Paths, alloc_name: &str) -> Result<Allocation> {
+    let cfg_path = paths
+        .configs
+        .join("allocations")
+        .join(format!("{}.{}.json", cfg.name, alloc_name));
+    if cfg_path.exists() {
+        return Allocation::load(&cfg_path);
+    }
+    let art_path = paths
+        .artifacts
+        .join("allocations")
+        .join(format!("{}.{}.json", cfg.name, alloc_name));
+    if art_path.exists() {
+        return Allocation::load(&art_path);
+    }
+    let alloc = if alloc_name == "dense" {
+        let mut a = Allocation::new("dense");
+        for d in module_dims(cfg) {
+            a.set(&d.name, ModuleAlloc::Dense);
+        }
+        a
+    } else if let Some(pct) = alloc_name.strip_prefix("uniform-") {
+        let ratio: f64 = pct
+            .parse::<f64>()
+            .map_err(|_| crate::anyhow!("bad allocation name `{alloc_name}`"))?
+            / 100.0;
+        crate::baselines::uniform_alloc(cfg, ratio)
+    } else if let Some(pct) = alloc_name.strip_prefix("ara-") {
+        let ratio: f64 = pct
+            .parse::<f64>()
+            .map_err(|_| crate::anyhow!("bad allocation name `{alloc_name}`"))?
+            / 100.0;
+        heuristic_ara_alloc(cfg, ratio)
+    } else {
+        return Err(crate::anyhow!(
+            "allocation `{alloc_name}` for {} not found (looked in {:?} and {:?})",
+            cfg.name,
+            cfg_path,
+            art_path
+        ));
+    };
+    // dump the resolved allocation for inspection / reuse (best effort)
+    if alloc.save(&art_path).is_err() {
+        eprintln!("[programs] could not write {art_path:?} (read-only checkout?)");
+    }
+    Ok(alloc)
+}
+
+/// Paper-shaped fallback (Fig. 4 structure): keep v/down dense where the
+/// budget allows, compress q/k hardest — port of aot.py:heuristic_ara_alloc.
+pub fn heuristic_ara_alloc(cfg: &ModelCfg, ratio: f64) -> Allocation {
+    let dims = module_dims(cfg);
+    let total: f64 = dims.iter().map(|d| d.dense_params() as f64).sum();
+    let budget = ratio * total;
+    let weight = |name: &str| -> f64 {
+        match name.rsplit('.').next().unwrap_or("") {
+            "wq" | "wk" => 0.45,
+            "wv" | "wdown" => 1.0,
+            "wo" | "wup" => 0.9,
+            "wgate" => 1.1,
+            _ => 1.0,
+        }
+    };
+
+    let mut dense_set: Vec<String> = Vec::new();
+    let prefer: Vec<&ModuleDim> = dims
+        .iter()
+        .filter(|d| d.name.ends_with(".wv") || d.name.ends_with(".wdown"))
+        .collect();
+    for cand in prefer {
+        let used: f64 = dims
+            .iter()
+            .filter(|d| dense_set.contains(&d.name))
+            .map(|d| d.dense_params() as f64)
+            .sum();
+        let min_rest: f64 = dims
+            .iter()
+            .filter(|d| !dense_set.contains(&d.name) && d.name != cand.name)
+            .map(|d| (d.m + d.n) as f64)
+            .sum();
+        if used + cand.dense_params() as f64 + min_rest <= budget {
+            dense_set.push(cand.name.clone());
+        }
+    }
+
+    let used: f64 = dims
+        .iter()
+        .filter(|d| dense_set.contains(&d.name))
+        .map(|d| d.dense_params() as f64)
+        .sum();
+    let wsum: f64 = dims
+        .iter()
+        .filter(|d| !dense_set.contains(&d.name))
+        .map(|d| weight(&d.name) * d.dense_params() as f64)
+        .sum::<f64>()
+        .max(1.0);
+
+    let mut alloc = Allocation::new(format!("ara-{}", (ratio * 100.0).round() as usize));
+    for d in &dims {
+        if dense_set.contains(&d.name) {
+            alloc.set(&d.name, ModuleAlloc::Dense);
+            continue;
+        }
+        let share = (budget - used) * weight(&d.name) * d.dense_params() as f64 / wsum;
+        let k = ((share / (d.m + d.n) as f64) as usize).clamp(1, d.r_full());
+        alloc.set(&d.name, ModuleAlloc::Rank(k));
+    }
+    alloc
+}
+
+// ---------------------------------------------------------------------------
+// Graph construction
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum LinearMode {
+    /// Dense weights; `y = x·Wᵀ`.
+    Dense,
+    /// Dense weights, capturing per-module input Grams `H = xᵀx`.
+    Calibrate,
+    /// Masked full-rank factors (`.u`/`.v` + `mask:`), optional LoRA path.
+    Factored { lora: bool },
+    /// Allocation-specialized truncated factors or dense (serving graphs).
+    Alloc,
+}
+
+/// Shared graph-building state for one artifact.
+struct Net<'a> {
+    cfg: &'a ModelCfg,
+    g: Graph,
+    specs: Vec<TensorSpec>,
+    params: HashMap<String, Id>,
+    caps: HashMap<String, Id>,
+    gram_memo: HashMap<Id, Id>,
+    mode: LinearMode,
+}
+
+impl<'a> Net<'a> {
+    fn new(cfg: &'a ModelCfg, mode: LinearMode) -> Net<'a> {
+        Net {
+            cfg,
+            g: Graph::default(),
+            specs: Vec::new(),
+            params: HashMap::new(),
+            caps: HashMap::new(),
+            gram_memo: HashMap::new(),
+            mode,
+        }
+    }
+
+    fn input_f32(&mut self, name: &str, shape: &[usize]) -> Id {
+        let id = self.g.input(shape, DType::F32);
+        self.specs.push(TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "f32".to_string(),
+        });
+        self.params.insert(name.to_string(), id);
+        id
+    }
+
+    fn input_i32(&mut self, name: &str, shape: &[usize]) -> Id {
+        let id = self.g.input(shape, DType::I32);
+        self.specs.push(TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "i32".to_string(),
+        });
+        self.params.insert(name.to_string(), id);
+        id
+    }
+
+    fn p(&self, name: &str) -> Id {
+        *self
+            .params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param `{name}` in graph builder"))
+    }
+
+    fn add_aux_inputs(&mut self) {
+        for (name, shape) in aux_param_shapes(self.cfg) {
+            self.input_f32(&name, &shape);
+        }
+    }
+
+    fn add_dense_module_inputs(&mut self) {
+        for d in module_dims(self.cfg) {
+            self.input_f32(&d.name, &[d.m, d.n]);
+        }
+    }
+
+    fn add_factored_module_inputs(&mut self) {
+        for d in module_dims(self.cfg) {
+            let r = d.r_full();
+            self.input_f32(&format!("{}.u", d.name), &[d.m, r]);
+            self.input_f32(&format!("{}.v", d.name), &[r, d.n]);
+        }
+        for d in module_dims(self.cfg) {
+            self.input_f32(&format!("mask:{}", d.name), &[d.r_full()]);
+        }
+    }
+
+    fn add_alloc_module_inputs(&mut self, alloc: &Allocation) {
+        for d in module_dims(self.cfg) {
+            match alloc.get(&d.name) {
+                ModuleAlloc::Dense => {
+                    self.input_f32(&d.name, &[d.m, d.n]);
+                }
+                ModuleAlloc::Rank(k) => {
+                    self.input_f32(&format!("{}.u", d.name), &[d.m, k]);
+                    self.input_f32(&format!("{}.v", d.name), &[k, d.n]);
+                }
+            }
+        }
+    }
+
+    /// Apply compressible module `name` to `x` (rows, n) → (rows, m),
+    /// mirroring `model.py:_linear` under the current mode.
+    fn linear(&mut self, name: &str, x: Id) -> Id {
+        match self.mode {
+            LinearMode::Dense => {
+                let w = self.p(name);
+                self.g.matmul(x, w, false, true)
+            }
+            LinearMode::Calibrate => {
+                // wq/wk/wv (and wgate/wup) share the same activation; compute
+                // the Gram once per distinct input and alias later captures
+                // through stop_grad (a copy) so calibrate's output ids stay
+                // unique for the evaluator.
+                let memo = self.gram_memo.get(&x).copied();
+                let h = match memo {
+                    Some(g0) => self.g.stop_grad(g0),
+                    None => {
+                        let h = self.g.matmul(x, x, true, false);
+                        self.gram_memo.insert(x, h);
+                        h
+                    }
+                };
+                self.caps.insert(name.to_string(), h);
+                let w = self.p(name);
+                self.g.matmul(x, w, false, true)
+            }
+            LinearMode::Factored { lora } => {
+                let u = self.p(&format!("{name}.u"));
+                let v = self.p(&format!("{name}.v"));
+                let m = self.p(&format!("mask:{name}"));
+                let t = self.g.matmul(x, v, false, true);
+                let tm = self.g.mul(t, m);
+                let mut y = self.g.matmul(tm, u, false, true);
+                if lora {
+                    let a = self.p(&format!("lora_a:{name}"));
+                    let b = self.p(&format!("lora_b:{name}"));
+                    let xa = self.g.matmul(x, a, false, true);
+                    let xab = self.g.matmul(xa, b, false, true);
+                    y = self.g.add(y, xab);
+                }
+                y
+            }
+            LinearMode::Alloc => {
+                if self.params.contains_key(name) {
+                    let w = self.p(name);
+                    self.g.matmul(x, w, false, true)
+                } else {
+                    let u = self.p(&format!("{name}.u"));
+                    let v = self.p(&format!("{name}.v"));
+                    let t = self.g.matmul(x, v, false, true);
+                    self.g.matmul(t, u, false, true)
+                }
+            }
+        }
+    }
+
+    /// RMSNorm over the last dim of a 2-D activation (rows, d).
+    fn rmsnorm(&mut self, x: Id, gain: Id) -> Id {
+        let d = self.g.shape(x)[1];
+        let x2 = self.g.mul(x, x);
+        let ssum = self.g.reduce_sum_keep(x2, 1);
+        let inv_d = self.g.scalar(1.0 / d as f32);
+        let ms = self.g.mul(ssum, inv_d);
+        let eps = self.g.scalar(1e-6);
+        let mse = self.g.add(ms, eps);
+        let inv = self.g.rsqrt(mse);
+        let xn = self.g.mul(x, inv);
+        self.g.mul(xn, gain)
+    }
+
+    /// Rotary embeddings on (b, t, h, dh) with positions (pb, t) f32
+    /// (pb broadcasts against b).
+    fn rope(&mut self, x: Id, pos: Id) -> Id {
+        let dh = *self.g.shape(x).last().unwrap();
+        let half = dh / 2;
+        let theta = self.cfg.rope_theta;
+        let freqs: Vec<f32> = (0..half)
+            .map(|i| (1.0 / theta.powf(i as f64 * 2.0 / dh as f64)) as f32)
+            .collect();
+        let fq = self.g.constant(Tensor::from_vec(&[half], freqs));
+        let ps = self.g.shape(pos).to_vec();
+        let p3 = self.g.reshape(pos, &[ps[0], ps[1], 1]);
+        let ang = self.g.mul(p3, fq); // (pb, t, half)
+        let cos = self.g.cos(ang);
+        let sin = self.g.sin(ang);
+        let cos4 = self.g.reshape(cos, &[ps[0], ps[1], 1, half]);
+        let sin4 = self.g.reshape(sin, &[ps[0], ps[1], 1, half]);
+        let x1 = self.g.slice(x, 3, 0, half);
+        let x2 = self.g.slice(x, 3, half, half);
+        let a = self.g.mul(x1, cos4);
+        let b = self.g.mul(x2, sin4);
+        let lo = self.g.sub(a, b);
+        let c = self.g.mul(x1, sin4);
+        let d2 = self.g.mul(x2, cos4);
+        let hi = self.g.add(c, d2);
+        self.g.concat(&[lo, hi], 3)
+    }
+
+    /// GQA repeat (b, t, nkv, dh) → (b, t, nh, dh) via broadcast.
+    fn repeat_heads(&mut self, x: Id, rep: usize) -> Id {
+        if rep == 1 {
+            return x;
+        }
+        let s = self.g.shape(x).to_vec(); // (b, t, nkv, dh)
+        let r5 = self.g.reshape(x, &[s[0], s[1], s[2], 1, s[3]]);
+        let b5 = self.g.broadcast(r5, &[s[0], s[1], s[2], rep, s[3]]);
+        self.g.reshape(b5, &[s[0], s[1], s[2] * rep, s[3]])
+    }
+
+    /// Softmax over the last axis of a 3-D tensor (stop-grad shifted).
+    fn softmax3(&mut self, x: Id) -> Id {
+        let m = self.g.reduce_max_keep(x, 2);
+        let ms = self.g.stop_grad(m);
+        let sh = self.g.sub(x, ms);
+        let e = self.g.exp(sh);
+        let s = self.g.reduce_sum_keep(e, 2);
+        self.g.div(e, s)
+    }
+
+    /// Masked fill: x·m + (1-m)·(-1e30), for 0/1 mask `m`.
+    fn mask_fill(&mut self, x: Id, m: Id) -> Id {
+        let one = self.g.scalar(1.0);
+        let inv = self.g.sub(one, m);
+        let ninf = self.g.scalar(-1e30);
+        let fill = self.g.mul(inv, ninf);
+        let keep = self.g.mul(x, m);
+        self.g.add(keep, fill)
+    }
+
+    /// Causal attention over packed heads (bh, t, dh), ref.py semantics.
+    fn causal_attention(&mut self, qp: Id, kp: Id, vp: Id, scale: f32) -> Id {
+        let t = self.g.shape(qp)[1];
+        let raw = self.g.bmm(qp, kp, false, true); // (bh, t, t)
+        let sc = self.g.scalar(scale);
+        let scores = self.g.mul(raw, sc);
+        let mut tril = Tensor::zeros(&[1, t, t]);
+        for i in 0..t {
+            for j in 0..=i {
+                tril.data[i * t + j] = 1.0;
+            }
+        }
+        let mask = self.g.constant(tril);
+        let masked = self.mask_fill(scores, mask);
+        let p = self.softmax3(masked);
+        self.g.bmm(p, vp, false, false)
+    }
+
+    /// One transformer block over (b, t, d), mirroring `model.py:_block`.
+    fn block(&mut self, layer: usize, h: Id, pos: Id) -> Id {
+        let cfg = self.cfg;
+        let (b, t, d) = {
+            let s = self.g.shape(h);
+            (s[0], s[1], s[2])
+        };
+        let (nh, nkv, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let pfx = format!("layers.{layer}.");
+
+        let h2 = self.g.reshape(h, &[b * t, d]);
+        let ln1 = self.p(&format!("{pfx}ln1"));
+        let x2 = self.rmsnorm(h2, ln1);
+        let q0 = self.linear(&format!("{pfx}attn.wq"), x2);
+        let k0 = self.linear(&format!("{pfx}attn.wk"), x2);
+        let v0 = self.linear(&format!("{pfx}attn.wv"), x2);
+        let mut q = self.g.reshape(q0, &[b, t, nh, dh]);
+        let mut k = self.g.reshape(k0, &[b, t, nkv, dh]);
+        let v = self.g.reshape(v0, &[b, t, nkv, dh]);
+        if cfg.family == "qwen" {
+            let qn = self.p(&format!("{pfx}qnorm"));
+            let kn = self.p(&format!("{pfx}knorm"));
+            let qf = self.g.reshape(q, &[b * t * nh, dh]);
+            let qn2 = self.rmsnorm(qf, qn);
+            q = self.g.reshape(qn2, &[b, t, nh, dh]);
+            let kf = self.g.reshape(k, &[b * t * nkv, dh]);
+            let kn2 = self.rmsnorm(kf, kn);
+            k = self.g.reshape(kn2, &[b, t, nkv, dh]);
+        }
+        q = self.rope(q, pos);
+        k = self.rope(k, pos);
+        let rep = nh / nkv;
+        let kr = self.repeat_heads(k, rep);
+        let vr = self.repeat_heads(v, rep);
+        let qt = self.g.transpose(q, &[0, 2, 1, 3]);
+        let kt = self.g.transpose(kr, &[0, 2, 1, 3]);
+        let vt = self.g.transpose(vr, &[0, 2, 1, 3]);
+        let qp = self.g.reshape(qt, &[b * nh, t, dh]);
+        let kp = self.g.reshape(kt, &[b * nh, t, dh]);
+        let vp = self.g.reshape(vt, &[b * nh, t, dh]);
+        let o = self.causal_attention(qp, kp, vp, (dh as f32).powf(-0.5));
+        let o4 = self.g.reshape(o, &[b, nh, t, dh]);
+        let ot = self.g.transpose(o4, &[0, 2, 1, 3]);
+        let o2 = self.g.reshape(ot, &[b * t, d]);
+        let attn = self.linear(&format!("{pfx}attn.wo"), o2);
+        let attn3 = self.g.reshape(attn, &[b, t, d]);
+        let h = self.g.add(h, attn3);
+
+        let h2 = self.g.reshape(h, &[b * t, d]);
+        let ln2 = self.p(&format!("{pfx}ln2"));
+        let x2 = self.rmsnorm(h2, ln2);
+        let gt = self.linear(&format!("{pfx}mlp.wgate"), x2);
+        let up = self.linear(&format!("{pfx}mlp.wup"), x2);
+        let sg = self.g.sigmoid(gt);
+        let silu = self.g.mul(gt, sg);
+        let y = self.g.mul(silu, up);
+        let down = self.linear(&format!("{pfx}mlp.wdown"), y);
+        let down3 = self.g.reshape(down, &[b, t, d]);
+        self.g.add(h, down3)
+    }
+
+    /// Full forward: tokens (b, t) i32 → logits (b, t, vocab).
+    fn forward(&mut self, tokens: Id) -> Id {
+        let cfg = self.cfg;
+        let (b, t) = {
+            let s = self.g.shape(tokens);
+            (s[0], s[1])
+        };
+        let d = cfg.d_model;
+        let embed = self.p("embed");
+        let mut h = self.g.gather(embed, tokens); // (b, t, d)
+        let it = self.g.iota(t);
+        let pos = self.g.reshape(it, &[1, t]); // broadcasts over b
+        for layer in 0..cfg.n_layers {
+            h = self.block(layer, h, pos);
+        }
+        let h2 = self.g.reshape(h, &[b * t, d]);
+        let nf = self.p("norm_f");
+        let hf = self.rmsnorm(h2, nf);
+        let head = self.p("head");
+        let logits2 = self.g.matmul(hf, head, false, true);
+        self.g.reshape(logits2, &[b, t, cfg.vocab])
+    }
+
+    /// Per-position NLL (b, t) from logits and targets.
+    fn nll(&mut self, logits: Id, targets: Id) -> Id {
+        let s = self.g.shape(logits).to_vec(); // (b, t, v)
+        let m = self.g.reduce_max_keep(logits, 2);
+        let ms = self.g.stop_grad(m);
+        let sh = self.g.sub(logits, ms);
+        let e = self.g.exp(sh);
+        let se = self.g.reduce_sum(e, 2); // (b, t)
+        let lg = self.g.log(se);
+        let m2 = self.g.reshape(ms, &[s[0], s[1]]);
+        let lse = self.g.add(lg, m2);
+        let picked = self.g.take_last(logits, targets);
+        self.g.sub(lse, picked)
+    }
+
+    /// Mean of a (b, t) tensor → scalar.
+    fn mean2(&mut self, x: Id) -> Id {
+        let s = self.g.shape(x).to_vec();
+        let n: usize = s.iter().product();
+        let flat = self.g.reshape(x, &[n]);
+        let sum = self.g.reduce_sum(flat, 0);
+        let inv = self.g.scalar(1.0 / n as f32);
+        self.g.mul(sum, inv)
+    }
+
+    fn finish(self, name: &str, outputs: Vec<Id>, out_names: Vec<String>) -> Program {
+        debug_assert_eq!(outputs.len(), out_names.len());
+        let manifest = Manifest {
+            name: name.to_string(),
+            inputs: self.specs,
+            outputs: out_names,
+        };
+        let plan = self.g.free_plan(&outputs);
+        Program { graph: self.g, manifest, outputs, plan }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-sequence artifacts
+// ---------------------------------------------------------------------------
+
+fn train_step(cfg: &ModelCfg) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Dense);
+    net.add_aux_inputs();
+    net.add_dense_module_inputs();
+    let weight_ids: Vec<Id> = net.specs.iter().map(|s| net.p(&s.name)).collect();
+    let weight_names: Vec<String> = net.specs.iter().map(|s| s.name.clone()).collect();
+    let tokens = net.input_i32("tokens", &[cfg.batch_train, cfg.seq_train]);
+    let targets = net.input_i32("targets", &[cfg.batch_train, cfg.seq_train]);
+    let logits = net.forward(tokens);
+    let nll = net.nll(logits, targets);
+    let loss = net.mean2(nll);
+    let grads = append_gradients(&mut net.g, loss, &weight_ids);
+    let mut outputs = vec![loss];
+    outputs.extend(grads);
+    let mut names = vec!["loss".to_string()];
+    names.extend(weight_names.iter().map(|n| format!("grad:{n}")));
+    net.finish("train_step", outputs, names)
+}
+
+fn calibrate(cfg: &ModelCfg) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Calibrate);
+    net.add_aux_inputs();
+    net.add_dense_module_inputs();
+    let tokens = net.input_i32("tokens", &[cfg.batch_eval, cfg.seq_eval]);
+    let logits = net.forward(tokens);
+    let anchor = net.mean2(logits);
+    let mut outputs = Vec::new();
+    let mut names = Vec::new();
+    for d in module_dims(cfg) {
+        outputs.push(net.caps[&d.name]);
+        names.push(format!("h:{}", d.name));
+    }
+    outputs.push(anchor);
+    names.push("anchor".to_string());
+    net.finish("calibrate", outputs, names)
+}
+
+fn score(cfg: &ModelCfg, masked: bool) -> Program {
+    let mode = if masked { LinearMode::Factored { lora: false } } else { LinearMode::Dense };
+    let mut net = Net::new(cfg, mode);
+    net.add_aux_inputs();
+    if masked {
+        net.add_factored_module_inputs();
+    } else {
+        net.add_dense_module_inputs();
+    }
+    let tokens = net.input_i32("tokens", &[cfg.batch_eval, cfg.seq_eval]);
+    let targets = net.input_i32("targets", &[cfg.batch_eval, cfg.seq_eval]);
+    let logits = net.forward(tokens);
+    let nll = net.nll(logits, targets);
+    let name = if masked { "score_masked" } else { "score_dense" };
+    net.finish(name, vec![nll], vec!["nll".to_string()])
+}
+
+fn mask_fwd_grad(cfg: &ModelCfg) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Factored { lora: false });
+    net.add_aux_inputs();
+    net.add_factored_module_inputs();
+    let tokens = net.input_i32("tokens", &[cfg.batch_eval, cfg.seq_eval]);
+    let targets = net.input_i32("targets", &[cfg.batch_eval, cfg.seq_eval]);
+    let mask_ids: Vec<Id> = module_dims(cfg)
+        .iter()
+        .map(|d| net.p(&format!("mask:{}", d.name)))
+        .collect();
+    let logits = net.forward(tokens);
+    let nll = net.nll(logits, targets);
+    let loss = net.mean2(nll);
+    let grads = append_gradients(&mut net.g, loss, &mask_ids);
+    let mut outputs = vec![loss];
+    outputs.extend(grads);
+    let mut names = vec!["loss".to_string()];
+    names.extend(module_dims(cfg).iter().map(|d| format!("grad:mask:{}", d.name)));
+    net.finish("mask_fwd_grad", outputs, names)
+}
+
+fn lora_step(cfg: &ModelCfg) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Factored { lora: true });
+    net.add_aux_inputs();
+    net.add_factored_module_inputs();
+    let lr = cfg.lora_rank;
+    let mut lora_ids = Vec::new();
+    let mut lora_names = Vec::new();
+    for d in module_dims(cfg) {
+        let a = net.input_f32(&format!("lora_a:{}", d.name), &[lr, d.n]);
+        let b = net.input_f32(&format!("lora_b:{}", d.name), &[d.m, lr]);
+        lora_ids.push(a);
+        lora_ids.push(b);
+        lora_names.push(format!("lora_a:{}", d.name));
+        lora_names.push(format!("lora_b:{}", d.name));
+    }
+    let tokens = net.input_i32("tokens", &[cfg.batch_train, cfg.seq_train]);
+    let targets = net.input_i32("targets", &[cfg.batch_train, cfg.seq_train]);
+    let logits = net.forward(tokens);
+    let nll = net.nll(logits, targets);
+    let loss = net.mean2(nll);
+    let grads = append_gradients(&mut net.g, loss, &lora_ids);
+    let mut outputs = vec![loss];
+    outputs.extend(grads);
+    let mut names = vec!["loss".to_string()];
+    names.extend(lora_names.iter().map(|n| format!("grad:{n}")));
+    net.finish("lora_step", outputs, names)
+}
+
+// ---------------------------------------------------------------------------
+// Serving artifacts (allocation-specialized, KV-cached)
+// ---------------------------------------------------------------------------
+
+fn cache_names(cfg: &ModelCfg) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..cfg.n_layers {
+        out.push(format!("kcache.{i}"));
+        out.push(format!("vcache.{i}"));
+    }
+    out
+}
+
+fn prefill(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Alloc);
+    net.add_aux_inputs();
+    net.add_alloc_module_inputs(alloc);
+    let (b, t) = (batch, cfg.prefill_len);
+    let (d, nh, nkv, dh) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+    let s_max = cfg.max_decode_seq;
+    let tokens = net.input_i32("tokens", &[b, t]);
+
+    let embed = net.p("embed");
+    let mut h = net.g.gather(embed, tokens); // (b, t, d)
+    let it = net.g.iota(t);
+    let pos = net.g.reshape(it, &[1, t]);
+    let mut caches = Vec::new();
+    for layer in 0..cfg.n_layers {
+        let pfx = format!("layers.{layer}.");
+        let h2 = net.g.reshape(h, &[b * t, d]);
+        let ln1 = net.p(&format!("{pfx}ln1"));
+        let x2 = net.rmsnorm(h2, ln1);
+        let q0 = net.linear(&format!("{pfx}attn.wq"), x2);
+        let k0 = net.linear(&format!("{pfx}attn.wk"), x2);
+        let v0 = net.linear(&format!("{pfx}attn.wv"), x2);
+        let mut q = net.g.reshape(q0, &[b, t, nh, dh]);
+        let mut k = net.g.reshape(k0, &[b, t, nkv, dh]);
+        let v = net.g.reshape(v0, &[b, t, nkv, dh]);
+        if cfg.family == "qwen" {
+            let qn = net.p(&format!("{pfx}qnorm"));
+            let kn = net.p(&format!("{pfx}knorm"));
+            let qf = net.g.reshape(q, &[b * t * nh, dh]);
+            let qn2 = net.rmsnorm(qf, qn);
+            q = net.g.reshape(qn2, &[b, t, nh, dh]);
+            let kf = net.g.reshape(k, &[b * t * nkv, dh]);
+            let kn2 = net.rmsnorm(kf, kn);
+            k = net.g.reshape(kn2, &[b, t, nkv, dh]);
+        }
+        q = net.rope(q, pos);
+        k = net.rope(k, pos);
+        let rep = nh / nkv;
+        let kr = net.repeat_heads(k, rep);
+        let vr = net.repeat_heads(v, rep);
+        let qt = net.g.transpose(q, &[0, 2, 1, 3]);
+        let kt = net.g.transpose(kr, &[0, 2, 1, 3]);
+        let vt = net.g.transpose(vr, &[0, 2, 1, 3]);
+        let qp = net.g.reshape(qt, &[b * nh, t, dh]);
+        let kp = net.g.reshape(kt, &[b * nh, t, dh]);
+        let vp = net.g.reshape(vt, &[b * nh, t, dh]);
+        let o = net.causal_attention(qp, kp, vp, (dh as f32).powf(-0.5));
+        let o4 = net.g.reshape(o, &[b, nh, t, dh]);
+        let ot = net.g.transpose(o4, &[0, 2, 1, 3]);
+        let o2 = net.g.reshape(ot, &[b * t, d]);
+        let attn = net.linear(&format!("{pfx}attn.wo"), o2);
+        let attn3 = net.g.reshape(attn, &[b, t, d]);
+        h = net.g.add(h, attn3);
+
+        let h2 = net.g.reshape(h, &[b * t, d]);
+        let ln2 = net.p(&format!("{pfx}ln2"));
+        let x2 = net.rmsnorm(h2, ln2);
+        let gt = net.linear(&format!("{pfx}mlp.wgate"), x2);
+        let up = net.linear(&format!("{pfx}mlp.wup"), x2);
+        let sg = net.g.sigmoid(gt);
+        let silu = net.g.mul(gt, sg);
+        let y = net.g.mul(silu, up);
+        let down = net.linear(&format!("{pfx}mlp.wdown"), y);
+        let down3 = net.g.reshape(down, &[b, t, d]);
+        h = net.g.add(h, down3);
+
+        // cache k/v (post-rope, pre-repeat): (b,t,nkv,dh) → (b,nkv,S,dh)
+        let kc0 = net.g.transpose(k, &[0, 2, 1, 3]);
+        let kc = net.g.pad_zero(kc0, 2, 0, s_max);
+        let vc0 = net.g.transpose(v, &[0, 2, 1, 3]);
+        let vc = net.g.pad_zero(vc0, 2, 0, s_max);
+        caches.push(kc);
+        caches.push(vc);
+    }
+    let hl = net.g.slice(h, 1, t - 1, 1); // (b, 1, d)
+    let h2 = net.g.reshape(hl, &[b, d]);
+    let nf = net.p("norm_f");
+    let hf = net.rmsnorm(h2, nf);
+    let head = net.p("head");
+    let logits = net.g.matmul(hf, head, false, true); // (b, vocab)
+
+    let mut outputs = vec![logits];
+    outputs.extend(caches);
+    let mut names = vec!["logits".to_string()];
+    names.extend(cache_names(cfg));
+    net.finish(name, outputs, names)
+}
+
+fn decode(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Alloc);
+    net.add_aux_inputs();
+    net.add_alloc_module_inputs(alloc);
+    let b = batch;
+    let (d, nh, nkv, dh) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+    let s_max = cfg.max_decode_seq;
+    let mut cache_in = Vec::new();
+    for i in 0..cfg.n_layers {
+        let kc = net.input_f32(&format!("kcache.{i}"), &[b, nkv, s_max, dh]);
+        let vc = net.input_f32(&format!("vcache.{i}"), &[b, nkv, s_max, dh]);
+        cache_in.push((kc, vc));
+    }
+    let tokens = net.input_i32("tokens", &[b]);
+    let lens = net.input_i32("lens", &[b]);
+
+    let embed = net.p("embed");
+    let mut h = net.g.gather(embed, tokens); // (b, d)
+    let lens_f = net.g.cast_f32(lens); // (b,)
+    let pos = net.g.reshape(lens_f, &[b, 1]);
+    let mut caches_out = Vec::new();
+    for layer in 0..cfg.n_layers {
+        let pfx = format!("layers.{layer}.");
+        let ln1 = net.p(&format!("{pfx}ln1"));
+        let x = net.rmsnorm(h, ln1); // (b, d)
+        let q0 = net.linear(&format!("{pfx}attn.wq"), x);
+        let k0 = net.linear(&format!("{pfx}attn.wk"), x);
+        let v0 = net.linear(&format!("{pfx}attn.wv"), x);
+        let mut q = net.g.reshape(q0, &[b, nh, dh]);
+        let mut k = net.g.reshape(k0, &[b, nkv, dh]);
+        let v = net.g.reshape(v0, &[b, nkv, dh]);
+        if cfg.family == "qwen" {
+            let qn = net.p(&format!("{pfx}qnorm"));
+            let kn = net.p(&format!("{pfx}knorm"));
+            let qf = net.g.reshape(q, &[b * nh, dh]);
+            let qn2 = net.rmsnorm(qf, qn);
+            q = net.g.reshape(qn2, &[b, nh, dh]);
+            let kf = net.g.reshape(k, &[b * nkv, dh]);
+            let kn2 = net.rmsnorm(kf, kn);
+            k = net.g.reshape(kn2, &[b, nkv, dh]);
+        }
+        // rope on a singleton time axis at per-sequence position `lens`
+        let q4 = net.g.reshape(q, &[b, 1, nh, dh]);
+        let q4r = net.rope(q4, pos);
+        q = net.g.reshape(q4r, &[b, nh, dh]);
+        let k4 = net.g.reshape(k, &[b, 1, nkv, dh]);
+        let k4r = net.rope(k4, pos);
+        k = net.g.reshape(k4r, &[b, nkv, dh]);
+
+        let (kc_in, vc_in) = cache_in[layer];
+        let kc = net.g.update_at(kc_in, k, lens);
+        let vc = net.g.update_at(vc_in, v, lens);
+        caches_out.push(kc);
+        caches_out.push(vc);
+
+        // attend over cached positions ≤ lens
+        let rep = nh / nkv;
+        let (kr, vr) = if rep == 1 {
+            (kc, vc)
+        } else {
+            let k5 = net.g.reshape(kc, &[b, nkv, 1, s_max, dh]);
+            let kb = net.g.broadcast(k5, &[b, nkv, rep, s_max, dh]);
+            let kr = net.g.reshape(kb, &[b, nh, s_max, dh]);
+            let v5 = net.g.reshape(vc, &[b, nkv, 1, s_max, dh]);
+            let vb = net.g.broadcast(v5, &[b, nkv, rep, s_max, dh]);
+            let vr = net.g.reshape(vb, &[b, nh, s_max, dh]);
+            (kr, vr)
+        };
+        let q3 = net.g.reshape(q, &[b * nh, 1, dh]);
+        let kr3 = net.g.reshape(kr, &[b * nh, s_max, dh]);
+        let raw = net.g.bmm(q3, kr3, false, true); // (b·nh, 1, s)
+        let raw3 = net.g.reshape(raw, &[b, nh, s_max]);
+        let sc = net.g.scalar((dh as f32).powf(-0.5));
+        let scores = net.g.mul(raw3, sc);
+        let one = net.g.scalar(1.0);
+        let plus1 = net.g.add(lens_f, one); // (b,)
+        let pl3 = net.g.reshape(plus1, &[b, 1, 1]);
+        let ramp = net.g.iota(s_max);
+        let valid = net.g.less(ramp, pl3); // (b, 1, s)
+        let masked = net.mask_fill(scores, valid);
+        let p = net.softmax3(masked); // (b, nh, s)
+        let p3 = net.g.reshape(p, &[b * nh, 1, s_max]);
+        let vr3 = net.g.reshape(vr, &[b * nh, s_max, dh]);
+        let o = net.g.bmm(p3, vr3, false, false); // (b·nh, 1, dh)
+        let o2 = net.g.reshape(o, &[b, d]);
+        let attn = net.linear(&format!("{pfx}attn.wo"), o2);
+        h = net.g.add(h, attn);
+
+        let ln2 = net.p(&format!("{pfx}ln2"));
+        let x = net.rmsnorm(h, ln2);
+        let gt = net.linear(&format!("{pfx}mlp.wgate"), x);
+        let up = net.linear(&format!("{pfx}mlp.wup"), x);
+        let sg = net.g.sigmoid(gt);
+        let silu = net.g.mul(gt, sg);
+        let y = net.g.mul(silu, up);
+        let down = net.linear(&format!("{pfx}mlp.wdown"), y);
+        h = net.g.add(h, down);
+    }
+    let nf = net.p("norm_f");
+    let hf = net.rmsnorm(h, nf);
+    let head = net.p("head");
+    let logits = net.g.matmul(hf, head, false, true); // (b, vocab)
+
+    let mut outputs = vec![logits];
+    outputs.extend(caches_out);
+    let mut names = vec!["logits".to_string()];
+    names.extend(cache_names(cfg));
+    net.finish(name, outputs, names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_by_name, Paths};
+
+    fn cfg(name: &str) -> ModelCfg {
+        let paths = Paths::discover().unwrap();
+        model_by_name(&paths.configs, name).unwrap()
+    }
+
+    /// The contract test previously gated on exported AOT manifests: the
+    /// rust topology must match the built manifest exactly.
+    #[test]
+    fn train_step_manifest_matches_topology() {
+        for model in ["micro-llama", "miniqwen-s"] {
+            let c = cfg(model);
+            let p = train_step(&c);
+            for (name, shape) in aux_param_shapes(&c) {
+                let spec = p.manifest.input(&name).unwrap_or_else(|| panic!("missing {name}"));
+                assert_eq!(spec.shape, shape, "{name}");
+                assert_eq!(spec.dtype, "f32");
+            }
+            for d in module_dims(&c) {
+                let spec = p.manifest.input(&d.name).unwrap();
+                assert_eq!(spec.shape, vec![d.m, d.n], "{}", d.name);
+            }
+            let toks = p.manifest.input("tokens").unwrap();
+            assert_eq!(toks.dtype, "i32");
+            assert_eq!(toks.shape, vec![c.batch_train, c.seq_train]);
+            assert_eq!(p.manifest.outputs[0], "loss");
+            // one gradient per weight input
+            assert_eq!(
+                p.manifest.outputs.len(),
+                1 + aux_param_shapes(&c).len() + module_dims(&c).len()
+            );
+        }
+    }
+
+    #[test]
+    fn mask_fwd_grad_manifest_has_masks_and_grads() {
+        let c = cfg("micro-llama");
+        let p = mask_fwd_grad(&c);
+        for d in module_dims(&c) {
+            let u = p.manifest.input(&format!("{}.u", d.name)).unwrap();
+            assert_eq!(u.shape, vec![d.m, d.r_full()]);
+            let v = p.manifest.input(&format!("{}.v", d.name)).unwrap();
+            assert_eq!(v.shape, vec![d.r_full(), d.n]);
+            let m = p.manifest.input(&format!("mask:{}", d.name)).unwrap();
+            assert_eq!(m.shape, vec![d.r_full()]);
+            assert!(p
+                .manifest
+                .output_index(&format!("grad:mask:{}", d.name))
+                .is_some());
+        }
+    }
+
+    #[test]
+    fn serving_manifests_weights_prefix_then_caches() {
+        let c = cfg("micro-llama");
+        let paths = Paths::discover().unwrap();
+        let p = build(&c, &paths, "decode_uniform-80_b2").unwrap();
+        // the engine relies on weights being the manifest prefix
+        let first_cache = p
+            .manifest
+            .inputs
+            .iter()
+            .position(|s| s.name.starts_with("kcache"))
+            .unwrap();
+        for spec in &p.manifest.inputs[first_cache..p.manifest.inputs.len() - 2] {
+            assert!(
+                spec.name.starts_with("kcache") || spec.name.starts_with("vcache"),
+                "{}",
+                spec.name
+            );
+        }
+        let n = p.manifest.inputs.len();
+        assert_eq!(p.manifest.inputs[n - 2].name, "tokens");
+        assert_eq!(p.manifest.inputs[n - 1].name, "lens");
+        assert_eq!(p.manifest.outputs[0], "logits");
+        assert_eq!(p.manifest.outputs.len(), 1 + 2 * c.n_layers);
+
+        let pf = build(&c, &paths, "prefill_uniform-80_b2").unwrap();
+        assert_eq!(pf.manifest.inputs.last().unwrap().name, "tokens");
+        assert_eq!(
+            pf.manifest.input("tokens").unwrap().shape,
+            vec![2, c.prefill_len]
+        );
+    }
+
+    #[test]
+    fn heuristic_alloc_meets_budget_and_prefers_v_down() {
+        let c = cfg("minillama-s");
+        let dims = module_dims(&c);
+        for ratio in [0.8, 0.6] {
+            let a = heuristic_ara_alloc(&c, ratio);
+            let got = crate::model::alloc_ratio(&c, &a);
+            assert!(
+                got <= ratio + 0.05,
+                "heuristic overshoots: {got} vs target {ratio}"
+            );
+            for d in &dims {
+                if let ModuleAlloc::Rank(k) = a.get(&d.name) {
+                    assert!(k >= 1 && k <= d.r_full());
+                }
+            }
+        }
+        // at a generous budget some v/down modules stay dense
+        let a = heuristic_ara_alloc(&c, 0.8);
+        assert!(a.dense_count() > 0, "expected dense v/down under 0.8 budget");
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let c = cfg("micro-llama");
+        let paths = Paths::discover().unwrap();
+        assert!(build(&c, &paths, "nonexistent_graph").is_err());
+        assert!(build(&c, &paths, "decode_bogus").is_err());
+    }
+}

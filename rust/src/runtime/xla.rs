@@ -1,0 +1,259 @@
+//! The XLA/PJRT execution backend (`--features pjrt`): loads the AOT
+//! HLO-text artifacts produced by `python/compile/aot.py`, compiles them on
+//! the CPU PJRT client, and executes them with device-resident buffers on
+//! the serving hot path. This is the original runtime, now one [`Backend`]
+//! among two; the build links the `xla` facade crate unless the real
+//! bindings are patched in (see rust/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::exec::{check_feed, DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
+use super::manifest::Manifest;
+use super::Backend;
+use crate::tensor::Tensor;
+use crate::Result;
+
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+}
+
+impl XlaBackend {
+    pub fn new(dir: &Path) -> Result<XlaBackend> {
+        if !dir.exists() {
+            return Err(crate::anyhow!(
+                "artifact dir {dir:?} missing — run `make artifacts` (pjrt backend \
+                 executes exported HLO; the default cpu backend needs no artifacts)"
+            ));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::anyhow!("{e}"))?;
+        Ok(XlaBackend { client })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&self, dir: &Path, name: &str) -> Result<Exe> {
+        let hlo: PathBuf = dir.join(format!("{name}.hlo.txt"));
+        let man = dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().ok_or_else(|| crate::anyhow!("bad path"))?,
+        )
+        .map_err(|e| crate::anyhow!("parse {hlo:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| crate::anyhow!("compile {name}: {e}"))?;
+        Ok(Exe::new(Box::new(XlaExe { exe, manifest, client: self.client.clone() })))
+    }
+
+    fn has(&self, dir: &Path, name: &str) -> bool {
+        dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    fn upload(&self, feed: &Feed) -> Result<DeviceBuffer> {
+        feed_to_buffer(&self.client, feed).map(DeviceBuffer::Pjrt)
+    }
+
+    fn download(&self, buf: &DeviceBuffer) -> Result<Tensor> {
+        match buf {
+            DeviceBuffer::Pjrt(b) => buffer_to_tensor(b),
+            DeviceBuffer::Host(_) => {
+                Err(crate::anyhow!("pjrt backend cannot download a host buffer"))
+            }
+        }
+    }
+}
+
+/// One compiled artifact + its manifest on the PJRT client.
+pub struct XlaExe {
+    exe: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+}
+
+impl Executable for XlaExe {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, feeds: &HashMap<&str, Feed>) -> Result<Outputs> {
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.manifest.inputs.len());
+        for spec in &self.manifest.inputs {
+            let feed = feeds.get(spec.name.as_str()).ok_or_else(|| {
+                crate::anyhow!("missing input `{}` for {}", spec.name, self.manifest.name)
+            })?;
+            check_feed(feed, spec)?;
+            args.push(feed_to_literal(feed, &spec.name)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| crate::anyhow!("execute {}: {e}", self.manifest.name))?;
+        let replica = &result[0];
+        let expected = self.manifest.outputs.len();
+        // PJRT either untuples multi-output roots into separate buffers or
+        // hands back one tuple buffer; accept both.
+        let literals: Vec<xla::Literal> = if replica.len() == expected {
+            let mut v = Vec::with_capacity(expected);
+            for b in replica {
+                v.push(b.to_literal_sync().map_err(|e| crate::anyhow!("fetch: {e}"))?);
+            }
+            v
+        } else if replica.len() == 1 {
+            let lit = replica[0]
+                .to_literal_sync()
+                .map_err(|e| crate::anyhow!("fetch: {e}"))?;
+            if expected == 1 {
+                vec![lit]
+            } else {
+                lit.to_tuple().map_err(|e| crate::anyhow!("untuple: {e}"))?
+            }
+        } else {
+            return Err(crate::anyhow!(
+                "{}: expected {} outputs, got {} buffers",
+                self.manifest.name,
+                expected,
+                replica.len()
+            ));
+        };
+        if literals.len() != expected {
+            return Err(crate::anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.manifest.name,
+                expected,
+                literals.len()
+            ));
+        }
+        let mut values = Vec::with_capacity(expected);
+        for lit in &literals {
+            values.push(Value::F32(literal_to_tensor(lit)?));
+        }
+        Ok(Outputs::new(self.manifest.outputs.clone(), values))
+    }
+
+    fn run_device(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        if args.len() != self.manifest.inputs.len() {
+            return Err(crate::anyhow!(
+                "{}: expected {} buffer args, got {}",
+                self.manifest.name,
+                self.manifest.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                DeviceBuffer::Pjrt(b) => bufs.push(b),
+                DeviceBuffer::Host(_) => {
+                    return Err(crate::anyhow!(
+                        "{}: host buffer passed to the pjrt backend",
+                        self.manifest.name
+                    ));
+                }
+            }
+        }
+        let mut result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .map_err(|e| crate::anyhow!("execute_b {}: {e}", self.manifest.name))?;
+        let outs = result.swap_remove(0);
+        split_output_buffers(&self.client, outs, self.manifest.outputs.len())
+            .map(|v| v.into_iter().map(DeviceBuffer::Pjrt).collect())
+    }
+}
+
+fn feed_to_literal(feed: &Feed, name: &str) -> Result<xla::Literal> {
+    let dims: Vec<i64> = feed.shape().iter().map(|&d| d as i64).collect();
+    match feed {
+        Feed::F32(t) => xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| crate::anyhow!("reshape {name}: {e}")),
+        Feed::I32(t) => xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| crate::anyhow!("reshape {name}: {e}")),
+    }
+}
+
+/// Convert a host literal to a Tensor (f32; i32 outputs are converted).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| crate::anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(|e| crate::anyhow!("ty: {e}"))?;
+    let data: Vec<f32> = match ty {
+        xla::ElementType::F32 => lit.to_vec::<f32>().map_err(|e| crate::anyhow!("{e}"))?,
+        xla::ElementType::S32 => lit
+            .to_vec::<i32>()
+            .map_err(|e| crate::anyhow!("{e}"))?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+        other => return Err(crate::anyhow!("unsupported output dtype {other:?}")),
+    };
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Normalize executable outputs to one device buffer per manifest output.
+///
+/// This build's XLA wrapper tuples multi-output roots into a single buffer;
+/// on the CPU plugin "device" memory is host memory, so the decompose +
+/// re-upload below is a memcpy, not a transfer. (The default cpu backend
+/// never takes this path at all — its executions return one host value per
+/// output with no intermediate literal→tensor→buffer hop.)
+fn split_output_buffers(
+    client: &xla::PjRtClient,
+    outs: Vec<xla::PjRtBuffer>,
+    expected: usize,
+) -> Result<Vec<xla::PjRtBuffer>> {
+    if outs.len() == expected {
+        return Ok(outs);
+    }
+    if outs.len() == 1 && expected > 1 {
+        let lit = outs[0]
+            .to_literal_sync()
+            .map_err(|e| crate::anyhow!("fetch tuple: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| crate::anyhow!("untuple: {e}"))?;
+        if parts.len() != expected {
+            return Err(crate::anyhow!("tuple arity {} != {expected}", parts.len()));
+        }
+        // buffer_from_host_literal is an async transfer with no await in
+        // this wrapper (UAF once the literal drops); decompose through the
+        // synchronous host-buffer path, feeding the literal's own storage
+        // to the upload without an intermediate Tensor copy.
+        return parts
+            .into_iter()
+            .map(|p| {
+                let shape = p.array_shape().map_err(|e| crate::anyhow!("shape: {e}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = p.to_vec::<f32>().map_err(|e| crate::anyhow!("{e}"))?;
+                client
+                    .buffer_from_host_buffer(&data, &dims, None)
+                    .map_err(|e| crate::anyhow!("upload: {e}"))
+            })
+            .collect();
+    }
+    Err(crate::anyhow!("got {} output buffers, expected {expected}", outs.len()))
+}
+
+/// Upload a host feed to a device buffer.
+pub fn feed_to_buffer(client: &xla::PjRtClient, feed: &Feed) -> Result<xla::PjRtBuffer> {
+    match feed {
+        Feed::F32(t) => client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| crate::anyhow!("upload: {e}")),
+        Feed::I32(t) => client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| crate::anyhow!("upload: {e}")),
+    }
+}
+
+/// Download a device buffer to a host Tensor.
+pub fn buffer_to_tensor(buf: &xla::PjRtBuffer) -> Result<Tensor> {
+    let lit = buf.to_literal_sync().map_err(|e| crate::anyhow!("fetch: {e}"))?;
+    literal_to_tensor(&lit)
+}

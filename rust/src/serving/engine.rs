@@ -1,6 +1,9 @@
 //! The decode engine: owns device-resident weight buffers for one
 //! (allocation, batch-size) specialization and runs prefill + greedy decode
-//! loops entirely through `execute_b`.
+//! loops entirely through the backend's device-buffer path. On the default
+//! CPU backend "device" buffers are host values (no copies crossing a
+//! boundary); on PJRT they are real device buffers that never leave the
+//! device between decode steps.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -8,7 +11,7 @@ use std::time::Instant;
 
 use crate::config::ModelCfg;
 use crate::model::{Allocation, ModuleAlloc, WeightStore};
-use crate::runtime::{buffer_to_tensor, feed_to_buffer, split_output_buffers, Exe, Feed, Runtime};
+use crate::runtime::{Backend, DeviceBuffer, Exe, Feed, Runtime};
 use crate::svd::FactoredModel;
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
@@ -37,10 +40,10 @@ pub struct Engine {
     prefill: Rc<Exe>,
     decode: Rc<Exe>,
     /// Device buffers for the weight prefix, in decode-manifest order.
-    dec_weights: Vec<xla::PjRtBuffer>,
+    dec_weights: Vec<DeviceBuffer>,
     /// Device buffers for the weight prefix, in prefill-manifest order.
-    pre_weights: Vec<xla::PjRtBuffer>,
-    client: xla::PjRtClient,
+    pre_weights: Vec<DeviceBuffer>,
+    backend: Rc<dyn Backend>,
 }
 
 /// Materialize the host tensor for a weight input name under an allocation.
@@ -69,7 +72,8 @@ fn weight_tensor(
 }
 
 impl Engine {
-    /// Compile (cached) and upload weights for `alloc` at batch size `b`.
+    /// Load (cached) executables and upload weights for `alloc` at batch
+    /// size `b`.
     pub fn new(
         cfg: &ModelCfg,
         rt: &Runtime,
@@ -82,9 +86,9 @@ impl Engine {
         let prefill = rt.load(&format!("prefill_{alloc_artifact}_b{batch}"))?;
         let decode = rt.load(&format!("decode_{alloc_artifact}_b{batch}"))?;
 
-        let upload = |exe: &Exe| -> Result<Vec<xla::PjRtBuffer>> {
+        let upload = |exe: &Rc<Exe>| -> Result<Vec<DeviceBuffer>> {
             let mut bufs = Vec::new();
-            for spec in &exe.manifest.inputs {
+            for spec in &exe.manifest().inputs {
                 if spec.name == "tokens"
                     || spec.name == "lens"
                     || spec.name.starts_with("kcache")
@@ -101,7 +105,7 @@ impl Engine {
                         spec.shape
                     ));
                 }
-                bufs.push(feed_to_buffer(&rt.client, &Feed::F32(&t))?);
+                bufs.push(rt.upload(&Feed::F32(&t))?);
             }
             Ok(bufs)
         };
@@ -114,7 +118,7 @@ impl Engine {
             pre_weights: upload(&prefill)?,
             prefill,
             decode,
-            client: rt.client.clone(),
+            backend: rt.backend(),
         })
     }
 
@@ -134,19 +138,22 @@ impl Engine {
             toks.extend_from_slice(pr);
         }
         let toks = IntTensor::from_vec(&[b, p], toks);
-        let tok_buf = feed_to_buffer(&self.client, &Feed::I32(&toks))?;
-        let mut args: Vec<&xla::PjRtBuffer> = self.pre_weights.iter().collect();
+        let tok_buf = self.backend.upload(&Feed::I32(&toks))?;
+        let mut args: Vec<&DeviceBuffer> = self.pre_weights.iter().collect();
         args.push(&tok_buf);
         let outs = self
             .prefill
-            .run_buffers_ref(&args)
+            .run_device(&args)
             .map_err(|e| crate::anyhow!("prefill: {e}"))?;
-        let outs = split_output_buffers(&self.client, outs, self.prefill.manifest.outputs.len())?;
         stats.prefill_s = t0.elapsed().as_secs_f64();
 
         // outputs: [logits, kcache.0, vcache.0, ...] stay on device
-        let mut logits = buffer_to_tensor(&outs[0])?;
-        let mut caches: Vec<xla::PjRtBuffer> = outs.into_iter().skip(1).collect();
+        let mut outs_it = outs.into_iter();
+        let logit_buf = outs_it
+            .next()
+            .ok_or_else(|| crate::anyhow!("prefill returned no outputs"))?;
+        let mut logits = self.backend.download(&logit_buf)?;
+        let mut caches: Vec<DeviceBuffer> = outs_it.collect();
 
         // ---- decode loop ----
         let t1 = Instant::now();
@@ -175,9 +182,9 @@ impl Engine {
             }
             let tok_t = IntTensor::from_vec(&[b], next);
             let lens_t = IntTensor::from_vec(&[b], lens_host.clone());
-            let tok_b = feed_to_buffer(&self.client, &Feed::I32(&tok_t))?;
-            let lens_b = feed_to_buffer(&self.client, &Feed::I32(&lens_t))?;
-            let mut args: Vec<&xla::PjRtBuffer> = self.dec_weights.iter().collect();
+            let tok_b = self.backend.upload(&Feed::I32(&tok_t))?;
+            let lens_b = self.backend.upload(&Feed::I32(&lens_t))?;
+            let mut args: Vec<&DeviceBuffer> = self.dec_weights.iter().collect();
             for c in &caches {
                 args.push(c);
             }
@@ -185,13 +192,13 @@ impl Engine {
             args.push(&lens_b);
             let outs = self
                 .decode
-                .run_buffers_ref(&args)
+                .run_device(&args)
                 .map_err(|e| crate::anyhow!("decode step {step}: {e}"))?;
-            let outs =
-                split_output_buffers(&self.client, outs, self.decode.manifest.outputs.len())?;
             let mut it = outs.into_iter();
-            let logit_buf = it.next().unwrap();
-            logits = buffer_to_tensor(&logit_buf)?;
+            let logit_buf = it
+                .next()
+                .ok_or_else(|| crate::anyhow!("decode returned no outputs"))?;
+            logits = self.backend.download(&logit_buf)?;
             caches = it.collect();
             for l in lens_host.iter_mut() {
                 *l += 1;

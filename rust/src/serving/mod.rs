@@ -2,8 +2,10 @@
 //! prefill + decode executables with device-resident weights and KV caches,
 //! a dynamic batcher, and a threaded router front-end.
 //!
-//! The engine is the L3 hot path: after construction, a decode step is one
-//! `execute_b` call — weights and caches never leave the device; only the
+//! The engine is the L3 hot path and is backend-agnostic: after
+//! construction, a decode step is one `run_device` call — weights and
+//! caches stay resident on the executing backend (real device buffers on
+//! PJRT, zero-copy host values on the default CPU interpreter); only the
 //! (batch,) token/length vectors cross the host boundary each step.
 
 mod batcher;

@@ -160,4 +160,44 @@ mod tests {
         assert_eq!(a.left_cols(1).data, vec![1., 3., 5.]);
         assert_eq!(a.left_cols(1).shape, vec![3, 1]);
     }
+
+    #[test]
+    fn matmul_degenerate_shapes() {
+        // row vector × matrix, matrix × column vector, outer product
+        let row = Tensor::from_vec(&[1, 3], vec![1., 2., 3.]);
+        let m = Tensor::from_vec(&[3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        assert_eq!(row.matmul(&m).shape, vec![1, 2]);
+        assert_eq!(row.matmul(&m).data, vec![4., 5.]);
+        let col = Tensor::from_vec(&[2, 1], vec![2., 3.]);
+        let out = col.matmul(&Tensor::from_vec(&[1, 2], vec![5., 7.]));
+        assert_eq!(out.shape, vec![2, 2]);
+        assert_eq!(out.data, vec![10., 14., 15., 21.]);
+    }
+
+    #[test]
+    fn matmul_skips_zero_rows_correctly() {
+        // the a==0 fast path must not corrupt accumulation
+        let a = Tensor::from_vec(&[2, 3], vec![0., 0., 0., 1., 2., 0.]);
+        let b = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![0., 0., 7., 10.]);
+    }
+
+    #[test]
+    fn scalar_and_empty_tensors() {
+        // rank-0 (scalar) and zero-size tensors are well-formed
+        let s = Tensor::from_vec(&[], vec![42.0]);
+        assert_eq!(s.numel(), 1);
+        let e = Tensor::zeros(&[0]);
+        assert_eq!(e.numel(), 0);
+        let z = Tensor::filled(&[2, 2], 3.0);
+        assert_eq!(z.fro(), 6.0);
+    }
+
+    #[test]
+    fn int_tensor_construction() {
+        let t = IntTensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(IntTensor::zeros(&[3]).data, vec![0, 0, 0]);
+    }
 }

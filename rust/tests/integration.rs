@@ -1,43 +1,45 @@
-//! Integration tests over the real PJRT runtime + AOT artifacts.
-//!
-//! These need `make artifacts` (micro-llama) to have run; each test skips
-//! gracefully when artifacts are absent so `cargo test` stays green in a
-//! fresh checkout. They run the same code paths as the bench harnesses at
-//! the smallest possible scale.
+//! Integration tests over the full pipeline — pretrain → calibrate →
+//! factorize → allocate → evaluate → serve — running on the default
+//! pure-Rust interpreter backend, so they pass on a clean checkout with no
+//! XLA toolchain and no exported artifacts. (Set ARA_BACKEND=pjrt with
+//! `--features pjrt` and `make artifacts` to drive the same tests through
+//! PJRT.) They exercise the same code paths as the bench harnesses at the
+//! smallest possible scale.
 
-use ara_compress::config::Paths;
+use std::sync::Mutex;
+
 use ara_compress::coordinator::{MethodKind, Pipeline};
-use ara_compress::model::{alloc_ratio, module_dims, Allocation, ModuleAlloc};
+use ara_compress::model::{alloc_ratio, module_dims, Allocation, ModuleAlloc, WeightStore};
 use ara_compress::svd::alloc_masks;
 
-fn pipeline() -> Option<Pipeline> {
-    let paths = Paths::discover().ok()?;
-    if !paths.artifact_dir("micro-llama").join("train_step.hlo.txt").exists() {
-        eprintln!("skipping integration test: run `make artifacts` first");
-        return None;
-    }
-    let mut pl = Pipeline::new("micro-llama").ok()?;
-    // tiny recipe: these tests check plumbing, not quality
+fn pipeline() -> Pipeline {
+    let mut pl = Pipeline::new("micro-llama").expect("pipeline (cpu backend needs no artifacts)");
+    // tiny recipe: these tests check plumbing and invariants, not quality
     pl.scalecfg.pretrain_steps = std::env::var("ARA_PRETRAIN_STEPS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(1200);
+        .unwrap_or(500);
     pl.scalecfg.calib_batches = 2;
     pl.scalecfg.alloc_samples = 16;
     pl.scalecfg.alloc_epochs = 2;
     pl.scalecfg.eval_batches = 2;
     pl.scalecfg.zs_items = 6;
-    Some(pl)
+    pl
+}
+
+/// The pre-trained substrate is disk-cached and shared by every test;
+/// serialize the train-or-load step so parallel tests don't race the cache.
+fn pretrained(pl: &Pipeline) -> WeightStore {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _guard = LOCK.lock().unwrap();
+    pl.pretrained().expect("pretrain substrate")
 }
 
 #[test]
 fn pretrain_reduces_loss() {
-    let Some(pl) = pipeline() else { return };
+    let pl = pipeline();
     // fresh 30-step run (no cache): loss must drop from ~ln(vocab)
-    let pc = ara_compress::training::PretrainConfig {
-        steps: 30,
-        ..Default::default()
-    };
+    let pc = ara_compress::training::PretrainConfig { steps: 30, ..Default::default() };
     let (_ws, report) = ara_compress::training::pretrain(&pl.cfg, &pl.rt, &pc).unwrap();
     assert!(report.initial_loss > report.final_loss, "{report:?}");
     assert!(report.initial_loss > 4.0, "init should be near ln(256)≈5.5");
@@ -45,10 +47,10 @@ fn pretrain_reduces_loss() {
 
 #[test]
 fn factored_full_mask_matches_dense_ppl() {
-    // the repo's core numeric invariant, now through the real runtime:
-    // all-ones masks over full-rank factors == dense model (up to f32)
-    let Some(pl) = pipeline() else { return };
-    let ws = pl.pretrained().unwrap();
+    // the repo's core numeric invariant, through the whole runtime stack:
+    // all-ones masks over full-rank whitened factors == dense model
+    let pl = pipeline();
+    let ws = pretrained(&pl);
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
 
@@ -57,31 +59,28 @@ fn factored_full_mask_matches_dense_ppl() {
         dense_alloc.set(&d.name, ModuleAlloc::Dense);
     }
     let masks = alloc_masks(&pl.cfg, &dense_alloc);
-    let ppl_f = ara_compress::eval::perplexity_masked(
-        &pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2,
-    )
-    .unwrap();
-    let ppl_d =
-        ara_compress::eval::perplexity_dense(&pl.cfg, &pl.rt, &ws, "synwiki", 2).unwrap();
+    let ppl_f =
+        ara_compress::eval::perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2)
+            .unwrap();
+    let ppl_d = ara_compress::eval::perplexity_dense(&pl.cfg, &pl.rt, &ws, "synwiki", 2).unwrap();
     let rel = (ppl_f.ppl - ppl_d.ppl).abs() / ppl_d.ppl;
     assert!(rel < 0.03, "factored@full-rank PPL {} vs dense {}", ppl_f.ppl, ppl_d.ppl);
 }
 
 #[test]
 fn truncation_monotone_in_ratio() {
-    let Some(pl) = pipeline() else { return };
-    let ws = pl.pretrained().unwrap();
+    let pl = pipeline();
+    let ws = pretrained(&pl);
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
     let mut last = 0.0;
     for ratio in [0.9, 0.5, 0.15] {
         let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, ratio);
         let masks = alloc_masks(&pl.cfg, &alloc);
-        let ppl = ara_compress::eval::perplexity_masked(
-            &pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2,
-        )
-        .unwrap()
-        .ppl;
+        let ppl =
+            ara_compress::eval::perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2)
+                .unwrap()
+                .ppl;
         assert!(ppl >= last * 0.98, "ppl must not improve much as ratio shrinks");
         last = ppl;
     }
@@ -89,8 +88,8 @@ fn truncation_monotone_in_ratio() {
 
 #[test]
 fn every_method_hits_its_budget() {
-    let Some(pl) = pipeline() else { return };
-    let ws = pl.pretrained().unwrap();
+    let pl = pipeline();
+    let ws = pretrained(&pl);
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
     for m in [
@@ -104,11 +103,7 @@ fn every_method_hits_its_budget() {
     ] {
         let alloc = pl.allocate(m, 0.5, &ws, &grams, &fm).unwrap();
         let got = alloc_ratio(&pl.cfg, &alloc);
-        assert!(
-            (got - 0.5).abs() < 0.12,
-            "{}: achieved {got} for target 0.5",
-            m.name()
-        );
+        assert!((got - 0.5).abs() < 0.12, "{}: achieved {got} for target 0.5", m.name());
         for (name, a) in &alloc.modules {
             if let ModuleAlloc::Rank(k) = a {
                 assert!(*k >= 1, "{name}: zero rank");
@@ -119,8 +114,8 @@ fn every_method_hits_its_budget() {
 
 #[test]
 fn zero_shot_dense_beats_chance() {
-    let Some(pl) = pipeline() else { return };
-    let ws = pl.pretrained().unwrap();
+    let pl = pipeline();
+    let ws = pretrained(&pl);
     let zs = ara_compress::eval::zero_shot_suite(
         &pl.cfg,
         &pl.rt,
@@ -136,50 +131,84 @@ fn zero_shot_dense_beats_chance() {
 
 #[test]
 fn serving_engine_generates_and_is_deterministic() {
-    let Some(pl) = pipeline() else { return };
-    if !pl.paths.artifact_dir("micro-llama").join("decode_uniform-80_b2.hlo.txt").exists() {
-        return;
-    }
-    let ws = pl.pretrained().unwrap();
+    let pl = pipeline();
+    let ws = pretrained(&pl);
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
-    let alloc = Allocation::load(
-        &pl.paths.artifacts.join("allocations/micro-llama.uniform-80.json"),
-    )
-    .unwrap();
-    let engine = ara_compress::serving::Engine::new(
-        &pl.cfg, &pl.rt, &ws, &fm, &alloc, "uniform-80", 2,
-    )
-    .unwrap();
+    // the same uniform-80 allocation the backend resolves for the artifact
+    let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, 0.8);
+    let engine =
+        ara_compress::serving::Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, "uniform-80", 2)
+            .unwrap();
     let prompts = vec![vec![0i32; pl.cfg.prefill_len], vec![5i32; pl.cfg.prefill_len]];
     let (a, stats) = engine.generate(&prompts, 8).unwrap();
     let (b, _) = engine.generate(&prompts, 8).unwrap();
     assert_eq!(a, b, "greedy decode must be deterministic");
     assert_eq!(a[0].len(), 8);
     assert!(stats.tok_per_s() > 0.0);
+
+    // distinct prompts should not collapse to identical continuations of
+    // each other under a trained model... but even if they do, the engine
+    // must report coherent stats
+    assert_eq!(stats.tokens_generated, 2 * 8);
+}
+
+#[test]
+fn serving_dense_equals_scored_logits_path() {
+    // decode over the dense allocation must generate in-vocab tokens and
+    // respect the cache-length guard
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+    let mut alloc = Allocation::new("dense");
+    for d in module_dims(&pl.cfg) {
+        alloc.set(&d.name, ModuleAlloc::Dense);
+    }
+    let engine =
+        ara_compress::serving::Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, "dense", 1).unwrap();
+    let prompts = vec![vec![1i32; pl.cfg.prefill_len]];
+    let gen_len = pl.cfg.max_decode_seq; // longer than the cache allows
+    let (toks, stats) = engine.generate(&prompts, gen_len).unwrap();
+    assert!(!toks[0].is_empty());
+    assert!(toks[0].len() <= gen_len);
+    for &t in &toks[0] {
+        assert!((t as usize) < pl.cfg.vocab, "token {t} out of vocab");
+    }
+    assert!(stats.steps < gen_len, "cache guard must stop the decode loop");
 }
 
 #[test]
 fn lora_merge_preserves_or_improves_ppl() {
-    let Some(pl) = pipeline() else { return };
-    let ws = pl.pretrained().unwrap();
+    let pl = pipeline();
+    let ws = pretrained(&pl);
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
     let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, 0.4);
     let masks = alloc_masks(&pl.cfg, &alloc);
-    let before = ara_compress::eval::perplexity_masked(
-        &pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2,
-    )
-    .unwrap()
-    .ppl;
+    let before =
+        ara_compress::eval::perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2)
+            .unwrap()
+            .ppl;
     let lc = ara_compress::lora::LoraConfig { steps: 10, ..Default::default() };
     let (fm2, masks2) =
         ara_compress::lora::lora_finetune_and_merge(&pl.cfg, &pl.rt, &ws, &fm, &masks, &grams, &lc)
             .unwrap();
-    let after = ara_compress::eval::perplexity_masked(
-        &pl.cfg, &pl.rt, &ws, &fm2, &masks2, "synwiki", 2,
-    )
-    .unwrap()
-    .ppl;
+    let after =
+        ara_compress::eval::perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm2, &masks2, "synwiki", 2)
+            .unwrap()
+            .ppl;
     assert!(after <= before * 1.05, "LoRA should not hurt: {before} → {after}");
+}
+
+#[test]
+fn qwen_family_graphs_run_end_to_end() {
+    // GQA + QK-norm coverage: the qwen preset must pretrain a few steps
+    // through the same backend
+    let pl = Pipeline::new("miniqwen-s").unwrap();
+    let pc = ara_compress::training::PretrainConfig { steps: 10, ..Default::default() };
+    let (ws, report) = ara_compress::training::pretrain(&pl.cfg, &pl.rt, &pc).unwrap();
+    assert!(report.final_loss.is_finite());
+    let ppl = ara_compress::eval::perplexity_dense(&pl.cfg, &pl.rt, &ws, "synwiki", 1).unwrap();
+    assert!(ppl.ppl.is_finite() && ppl.ppl > 1.0);
 }
