@@ -4,8 +4,13 @@
 //! vendor set); timing series use std::time. Scale with ARA_SCALE.
 
 #![allow(dead_code)]
+use std::path::PathBuf;
+
 use ara_compress::coordinator::{EvalRow, Pipeline};
+use ara_compress::json::{self, Json};
+use ara_compress::model::Allocation;
 use ara_compress::report::{f2, Table};
+use ara_compress::runtime::resolve_alloc;
 
 /// Standard Table-1-style row formatting.
 pub fn push_row(t: &mut Table, r: &EvalRow) {
@@ -39,4 +44,97 @@ pub fn pipeline(model: &str) -> Pipeline {
 /// Shape-check helper: print PASS/FAIL for a reproduction claim.
 pub fn claim(name: &str, ok: bool) {
     println!("  [{}] {}", if ok { "PASS" } else { "WARN" }, name);
+}
+
+/// Resolve a serving allocation for a bench: `configs/allocations/` first,
+/// then `artifacts/allocations/`, then the computed fallback (`dense`,
+/// `uniform-R`, `ara-R`) via [`resolve_alloc`] — same precedence as the
+/// artifact builders.
+pub fn load_alloc(pl: &Pipeline, model: &str, name: &str) -> Allocation {
+    let cfgp = pl.paths.configs.join("allocations").join(format!("{model}.{name}.json"));
+    if cfgp.exists() {
+        return Allocation::load(&cfgp).expect("alloc json (configs)");
+    }
+    let artp = pl.paths.artifacts.join("allocations").join(format!("{model}.{name}.json"));
+    Allocation::load(&artp)
+        .or_else(|_| resolve_alloc(&pl.cfg, &pl.paths, name))
+        .expect("alloc")
+}
+
+/// Bench smoke mode (`ARA_BENCH_SMOKE=1`, used by CI): tiny iteration
+/// counts and presets, no timing assertions — only proves the harness
+/// builds, runs, and emits the baseline JSON. Smoke results are written
+/// to separate `*_smoke` JSON sections so they never clobber a real
+/// baseline (see [`bench_section`]).
+pub fn smoke() -> bool {
+    match std::env::var("ARA_BENCH_SMOKE") {
+        Ok(v) => !v.is_empty() && v != "0" && v != "false",
+        Err(_) => false,
+    }
+}
+
+/// Section name for this run: `<base>` for real baselines, `<base>_smoke`
+/// for smoke runs, so check-mode numbers never overwrite the recorded
+/// perf trajectory.
+pub fn bench_section(base: &str) -> String {
+    if smoke() {
+        format!("{base}_smoke")
+    } else {
+        base.to_string()
+    }
+}
+
+/// Resolve the machine-readable bench baseline path: `ARA_BENCH_OUT` if
+/// set, else `BENCH_PR2.json` at the repo root (located by walking up to
+/// `configs/models.json`, the same anchor `config::Paths` uses).
+pub fn bench_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("ARA_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("configs").join("models.json").exists() {
+            return dir.join("BENCH_PR2.json");
+        }
+        if !dir.pop() {
+            return PathBuf::from("BENCH_PR2.json");
+        }
+    }
+}
+
+/// Merge `section` into the bench baseline JSON (replacing the section if
+/// present, preserving everything else) so subsequent PRs have a perf
+/// trajectory to regress against.
+pub fn record_bench(section: &str, entries: &[(String, f64)]) {
+    let path = bench_json_path();
+    // Missing file ⇒ fresh baseline; an unparsable file is NOT silently
+    // replaced — that would wipe the recorded trajectory of every other
+    // section.
+    let mut root = match std::fs::read_to_string(&path) {
+        Err(_) => Json::Obj(Vec::new()),
+        Ok(s) => match json::parse(&s) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!(
+                    "  [bench-json] refusing to overwrite unparsable {}: {e}",
+                    path.display()
+                );
+                return;
+            }
+        },
+    };
+    let obj = Json::Obj(entries.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect());
+    if let Json::Obj(pairs) = &mut root {
+        if let Some(p) = pairs.iter_mut().find(|(k, _)| k == section) {
+            p.1 = obj;
+        } else {
+            pairs.push((section.to_string(), obj));
+        }
+    } else {
+        root = Json::Obj(vec![(section.to_string(), obj)]);
+    }
+    match std::fs::write(&path, root.dump()) {
+        Ok(()) => println!("  [bench-json] section `{section}` -> {}", path.display()),
+        Err(e) => eprintln!("  [bench-json] cannot write {}: {e}", path.display()),
+    }
 }

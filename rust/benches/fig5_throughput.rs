@@ -4,42 +4,31 @@
 //! (dense modules run as one matmul instead of two thin ones).
 //!
 //! Engines run over allocation-specialized AOT executables with
-//! device-resident weights/KV caches (see serving/engine.rs).
+//! device-resident weights/KV caches (see serving/engine.rs). Measured
+//! tokens/sec are appended to `BENCH_PR2.json` (section
+//! `fig5_decode_tok_s`) so later PRs can regress against them.
+//! `ARA_BENCH_SMOKE=1` shrinks the sweep to a build/emit check for CI.
 
 mod common;
 
 use ara_compress::data::{corpus_spec, generate_tokens};
-use ara_compress::model::Allocation;
 use ara_compress::report::Table;
 use ara_compress::serving::Engine;
-use common::{claim, pipeline};
+use common::{bench_section, claim, load_alloc, pipeline, record_bench, smoke};
 
 fn main() {
+    let smoke = smoke();
     let model = "minillama-s";
     let pl = pipeline(model);
     let ws = pl.pretrained().expect("pretrain");
     let grams = pl.grams(&ws).expect("calibrate");
     let fm = pl.factored(&ws, &grams).expect("factorize");
 
-    let allocs = ["dense", "uniform-80", "uniform-60", "ara-80", "ara-60"];
-    let load_alloc = |name: &str| -> Allocation {
-        let p = pl
-            .paths
-            .configs
-            .join("allocations")
-            .join(format!("{model}.{name}.json"));
-        if p.exists() {
-            return Allocation::load(&p).expect("alloc json");
-        }
-        Allocation::load(
-            &pl.paths
-                .artifacts
-                .join("allocations")
-                .join(format!("{model}.{name}.json")),
-        )
-        .expect("alloc json (artifacts)")
+    let allocs: &[&str] = if smoke {
+        &["dense", "uniform-80"]
+    } else {
+        &["dense", "uniform-80", "uniform-60", "ara-80", "ara-60"]
     };
-
     let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 77, 4096);
     let prompts = |b: usize| -> Vec<Vec<i32>> {
         (0..b)
@@ -51,8 +40,12 @@ fn main() {
     };
 
     // --- (a) throughput vs batch size, gen_len fixed ---
-    let gen_len = ara_compress::config::scaled(32, 8);
-    let batches: Vec<usize> = pl.cfg.decode_batches.clone();
+    let gen_len = if smoke { 4 } else { ara_compress::config::scaled(32, 8) };
+    let batches: Vec<usize> = if smoke {
+        vec![*pl.cfg.decode_batches.first().unwrap()]
+    } else {
+        pl.cfg.decode_batches.clone()
+    };
     let mut ta = Table::new(
         format!("Fig 5a — decode tok/s vs batch size (gen_len={gen_len})"),
         &{
@@ -62,8 +55,9 @@ fn main() {
         },
     );
     let mut tok_s: std::collections::HashMap<(String, usize), f64> = Default::default();
+    let mut entries: Vec<(String, f64)> = Vec::new();
     for alloc_name in allocs {
-        let alloc = load_alloc(alloc_name);
+        let alloc = load_alloc(&pl, model, alloc_name);
         let mut cells = vec![alloc_name.to_string()];
         for &b in &batches {
             let engine =
@@ -73,10 +67,18 @@ fn main() {
             let (_, stats) = engine.generate(&prompts(b), gen_len).expect("gen");
             cells.push(format!("{:.0}", stats.tok_per_s()));
             tok_s.insert((alloc_name.to_string(), b), stats.tok_per_s());
+            entries.push((format!("{alloc_name}_b{b}_tok_s"), stats.tok_per_s()));
         }
         ta.row(cells);
     }
     ta.print();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    record_bench(&bench_section("fig5_decode_tok_s"), &entries);
+
+    if smoke {
+        println!("  [bench-smoke] fig5 check mode: sweep + claims skipped");
+        return;
+    }
 
     // --- (b) throughput vs generation length at the largest batch ---
     let bmax = *batches.last().unwrap();
@@ -86,7 +88,7 @@ fn main() {
         &["Alloc", "L=8", "L=16", "L=32", "L=64"],
     );
     for alloc_name in allocs {
-        let alloc = load_alloc(alloc_name);
+        let alloc = load_alloc(&pl, model, alloc_name);
         let engine =
             Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, alloc_name, bmax).expect("engine");
         let _ = engine.generate(&prompts(bmax), 4).expect("warmup");

@@ -1,22 +1,30 @@
 //! §Perf micro-benchmarks: per-layer timing of the hot paths so the
-//! optimization log in EXPERIMENTS.md §Perf is reproducible.
+//! optimization log is reproducible, emitting machine-readable results to
+//! `BENCH_PR2.json` (see benches/common/mod.rs::record_bench).
 //!
-//!  L3: decode-step latency breakdown (execute_b vs tuple-split vs argmax),
-//!      executable-call overhead, feed construction.
-//!  L1-proxy: score_masked wall time (the Pallas masked-lowrank kernel
-//!      dominates its FLOPs) vs score_dense.
+//!  Kernel: blocked/threaded matmul GFLOP/s at representative shapes.
+//!  L3: train-step latency at the small/medium presets, decode-step
+//!      latency + tokens/sec per allocation, score_masked vs score_dense.
 //!  Substrate: Jacobi SVD & Cholesky throughput at module shapes.
+//!
+//! `ARA_BENCH_SMOKE=1` runs a tiny-preset check mode (CI): everything
+//! builds and the JSON is emitted, no timing assertions anywhere.
 
 mod common;
 
+use std::collections::HashMap;
 use std::time::Instant;
 
-use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::config::{model_by_name, Paths};
+use ara_compress::data::{corpus_spec, generate_tokens, Rng};
+use ara_compress::kernels;
 use ara_compress::linalg::{cholesky, svd, Mat};
-use ara_compress::model::Allocation;
+use ara_compress::model::init_weights;
+use ara_compress::runtime::{Feed, Runtime};
 use ara_compress::serving::Engine;
 use ara_compress::svd::alloc_masks;
-use common::pipeline;
+use ara_compress::tensor::IntTensor;
+use common::{bench_section, load_alloc, pipeline, record_bench, smoke};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -30,8 +38,71 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+/// Time one interpreted train_step at a preset (random weights/tokens —
+/// pretraining is irrelevant to step latency).
+fn train_step_ms(model: &str, iters: usize) -> f64 {
+    let paths = Paths::discover().expect("paths");
+    let cfg = model_by_name(&paths.configs, model).expect("model preset");
+    let rt = Runtime::new(paths.artifact_dir(model)).expect("runtime");
+    let exe = rt.load("train_step").expect("train_step");
+    let ws = init_weights(&cfg, 3);
+    let mut rng = Rng::new(5);
+    let toks = IntTensor::from_vec(
+        &[cfg.batch_train, cfg.seq_train],
+        (0..cfg.batch_train * cfg.seq_train)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect(),
+    );
+    let tgts = toks.clone();
+    let mut feeds: HashMap<&str, Feed> = HashMap::new();
+    for (name, t) in &ws.tensors {
+        feeds.insert(name.as_str(), Feed::F32(t));
+    }
+    feeds.insert("tokens", Feed::I32(&toks));
+    feeds.insert("targets", Feed::I32(&tgts));
+    bench(&format!("train_step {model}"), iters, || {
+        exe.run(&feeds).unwrap();
+    }) * 1e3
+}
+
 fn main() {
-    let model = "minillama-s";
+    let smoke = smoke();
+    let iters = if smoke { 1 } else { 5 };
+    let model = if smoke { "micro-llama" } else { "minillama-s" };
+    let mut entries: Vec<(String, f64)> = Vec::new();
+
+    println!("== perf_micro: blocked matmul kernel (ARA_THREADS={}) ==", kernels::num_threads());
+    {
+        let shapes: &[(usize, usize, usize)] = if smoke {
+            &[(64, 64, 64)]
+        } else {
+            &[(128, 128, 128), (256, 256, 256), (64, 512, 512), (4, 512, 512)]
+        };
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in shapes {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut out = vec![0.0f32; m * n];
+            let per = bench(&format!("matmul {m}x{k}x{n}"), iters.max(3), || {
+                out.fill(0.0);
+                kernels::matmul_f32(&a, &b, m, k, n, false, false, &mut out);
+            });
+            let gflops = (2.0 * (m * k * n) as f64) / per / 1e9;
+            println!("    -> {gflops:.2} GFLOP/s");
+            entries.push((format!("matmul_{m}x{k}x{n}_gflops"), gflops));
+        }
+    }
+
+    println!("== perf_micro: train-step latency ==");
+    {
+        let presets: &[&str] =
+            if smoke { &["micro-llama"] } else { &["minillama-s", "minillama-m"] };
+        for preset in presets {
+            let ms = train_step_ms(preset, iters);
+            entries.push((format!("train_step_ms_{preset}"), ms));
+        }
+    }
+
     let pl = pipeline(model);
     let ws = pl.pretrained().expect("pretrain");
     let grams = pl.grams(&ws).expect("calibrate");
@@ -43,15 +114,17 @@ fn main() {
         use ara_compress::eval::{perplexity_dense, perplexity_masked};
         let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, 0.8);
         let masks = alloc_masks(&pl.cfg, &alloc);
-        bench("score_dense (1 batch eval)", 5, || {
+        let d = bench("score_dense (1 batch eval)", iters, || {
             perplexity_dense(&pl.cfg, &pl.rt, &ws, "synwiki", 1).unwrap();
         });
-        bench("score_masked (1 batch eval, lowrank kernel)", 5, || {
+        let m = bench("score_masked (1 batch eval, lowrank kernel)", iters, || {
             perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 1).unwrap();
         });
+        entries.push(("score_dense_ms".to_string(), d * 1e3));
+        entries.push(("score_masked_ms".to_string(), m * 1e3));
     }
 
-    // decode step cost per allocation
+    // decode step cost + throughput per allocation
     {
         let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 7, 2048);
         let b = *pl.cfg.decode_batches.last().unwrap();
@@ -59,36 +132,28 @@ fn main() {
             .map(|i| stream[i * 16..i * 16 + pl.cfg.prefill_len].to_vec())
             .collect();
         for name in ["dense", "uniform-80", "ara-80"] {
-            let path = pl
-                .paths
-                .artifacts
-                .join("allocations")
-                .join(format!("{model}.{name}.json"));
-            let cfgp = pl
-                .paths
-                .configs
-                .join("allocations")
-                .join(format!("{model}.{name}.json"));
-            let alloc =
-                Allocation::load(if cfgp.exists() { &cfgp } else { &path }).expect("alloc");
+            let alloc = load_alloc(&pl, model, name);
             let engine =
                 Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, name, b).expect("engine");
-            bench(&format!("decode 16 steps, B={b}, {name}"), 3, || {
+            let per = bench(&format!("decode 16 steps, B={b}, {name}"), iters.min(3), || {
                 engine.generate(&prompts, 16).unwrap();
             });
+            let (_, stats) = engine.generate(&prompts, 16).expect("gen");
+            entries.push((format!("decode16_ms_{name}_b{b}"), per * 1e3));
+            entries.push((format!("decode_tok_s_{name}_b{b}"), stats.tok_per_s()));
         }
     }
 
-    println!("== perf_micro: substrate linalg ==");
-    {
-        let mut rng = ara_compress::data::Rng::new(1);
+    if !smoke {
+        println!("== perf_micro: substrate linalg ==");
+        let mut rng = Rng::new(1);
         let d = pl.cfg.d_model;
         let mut a = Mat::zeros(d, d);
         for v in a.data.iter_mut() {
             *v = rng.normal();
         }
         let h = a.gram();
-        bench(&format!("cholesky {d}×{d}"), 5, || {
+        let c = bench(&format!("cholesky {d}×{d}"), iters, || {
             let mut hd = h.clone();
             for i in 0..d {
                 let x = hd.at(i, i) + 1.0;
@@ -96,9 +161,11 @@ fn main() {
             }
             cholesky(&hd).unwrap();
         });
-        bench(&format!("jacobi svd {d}×{d}"), 2, || {
+        entries.push(("cholesky_ms".to_string(), c * 1e3));
+        let s = bench(&format!("jacobi svd {d}×{d}"), 2, || {
             svd(&a);
         });
+        entries.push(("jacobi_svd_ms".to_string(), s * 1e3));
         let ff = pl.cfg.d_ff;
         let mut wide = Mat::zeros(d, ff);
         for v in wide.data.iter_mut() {
@@ -107,10 +174,13 @@ fn main() {
         bench(&format!("jacobi svd {d}×{ff} (wdown shape)"), 2, || {
             svd(&wide);
         });
+
+        println!("== perf_micro: full factorization pipeline ==");
+        let f = bench("factorize all modules", 1, || {
+            ara_compress::svd::factorize(&pl.cfg, &ws, &grams, 1e-3).unwrap();
+        });
+        entries.push(("factorize_ms".to_string(), f * 1e3));
     }
 
-    println!("== perf_micro: full factorization pipeline ==");
-    bench("factorize all modules", 1, || {
-        ara_compress::svd::factorize(&pl.cfg, &ws, &grams, 1e-3).unwrap();
-    });
+    record_bench(&bench_section("perf_micro"), &entries);
 }

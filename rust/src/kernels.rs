@@ -1,0 +1,452 @@
+//! Cache-blocked, multi-threaded matmul kernels shared by the interpreter
+//! hot path ([`crate::runtime`]), the host-side [`crate::tensor::Tensor`]
+//! math, and the f64 [`crate::linalg::Mat`] routines that dominate SVD
+//! whitening/calibration time.
+//!
+//! Design (see DESIGN.md §3 "Performance"):
+//! * **Transpose normalization** — all four `(ta, tb)` flag combinations are
+//!   reduced to one packed layout: `A` as row-major `(m, k)`, `B` as
+//!   row-major `(k, n)` panels (copies happen only when a flag is set). A
+//!   small-`m` fast path keeps `B` in its `(n, k)` layout and runs a
+//!   k-innermost dot micro-kernel instead, so decode-shaped matmuls
+//!   (`m` = batch) never pay a pack.
+//! * **Blocking** — the packed kernel walks `k` in `KC`-sized panels with a
+//!   j-contiguous axpy inner loop, keeping the active `B` panel and the
+//!   output row hot in cache; the inner loop is a straight-line
+//!   slice-to-slice FMA that the compiler auto-vectorizes.
+//! * **Threading** — work is split over disjoint output row (or column)
+//!   ranges with `std::thread::scope`; the thread count comes from
+//!   `std::thread::available_parallelism` with an `ARA_THREADS` override,
+//!   gated so small problems stay single-threaded.
+//! * **Determinism** — each output element is produced by exactly one
+//!   thread, and the per-element accumulation order (ascending `k`) does
+//!   not depend on panel size, chunking, or the thread count, so results
+//!   are **bitwise identical** for any `ARA_THREADS` value.
+
+use std::sync::OnceLock;
+
+/// Worker thread budget: `ARA_THREADS` if set (≥ 1), else
+/// `std::thread::available_parallelism`. Cached for the process lifetime.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let from_env = std::env::var("ARA_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1);
+        from_env.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+    })
+}
+
+/// Threads worth spawning for a problem of `flops` floating ops: one thread
+/// per ~2 MFLOP so std::thread spawn cost stays well under the work itself.
+fn threads_for(flops: usize) -> usize {
+    let nt = num_threads();
+    if nt <= 1 {
+        return 1;
+    }
+    nt.min((flops / 2_000_000).max(1))
+}
+
+/// k-panel size for the packed axpy kernel (f32: 32 KiB of B panel at
+/// n=64; the panel is reused across every output row of the chunk).
+const KC: usize = 128;
+
+macro_rules! mm_impl {
+    ($mm:ident, $mm_nt:ident, $rows_fn:ident, $dot_fn:ident, $pack_a:ident, $pack_b:ident, $ty:ty) => {
+        /// Pack op(A) to row-major (m,k); copies only when `ta` is set.
+        fn $pack_a<'a>(a: &'a [$ty], m: usize, k: usize, ta: bool, buf: &'a mut Vec<$ty>) -> &'a [$ty] {
+            if !ta {
+                return a;
+            }
+            buf.resize(m * k, 0.0);
+            // A is stored (k,m); read rows sequentially, scatter to columns.
+            for kk in 0..k {
+                let arow = &a[kk * m..(kk + 1) * m];
+                for (i, &v) in arow.iter().enumerate() {
+                    buf[i * k + kk] = v;
+                }
+            }
+            buf
+        }
+
+        /// Pack op(B) to row-major (k,n); copies only when `tb` is set.
+        fn $pack_b<'a>(b: &'a [$ty], k: usize, n: usize, tb: bool, buf: &'a mut Vec<$ty>) -> &'a [$ty] {
+            if !tb {
+                return b;
+            }
+            buf.resize(k * n, 0.0);
+            // B is stored (n,k); read rows sequentially, scatter to columns.
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                for (kk, &v) in brow.iter().enumerate() {
+                    buf[kk * n + j] = v;
+                }
+            }
+            buf
+        }
+
+        /// Output rows [i0, i0+rows) of A(m,k)·B(k,n) into `out` (len rows·n,
+        /// pre-zeroed), walking k in KC panels with a j-contiguous axpy.
+        /// Per-element accumulation is ascending-k regardless of panelling.
+        fn $rows_fn(a: &[$ty], b: &[$ty], k: usize, n: usize, i0: usize, rows: usize, out: &mut [$ty]) {
+            let mut k0 = 0;
+            while k0 < k {
+                let kc = KC.min(k - k0);
+                for i in 0..rows {
+                    let abase = (i0 + i) * k + k0;
+                    let arow = &a[abase..abase + kc];
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[(k0 + kk) * n..(k0 + kk + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                k0 += kc;
+            }
+        }
+
+        /// Dot micro-kernel over Bᵀ rows: out[i·os + j] = A row (i0+i) ·
+        /// Bᵀ row (j0+j), for the (ta=false, tb=true) small-m fast path.
+        /// Overwrites its outputs (no pre-zero needed).
+        #[allow(clippy::too_many_arguments)]
+        fn $dot_fn(
+            a: &[$ty],
+            bt: &[$ty],
+            k: usize,
+            i0: usize,
+            rows: usize,
+            j0: usize,
+            cols: usize,
+            os: usize,
+            out: &mut [$ty],
+        ) {
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+                for j in 0..cols {
+                    let brow = &bt[(j0 + j) * k..(j0 + j) * k + k];
+                    let mut acc: $ty = 0.0;
+                    for (&x, &y) in arow.iter().zip(brow) {
+                        acc += x * y;
+                    }
+                    out[i * os + j] = acc;
+                }
+            }
+        }
+
+        /// C = op(A)·op(B) with logical shapes (m,k)·(k,n) → `out` (len m·n,
+        /// **pre-zeroed** by the caller). `ta`/`tb` mark transposed storage
+        /// ((k,m) / (n,k) respectively). Runs on up to `nt` threads over
+        /// disjoint output regions; bitwise-deterministic for any `nt`.
+        #[allow(clippy::too_many_arguments)]
+        pub fn $mm_nt(
+            a: &[$ty],
+            b: &[$ty],
+            m: usize,
+            k: usize,
+            n: usize,
+            ta: bool,
+            tb: bool,
+            out: &mut [$ty],
+            nt: usize,
+        ) {
+            debug_assert_eq!(out.len(), m * n, "matmul out buffer size");
+            if m == 0 || n == 0 {
+                return;
+            }
+            // Small-m transposed-B fast path: contiguous dot rows, no pack.
+            if tb && !ta && m < 8 {
+                let nt = nt.clamp(1, n);
+                if nt <= 1 {
+                    $dot_fn(a, b, k, 0, m, 0, n, n, out);
+                } else {
+                    // Split columns; threads fill private (m × jw) tiles that
+                    // are copied back sequentially (copy cost is 1/k of the
+                    // dot work, and out need not be split non-contiguously).
+                    let cols_per = n.div_ceil(nt);
+                    let tiles: Vec<(usize, usize, Vec<$ty>)> = std::thread::scope(|s| {
+                        let mut handles = Vec::new();
+                        let mut j0 = 0;
+                        while j0 < n {
+                            let jw = cols_per.min(n - j0);
+                            handles.push(s.spawn(move || {
+                                let mut tile = vec![0.0; m * jw];
+                                $dot_fn(a, b, k, 0, m, j0, jw, jw, &mut tile);
+                                (j0, jw, tile)
+                            }));
+                            j0 += jw;
+                        }
+                        handles.into_iter().map(|h| h.join().unwrap()).collect()
+                    });
+                    for (j0, jw, tile) in tiles {
+                        for i in 0..m {
+                            out[i * n + j0..i * n + j0 + jw]
+                                .copy_from_slice(&tile[i * jw..(i + 1) * jw]);
+                        }
+                    }
+                }
+                return;
+            }
+            // General path: normalize to packed (m,k)·(k,n), blocked axpy.
+            let mut abuf = Vec::new();
+            let mut bbuf = Vec::new();
+            let an = $pack_a(a, m, k, ta, &mut abuf);
+            let bn = $pack_b(b, k, n, tb, &mut bbuf);
+            let nt = nt.clamp(1, m);
+            if nt <= 1 {
+                $rows_fn(an, bn, k, n, 0, m, out);
+                return;
+            }
+            let rows_per = m.div_ceil(nt);
+            std::thread::scope(|s| {
+                for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                    s.spawn(move || {
+                        let rows = chunk.len() / n;
+                        $rows_fn(an, bn, k, n, ci * rows_per, rows, chunk);
+                    });
+                }
+            });
+        }
+
+        /// The `_nt` kernel with the thread count picked from the problem
+        /// size and the `ARA_THREADS` / `available_parallelism` budget.
+        #[allow(clippy::too_many_arguments)]
+        pub fn $mm(a: &[$ty], b: &[$ty], m: usize, k: usize, n: usize, ta: bool, tb: bool, out: &mut [$ty]) {
+            $mm_nt(a, b, m, k, n, ta, tb, out, threads_for(2 * m * k * n));
+        }
+    };
+}
+
+mm_impl!(matmul_f32, matmul_f32_nt, mm_rows_f32, mm_dot_f32, pack_a_f32, pack_b_f32, f32);
+mm_impl!(matmul_f64, matmul_f64_nt, mm_rows_f64, mm_dot_f64, pack_a_f64, pack_b_f64, f64);
+
+/// Batched C[i] = op(A[i])·op(B[i]) over the leading dim of (bs,·,·)
+/// tensors into `out` (len bs·m·n, **pre-zeroed**). Parallelizes over the
+/// batch dimension; each slice runs the sequential 2-D kernel, so results
+/// are bitwise-deterministic for any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn bmm_f32(
+    a: &[f32],
+    b: &[f32],
+    bs: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    out: &mut [f32],
+) {
+    bmm_f32_nt(a, b, bs, m, k, n, ta, tb, out, threads_for(2 * bs * m * k * n));
+}
+
+/// `bmm_f32` with an explicit thread budget (determinism tests).
+#[allow(clippy::too_many_arguments)]
+pub fn bmm_f32_nt(
+    a: &[f32],
+    b: &[f32],
+    bs: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    out: &mut [f32],
+    nt: usize,
+) {
+    debug_assert_eq!(out.len(), bs * m * n, "bmm out buffer size");
+    if bs == 0 || m * n == 0 {
+        return;
+    }
+    let (sa, sb, so) = (m * k, k * n, m * n);
+    let nt = nt.clamp(1, bs);
+    if nt <= 1 {
+        for i in 0..bs {
+            matmul_f32_nt(
+                &a[i * sa..(i + 1) * sa],
+                &b[i * sb..(i + 1) * sb],
+                m,
+                k,
+                n,
+                ta,
+                tb,
+                &mut out[i * so..(i + 1) * so],
+                1,
+            );
+        }
+        return;
+    }
+    let per = bs.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(per * so).enumerate() {
+            s.spawn(move || {
+                for (x, oc) in chunk.chunks_mut(so).enumerate() {
+                    let i = ci * per + x;
+                    matmul_f32_nt(
+                        &a[i * sa..(i + 1) * sa],
+                        &b[i * sb..(i + 1) * sb],
+                        m,
+                        k,
+                        n,
+                        ta,
+                        tb,
+                        oc,
+                        1,
+                    );
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The pre-PR naive reference: the exact loop nests the interpreter
+    /// shipped with, kept here to pin the blocked kernel against.
+    #[allow(clippy::too_many_arguments)]
+    fn naive(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        ta: bool,
+        tb: bool,
+        out: &mut [f32],
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    let av = if ta { a[kk * m + i] } else { a[i * k + kk] };
+                    let bv = if tb { b[j * k + kk] } else { b[kk * n + j] };
+                    acc += av * bv;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+    }
+
+    fn fill(len: usize, seed: u64) -> Vec<f32> {
+        // LCG so tests are deterministic without any RNG dependency
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = 1e-5f32.max(w.abs() * 1e-5);
+            assert!((g - w).abs() <= tol, "{tag}: elem {i}: got {g}, want {w}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_odd_shapes() {
+        // non-multiple-of-tile dims on every flag combo, including m/n/k = 1
+        let shapes = [(3, 7, 5), (1, 13, 9), (17, 1, 4), (5, 150, 3), (9, 37, 1), (13, 257, 11)];
+        for &(m, k, n) in &shapes {
+            for &(ta, tb) in &[(false, false), (true, false), (false, true), (true, true)] {
+                let a = fill(m * k, (m * 31 + k * 7 + ta as usize) as u64);
+                let b = fill(k * n, (k * 17 + n * 3 + tb as usize) as u64);
+                let mut want = vec![0.0; m * n];
+                naive(&a, &b, m, k, n, ta, tb, &mut want);
+                let mut got = vec![0.0; m * n];
+                matmul_f32(&a, &b, m, k, n, ta, tb, &mut got);
+                assert_close(&got, &want, &format!("mm {m}x{k}x{n} ta={ta} tb={tb}"));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_per_slice_naive() {
+        let (bs, m, k, n) = (3, 4, 9, 5);
+        for &(ta, tb) in &[(false, false), (false, true), (true, false), (true, true)] {
+            let a = fill(bs * m * k, 5);
+            let b = fill(bs * k * n, 6);
+            let mut want = vec![0.0; bs * m * n];
+            for i in 0..bs {
+                naive(
+                    &a[i * m * k..(i + 1) * m * k],
+                    &b[i * k * n..(i + 1) * k * n],
+                    m,
+                    k,
+                    n,
+                    ta,
+                    tb,
+                    &mut want[i * m * n..(i + 1) * m * n],
+                );
+            }
+            let mut got = vec![0.0; bs * m * n];
+            bmm_f32(&a, &b, bs, m, k, n, ta, tb, &mut got);
+            assert_close(&got, &want, &format!("bmm ta={ta} tb={tb}"));
+        }
+    }
+
+    #[test]
+    fn thread_count_is_bitwise_invisible() {
+        // ARA_THREADS=1 vs ARA_THREADS=4 must agree bit-for-bit; the env var
+        // feeds the same `nt` parameter exercised explicitly here.
+        for &(m, k, n) in &[(37, 53, 29), (2, 301, 511), (64, 64, 64)] {
+            for &(ta, tb) in &[(false, false), (false, true), (true, false), (true, true)] {
+                let a = fill(m * k, 11);
+                let b = fill(k * n, 12);
+                let mut one = vec![0.0; m * n];
+                matmul_f32_nt(&a, &b, m, k, n, ta, tb, &mut one, 1);
+                let mut four = vec![0.0; m * n];
+                matmul_f32_nt(&a, &b, m, k, n, ta, tb, &mut four, 4);
+                assert!(
+                    one.iter().zip(&four).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "threaded result differs bitwise at {m}x{k}x{n} ta={ta} tb={tb}"
+                );
+            }
+        }
+        let (bs, m, k, n) = (5, 3, 40, 17);
+        let a = fill(bs * m * k, 13);
+        let b = fill(bs * k * n, 14);
+        let mut one = vec![0.0; bs * m * n];
+        bmm_f32_nt(&a, &b, bs, m, k, n, false, true, &mut one, 1);
+        let mut four = vec![0.0; bs * m * n];
+        bmm_f32_nt(&a, &b, bs, m, k, n, false, true, &mut four, 4);
+        assert!(one.iter().zip(&four).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn f64_kernel_matches_f32_reference_shape() {
+        let (m, k, n) = (6, 11, 7);
+        let a32 = fill(m * k, 21);
+        let b32 = fill(k * n, 22);
+        let a: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+        let b: Vec<f64> = b32.iter().map(|&x| x as f64).collect();
+        let mut want32 = vec![0.0f32; m * n];
+        naive(&a32, &b32, m, k, n, false, false, &mut want32);
+        let mut got = vec![0.0f64; m * n];
+        matmul_f64(&a, &b, m, k, n, false, false, &mut got);
+        for (g, w) in got.iter().zip(&want32) {
+            assert!((g - *w as f64).abs() < 1e-4, "f64 kernel diverged: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn zero_k_leaves_zeros() {
+        let mut out = vec![0.0f32; 6];
+        matmul_f32(&[], &[], 2, 0, 3, false, false, &mut out);
+        assert_eq!(out, vec![0.0; 6]);
+        let mut out = vec![0.0f32; 6];
+        matmul_f32(&[], &[], 2, 0, 3, false, true, &mut out);
+        assert_eq!(out, vec![0.0; 6]);
+    }
+}

@@ -9,8 +9,8 @@
 //! * L2/L1 (python/compile, build time only) — JAX transformer families and
 //!   Pallas kernels, AOT-lowered to HLO text consumed by [`runtime`].
 //!
-//! The public API is organized bottom-up: substrates ([`tensor`], [`linalg`],
-//! [`data`], [`model`], [`runtime`]), the compression stack ([`svd`],
+//! The public API is organized bottom-up: substrates ([`tensor`], [`kernels`],
+//! [`linalg`], [`data`], [`model`], [`runtime`]), the compression stack ([`svd`],
 //! [`ara`], [`baselines`], [`quant`], [`lora`]), and the harnesses
 //! ([`training`], [`eval`], [`serving`], [`coordinator`], [`report`]).
 
@@ -22,6 +22,7 @@ pub mod data;
 pub mod error;
 pub mod eval;
 pub mod json;
+pub mod kernels;
 pub mod linalg;
 pub mod lora;
 pub mod model;

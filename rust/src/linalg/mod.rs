@@ -59,19 +59,7 @@ impl Mat {
         assert_eq!(self.cols, other.rows, "matmul inner dim");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        crate::kernels::matmul_f64(&self.data, &other.data, m, k, n, false, false, &mut out.data);
         out
     }
 

@@ -8,10 +8,12 @@
 //! executions hand back one buffer per output with no tuple-decompose or
 //! literal round-trip (the PJRT path needs both).
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 
-use super::exec::{check_feed, DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
+use super::exec::{check_feed, DeviceArg, DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
+use super::interp::{Arena, Arg};
 use super::programs::{build, Program};
 use crate::config::{model_by_name, Paths};
 use crate::tensor::Tensor;
@@ -47,7 +49,7 @@ impl Backend for CpuBackend {
     fn load(&self, dir: &Path, name: &str) -> Result<Exe> {
         let cfg = self.model_of(dir)?;
         let program = build(&cfg, &self.paths, name)?;
-        Ok(Exe::new(Box::new(CpuExe { program })))
+        Ok(Exe::new(Box::new(CpuExe { program, arena: RefCell::new(Arena::new()) })))
     }
 
     fn has(&self, dir: &Path, name: &str) -> bool {
@@ -74,16 +76,19 @@ impl Backend for CpuBackend {
     }
 }
 
-/// One interpreted artifact.
+/// One interpreted artifact: the program (graph + manifest + cached
+/// [`Arena`]. The plan is computed once at load; the arena persists across
+/// executions so steady-state serving does no per-step allocation.
 pub struct CpuExe {
     program: Program,
+    arena: RefCell<Arena>,
 }
 
 impl CpuExe {
-    fn eval_feeds(&self, feeds: &[Feed]) -> Result<Vec<Value>> {
+    fn eval_args(&self, args: &mut [Arg]) -> Result<Vec<Value>> {
         self.program
             .graph
-            .eval(feeds, &self.program.outputs, &self.program.plan)
+            .eval_plan(args, &self.program.plan, &mut self.arena.borrow_mut())
             .map_err(|e| crate::anyhow!("{}: {e}", self.program.manifest.name))
     }
 }
@@ -95,22 +100,24 @@ impl Executable for CpuExe {
 
     fn run(&self, feeds: &HashMap<&str, Feed>) -> Result<Outputs> {
         let man = &self.program.manifest;
-        let mut args: Vec<Feed> = Vec::with_capacity(man.inputs.len());
+        let mut args: Vec<Arg> = Vec::with_capacity(man.inputs.len());
         for spec in &man.inputs {
             let feed = feeds.get(spec.name.as_str()).ok_or_else(|| {
                 crate::anyhow!("missing input `{}` for {}", spec.name, man.name)
             })?;
             check_feed(feed, spec)?;
-            args.push(match feed {
-                Feed::F32(t) => Feed::F32(*t),
-                Feed::I32(t) => Feed::I32(*t),
-            });
+            args.push(Arg::from_feed(feed));
         }
-        let values = self.eval_feeds(&args)?;
+        let values = self.eval_args(&mut args)?;
         Ok(Outputs::new(man.outputs.clone(), values))
     }
 
     fn run_device(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        let wrapped: Vec<DeviceArg> = args.iter().map(|&b| DeviceArg::Ref(b)).collect();
+        self.run_device_args(wrapped)
+    }
+
+    fn run_device_args(&self, args: Vec<DeviceArg>) -> Result<Vec<DeviceBuffer>> {
         let man = &self.program.manifest;
         if args.len() != man.inputs.len() {
             return Err(crate::anyhow!(
@@ -120,14 +127,12 @@ impl Executable for CpuExe {
                 args.len()
             ));
         }
-        let mut feeds: Vec<Feed> = Vec::with_capacity(args.len());
-        for (buf, spec) in args.iter().zip(&man.inputs) {
-            match buf {
-                DeviceBuffer::Host(v) => {
-                    let feed = v.as_feed();
-                    check_feed(&feed, spec)?;
-                    feeds.push(feed);
-                }
+        // Borrowed host values are bound without copying; owned host values
+        // are moved into the evaluator so it can recycle them in place.
+        let mut bound: Vec<Arg> = Vec::with_capacity(args.len());
+        for (darg, spec) in args.into_iter().zip(&man.inputs) {
+            match darg.buffer() {
+                DeviceBuffer::Host(v) => check_feed(&v.as_feed(), spec)?,
                 #[cfg(feature = "pjrt")]
                 DeviceBuffer::Pjrt(_) => {
                     return Err(crate::anyhow!(
@@ -136,8 +141,14 @@ impl Executable for CpuExe {
                     ));
                 }
             }
+            bound.push(match darg {
+                DeviceArg::Ref(DeviceBuffer::Host(v)) => Arg::from_feed(&v.as_feed()),
+                DeviceArg::Own(DeviceBuffer::Host(v)) => Arg::from_value(v),
+                #[cfg(feature = "pjrt")]
+                _ => unreachable!("pjrt buffers rejected above"),
+            });
         }
-        let values = self.eval_feeds(&feeds)?;
+        let values = self.eval_args(&mut bound)?;
         Ok(values.into_iter().map(DeviceBuffer::Host).collect())
     }
 }

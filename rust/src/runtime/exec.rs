@@ -79,6 +79,23 @@ pub enum DeviceBuffer {
     Pjrt(xla::PjRtBuffer),
 }
 
+/// One device argument for [`Executable::run_device_args`]: borrowed for
+/// buffers the caller retains across calls (weights), owned for per-step
+/// buffers the backend may consume or mutate in place (KV caches, tokens).
+pub enum DeviceArg<'a> {
+    Ref(&'a DeviceBuffer),
+    Own(DeviceBuffer),
+}
+
+impl DeviceArg<'_> {
+    pub fn buffer(&self) -> &DeviceBuffer {
+        match self {
+            DeviceArg::Ref(b) => b,
+            DeviceArg::Own(b) => b,
+        }
+    }
+}
+
 /// Named outputs of one execution (host values).
 pub struct Outputs {
     pub(crate) names: Vec<String>,
@@ -126,6 +143,15 @@ pub trait Executable {
     /// order. Returns exactly one buffer per manifest output (backends
     /// normalize tuple-rooted results internally); outputs stay on device.
     fn run_device(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>>;
+
+    /// Like [`Executable::run_device`], but arguments may be passed owned
+    /// so the backend can recycle their storage in place (the CPU
+    /// interpreter mutates owned KV caches instead of cloning them).
+    /// Defaults to borrowing everything, which every backend supports.
+    fn run_device_args(&self, args: Vec<DeviceArg>) -> Result<Vec<DeviceBuffer>> {
+        let refs: Vec<&DeviceBuffer> = args.iter().map(|a| a.buffer()).collect();
+        self.run_device(&refs)
+    }
 }
 
 /// The concrete executable handle call sites hold (`Rc<Exe>`): a thin
@@ -153,6 +179,12 @@ impl Exe {
     /// Execute with device-resident buffers in manifest input order.
     pub fn run_device(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
         self.inner.run_device(args)
+    }
+
+    /// Execute with mixed borrowed/owned device buffers; owned buffers may
+    /// be consumed and recycled in place by the backend.
+    pub fn run_device_args(&self, args: Vec<DeviceArg>) -> Result<Vec<DeviceBuffer>> {
+        self.inner.run_device_args(args)
     }
 }
 

@@ -348,8 +348,7 @@ mod tests {
     fn loss_and_grad(g: &Graph, loss: Id, grads: &[Id], x: &Tensor) -> (f32, Vec<Tensor>) {
         let mut outs = vec![loss];
         outs.extend_from_slice(grads);
-        let plan = g.free_plan(&outs);
-        let vals = g.eval(&[Feed::F32(x)], &outs, &plan).unwrap();
+        let vals = g.eval(&[Feed::F32(x)], &outs).unwrap();
         let l = vals[0].to_f32_tensor().data[0];
         let gs = vals[1..].iter().map(|v| v.to_f32_tensor()).collect();
         (l, gs)
@@ -476,8 +475,7 @@ mod tests {
         let loss = g.reduce_sum(flat, 0);
         let grads = append_gradients(&mut g, loss, &[table]);
         let tt = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
-        let plan = g.free_plan(&[loss, grads[0]]);
-        let out = g.eval(&[Feed::F32(&tt)], &[loss, grads[0]], &plan).unwrap();
+        let out = g.eval(&[Feed::F32(&tt)], &[loss, grads[0]]).unwrap();
         assert_eq!(out[0].to_f32_tensor().data[0], 22.0); // 2×(5+6)
         // both gathers hit row 2 → gradient 2 on row 2, 0 elsewhere
         assert_eq!(out[1].to_f32_tensor().data, vec![0., 0., 0., 0., 2., 2.]);
@@ -495,10 +493,7 @@ mod tests {
         let grads = append_gradients(&mut g, loss, &[m]);
         let xt = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let mt = Tensor::from_vec(&[3], vec![1., 1., 1.]);
-        let plan = g.free_plan(&[grads[0]]);
-        let out = g
-            .eval(&[Feed::F32(&xt), Feed::F32(&mt)], &[grads[0]], &plan)
-            .unwrap();
+        let out = g.eval(&[Feed::F32(&xt), Feed::F32(&mt)], &[grads[0]]).unwrap();
         assert_eq!(out[0].to_f32_tensor().data, vec![5., 7., 9.]);
     }
 }

@@ -9,8 +9,18 @@
 //! Shapes are fully static and inferred at graph-construction time, so
 //! every kernel below runs without per-element shape checks.
 //!
+//! Execution is driven by a once-per-executable [`ExecPlan`] (last-use free
+//! lists, in-place donors, precomputed broadcast/transpose strides), a
+//! size-keyed buffer [`Arena`] that recycles dying values, and the blocked
+//! multi-threaded matmul kernels in [`crate::kernels`]. Owned inputs
+//! ([`Arg::OwnF32`]) may be consumed in place — the decode KV-cache update
+//! mutates its cache buffer instead of cloning it.
+//!
 //! [`CpuBackend`]: super::cpu::CpuBackend
 
+use std::collections::HashMap;
+
+use crate::kernels;
 use crate::runtime::exec::{Feed, Value};
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
@@ -458,22 +468,41 @@ impl Graph {
         plan
     }
 
-    /// Execute the graph over manifest-ordered feeds, returning the values
-    /// of `outputs` in order.
-    pub fn eval(&self, inputs: &[Feed], outputs: &[Id], plan: &[Vec<Id>]) -> Result<Vec<Value>> {
-        if inputs.len() != self.n_inputs {
+    /// Execute over borrowed feeds with a one-shot plan and arena (tests /
+    /// single-use graphs). Hot paths build an [`ExecPlan`] once and call
+    /// [`Graph::eval_plan`] with a persistent [`Arena`] instead.
+    pub fn eval(&self, inputs: &[Feed], outputs: &[Id]) -> Result<Vec<Value>> {
+        let plan = ExecPlan::new(self, outputs);
+        let mut args: Vec<Arg> = inputs.iter().map(Arg::from_feed).collect();
+        self.eval_plan(&mut args, &plan, &mut Arena::new())
+    }
+
+    /// Execute the graph over manifest-ordered argument bindings, returning
+    /// the values of `plan.outputs` in order. Owned arguments may be
+    /// consumed in place (KV caches); borrowed arguments are never copied
+    /// unless they appear as outputs. Dying intermediates are recycled
+    /// through `arena`, so repeated calls with the same plan reach a
+    /// steady state with no per-step allocation or planning work.
+    pub fn eval_plan(
+        &self,
+        args: &mut [Arg],
+        plan: &ExecPlan,
+        arena: &mut Arena,
+    ) -> Result<Vec<Value>> {
+        if args.len() != self.n_inputs {
             return Err(crate::anyhow!(
                 "graph expects {} inputs, got {}",
                 self.n_inputs,
-                inputs.len()
+                args.len()
             ));
         }
+        debug_assert_eq!(plan.free.len(), self.nodes.len(), "plan built for another graph");
         let mut vals: Vec<Option<Value>> = vec![None; self.nodes.len()];
         for id in 0..self.nodes.len() {
-            if matches!(self.nodes[id].op, Op::Input(_)) {
-                continue; // read through `inputs`, never materialized
+            if matches!(self.nodes[id].op, Op::Input(_) | Op::Const(_)) {
+                continue; // read through `args` / the graph, never materialized
             }
-            let v = self.exec_node(id, &vals, inputs)?;
+            let v = self.exec_node(id, &mut vals, args, plan, arena)?;
             debug_assert_eq!(
                 v.shape(),
                 self.nodes[id].shape.as_slice(),
@@ -481,17 +510,26 @@ impl Graph {
                 self.nodes[id].op
             );
             vals[id] = Some(v);
-            for &f in &plan[id] {
-                vals[f] = None;
+            for &f in &plan.free[id] {
+                if let Some(dead) = vals[f].take() {
+                    arena.put_value(dead);
+                }
             }
         }
-        let mut out = Vec::with_capacity(outputs.len());
-        for &o in outputs {
+        let mut out = Vec::with_capacity(plan.outputs.len());
+        for &o in &plan.outputs {
             match &self.nodes[o].op {
-                Op::Input(k) => out.push(match &inputs[*k] {
-                    Feed::F32(t) => Value::F32((*t).clone()),
-                    Feed::I32(t) => Value::I32((*t).clone()),
+                Op::Input(k) => out.push(match &mut args[*k] {
+                    Arg::F32(t) => Value::F32((*t).clone()),
+                    Arg::I32(t) => Value::I32((*t).clone()),
+                    Arg::OwnF32(t) => Value::F32(t.take().ok_or_else(|| {
+                        crate::anyhow!("output input node {o} already consumed")
+                    })?),
+                    Arg::OwnI32(t) => Value::I32(t.take().ok_or_else(|| {
+                        crate::anyhow!("output input node {o} already consumed")
+                    })?),
                 }),
+                Op::Const(v) => out.push(v.clone()),
                 _ => out.push(
                     vals[o]
                         .take()
@@ -503,15 +541,26 @@ impl Graph {
     }
 
     fn f32_of<'a>(
-        &self,
+        &'a self,
         vals: &'a [Option<Value>],
-        inputs: &'a [Feed<'a>],
+        args: &'a [Arg],
         id: Id,
     ) -> Result<&'a Tensor> {
         match &self.nodes[id].op {
-            Op::Input(k) => match &inputs[*k] {
-                Feed::F32(t) => Ok(t),
-                Feed::I32(_) => Err(crate::anyhow!("node {id}: expected f32 input")),
+            Op::Input(k) => match &args[*k] {
+                Arg::F32(t) => Ok(*t),
+                Arg::OwnF32(Some(t)) => Ok(t),
+                Arg::OwnF32(None) => {
+                    Err(crate::anyhow!("node {id}: f32 input consumed in place"))
+                }
+                Arg::I32(_) | Arg::OwnI32(_) => {
+                    Err(crate::anyhow!("node {id}: expected f32 input"))
+                }
+            },
+            // constants are read straight out of the graph — never cloned
+            Op::Const(v) => match v {
+                Value::F32(t) => Ok(t),
+                Value::I32(_) => Err(crate::anyhow!("node {id}: expected f32 const")),
             },
             _ => match vals[id].as_ref() {
                 Some(Value::F32(t)) => Ok(t),
@@ -522,15 +571,25 @@ impl Graph {
     }
 
     fn i32_of<'a>(
-        &self,
+        &'a self,
         vals: &'a [Option<Value>],
-        inputs: &'a [Feed<'a>],
+        args: &'a [Arg],
         id: Id,
     ) -> Result<&'a IntTensor> {
         match &self.nodes[id].op {
-            Op::Input(k) => match &inputs[*k] {
-                Feed::I32(t) => Ok(t),
-                Feed::F32(_) => Err(crate::anyhow!("node {id}: expected i32 input")),
+            Op::Input(k) => match &args[*k] {
+                Arg::I32(t) => Ok(*t),
+                Arg::OwnI32(Some(t)) => Ok(t),
+                Arg::OwnI32(None) => {
+                    Err(crate::anyhow!("node {id}: i32 input consumed in place"))
+                }
+                Arg::F32(_) | Arg::OwnF32(_) => {
+                    Err(crate::anyhow!("node {id}: expected i32 input"))
+                }
+            },
+            Op::Const(v) => match v {
+                Value::I32(t) => Ok(t),
+                Value::F32(_) => Err(crate::anyhow!("node {id}: expected i32 const")),
             },
             _ => match vals[id].as_ref() {
                 Some(Value::I32(t)) => Ok(t),
@@ -540,205 +599,394 @@ impl Graph {
         }
     }
 
-    fn exec_node(&self, id: Id, vals: &[Option<Value>], inputs: &[Feed]) -> Result<Value> {
+    /// Secure the planned donor buffer for `id`: an owned input argument or
+    /// a dying intermediate whose storage this node may overwrite in place.
+    /// Returns `None` (fall back to an arena buffer) when the donor is a
+    /// borrowed input.
+    fn take_donor(
+        &self,
+        id: Id,
+        plan: &ExecPlan,
+        vals: &mut [Option<Value>],
+        args: &mut [Arg],
+    ) -> Option<Tensor> {
+        let d = plan.donor[id]?;
+        match &self.nodes[d].op {
+            Op::Input(k) => match &mut args[*k] {
+                Arg::OwnF32(t) => t.take(),
+                _ => None,
+            },
+            _ => match vals[d].take() {
+                Some(Value::F32(t)) => Some(t),
+                Some(other) => {
+                    vals[d] = Some(other);
+                    None
+                }
+                None => None,
+            },
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn unary_exec(
+        &self,
+        id: Id,
+        x: Id,
+        vals: &mut [Option<Value>],
+        args: &mut [Arg],
+        plan: &ExecPlan,
+        arena: &mut Arena,
+        f: impl Fn(f32) -> f32,
+    ) -> Result<Value> {
+        if let Some(mut t) = self.take_donor(id, plan, vals, args) {
+            for v in t.data.iter_mut() {
+                *v = f(*v);
+            }
+            return Ok(Value::F32(t));
+        }
+        let xt = self.f32_of(vals, args, x)?;
+        let mut buf = arena.take(xt.data.len());
+        for (o, &v) in buf.iter_mut().zip(&xt.data) {
+            *o = f(v);
+        }
+        Ok(Value::F32(Tensor::from_vec(&self.nodes[id].shape, buf)))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn binary_exec(
+        &self,
+        id: Id,
+        a: Id,
+        b: Id,
+        vals: &mut [Option<Value>],
+        args: &mut [Arg],
+        plan: &ExecPlan,
+        arena: &mut Arena,
+        f: impl Fn(f32, f32) -> f32,
+    ) -> Result<Value> {
+        let out_shape = &self.nodes[id].shape;
+        let path = match &plan.aux[id] {
+            Aux::Ew(p) => p,
+            _ => return Err(crate::anyhow!("node {id}: missing elementwise plan")),
+        };
+        match path {
+            EwPath::Same => {
+                if let Some(mut t) = self.take_donor(id, plan, vals, args) {
+                    let donor = plan.donor[id].expect("donor taken ⇒ donor planned");
+                    if a == b {
+                        for v in t.data.iter_mut() {
+                            *v = f(*v, *v);
+                        }
+                    } else if donor == a {
+                        let bt = self.f32_of(vals, args, b)?;
+                        for (x, &y) in t.data.iter_mut().zip(&bt.data) {
+                            *x = f(*x, y);
+                        }
+                    } else {
+                        let at = self.f32_of(vals, args, a)?;
+                        for (y, &x) in t.data.iter_mut().zip(&at.data) {
+                            *y = f(x, *y);
+                        }
+                    }
+                    return Ok(Value::F32(t));
+                }
+                let at = self.f32_of(vals, args, a)?;
+                let bt = self.f32_of(vals, args, b)?;
+                let mut buf = arena.take(at.data.len());
+                for ((o, &x), &y) in buf.iter_mut().zip(&at.data).zip(&bt.data) {
+                    *o = f(x, y);
+                }
+                Ok(Value::F32(Tensor::from_vec(out_shape, buf)))
+            }
+            EwPath::ScalarR => {
+                if let Some(mut t) = self.take_donor(id, plan, vals, args) {
+                    let y = self.f32_of(vals, args, b)?.data[0];
+                    for x in t.data.iter_mut() {
+                        *x = f(*x, y);
+                    }
+                    return Ok(Value::F32(t));
+                }
+                let at = self.f32_of(vals, args, a)?;
+                let y = self.f32_of(vals, args, b)?.data[0];
+                let mut buf = arena.take(at.data.len());
+                for (o, &x) in buf.iter_mut().zip(&at.data) {
+                    *o = f(x, y);
+                }
+                Ok(Value::F32(Tensor::from_vec(out_shape, buf)))
+            }
+            EwPath::ScalarL => {
+                if let Some(mut t) = self.take_donor(id, plan, vals, args) {
+                    let x = self.f32_of(vals, args, a)?.data[0];
+                    for y in t.data.iter_mut() {
+                        *y = f(x, *y);
+                    }
+                    return Ok(Value::F32(t));
+                }
+                let x = self.f32_of(vals, args, a)?.data[0];
+                let bt = self.f32_of(vals, args, b)?;
+                let mut buf = arena.take(bt.data.len());
+                for (o, &y) in buf.iter_mut().zip(&bt.data) {
+                    *o = f(x, y);
+                }
+                Ok(Value::F32(Tensor::from_vec(out_shape, buf)))
+            }
+            EwPath::Bcast(sa, sb) => {
+                let at = self.f32_of(vals, args, a)?;
+                let bt = self.f32_of(vals, args, b)?;
+                let r = out_shape.len();
+                let mut buf = arena.take(numel(out_shape));
+                let mut idx = vec![0usize; r];
+                let (mut oa, mut ob) = (0usize, 0usize);
+                for slot in buf.iter_mut() {
+                    *slot = f(at.data[oa], bt.data[ob]);
+                    for d in (0..r).rev() {
+                        idx[d] += 1;
+                        oa += sa[d];
+                        ob += sb[d];
+                        if idx[d] < out_shape[d] {
+                            break;
+                        }
+                        idx[d] = 0;
+                        oa -= sa[d] * out_shape[d];
+                        ob -= sb[d] * out_shape[d];
+                    }
+                }
+                Ok(Value::F32(Tensor::from_vec(out_shape, buf)))
+            }
+        }
+    }
+
+    fn exec_node(
+        &self,
+        id: Id,
+        vals: &mut [Option<Value>],
+        args: &mut [Arg],
+        plan: &ExecPlan,
+        arena: &mut Arena,
+    ) -> Result<Value> {
         let node = &self.nodes[id];
         let out_shape = &node.shape;
-        let v = match &node.op {
-            Op::Input(_) => unreachable!("inputs are not materialized"),
-            Op::Const(v) => v.clone(),
-            Op::Neg(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, |v| -v)),
-            Op::Exp(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::exp)),
-            Op::Log(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::ln)),
-            Op::Sqrt(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::sqrt)),
+        let val = match &node.op {
+            Op::Input(_) | Op::Const(_) => unreachable!("inputs/consts are not materialized"),
+            Op::Neg(x) => self.unary_exec(id, *x, vals, args, plan, arena, |v| -v)?,
+            Op::Exp(x) => self.unary_exec(id, *x, vals, args, plan, arena, f32::exp)?,
+            Op::Log(x) => self.unary_exec(id, *x, vals, args, plan, arena, f32::ln)?,
+            Op::Sqrt(x) => self.unary_exec(id, *x, vals, args, plan, arena, f32::sqrt)?,
             Op::Rsqrt(x) => {
-                Value::F32(map1(self.f32_of(vals, inputs, *x)?, |v| 1.0 / v.sqrt()))
+                self.unary_exec(id, *x, vals, args, plan, arena, |v| 1.0 / v.sqrt())?
             }
-            Op::Tanh(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::tanh)),
-            Op::Sigmoid(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, |v| {
+            Op::Tanh(x) => self.unary_exec(id, *x, vals, args, plan, arena, f32::tanh)?,
+            Op::Sigmoid(x) => self.unary_exec(id, *x, vals, args, plan, arena, |v| {
                 1.0 / (1.0 + (-v).exp())
-            })),
-            Op::Cos(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::cos)),
-            Op::Sin(x) => Value::F32(map1(self.f32_of(vals, inputs, *x)?, f32::sin)),
-            Op::StopGrad(x) => Value::F32(self.f32_of(vals, inputs, *x)?.clone()),
+            })?,
+            Op::Cos(x) => self.unary_exec(id, *x, vals, args, plan, arena, f32::cos)?,
+            Op::Sin(x) => self.unary_exec(id, *x, vals, args, plan, arena, f32::sin)?,
+            Op::StopGrad(x) => self.unary_exec(id, *x, vals, args, plan, arena, |v| v)?,
             Op::CastF32(x) => {
-                let t = self.i32_of(vals, inputs, *x)?;
-                Value::F32(Tensor::from_vec(
-                    &t.shape,
-                    t.data.iter().map(|&v| v as f32).collect(),
-                ))
+                let t = self.i32_of(vals, args, *x)?;
+                let mut buf = arena.take(t.data.len());
+                for (o, &v) in buf.iter_mut().zip(&t.data) {
+                    *o = v as f32;
+                }
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
-            Op::Add(a, b) => Value::F32(ew2(
-                self.f32_of(vals, inputs, *a)?,
-                self.f32_of(vals, inputs, *b)?,
-                out_shape,
-                |x, y| x + y,
-            )),
-            Op::Sub(a, b) => Value::F32(ew2(
-                self.f32_of(vals, inputs, *a)?,
-                self.f32_of(vals, inputs, *b)?,
-                out_shape,
-                |x, y| x - y,
-            )),
-            Op::Mul(a, b) => Value::F32(ew2(
-                self.f32_of(vals, inputs, *a)?,
-                self.f32_of(vals, inputs, *b)?,
-                out_shape,
-                |x, y| x * y,
-            )),
-            Op::Div(a, b) => Value::F32(ew2(
-                self.f32_of(vals, inputs, *a)?,
-                self.f32_of(vals, inputs, *b)?,
-                out_shape,
-                |x, y| x / y,
-            )),
-            Op::Maximum(a, b) => Value::F32(ew2(
-                self.f32_of(vals, inputs, *a)?,
-                self.f32_of(vals, inputs, *b)?,
-                out_shape,
-                f32::max,
-            )),
-            Op::Less(a, b) => Value::F32(ew2(
-                self.f32_of(vals, inputs, *a)?,
-                self.f32_of(vals, inputs, *b)?,
-                out_shape,
-                |x, y| if x < y { 1.0 } else { 0.0 },
-            )),
+            Op::Add(a, b) => self.binary_exec(id, *a, *b, vals, args, plan, arena, |x, y| x + y)?,
+            Op::Sub(a, b) => self.binary_exec(id, *a, *b, vals, args, plan, arena, |x, y| x - y)?,
+            Op::Mul(a, b) => self.binary_exec(id, *a, *b, vals, args, plan, arena, |x, y| x * y)?,
+            Op::Div(a, b) => self.binary_exec(id, *a, *b, vals, args, plan, arena, |x, y| x / y)?,
+            Op::Maximum(a, b) => {
+                self.binary_exec(id, *a, *b, vals, args, plan, arena, f32::max)?
+            }
+            Op::Less(a, b) => self.binary_exec(id, *a, *b, vals, args, plan, arena, |x, y| {
+                if x < y {
+                    1.0
+                } else {
+                    0.0
+                }
+            })?,
             Op::Matmul { a, b, ta, tb } => {
-                let at = self.f32_of(vals, inputs, *a)?;
-                let bt = self.f32_of(vals, inputs, *b)?;
+                let at = self.f32_of(vals, args, *a)?;
+                let bt = self.f32_of(vals, args, *b)?;
                 let (m, n) = (out_shape[0], out_shape[1]);
                 let k = if *ta { at.shape[0] } else { at.shape[1] };
-                let mut out = vec![0.0f32; m * n];
-                mm(&at.data, &bt.data, m, k, n, *ta, *tb, &mut out);
-                Value::F32(Tensor::from_vec(out_shape, out))
+                let mut buf = arena.take_filled(m * n, 0.0);
+                kernels::matmul_f32(&at.data, &bt.data, m, k, n, *ta, *tb, &mut buf);
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::Bmm { a, b, ta, tb } => {
-                let at = self.f32_of(vals, inputs, *a)?;
-                let bt = self.f32_of(vals, inputs, *b)?;
+                let at = self.f32_of(vals, args, *a)?;
+                let bt = self.f32_of(vals, args, *b)?;
                 let (bs, m, n) = (out_shape[0], out_shape[1], out_shape[2]);
                 let k = if *ta { at.shape[1] } else { at.shape[2] };
-                let (sa, sb) = (at.shape[1] * at.shape[2], bt.shape[1] * bt.shape[2]);
-                let mut out = vec![0.0f32; bs * m * n];
-                for i in 0..bs {
-                    mm(
-                        &at.data[i * sa..(i + 1) * sa],
-                        &bt.data[i * sb..(i + 1) * sb],
-                        m,
-                        k,
-                        n,
-                        *ta,
-                        *tb,
-                        &mut out[i * m * n..(i + 1) * m * n],
-                    );
-                }
-                Value::F32(Tensor::from_vec(out_shape, out))
+                let mut buf = arena.take_filled(bs * m * n, 0.0);
+                kernels::bmm_f32(&at.data, &bt.data, bs, m, k, n, *ta, *tb, &mut buf);
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
-            Op::Reshape(x, shape) => match &self.nodes[*x].dtype {
+            Op::Reshape(x, shape) => match self.nodes[*x].dtype {
                 DType::F32 => {
-                    let t = self.f32_of(vals, inputs, *x)?;
-                    Value::F32(Tensor::from_vec(shape, t.data.clone()))
+                    if let Some(mut t) = self.take_donor(id, plan, vals, args) {
+                        t.shape = shape.clone(); // pure metadata change, no copy
+                        Value::F32(t)
+                    } else {
+                        let t = self.f32_of(vals, args, *x)?;
+                        let mut buf = arena.take(t.data.len());
+                        buf.copy_from_slice(&t.data);
+                        Value::F32(Tensor::from_vec(shape, buf))
+                    }
                 }
                 DType::I32 => {
-                    let t = self.i32_of(vals, inputs, *x)?;
+                    let t = self.i32_of(vals, args, *x)?;
                     Value::I32(IntTensor::from_vec(shape, t.data.clone()))
                 }
             },
-            Op::Transpose(x, perm) => {
-                let t = self.f32_of(vals, inputs, *x)?;
-                Value::F32(transpose(t, perm, out_shape))
+            Op::Transpose(x, _) => {
+                let t = self.f32_of(vals, args, *x)?;
+                match &plan.aux[id] {
+                    Aux::Walk(s) => Value::F32(walk_into(t, s, out_shape, arena)),
+                    _ => return Err(crate::anyhow!("node {id}: missing transpose plan")),
+                }
             }
-            Op::Broadcast(x, shape) => {
-                let t = self.f32_of(vals, inputs, *x)?;
-                Value::F32(broadcast_to(t, shape))
+            Op::Broadcast(x, _) => {
+                if let Some(t) = self.take_donor(id, plan, vals, args) {
+                    Value::F32(t) // same-shape broadcast is the identity
+                } else {
+                    let t = self.f32_of(vals, args, *x)?;
+                    match &plan.aux[id] {
+                        Aux::Walk(s) => Value::F32(walk_into(t, s, out_shape, arena)),
+                        _ => return Err(crate::anyhow!("node {id}: missing broadcast plan")),
+                    }
+                }
             }
             Op::Concat(xs, axis) => {
                 let mut parts = Vec::with_capacity(xs.len());
                 for &x in xs {
-                    parts.push(self.f32_of(vals, inputs, x)?);
+                    parts.push(self.f32_of(vals, args, x)?);
                 }
-                Value::F32(concat(&parts, *axis, out_shape))
+                let inner: usize = out_shape[*axis + 1..].iter().product();
+                let outer: usize = out_shape[..*axis].iter().product();
+                let mut buf = arena.take(numel(out_shape));
+                let mut pos = 0usize;
+                for o in 0..outer {
+                    for p in &parts {
+                        let len_p = p.shape[*axis] * inner;
+                        buf[pos..pos + len_p].copy_from_slice(&p.data[o * len_p..(o + 1) * len_p]);
+                        pos += len_p;
+                    }
+                }
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::Slice { x, axis, start, len } => {
-                let t = self.f32_of(vals, inputs, *x)?;
-                Value::F32(slice(t, *axis, *start, *len))
+                let (x, axis, start, len) = (*x, *axis, *start, *len);
+                let t = self.f32_of(vals, args, x)?;
+                let n_ax = t.shape[axis];
+                let inner: usize = t.shape[axis + 1..].iter().product();
+                let outer: usize = t.shape[..axis].iter().product();
+                let mut buf = arena.take(outer * len * inner);
+                for o in 0..outer {
+                    let src = (o * n_ax + start) * inner;
+                    buf[o * len * inner..(o + 1) * len * inner]
+                        .copy_from_slice(&t.data[src..src + len * inner]);
+                }
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::PadZero { x, axis, start, full } => {
-                let t = self.f32_of(vals, inputs, *x)?;
-                Value::F32(pad_zero(t, *axis, *start, *full))
+                let (x, axis, start, full) = (*x, *axis, *start, *full);
+                let t = self.f32_of(vals, args, x)?;
+                let len = t.shape[axis];
+                let inner: usize = t.shape[axis + 1..].iter().product();
+                let outer: usize = t.shape[..axis].iter().product();
+                let mut buf = arena.take_filled(outer * full * inner, 0.0);
+                for o in 0..outer {
+                    let dst = (o * full + start) * inner;
+                    let src = o * len * inner;
+                    buf[dst..dst + len * inner].copy_from_slice(&t.data[src..src + len * inner]);
+                }
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::ReduceSum(x, axis) => {
-                let t = self.f32_of(vals, inputs, *x)?;
-                Value::F32(reduce(t, *axis, out_shape, 0.0, |acc, v| acc + v))
+                let t = self.f32_of(vals, args, *x)?;
+                Value::F32(reduce_into(t, *axis, out_shape, 0.0, |acc, v| acc + v, arena))
             }
             Op::ReduceMax(x, axis) => {
-                let t = self.f32_of(vals, inputs, *x)?;
-                Value::F32(reduce(t, *axis, out_shape, f32::NEG_INFINITY, f32::max))
+                let t = self.f32_of(vals, args, *x)?;
+                Value::F32(reduce_into(t, *axis, out_shape, f32::NEG_INFINITY, f32::max, arena))
             }
             Op::Gather { table, idx } => {
-                let tt = self.f32_of(vals, inputs, *table)?;
-                let it = self.i32_of(vals, inputs, *idx)?;
-                let (v, d) = (tt.shape[0], tt.shape[1]);
-                let mut out = Vec::with_capacity(it.data.len() * d);
-                for &i in &it.data {
+                let tt = self.f32_of(vals, args, *table)?;
+                let it = self.i32_of(vals, args, *idx)?;
+                let (rows, d) = (tt.shape[0], tt.shape[1]);
+                let mut buf = arena.take(it.data.len() * d);
+                for (j, &i) in it.data.iter().enumerate() {
                     let i = i as usize;
-                    if i >= v {
-                        return Err(crate::anyhow!("gather index {i} out of range (rows {v})"));
+                    if i >= rows {
+                        return Err(crate::anyhow!("gather index {i} out of range (rows {rows})"));
                     }
-                    out.extend_from_slice(&tt.data[i * d..(i + 1) * d]);
+                    buf[j * d..(j + 1) * d].copy_from_slice(&tt.data[i * d..(i + 1) * d]);
                 }
-                Value::F32(Tensor::from_vec(out_shape, out))
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::TakeLast { x, idx } => {
-                let xt = self.f32_of(vals, inputs, *x)?;
-                let it = self.i32_of(vals, inputs, *idx)?;
+                let xt = self.f32_of(vals, args, *x)?;
+                let it = self.i32_of(vals, args, *idx)?;
                 let n = *xt.shape.last().unwrap();
-                let mut out = Vec::with_capacity(it.data.len());
+                let mut buf = arena.take(it.data.len());
                 for (j, &i) in it.data.iter().enumerate() {
                     let i = i as usize;
                     if i >= n {
                         return Err(crate::anyhow!("take_last index {i} out of range ({n})"));
                     }
-                    out.push(xt.data[j * n + i]);
+                    buf[j] = xt.data[j * n + i];
                 }
-                Value::F32(Tensor::from_vec(out_shape, out))
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::ScatterAddRows { idx, upd, rows } => {
-                let it = self.i32_of(vals, inputs, *idx)?;
-                let ut = self.f32_of(vals, inputs, *upd)?;
+                let rows = *rows;
+                let it = self.i32_of(vals, args, *idx)?;
+                let ut = self.f32_of(vals, args, *upd)?;
                 let d = *ut.shape.last().unwrap();
-                let mut out = vec![0.0f32; rows * d];
+                let mut buf = arena.take_filled(rows * d, 0.0);
                 for (j, &i) in it.data.iter().enumerate() {
                     let i = i as usize;
-                    if i >= *rows {
+                    if i >= rows {
                         return Err(crate::anyhow!("scatter index {i} out of range ({rows})"));
                     }
-                    let dst = &mut out[i * d..(i + 1) * d];
+                    let dst = &mut buf[i * d..(i + 1) * d];
                     let src = &ut.data[j * d..(j + 1) * d];
                     for (a, b) in dst.iter_mut().zip(src) {
                         *a += b;
                     }
                 }
-                Value::F32(Tensor::from_vec(out_shape, out))
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::ScatterLast { idx, upd, n } => {
-                let it = self.i32_of(vals, inputs, *idx)?;
-                let ut = self.f32_of(vals, inputs, *upd)?;
-                let mut out = vec![0.0f32; ut.data.len() * n];
+                let n = *n;
+                let it = self.i32_of(vals, args, *idx)?;
+                let ut = self.f32_of(vals, args, *upd)?;
+                let mut buf = arena.take_filled(ut.data.len() * n, 0.0);
                 for (j, (&i, &u)) in it.data.iter().zip(&ut.data).enumerate() {
                     let i = i as usize;
-                    if i >= *n {
+                    if i >= n {
                         return Err(crate::anyhow!("scatter index {i} out of range ({n})"));
                     }
-                    out[j * n + i] = u;
+                    buf[j * n + i] = u;
                 }
-                Value::F32(Tensor::from_vec(out_shape, out))
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
             Op::UpdateAt { cache, kv, pos } => {
-                let ct = self.f32_of(vals, inputs, *cache)?;
-                let kt = self.f32_of(vals, inputs, *kv)?;
-                let pt = self.i32_of(vals, inputs, *pos)?;
+                // steal the dying cache (decode steady state: zero copies);
+                // fall back to one copy when the cache is borrowed/live
+                let mut ct = match self.take_donor(id, plan, vals, args) {
+                    Some(t) => t,
+                    None => {
+                        let c = self.f32_of(vals, args, *cache)?;
+                        let mut buf = arena.take(c.data.len());
+                        buf.copy_from_slice(&c.data);
+                        Tensor::from_vec(&c.shape, buf)
+                    }
+                };
+                let kt = self.f32_of(vals, args, *kv)?;
+                let pt = self.i32_of(vals, args, *pos)?;
                 let (b, h, s, d) = (ct.shape[0], ct.shape[1], ct.shape[2], ct.shape[3]);
-                let mut out = ct.data.clone();
                 for bb in 0..b {
                     let p = pt.data[bb] as usize;
                     if p >= s {
@@ -747,16 +995,241 @@ impl Graph {
                     for hh in 0..h {
                         let dst = (bb * h + hh) * s * d + p * d;
                         let src = (bb * h + hh) * d;
-                        out[dst..dst + d].copy_from_slice(&kt.data[src..src + d]);
+                        ct.data[dst..dst + d].copy_from_slice(&kt.data[src..src + d]);
                     }
                 }
-                Value::F32(Tensor::from_vec(out_shape, out))
+                Value::F32(ct)
             }
             Op::Iota { len } => {
-                Value::F32(Tensor::from_vec(&[*len], (0..*len).map(|i| i as f32).collect()))
+                let mut buf = arena.take(*len);
+                for (i, slot) in buf.iter_mut().enumerate() {
+                    *slot = i as f32;
+                }
+                Value::F32(Tensor::from_vec(out_shape, buf))
             }
         };
-        Ok(v)
+        Ok(val)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution plan, argument bindings, buffer arena
+// ---------------------------------------------------------------------------
+
+/// One bound input for [`Graph::eval_plan`]: borrowed for tensors the
+/// caller retains (weights), owned for per-step values the evaluator may
+/// consume in place (KV caches, tokens).
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a IntTensor),
+    OwnF32(Option<Tensor>),
+    OwnI32(Option<IntTensor>),
+}
+
+impl<'a> Arg<'a> {
+    pub fn from_feed(f: &Feed<'a>) -> Arg<'a> {
+        match f {
+            Feed::F32(t) => Arg::F32(t),
+            Feed::I32(t) => Arg::I32(t),
+        }
+    }
+
+    pub fn from_value(v: Value) -> Arg<'a> {
+        match v {
+            Value::F32(t) => Arg::OwnF32(Some(t)),
+            Value::I32(t) => Arg::OwnI32(Some(t)),
+        }
+    }
+}
+
+/// Elementwise dispatch decided once at plan time from the static shapes.
+enum EwPath {
+    /// Both operands already have the output shape.
+    Same,
+    /// Right operand is a scalar, left has the output shape.
+    ScalarR,
+    /// Left operand is a scalar, right has the output shape.
+    ScalarL,
+    /// General broadcast: precomputed per-dim strides for both operands.
+    Bcast(Vec<usize>, Vec<usize>),
+}
+
+/// Per-node precomputed execution metadata.
+enum Aux {
+    None,
+    Ew(EwPath),
+    /// Per-output-dim input strides (transpose gather / broadcast walk).
+    Walk(Vec<usize>),
+}
+
+/// Everything the evaluator precomputes once per (graph, outputs): last-use
+/// free lists, in-place donors, and stride/broadcast walks. Built once at
+/// artifact load and reused for every execution, so the per-node hot path
+/// does no shape/stride math and no planning.
+pub struct ExecPlan {
+    pub outputs: Vec<Id>,
+    /// For each node, which earlier values die after it runs.
+    free: Vec<Vec<Id>>,
+    /// For each node, the operand whose buffer it may overwrite in place
+    /// (its last use, not an output, not a constant, compatible layout).
+    donor: Vec<Option<Id>>,
+    aux: Vec<Aux>,
+}
+
+impl ExecPlan {
+    pub fn new(g: &Graph, outputs: &[Id]) -> ExecPlan {
+        let n = g.nodes.len();
+        let mut last_use = vec![usize::MAX; n];
+        for (id, node) in g.nodes.iter().enumerate() {
+            for o in node.op.operands() {
+                last_use[o] = id; // ids ascend, so the final write is the max
+            }
+        }
+        let free = g.free_plan(outputs);
+        let mut donor: Vec<Option<Id>> = vec![None; n];
+        let mut aux: Vec<Aux> = Vec::with_capacity(n);
+        let donatable = |o: Id, id: Id, shape: &[usize]| -> bool {
+            last_use[o] == id
+                && !outputs.contains(&o)
+                && !matches!(g.nodes[o].op, Op::Const(_))
+                && g.nodes[o].shape == shape
+        };
+        for (id, node) in g.nodes.iter().enumerate() {
+            let out_shape = node.shape.as_slice();
+            let a = match &node.op {
+                Op::Neg(x)
+                | Op::Exp(x)
+                | Op::Log(x)
+                | Op::Sqrt(x)
+                | Op::Rsqrt(x)
+                | Op::Tanh(x)
+                | Op::Sigmoid(x)
+                | Op::Cos(x)
+                | Op::Sin(x)
+                | Op::StopGrad(x) => {
+                    if donatable(*x, id, out_shape) {
+                        donor[id] = Some(*x);
+                    }
+                    Aux::None
+                }
+                Op::Reshape(x, _) if node.dtype == DType::F32 => {
+                    // shapes differ but the flat buffer is reusable as-is
+                    if last_use[*x] == id
+                        && !outputs.contains(x)
+                        && !matches!(g.nodes[*x].op, Op::Const(_))
+                        && numel(&g.nodes[*x].shape) == numel(out_shape)
+                    {
+                        donor[id] = Some(*x);
+                    }
+                    Aux::None
+                }
+                Op::Add(a, b)
+                | Op::Sub(a, b)
+                | Op::Mul(a, b)
+                | Op::Div(a, b)
+                | Op::Maximum(a, b)
+                | Op::Less(a, b) => {
+                    let sa = g.nodes[*a].shape.as_slice();
+                    let sb = g.nodes[*b].shape.as_slice();
+                    let path = if sa == out_shape && sb == out_shape {
+                        if donatable(*a, id, out_shape) {
+                            donor[id] = Some(*a);
+                        } else if *b != *a && donatable(*b, id, out_shape) {
+                            donor[id] = Some(*b);
+                        }
+                        EwPath::Same
+                    } else if numel(sb) == 1 && sa == out_shape {
+                        if donatable(*a, id, out_shape) {
+                            donor[id] = Some(*a);
+                        }
+                        EwPath::ScalarR
+                    } else if numel(sa) == 1 && sb == out_shape {
+                        if donatable(*b, id, out_shape) {
+                            donor[id] = Some(*b);
+                        }
+                        EwPath::ScalarL
+                    } else {
+                        EwPath::Bcast(bcast_strides(sa, out_shape), bcast_strides(sb, out_shape))
+                    };
+                    Aux::Ew(path)
+                }
+                Op::Transpose(x, perm) => {
+                    let xs = &g.nodes[*x].shape;
+                    let r = out_shape.len();
+                    let mut in_strides = vec![1usize; r];
+                    for d in (0..r.saturating_sub(1)).rev() {
+                        in_strides[d] = in_strides[d + 1] * xs[d + 1];
+                    }
+                    Aux::Walk(perm.iter().map(|&p| in_strides[p]).collect())
+                }
+                Op::Broadcast(x, shape) => {
+                    if donatable(*x, id, shape) {
+                        donor[id] = Some(*x);
+                    }
+                    Aux::Walk(bcast_strides(&g.nodes[*x].shape, shape))
+                }
+                Op::UpdateAt { cache, .. } => {
+                    if donatable(*cache, id, out_shape) {
+                        donor[id] = Some(*cache);
+                    }
+                    Aux::None
+                }
+                _ => Aux::None,
+            };
+            aux.push(a);
+        }
+        ExecPlan { outputs: outputs.to_vec(), free, donor, aux }
+    }
+}
+
+/// Size-keyed recycling pool for f32 buffers: dying graph values are
+/// returned here and handed back to later nodes of the same size, so
+/// steady-state execution (the decode loop, repeated train steps) does no
+/// per-step heap churn.
+#[derive(Default)]
+pub struct Arena {
+    pool: HashMap<usize, Vec<Vec<f32>>>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    fn put(&mut self, data: Vec<f32>) {
+        if data.is_empty() {
+            return;
+        }
+        let bucket = self.pool.entry(data.len()).or_default();
+        if bucket.len() < 16 {
+            bucket.push(data);
+        }
+    }
+
+    fn put_value(&mut self, v: Value) {
+        if let Value::F32(t) = v {
+            self.put(t.data);
+        }
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**;
+    /// the caller must overwrite every element.
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        match self.pool.get_mut(&len).and_then(|b| b.pop()) {
+            Some(buf) => buf,
+            None => vec![0.0; len],
+        }
+    }
+
+    /// A buffer of `len` elements, every element set to `v`.
+    fn take_filled(&mut self, len: usize, v: f32) -> Vec<f32> {
+        match self.pool.get_mut(&len).and_then(|b| b.pop()) {
+            Some(mut buf) => {
+                buf.fill(v);
+                buf
+            }
+            None => vec![v; len],
+        }
     }
 }
 
@@ -764,8 +1237,50 @@ impl Graph {
 // Kernels
 // ---------------------------------------------------------------------------
 
-fn map1(t: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
-    Tensor::from_vec(&t.shape, t.data.iter().map(|&x| f(x)).collect())
+/// Gather `t.data` through per-output-dim `strides` into a fresh buffer
+/// (transpose and broadcast share this walk; strides come from the plan).
+fn walk_into(t: &Tensor, strides: &[usize], out_shape: &[usize], arena: &mut Arena) -> Tensor {
+    let r = out_shape.len();
+    let mut buf = arena.take(numel(out_shape));
+    let mut idx = vec![0usize; r];
+    let mut off = 0usize;
+    for slot in buf.iter_mut() {
+        *slot = t.data[off];
+        for d in (0..r).rev() {
+            idx[d] += 1;
+            off += strides[d];
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+            off -= strides[d] * out_shape[d];
+        }
+    }
+    Tensor::from_vec(out_shape, buf)
+}
+
+fn reduce_into(
+    t: &Tensor,
+    axis: usize,
+    out_shape: &[usize],
+    init: f32,
+    f: impl Fn(f32, f32) -> f32,
+    arena: &mut Arena,
+) -> Tensor {
+    let n = t.shape[axis];
+    let outer: usize = t.shape[..axis].iter().product();
+    let inner: usize = t.shape[axis + 1..].iter().product();
+    let mut buf = arena.take_filled(outer * inner, init);
+    for o in 0..outer {
+        for kk in 0..n {
+            let base = (o * n + kk) * inner;
+            let orow = &mut buf[o * inner..(o + 1) * inner];
+            for (x, &v) in orow.iter_mut().zip(&t.data[base..base + inner]) {
+                *x = f(*x, v);
+            }
+        }
+    }
+    Tensor::from_vec(out_shape, buf)
 }
 
 /// Right-aligned broadcast strides of `shape` against `out` (0 where the
@@ -789,232 +1304,6 @@ fn bcast_strides(shape: &[usize], out: &[usize]) -> Vec<usize> {
     strides
 }
 
-/// Elementwise binary with numpy broadcasting to `out_shape`.
-fn ew2(a: &Tensor, b: &Tensor, out_shape: &[usize], f: impl Fn(f32, f32) -> f32) -> Tensor {
-    let n = numel(out_shape);
-    // fast paths
-    if a.shape == b.shape && a.shape.as_slice() == out_shape {
-        let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
-        return Tensor::from_vec(out_shape, data);
-    }
-    if b.data.len() == 1 && a.shape.as_slice() == out_shape {
-        let y = b.data[0];
-        return Tensor::from_vec(out_shape, a.data.iter().map(|&x| f(x, y)).collect());
-    }
-    if a.data.len() == 1 && b.shape.as_slice() == out_shape {
-        let x = a.data[0];
-        return Tensor::from_vec(out_shape, b.data.iter().map(|&y| f(x, y)).collect());
-    }
-    let r = out_shape.len();
-    let sa = bcast_strides(&a.shape, out_shape);
-    let sb = bcast_strides(&b.shape, out_shape);
-    let mut out = Vec::with_capacity(n);
-    let mut idx = vec![0usize; r];
-    let (mut oa, mut ob) = (0usize, 0usize);
-    for _ in 0..n {
-        out.push(f(a.data[oa], b.data[ob]));
-        for d in (0..r).rev() {
-            idx[d] += 1;
-            oa += sa[d];
-            ob += sb[d];
-            if idx[d] < out_shape[d] {
-                break;
-            }
-            idx[d] = 0;
-            oa -= sa[d] * out_shape[d];
-            ob -= sb[d] * out_shape[d];
-        }
-    }
-    Tensor::from_vec(out_shape, out)
-}
-
-fn broadcast_to(t: &Tensor, out_shape: &[usize]) -> Tensor {
-    if t.shape.as_slice() == out_shape {
-        return t.clone();
-    }
-    let n = numel(out_shape);
-    let r = out_shape.len();
-    let s = bcast_strides(&t.shape, out_shape);
-    let mut out = Vec::with_capacity(n);
-    let mut idx = vec![0usize; r];
-    let mut off = 0usize;
-    for _ in 0..n {
-        out.push(t.data[off]);
-        for d in (0..r).rev() {
-            idx[d] += 1;
-            off += s[d];
-            if idx[d] < out_shape[d] {
-                break;
-            }
-            idx[d] = 0;
-            off -= s[d] * out_shape[d];
-        }
-    }
-    Tensor::from_vec(out_shape, out)
-}
-
-/// C = op(A)·op(B) into `out` (len m*n, pre-zeroed by the caller).
-#[allow(clippy::too_many_arguments)]
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, ta: bool, tb: bool, out: &mut [f32]) {
-    match (ta, tb) {
-        (false, false) => {
-            // A (m,k) · B (k,n): ikj with row accumulation
-            for i in 0..m {
-                let orow = &mut out[i * n..(i + 1) * n];
-                for kk in 0..k {
-                    let av = a[i * k + kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
-                    }
-                }
-            }
-        }
-        (true, false) => {
-            // A stored (k,m); C = Aᵀ·B: kij with row accumulation
-            for kk in 0..k {
-                let arow = &a[kk * m..(kk + 1) * m];
-                let brow = &b[kk * n..(kk + 1) * n];
-                for i in 0..m {
-                    let av = arow[i];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let orow = &mut out[i * n..(i + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
-                    }
-                }
-            }
-        }
-        (false, true) => {
-            // B stored (n,k); C[i,j] = dot(A row i, B row j)
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    let brow = &b[j * k..(j + 1) * k];
-                    let mut acc = 0.0f32;
-                    for kk in 0..k {
-                        acc += arow[kk] * brow[kk];
-                    }
-                    orow[j] = acc;
-                }
-            }
-        }
-        (true, true) => {
-            // A (k,m), B (n,k); C[i,j] = Σ_k A[k,i]·B[j,k]
-            for i in 0..m {
-                for j in 0..n {
-                    let mut acc = 0.0f32;
-                    let brow = &b[j * k..(j + 1) * k];
-                    for kk in 0..k {
-                        acc += a[kk * m + i] * brow[kk];
-                    }
-                    out[i * n + j] = acc;
-                }
-            }
-        }
-    }
-}
-
-fn transpose(t: &Tensor, perm: &[usize], out_shape: &[usize]) -> Tensor {
-    let r = out_shape.len();
-    // row-major strides of the input
-    let mut in_strides = vec![1usize; r];
-    for d in (0..r.saturating_sub(1)).rev() {
-        in_strides[d] = in_strides[d + 1] * t.shape[d + 1];
-    }
-    // stride of out dim d is the input stride of perm[d]
-    let s: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
-    let n = numel(out_shape);
-    let mut out = Vec::with_capacity(n);
-    let mut idx = vec![0usize; r];
-    let mut off = 0usize;
-    for _ in 0..n {
-        out.push(t.data[off]);
-        for d in (0..r).rev() {
-            idx[d] += 1;
-            off += s[d];
-            if idx[d] < out_shape[d] {
-                break;
-            }
-            idx[d] = 0;
-            off -= s[d] * out_shape[d];
-        }
-    }
-    Tensor::from_vec(out_shape, out)
-}
-
-fn reduce(
-    t: &Tensor,
-    axis: usize,
-    out_shape: &[usize],
-    init: f32,
-    f: impl Fn(f32, f32) -> f32,
-) -> Tensor {
-    let n = t.shape[axis];
-    let outer: usize = t.shape[..axis].iter().product();
-    let inner: usize = t.shape[axis + 1..].iter().product();
-    let mut out = vec![init; outer * inner];
-    for o in 0..outer {
-        for kk in 0..n {
-            let base = (o * n + kk) * inner;
-            let orow = &mut out[o * inner..(o + 1) * inner];
-            for i in 0..inner {
-                orow[i] = f(orow[i], t.data[base + i]);
-            }
-        }
-    }
-    Tensor::from_vec(out_shape, out)
-}
-
-fn concat(parts: &[&Tensor], axis: usize, out_shape: &[usize]) -> Tensor {
-    let inner: usize = out_shape[axis + 1..].iter().product();
-    let outer: usize = out_shape[..axis].iter().product();
-    let mut out = Vec::with_capacity(numel(out_shape));
-    for o in 0..outer {
-        for p in parts {
-            let len_p = p.shape[axis];
-            let start = o * len_p * inner;
-            out.extend_from_slice(&p.data[start..start + len_p * inner]);
-        }
-    }
-    Tensor::from_vec(out_shape, out)
-}
-
-fn slice(t: &Tensor, axis: usize, start: usize, len: usize) -> Tensor {
-    let n = t.shape[axis];
-    let inner: usize = t.shape[axis + 1..].iter().product();
-    let outer: usize = t.shape[..axis].iter().product();
-    let mut shape = t.shape.clone();
-    shape[axis] = len;
-    let mut out = Vec::with_capacity(outer * len * inner);
-    for o in 0..outer {
-        let base = (o * n + start) * inner;
-        out.extend_from_slice(&t.data[base..base + len * inner]);
-    }
-    Tensor::from_vec(&shape, out)
-}
-
-fn pad_zero(t: &Tensor, axis: usize, start: usize, full: usize) -> Tensor {
-    let len = t.shape[axis];
-    let inner: usize = t.shape[axis + 1..].iter().product();
-    let outer: usize = t.shape[..axis].iter().product();
-    let mut shape = t.shape.clone();
-    shape[axis] = full;
-    let mut out = vec![0.0f32; outer * full * inner];
-    for o in 0..outer {
-        let dst = (o * full + start) * inner;
-        let src = o * len * inner;
-        out[dst..dst + len * inner].copy_from_slice(&t.data[src..src + len * inner]);
-    }
-    Tensor::from_vec(&shape, out)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1024,8 +1313,7 @@ mod tests {
     }
 
     fn run1(g: &Graph, out: Id, feeds: &[Feed]) -> Tensor {
-        let plan = g.free_plan(&[out]);
-        match g.eval(feeds, &[out], &plan).unwrap().remove(0) {
+        match g.eval(feeds, &[out]).unwrap().remove(0) {
             Value::F32(t) => t,
             Value::I32(_) => panic!("expected f32"),
         }
@@ -1110,8 +1398,7 @@ mod tests {
         let ix = g.input(&[2, 3], DType::F32);
         let s = g.reduce_sum(ix, 1);
         let m = g.reduce_max(ix, 0);
-        let plan = g.free_plan(&[s, m]);
-        let out = g.eval(&[Feed::F32(&x)], &[s, m], &plan).unwrap();
+        let out = g.eval(&[Feed::F32(&x)], &[s, m]).unwrap();
         assert_eq!(out[0].to_f32_tensor().data, vec![8., 3.]);
         assert_eq!(out[1].to_f32_tensor().data, vec![1., 5., 4.]);
     }
@@ -1215,10 +1502,7 @@ mod tests {
         let r = g.rsqrt(ix);
         let th = g.tanh(iy);
         let mx = g.maximum(ix, iy);
-        let plan = g.free_plan(&[r, th, mx]);
-        let out = g
-            .eval(&[Feed::F32(&x), Feed::F32(&y)], &[r, th, mx], &plan)
-            .unwrap();
+        let out = g.eval(&[Feed::F32(&x), Feed::F32(&y)], &[r, th, mx]).unwrap();
         let rt = out[0].to_f32_tensor();
         assert!((rt.data[0] - 2.0).abs() < 1e-6);
         assert!((rt.data[1] - 1.0).abs() < 1e-6);
@@ -1241,8 +1525,120 @@ mod tests {
             assert!(!l.contains(&a));
         }
         let x = t(&[2], vec![1., 2.]);
-        let out = g.eval(&[Feed::F32(&x)], &[c, b], &plan).unwrap();
+        let out = g.eval(&[Feed::F32(&x)], &[c, b]).unwrap();
         assert_eq!(out[0].to_f32_tensor().data, vec![4., 16.]);
         assert_eq!(out[1].to_f32_tensor().data, vec![2., 4.]);
+    }
+
+    #[test]
+    fn update_at_steals_owned_cache_in_place() {
+        // decode-shaped graph: cache input → update_at → output. With an
+        // owned cache argument the update must reuse the same allocation.
+        let mut g = Graph::default();
+        let c = g.input(&[1, 1, 3, 2], DType::F32);
+        let kv = g.input(&[1, 1, 2], DType::F32);
+        let p = g.input(&[1], DType::I32);
+        let up = g.update_at(c, kv, p);
+        let plan = ExecPlan::new(&g, &[up]);
+        let cache = Tensor::zeros(&[1, 1, 3, 2]);
+        let ptr = cache.data.as_ptr();
+        let kvt = t(&[1, 1, 2], vec![1., 2.]);
+        let pos = IntTensor::from_vec(&[1], vec![1]);
+        let mut args = vec![
+            Arg::from_value(Value::F32(cache)),
+            Arg::F32(&kvt),
+            Arg::I32(&pos),
+        ];
+        let out = g.eval_plan(&mut args, &plan, &mut Arena::new()).unwrap();
+        let Value::F32(got) = &out[0] else { panic!("expected f32") };
+        assert_eq!(got.data, vec![0., 0., 1., 2., 0., 0.]);
+        assert_eq!(got.data.as_ptr(), ptr, "cache must be updated in place");
+    }
+
+    #[test]
+    fn update_at_with_borrowed_cache_copies_and_preserves_input() {
+        let mut g = Graph::default();
+        let c = g.input(&[1, 1, 3, 2], DType::F32);
+        let kv = g.input(&[1, 1, 2], DType::F32);
+        let p = g.input(&[1], DType::I32);
+        let up = g.update_at(c, kv, p);
+        let cache = Tensor::zeros(&[1, 1, 3, 2]);
+        let kvt = t(&[1, 1, 2], vec![1., 2.]);
+        let pos = IntTensor::from_vec(&[1], vec![0]);
+        let got = run1(&g, up, &[Feed::F32(&cache), Feed::F32(&kvt), Feed::I32(&pos)]);
+        assert_eq!(got.data, vec![1., 2., 0., 0., 0., 0.]);
+        assert!(cache.data.iter().all(|&x| x == 0.0), "borrowed cache untouched");
+    }
+
+    #[test]
+    fn inplace_chain_reuses_owned_input_buffer() {
+        // x → exp (steals the owned input) → add(e, e) (steals e): the
+        // output must still live in the original allocation.
+        let mut g = Graph::default();
+        let x = g.input(&[4], DType::F32);
+        let e = g.exp(x);
+        let y = g.add(e, e);
+        let plan = ExecPlan::new(&g, &[y]);
+        let xt = t(&[4], vec![0.0, 1.0, -1.0, 0.5]);
+        let expect: Vec<f32> = xt.data.iter().map(|v| 2.0 * v.exp()).collect();
+        let ptr = xt.data.as_ptr();
+        let mut args = vec![Arg::from_value(Value::F32(xt))];
+        let out = g.eval_plan(&mut args, &plan, &mut Arena::new()).unwrap();
+        let Value::F32(got) = &out[0] else { panic!("expected f32") };
+        for (a, b) in got.data.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6, "got {a}, want {b}");
+        }
+        assert_eq!(got.data.as_ptr(), ptr, "chain must reuse the owned input buffer");
+    }
+
+    #[test]
+    fn plan_and_arena_are_stable_across_repeated_calls() {
+        // same plan + arena across calls (the decode steady state): results
+        // must be identical on every iteration even though buffers recycle
+        let mut g = Graph::default();
+        let a = g.input(&[2, 3], DType::F32);
+        let b = g.input(&[3], DType::F32);
+        let m = g.mul(a, b); // broadcast path
+        let e = g.exp(m); // unary in-place on the dying product
+        let s = g.reduce_sum(e, 1);
+        let plan = ExecPlan::new(&g, &[s]);
+        let mut arena = Arena::new();
+        let at = t(&[2, 3], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let bt = t(&[3], vec![1.0, 2.0, 3.0]);
+        let mut first: Option<Vec<f32>> = None;
+        for _ in 0..3 {
+            let mut args = vec![Arg::F32(&at), Arg::F32(&bt)];
+            let out = g.eval_plan(&mut args, &plan, &mut arena).unwrap();
+            let v = out[0].to_f32_tensor();
+            match &first {
+                None => first = Some(v.data.clone()),
+                Some(fst) => assert_eq!(&v.data, fst, "recycled buffers changed the result"),
+            }
+        }
+    }
+
+    #[test]
+    fn borrowed_weights_are_not_consumed_across_steps() {
+        // weights stay borrowed while owned per-step inputs are consumed:
+        // the same Arg vector pattern the serving engine uses
+        let mut g = Graph::default();
+        let w = g.input(&[2, 2], DType::F32);
+        let x = g.input(&[2, 2], DType::F32);
+        let y = g.matmul(x, w, false, false);
+        let z = g.exp(y);
+        let plan = ExecPlan::new(&g, &[z]);
+        let wt = t(&[2, 2], vec![1., 0., 0., 1.]);
+        let mut arena = Arena::new();
+        for step in 0..2 {
+            let xt = t(&[2, 2], vec![step as f32; 4]);
+            let mut args = vec![Arg::F32(&wt), Arg::from_value(Value::F32(xt))];
+            let out = g.eval_plan(&mut args, &plan, &mut arena).unwrap();
+            let v = out[0].to_f32_tensor();
+            let want = (step as f32).exp(); // x·I = x, entries are `step`
+            for got in &v.data {
+                assert!((got - want).abs() < 1e-6, "step {step}: {got} vs {want}");
+            }
+        }
+        assert_eq!(wt.data, vec![1., 0., 0., 1.]);
     }
 }

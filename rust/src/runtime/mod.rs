@@ -25,7 +25,7 @@ mod programs;
 mod xla;
 
 pub use cpu::CpuBackend;
-pub use exec::{DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
+pub use exec::{DeviceArg, DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
 pub use manifest::{Manifest, TensorSpec};
 pub use programs::{heuristic_ara_alloc, resolve_alloc};
 #[cfg(feature = "pjrt")]

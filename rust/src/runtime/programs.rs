@@ -15,19 +15,20 @@
 use std::collections::HashMap;
 
 use super::grad::append_gradients;
-use super::interp::{DType, Graph, Id};
+use super::interp::{DType, ExecPlan, Graph, Id};
 use super::manifest::{Manifest, TensorSpec};
 use crate::config::{ModelCfg, Paths};
 use crate::model::{aux_param_shapes, module_dims, Allocation, ModuleAlloc, ModuleDim};
 use crate::tensor::Tensor;
 use crate::Result;
 
-/// A compiled-for-the-interpreter artifact.
+/// A compiled-for-the-interpreter artifact. The [`ExecPlan`] (free lists,
+/// in-place donors, broadcast/transpose strides) is computed once here and
+/// reused by every execution — steady-state serving does no planning work.
 pub struct Program {
     pub graph: Graph,
     pub manifest: Manifest,
-    pub outputs: Vec<Id>,
-    pub plan: Vec<Vec<Id>>,
+    pub plan: ExecPlan,
 }
 
 /// Build the program for an artifact name.
@@ -562,8 +563,8 @@ impl<'a> Net<'a> {
             inputs: self.specs,
             outputs: out_names,
         };
-        let plan = self.g.free_plan(&outputs);
-        Program { graph: self.g, manifest, outputs, plan }
+        let plan = ExecPlan::new(&self.g, &outputs);
+        Program { graph: self.g, manifest, plan }
     }
 }
 

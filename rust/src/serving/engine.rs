@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use crate::config::ModelCfg;
 use crate::model::{Allocation, ModuleAlloc, WeightStore};
-use crate::runtime::{Backend, DeviceBuffer, Exe, Feed, Runtime};
+use crate::runtime::{Backend, DeviceArg, DeviceBuffer, Exe, Feed, Runtime};
 use crate::svd::FactoredModel;
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
@@ -139,11 +139,12 @@ impl Engine {
         }
         let toks = IntTensor::from_vec(&[b, p], toks);
         let tok_buf = self.backend.upload(&Feed::I32(&toks))?;
-        let mut args: Vec<&DeviceBuffer> = self.pre_weights.iter().collect();
-        args.push(&tok_buf);
+        // weights are borrowed (never copied); per-step tensors are owned
+        let mut args: Vec<DeviceArg> = self.pre_weights.iter().map(DeviceArg::Ref).collect();
+        args.push(DeviceArg::Own(tok_buf));
         let outs = self
             .prefill
-            .run_device(&args)
+            .run_device_args(args)
             .map_err(|e| crate::anyhow!("prefill: {e}"))?;
         stats.prefill_s = t0.elapsed().as_secs_f64();
 
@@ -184,15 +185,17 @@ impl Engine {
             let lens_t = IntTensor::from_vec(&[b], lens_host.clone());
             let tok_b = self.backend.upload(&Feed::I32(&tok_t))?;
             let lens_b = self.backend.upload(&Feed::I32(&lens_t))?;
-            let mut args: Vec<&DeviceBuffer> = self.dec_weights.iter().collect();
-            for c in &caches {
-                args.push(c);
+            // weights stay borrowed across steps; caches move in owned so
+            // the interpreter updates them in place (no per-layer clone)
+            let mut args: Vec<DeviceArg> = self.dec_weights.iter().map(DeviceArg::Ref).collect();
+            for c in caches.drain(..) {
+                args.push(DeviceArg::Own(c));
             }
-            args.push(&tok_b);
-            args.push(&lens_b);
+            args.push(DeviceArg::Own(tok_b));
+            args.push(DeviceArg::Own(lens_b));
             let outs = self
                 .decode
-                .run_device(&args)
+                .run_device_args(args)
                 .map_err(|e| crate::anyhow!("decode step {step}: {e}"))?;
             let mut it = outs.into_iter();
             let logit_buf = it

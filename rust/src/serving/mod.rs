@@ -3,9 +3,10 @@
 //! a dynamic batcher, and a threaded router front-end.
 //!
 //! The engine is the L3 hot path and is backend-agnostic: after
-//! construction, a decode step is one `run_device` call — weights and
-//! caches stay resident on the executing backend (real device buffers on
-//! PJRT, zero-copy host values on the default CPU interpreter); only the
+//! construction, a decode step is one `run_device_args` call — weights are
+//! passed borrowed (never copied), while KV caches move in owned so the
+//! backend can update them in place (real device buffers on PJRT,
+//! recycled-in-place host values on the default CPU interpreter); only the
 //! (batch,) token/length vectors cross the host boundary each step.
 
 mod batcher;

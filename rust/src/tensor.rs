@@ -54,25 +54,13 @@ impl Tensor {
         self.shape[1]
     }
 
-    /// C = A · B for 2-D tensors (ikj loop order, f32).
+    /// C = A · B for 2-D tensors (blocked/threaded kernel, f32).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2, "matmul inner dim");
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        crate::kernels::matmul_f32(&self.data, &other.data, m, k, n, false, false, &mut out);
         Tensor::from_vec(&[m, n], out)
     }
 
