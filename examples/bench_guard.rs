@@ -1,0 +1,149 @@
+//! Bench-health guard: parse the machine-readable bench baselines
+//! (`BENCH_PR2.json`, `BENCH_PR3.json`) with the in-crate JSON parser and
+//! exit non-zero when a required key is missing, non-numeric, or
+//! non-finite. Replaces the brittle `grep` checks the CI `bench-smoke` job
+//! used to run.
+//!
+//!   cargo run --release --example bench_guard            # real baselines
+//!   cargo run --release --example bench_guard -- --smoke # CI smoke run
+//!
+//! In `--smoke` mode the guard checks the `*_smoke` sections that an
+//! `ARA_BENCH_SMOKE=1` bench run emits; without it, the committed real
+//! baselines are checked (useful after `cargo bench` regeneration).
+
+use ara_compress::json::{parse, Json};
+
+struct Check {
+    file: &'static str,
+    section: String,
+    keys: Vec<String>,
+}
+
+fn required(smoke: bool) -> Vec<Check> {
+    let sfx = if smoke { "_smoke" } else { "" };
+    let s = |x: &str| x.to_string();
+    // perf_micro: smoke runs micro-llama (last decode batch 2), real runs
+    // minillama-s (last decode batch 4) — see benches/perf_micro.rs
+    let pm_keys = if smoke {
+        vec![
+            s("matmul_64x64x64_gflops"),
+            s("train_step_ms_micro-llama"),
+            s("score_dense_ms"),
+            s("score_masked_ms"),
+            s("decode_tok_s_dense_b2"),
+            s("decode_tok_s_uniform-80_b2"),
+        ]
+    } else {
+        vec![
+            s("matmul_128x128x128_gflops"),
+            s("train_step_ms_minillama-s"),
+            s("score_dense_ms"),
+            s("score_masked_ms"),
+            s("decode_tok_s_dense_b4"),
+            s("decode_tok_s_ara-80_b4"),
+        ]
+    };
+    // fig5 decode sweep: smoke covers dense/uniform-80 at the smallest
+    // batch; real covers the full alloc × batch grid (spot-check corners)
+    let f5_keys = if smoke {
+        vec![s("dense_b1_tok_s"), s("uniform-80_b1_tok_s")]
+    } else {
+        vec![s("dense_b1_tok_s"), s("uniform-60_b2_tok_s"), s("ara-80_b4_tok_s")]
+    };
+    // scheduler trace: smoke runs uniform-80 only
+    let sched_allocs: &[&str] = if smoke { &["uniform-80"] } else { &["uniform-80", "ara-80"] };
+    let mut sched_keys = Vec::new();
+    for a in sched_allocs {
+        for m in ["req_s", "tok_s", "p50_ms", "p95_ms"] {
+            sched_keys.push(format!("{a}_{m}"));
+        }
+    }
+    vec![
+        Check { file: "BENCH_PR2.json", section: format!("perf_micro{sfx}"), keys: pm_keys },
+        Check { file: "BENCH_PR2.json", section: format!("fig5_decode_tok_s{sfx}"), keys: f5_keys },
+        Check { file: "BENCH_PR3.json", section: format!("fig5_sched{sfx}"), keys: sched_keys },
+    ]
+}
+
+/// Repo-root baseline path via the crate's own root discovery
+/// (`ARA_ROOT` override, else walk up to configs/models.json).
+fn root_path(file: &str) -> std::path::PathBuf {
+    match ara_compress::config::Paths::discover() {
+        Ok(p) => p.configs.parent().map(|r| r.join(file)).unwrap_or_else(|| file.into()),
+        Err(_) => file.into(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+
+    for check in required(smoke) {
+        let path = root_path(check.file);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                failures.push(format!("{}: unreadable ({e})", check.file));
+                continue;
+            }
+        };
+        // a NaN/Infinity ever written by a bench is not valid JSON — the
+        // parse failure below catches it even for keys we don't list
+        let root = match parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                failures.push(format!("{}: parse error ({e})", check.file));
+                continue;
+            }
+        };
+        let section = match root.get(&check.section) {
+            Some(s) => s,
+            None => {
+                failures.push(format!("{}: missing section `{}`", check.file, check.section));
+                continue;
+            }
+        };
+        for key in &check.keys {
+            checked += 1;
+            match section.get(key).map(Json::as_f64) {
+                None => failures.push(format!(
+                    "{} [{}]: missing key `{key}`",
+                    check.file, check.section
+                )),
+                Some(Err(e)) => failures.push(format!(
+                    "{} [{}] {key}: not a number ({e})",
+                    check.file, check.section
+                )),
+                Some(Ok(v)) if !v.is_finite() => failures.push(format!(
+                    "{} [{}] {key}: non-finite value {v}",
+                    check.file, check.section
+                )),
+                Some(Ok(_)) => {}
+            }
+        }
+        // every value in a checked section must be finite, listed or not
+        if let Ok(pairs) = section.as_obj() {
+            for (k, v) in pairs {
+                if let Ok(x) = v.as_f64() {
+                    if !x.is_finite() {
+                        failures.push(format!(
+                            "{} [{}] {k}: non-finite value {x}",
+                            check.file, check.section
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!("bench_guard: OK ({checked} required keys present and finite, smoke={smoke})");
+    } else {
+        eprintln!("bench_guard: FAILED ({} problems)", failures.len());
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

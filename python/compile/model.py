@@ -401,10 +401,11 @@ def _cache_spec(cfg, batch):
     return out
 
 
-def _attend_cache(cfg, q, kc, vc, lens):
+def _attend_cache(cfg, q, kc, vc, lens, starts=None):
     """q: (b, nh, dh); kc/vc: (b, nkv, s, dh); lens: (b,) valid lengths.
 
-    Returns (b, nh, dh) attention over cached positions < lens.
+    Returns (b, nh, dh) attention over cached slots in [starts, lens)
+    (starts=None means 0 — the whole prefix).
     """
     b, nh, dh = q.shape
     nkv, s = kc.shape[1], kc.shape[2]
@@ -413,20 +414,27 @@ def _attend_cache(cfg, q, kc, vc, lens):
         kc = jnp.repeat(kc, rep, axis=1)
         vc = jnp.repeat(vc, rep, axis=1)
     scores = jnp.einsum("bhd,bhsd->bhs", q, kc) / jnp.sqrt(F32(dh))
-    valid = jnp.arange(s, dtype=I32)[None, None, :] < lens[:, None, None]
+    ramp = jnp.arange(s, dtype=I32)[None, None, :]
+    valid = ramp < lens[:, None, None]
+    if starts is not None:
+        valid = valid & (ramp >= starts[:, None, None])
     scores = jnp.where(valid, scores, jnp.float32(-1e30))
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhs,bhsd->bhd", p, vc)
 
 
 def make_decode(cfg, alloc, batch):
-    """One decode step: (weights…, caches…, tokens[b], lens[b]) →
-    (logits[b,v], caches'…). `lens` counts tokens already in the cache; the
-    new token is written at position `lens` and attended to inclusively.
+    """One decode step: (weights…, caches…, tokens[b], lens[b], starts[b]) →
+    (logits[b,v], caches'…). `lens` is the cache slot the new token is
+    written to (and the highest slot attended); `starts` is the first valid
+    slot of the request's window — slots below it hold left-pad garbage
+    from the ragged prefill and are masked out. The rope position is the
+    relative `lens - starts`; `starts = 0` reproduces the original math.
     """
     wspec = _to_spec3(spec_alloc(cfg, alloc))
     cspec = _cache_spec(cfg, batch)
-    spec = wspec + cspec + [("tokens", (batch,), I32), ("lens", (batch,), I32)]
+    spec = wspec + cspec + [("tokens", (batch,), I32), ("lens", (batch,), I32),
+                            ("starts", (batch,), I32)]
     names = [n for n, *_ in spec]
     unflatten = _bind(names)
     d, nh, nkv, dh = cfg["d_model"], cfg["n_heads"], cfg["n_kv_heads"], head_dim(cfg)
@@ -434,9 +442,10 @@ def make_decode(cfg, alloc, batch):
     def fn(*arrays):
         params = unflatten(arrays)
         tokens, lens = params["tokens"], params["lens"]
+        starts = params["starts"]
         b = batch
         h = params["embed"][tokens]                          # (b, d)
-        pos = lens                                           # (b,)
+        pos = lens - starts                                  # (b,) relative
         new_caches = []
         for i in range(cfg["n_layers"]):
             p = f"layers.{i}."
@@ -454,7 +463,7 @@ def make_decode(cfg, alloc, batch):
             kc = _scatter_cache(kc, k, lens)
             vc = _scatter_cache(vc, v, lens)
             new_caches += [kc, vc]
-            o = _attend_cache(cfg, q, kc, vc, lens + 1)
+            o = _attend_cache(cfg, q, kc, vc, lens + 1, starts)
             h = h + _linear_alloc(params, p + "attn.wo", o.reshape(b, d))
             x = rmsnorm(h, params[p + "ln2"])
             g = _linear_alloc(params, p + "mlp.wgate", x)
@@ -475,15 +484,30 @@ def _scatter_cache(cache, kv, lens):
     return jax.vmap(one)(cache, kv, lens)
 
 
-def make_prefill(cfg, alloc, batch):
-    """Prompt prefill: (weights…, tokens[b,P]) → (logits_last[b,v], caches…).
+def _masked_attention(q, k, v, scale, mask):
+    """causal_attention with an explicit (bh, t, t) boolean mask."""
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
 
-    Prompts are fixed-length P = cfg["prefill_len"] (the rust batcher pads);
-    caches are written at positions [0, P).
+
+def make_prefill(cfg, alloc, batch):
+    """Ragged prompt prefill: (weights…, tokens[b,P], lens[b]) →
+    (logits_last[b,v], caches…).
+
+    Left-pad masking contract (mirrored by rust/src/runtime/programs.rs):
+    each prompt occupies the rightmost ``lens[i]`` slots of its fixed-length
+    P = cfg["prefill_len"] row; pad slots get negative rope positions and
+    are excluded from attention as keys, so every row's outputs depend only
+    on its real tokens. Caches are written at the padded slot positions —
+    decode masks slots below ``starts = P - lens``. ``lens = P`` reproduces
+    the original fixed-length prefill math exactly.
     """
     P = cfg["prefill_len"]
     wspec = _to_spec3(spec_alloc(cfg, alloc))
-    spec = wspec + [("tokens", (batch, P), I32)]
+    spec = wspec + [("tokens", (batch, P), I32), ("lens", (batch,), I32)]
     names = [n for n, *_ in spec]
     unflatten = _bind(names)
     d, nh, nkv, dh = cfg["d_model"], cfg["n_heads"], cfg["n_kv_heads"], head_dim(cfg)
@@ -491,10 +515,15 @@ def make_prefill(cfg, alloc, batch):
 
     def fn(*arrays):
         params = unflatten(arrays)
-        tokens = params["tokens"]
+        tokens, lens = params["tokens"], params["lens"]
         b, t = batch, P
         h = params["embed"][tokens]
-        pos = jnp.broadcast_to(jnp.arange(t, dtype=I32)[None, :], (b, t))
+        pos = jnp.arange(t, dtype=I32)[None, :] - (t - lens[:, None])  # (b, t)
+        kvalid = jnp.arange(t, dtype=I32)[None, :] >= (t - lens[:, None])
+        causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+        # (b, t, t) → broadcast over heads to (b*nh, t, t)
+        mask = causal[None, :, :] & kvalid[:, None, :]
+        mask_bh = jnp.repeat(mask, nh, axis=0).reshape(b * nh, t, t)
         caches = []
         for i in range(cfg["n_layers"]):
             p = f"layers.{i}."
@@ -515,7 +544,7 @@ def make_prefill(cfg, alloc, batch):
             qp = q.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
             kp = kr.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
             vp = vr.transpose(0, 2, 1, 3).reshape(b * nh, t, dh)
-            o = causal_attention(qp, kp, vp, float(dh) ** -0.5)
+            o = _masked_attention(qp, kp, vp, float(dh) ** -0.5, mask_bh)
             o = o.reshape(b, nh, t, dh).transpose(0, 2, 1, 3).reshape(b * t, d)
             h = h + _linear_alloc(params, p + "attn.wo", o).reshape(b, t, d)
             x2 = rmsnorm(h.reshape(b * t, d), params[p + "ln2"])

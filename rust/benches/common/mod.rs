@@ -8,9 +8,7 @@ use std::path::PathBuf;
 
 use ara_compress::coordinator::{EvalRow, Pipeline};
 use ara_compress::json::{self, Json};
-use ara_compress::model::Allocation;
 use ara_compress::report::{f2, Table};
-use ara_compress::runtime::resolve_alloc;
 
 /// Standard Table-1-style row formatting.
 pub fn push_row(t: &mut Table, r: &EvalRow) {
@@ -46,21 +44,6 @@ pub fn claim(name: &str, ok: bool) {
     println!("  [{}] {}", if ok { "PASS" } else { "WARN" }, name);
 }
 
-/// Resolve a serving allocation for a bench: `configs/allocations/` first,
-/// then `artifacts/allocations/`, then the computed fallback (`dense`,
-/// `uniform-R`, `ara-R`) via [`resolve_alloc`] — same precedence as the
-/// artifact builders.
-pub fn load_alloc(pl: &Pipeline, model: &str, name: &str) -> Allocation {
-    let cfgp = pl.paths.configs.join("allocations").join(format!("{model}.{name}.json"));
-    if cfgp.exists() {
-        return Allocation::load(&cfgp).expect("alloc json (configs)");
-    }
-    let artp = pl.paths.artifacts.join("allocations").join(format!("{model}.{name}.json"));
-    Allocation::load(&artp)
-        .or_else(|_| resolve_alloc(&pl.cfg, &pl.paths, name))
-        .expect("alloc")
-}
-
 /// Bench smoke mode (`ARA_BENCH_SMOKE=1`, used by CI): tiny iteration
 /// counts and presets, no timing assertions — only proves the harness
 /// builds, runs, and emits the baseline JSON. Smoke results are written
@@ -84,29 +67,40 @@ pub fn bench_section(base: &str) -> String {
     }
 }
 
-/// Resolve the machine-readable bench baseline path: `ARA_BENCH_OUT` if
-/// set, else `BENCH_PR2.json` at the repo root (located by walking up to
+/// Resolve a repo-root bench baseline file (located by walking up to
 /// `configs/models.json`, the same anchor `config::Paths` uses).
-pub fn bench_json_path() -> PathBuf {
-    if let Ok(p) = std::env::var("ARA_BENCH_OUT") {
-        return PathBuf::from(p);
-    }
+pub fn bench_json_path_named(file: &str) -> PathBuf {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
     loop {
         if dir.join("configs").join("models.json").exists() {
-            return dir.join("BENCH_PR2.json");
+            return dir.join(file);
         }
         if !dir.pop() {
-            return PathBuf::from("BENCH_PR2.json");
+            return PathBuf::from(file);
         }
     }
 }
 
-/// Merge `section` into the bench baseline JSON (replacing the section if
+/// The PR-2 interpreter baseline path: `ARA_BENCH_OUT` if set, else
+/// `BENCH_PR2.json` at the repo root.
+pub fn bench_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("ARA_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    bench_json_path_named("BENCH_PR2.json")
+}
+
+/// Merge `section` into the PR-2 bench baseline (replacing the section if
 /// present, preserving everything else) so subsequent PRs have a perf
 /// trajectory to regress against.
 pub fn record_bench(section: &str, entries: &[(String, f64)]) {
-    let path = bench_json_path();
+    record_bench_at(&bench_json_path(), section, entries)
+}
+
+/// Like [`record_bench`], but into an explicit baseline file (the PR-3
+/// scheduler sections live in `BENCH_PR3.json`).
+pub fn record_bench_at(path: &std::path::Path, section: &str, entries: &[(String, f64)]) {
+    let path = path.to_path_buf();
     // Missing file ⇒ fresh baseline; an unparsable file is NOT silently
     // replaced — that would wipe the recorded trajectory of every other
     // section.

@@ -6,15 +6,78 @@
 //! Engines run over allocation-specialized AOT executables with
 //! device-resident weights/KV caches (see serving/engine.rs). Measured
 //! tokens/sec are appended to `BENCH_PR2.json` (section
-//! `fig5_decode_tok_s`) so later PRs can regress against them.
-//! `ARA_BENCH_SMOKE=1` shrinks the sweep to a build/emit check for CI.
+//! `fig5_decode_tok_s`); the continuous-batching scheduler trace (req/s,
+//! tok/s, p50/p95 latency under Poisson-ish arrivals with mixed prompt
+//! lengths) is appended to `BENCH_PR3.json` (section `fig5_sched`).
+//! `ARA_BENCH_SMOKE=1` shrinks the sweep to a build/emit check for CI;
+//! `ARA_SCHED_REQS` overrides the trace length.
 
 mod common;
 
-use ara_compress::data::{corpus_spec, generate_tokens};
+use std::time::Instant;
+
+use ara_compress::coordinator::Pipeline;
+use ara_compress::data::{corpus_spec, generate_tokens, Rng};
 use ara_compress::report::Table;
-use ara_compress::serving::Engine;
-use common::{bench_section, claim, load_alloc, pipeline, record_bench, smoke};
+use ara_compress::serving::{Engine, Request, SamplingParams, Scheduler};
+use common::{
+    bench_json_path_named, bench_section, claim, pipeline, record_bench, record_bench_at, smoke,
+};
+
+/// Drive the scheduler through a deterministic Poisson-ish arrival trace of
+/// mixed-length prompts; returns (req/s, tok/s, p50 ms, p95 ms).
+fn sched_trace(pl: &Pipeline, engine: &Engine, n_req: usize, seed: u64) -> (f64, f64, f64, f64) {
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), seed, 8192);
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    // exponential inter-arrival times in units of decode steps, mean 0.5
+    // (≈ 2 arrivals/step keeps the slots saturated without unbounded queues)
+    let mut at = 0.0f64;
+    let arrivals: Vec<(usize, Request)> = (0..n_req)
+        .map(|_| {
+            at += -(1.0 - rng.f64()).ln() * 0.5;
+            let len = 1 + rng.below(p); // mixed ragged lengths 1..=p
+            let off = rng.below(stream.len() - p);
+            let gen_len = 2 + rng.below(12);
+            let req = Request {
+                prompt: stream[off..off + len].to_vec(),
+                gen_len,
+                params: SamplingParams::greedy(),
+            };
+            (at.floor() as usize, req)
+        })
+        .collect();
+
+    let mut sched = Scheduler::new(engine);
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    let mut step = 0usize;
+    let mut latencies: Vec<f64> = Vec::with_capacity(n_req);
+    while next < arrivals.len() || !sched.is_idle() {
+        while next < arrivals.len() && arrivals[next].0 <= step {
+            sched.submit(arrivals[next].1.clone());
+            next += 1;
+        }
+        if !sched.is_idle() {
+            for c in sched.step().expect("scheduler step") {
+                latencies.push(c.latency_s);
+            }
+        }
+        step += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    if latencies.is_empty() {
+        return (0.0, 0.0, 0.0, 0.0); // degenerate trace (ARA_SCHED_REQS=0)
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[((latencies.len() as f64 * q) as usize).min(latencies.len() - 1)];
+    (
+        n_req as f64 / wall,
+        sched.stats().tokens_generated as f64 / wall,
+        pct(0.50) * 1e3,
+        pct(0.95) * 1e3,
+    )
+}
 
 fn main() {
     let smoke = smoke();
@@ -57,11 +120,9 @@ fn main() {
     let mut tok_s: std::collections::HashMap<(String, usize), f64> = Default::default();
     let mut entries: Vec<(String, f64)> = Vec::new();
     for alloc_name in allocs {
-        let alloc = load_alloc(&pl, model, alloc_name);
         let mut cells = vec![alloc_name.to_string()];
         for &b in &batches {
-            let engine =
-                Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, alloc_name, b).expect("engine");
+            let engine = pl.engine(&ws, &fm, alloc_name, b).expect("engine");
             // warmup + measure
             let _ = engine.generate(&prompts(b), 4).expect("warmup");
             let (_, stats) = engine.generate(&prompts(b), gen_len).expect("gen");
@@ -75,22 +136,54 @@ fn main() {
     entries.sort_by(|a, b| a.0.cmp(&b.0));
     record_bench(&bench_section("fig5_decode_tok_s"), &entries);
 
+    // --- (c) continuous-batching scheduler under a mixed-length trace ---
+    let sched_allocs: &[&str] = if smoke { &["uniform-80"] } else { &["uniform-80", "ara-80"] };
+    let n_req = std::env::var("ARA_SCHED_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 6 } else { ara_compress::config::scaled(48, 16) });
+    let bmax = *pl.cfg.decode_batches.last().unwrap();
+    let mut ts = Table::new(
+        format!("Fig 5c — continuous batching, {n_req} ragged requests, B={bmax}"),
+        &["Alloc", "req/s", "tok/s", "p50 ms", "p95 ms"],
+    );
+    let mut sched_entries: Vec<(String, f64)> = Vec::new();
+    for alloc_name in sched_allocs {
+        let engine = pl.engine(&ws, &fm, alloc_name, bmax).expect("engine");
+        let (req_s, tps, p50, p95) = sched_trace(&pl, &engine, n_req, 1234);
+        ts.row(vec![
+            alloc_name.to_string(),
+            format!("{req_s:.1}"),
+            format!("{tps:.0}"),
+            format!("{p50:.1}"),
+            format!("{p95:.1}"),
+        ]);
+        sched_entries.push((format!("{alloc_name}_req_s"), req_s));
+        sched_entries.push((format!("{alloc_name}_tok_s"), tps));
+        sched_entries.push((format!("{alloc_name}_p50_ms"), p50));
+        sched_entries.push((format!("{alloc_name}_p95_ms"), p95));
+    }
+    ts.print();
+    sched_entries.sort_by(|a, b| a.0.cmp(&b.0));
+    record_bench_at(
+        &bench_json_path_named("BENCH_PR3.json"),
+        &bench_section("fig5_sched"),
+        &sched_entries,
+    );
+
     if smoke {
         println!("  [bench-smoke] fig5 check mode: sweep + claims skipped");
         return;
     }
 
     // --- (b) throughput vs generation length at the largest batch ---
-    let bmax = *batches.last().unwrap();
     let lens = [8usize, 16, 32, 64];
     let mut tb = Table::new(
         format!("Fig 5b — decode tok/s vs gen length (batch={bmax})"),
         &["Alloc", "L=8", "L=16", "L=32", "L=64"],
     );
     for alloc_name in allocs {
-        let alloc = load_alloc(&pl, model, alloc_name);
-        let engine =
-            Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, alloc_name, bmax).expect("engine");
+        let engine = pl.engine(&ws, &fm, alloc_name, bmax).expect("engine");
         let _ = engine.generate(&prompts(bmax), 4).expect("warmup");
         let mut cells = vec![alloc_name.to_string()];
         for &l in &lens {

@@ -21,10 +21,9 @@ use ara_compress::kernels;
 use ara_compress::linalg::{cholesky, svd, Mat};
 use ara_compress::model::init_weights;
 use ara_compress::runtime::{Feed, Runtime};
-use ara_compress::serving::Engine;
 use ara_compress::svd::alloc_masks;
 use ara_compress::tensor::IntTensor;
-use common::{bench_section, load_alloc, pipeline, record_bench, smoke};
+use common::{bench_section, pipeline, record_bench, smoke};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -132,9 +131,7 @@ fn main() {
             .map(|i| stream[i * 16..i * 16 + pl.cfg.prefill_len].to_vec())
             .collect();
         for name in ["dense", "uniform-80", "ara-80"] {
-            let alloc = load_alloc(&pl, model, name);
-            let engine =
-                Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, name, b).expect("engine");
+            let engine = pl.engine(&ws, &fm, name, b).expect("engine");
             let per = bench(&format!("decode 16 steps, B={b}, {name}"), iters.min(3), || {
                 engine.generate(&prompts, 16).unwrap();
             });

@@ -15,6 +15,7 @@ use crate::eval::{perplexity_masked, zero_shot_suite};
 use crate::linalg::Mat;
 use crate::model::{alloc_ratio, Allocation, WeightStore};
 use crate::runtime::Runtime;
+use crate::serving::Engine;
 use crate::svd::{alloc_masks, calibrate, factorize, FactoredModel};
 use crate::training::{pretrain, PretrainConfig};
 use crate::Result;
@@ -143,6 +144,22 @@ impl Pipeline {
         grams: &BTreeMap<String, Mat>,
     ) -> Result<FactoredModel> {
         factorize(&self.cfg, ws, grams, 1e-3)
+    }
+
+    /// Build an allocation-specialized serving [`Engine`] at batch size
+    /// `batch`, resolving `alloc_name` with the same precedence as the
+    /// artifact builders (configs/allocations → artifacts/allocations →
+    /// computed `dense` / `uniform-R` / `ara-R`). This is the front door
+    /// the serving benches and the continuous-batching scheduler share.
+    pub fn engine(
+        &self,
+        ws: &WeightStore,
+        fm: &FactoredModel,
+        alloc_name: &str,
+        batch: usize,
+    ) -> Result<Engine> {
+        let alloc = crate::runtime::resolve_alloc(&self.cfg, &self.paths, alloc_name)?;
+        Engine::new(&self.cfg, &self.rt, ws, fm, &alloc, alloc_name, batch)
     }
 
     /// Run one allocation method at `target`.

@@ -358,6 +358,10 @@ mod tests {
                     let t = IntTensor::from_vec(&[1], vec![3]);
                     bufs.push(be.upload(&Feed::I32(&t)).unwrap());
                 }
+                "starts" => {
+                    let t = IntTensor::from_vec(&[1], vec![0]);
+                    bufs.push(be.upload(&Feed::I32(&t)).unwrap());
+                }
                 n if n.starts_with("kcache") || n.starts_with("vcache") => {
                     let t = Tensor::zeros(&spec.shape);
                     bufs.push(be.upload(&Feed::F32(&t)).unwrap());

@@ -429,22 +429,33 @@ impl<'a> Net<'a> {
         self.g.add(keep, fill)
     }
 
-    /// Causal attention over packed heads (bh, t, dh), ref.py semantics.
-    fn causal_attention(&mut self, qp: Id, kp: Id, vp: Id, scale: f32) -> Id {
-        let t = self.g.shape(qp)[1];
+    /// Attention over packed heads (bh, t, dh) with an explicit 0/1 mask
+    /// broadcastable against the (bh, t, t) score matrix.
+    fn masked_attention(&mut self, qp: Id, kp: Id, vp: Id, scale: f32, mask: Id) -> Id {
         let raw = self.g.bmm(qp, kp, false, true); // (bh, t, t)
         let sc = self.g.scalar(scale);
         let scores = self.g.mul(raw, sc);
+        let masked = self.mask_fill(scores, mask);
+        let p = self.softmax3(masked);
+        self.g.bmm(p, vp, false, false)
+    }
+
+    /// Causal attention over packed heads (bh, t, dh), ref.py semantics.
+    fn causal_attention(&mut self, qp: Id, kp: Id, vp: Id, scale: f32) -> Id {
+        let t = self.g.shape(qp)[1];
+        let mask = self.causal_mask_const(t);
+        self.masked_attention(qp, kp, vp, scale, mask)
+    }
+
+    /// Baked lower-triangular 0/1 mask (1, t, t).
+    fn causal_mask_const(&mut self, t: usize) -> Id {
         let mut tril = Tensor::zeros(&[1, t, t]);
         for i in 0..t {
             for j in 0..=i {
                 tril.data[i * t + j] = 1.0;
             }
         }
-        let mask = self.g.constant(tril);
-        let masked = self.mask_fill(scores, mask);
-        let p = self.softmax3(masked);
-        self.g.bmm(p, vp, false, false)
+        self.g.constant(tril)
     }
 
     /// One transformer block over (b, t, d), mirroring `model.py:_block`.
@@ -688,6 +699,14 @@ fn cache_names(cfg: &ModelCfg) -> Vec<String> {
     out
 }
 
+/// Prefill with the **left-pad masking contract**: each prompt occupies the
+/// rightmost `lens[i]` slots of its row (slots `[0, t-lens[i])` are
+/// padding). Real tokens get rope positions `0..lens[i]`; pad slots are
+/// excluded from attention as keys, so row `i`'s outputs depend only on its
+/// real tokens. KV caches are written at the padded slot positions — the
+/// decode graph masks slots below `starts[i] = t - lens[i]`. The final-slot
+/// logits (`t-1`) always belong to the last real token. A full-length
+/// prompt (`lens[i] = t`) reproduces the original unmasked prefill math.
 fn prefill(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Program {
     let mut net = Net::new(cfg, LinearMode::Alloc);
     net.add_aux_inputs();
@@ -696,11 +715,31 @@ fn prefill(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Prog
     let (d, nh, nkv, dh) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
     let s_max = cfg.max_decode_seq;
     let tokens = net.input_i32("tokens", &[b, t]);
+    let lens = net.input_i32("lens", &[b]);
 
     let embed = net.p("embed");
     let mut h = net.g.gather(embed, tokens); // (b, t, d)
+    // positions: slot j of row i is token position j - (t - lens[i]); pad
+    // slots get negative positions (their rope output is masked out below)
     let it = net.g.iota(t);
-    let pos = net.g.reshape(it, &[1, t]);
+    let row = net.g.reshape(it, &[1, t]);
+    let lens_f = net.g.cast_f32(lens);
+    let lcol = net.g.reshape(lens_f, &[b, 1]);
+    let t_s = net.g.scalar(t as f32);
+    let off = net.g.sub(lcol, t_s); // (b, 1) = -(pad count)
+    let pos = net.g.add(row, off); // (b, t)
+    // attention mask: causal AND key slot is a real token (j' ≥ t - lens[i])
+    let padf = net.g.sub(t_s, lcol); // (b, 1)
+    let ramp = net.g.iota(t);
+    let below = net.g.less(ramp, padf); // (b, t): 1 on pad slots
+    let one = net.g.scalar(1.0);
+    let kvalid = net.g.sub(one, below); // (b, t): 1 on real slots
+    let kv3 = net.g.reshape(kvalid, &[b, 1, t]);
+    let tril = net.causal_mask_const(t); // (1, t, t)
+    let m3 = net.g.mul(tril, kv3); // (b, t, t)
+    let m4 = net.g.reshape(m3, &[b, 1, t, t]);
+    let mb = net.g.broadcast(m4, &[b, nh, t, t]);
+    let mask = net.g.reshape(mb, &[b * nh, t, t]);
     let mut caches = Vec::new();
     for layer in 0..cfg.n_layers {
         let pfx = format!("layers.{layer}.");
@@ -734,7 +773,7 @@ fn prefill(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Prog
         let qp = net.g.reshape(qt, &[b * nh, t, dh]);
         let kp = net.g.reshape(kt, &[b * nh, t, dh]);
         let vp = net.g.reshape(vt, &[b * nh, t, dh]);
-        let o = net.causal_attention(qp, kp, vp, (dh as f32).powf(-0.5));
+        let o = net.masked_attention(qp, kp, vp, (dh as f32).powf(-0.5), mask);
         let o4 = net.g.reshape(o, &[b, nh, t, dh]);
         let ot = net.g.transpose(o4, &[0, 2, 1, 3]);
         let o2 = net.g.reshape(ot, &[b * t, d]);
@@ -755,6 +794,7 @@ fn prefill(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Prog
         h = net.g.add(h, down3);
 
         // cache k/v (post-rope, pre-repeat): (b,t,nkv,dh) → (b,nkv,S,dh)
+        // — pad slots carry garbage rows; decode masks slots below `starts`
         let kc0 = net.g.transpose(k, &[0, 2, 1, 3]);
         let kc = net.g.pad_zero(kc0, 2, 0, s_max);
         let vc0 = net.g.transpose(v, &[0, 2, 1, 3]);
@@ -776,6 +816,13 @@ fn prefill(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Prog
     net.finish(name, outputs, names)
 }
 
+/// One decode step over a slot window per sequence: `lens[i]` is the cache
+/// slot the new token is written to (and the highest slot attended), while
+/// `starts[i]` is the first valid slot — slots below it hold the prefill's
+/// left-pad garbage and are masked out. The token's rope position is the
+/// *relative* `lens[i] - starts[i]`, so a request prefilled with `n` real
+/// tokens decodes at positions `n, n+1, …` regardless of where its window
+/// sits in the cache. `starts = 0` reproduces the original decode math.
 fn decode(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Program {
     let mut net = Net::new(cfg, LinearMode::Alloc);
     net.add_aux_inputs();
@@ -791,11 +838,24 @@ fn decode(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Progr
     }
     let tokens = net.input_i32("tokens", &[b]);
     let lens = net.input_i32("lens", &[b]);
+    let starts = net.input_i32("starts", &[b]);
 
     let embed = net.p("embed");
     let mut h = net.g.gather(embed, tokens); // (b, d)
     let lens_f = net.g.cast_f32(lens); // (b,)
-    let pos = net.g.reshape(lens_f, &[b, 1]);
+    let starts_f = net.g.cast_f32(starts); // (b,)
+    let rel = net.g.sub(lens_f, starts_f); // (b,) rope position
+    let pos = net.g.reshape(rel, &[b, 1]);
+    // valid-slot window, shared by every layer: starts ≤ slot ≤ lens
+    let one = net.g.scalar(1.0);
+    let plus1 = net.g.add(lens_f, one); // (b,)
+    let pl3 = net.g.reshape(plus1, &[b, 1, 1]);
+    let ramp = net.g.iota(s_max);
+    let hi = net.g.less(ramp, pl3); // (b, 1, s): slot ≤ lens
+    let st3 = net.g.reshape(starts_f, &[b, 1, 1]);
+    let below = net.g.less(ramp, st3); // (b, 1, s): slot < starts
+    let lo = net.g.sub(one, below);
+    let valid = net.g.mul(hi, lo); // (b, 1, s)
     let mut caches_out = Vec::new();
     for layer in 0..cfg.n_layers {
         let pfx = format!("layers.{layer}.");
@@ -850,11 +910,6 @@ fn decode(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Progr
         let raw3 = net.g.reshape(raw, &[b, nh, s_max]);
         let sc = net.g.scalar((dh as f32).powf(-0.5));
         let scores = net.g.mul(raw3, sc);
-        let one = net.g.scalar(1.0);
-        let plus1 = net.g.add(lens_f, one); // (b,)
-        let pl3 = net.g.reshape(plus1, &[b, 1, 1]);
-        let ramp = net.g.iota(s_max);
-        let valid = net.g.less(ramp, pl3); // (b, 1, s)
         let masked = net.mask_fill(scores, valid);
         let p = net.softmax3(masked); // (b, nh, s)
         let p3 = net.g.reshape(p, &[b * nh, 1, s_max]);
@@ -954,7 +1009,7 @@ mod tests {
             .iter()
             .position(|s| s.name.starts_with("kcache"))
             .unwrap();
-        for spec in &p.manifest.inputs[first_cache..p.manifest.inputs.len() - 2] {
+        for spec in &p.manifest.inputs[first_cache..p.manifest.inputs.len() - 3] {
             assert!(
                 spec.name.starts_with("kcache") || spec.name.starts_with("vcache"),
                 "{}",
@@ -962,17 +1017,22 @@ mod tests {
             );
         }
         let n = p.manifest.inputs.len();
-        assert_eq!(p.manifest.inputs[n - 2].name, "tokens");
-        assert_eq!(p.manifest.inputs[n - 1].name, "lens");
+        assert_eq!(p.manifest.inputs[n - 3].name, "tokens");
+        assert_eq!(p.manifest.inputs[n - 2].name, "lens");
+        assert_eq!(p.manifest.inputs[n - 1].name, "starts");
+        assert_eq!(p.manifest.input("starts").unwrap().dtype, "i32");
         assert_eq!(p.manifest.outputs[0], "logits");
         assert_eq!(p.manifest.outputs.len(), 1 + 2 * c.n_layers);
 
         let pf = build(&c, &paths, "prefill_uniform-80_b2").unwrap();
-        assert_eq!(pf.manifest.inputs.last().unwrap().name, "tokens");
+        let m = pf.manifest.inputs.len();
+        assert_eq!(pf.manifest.inputs[m - 2].name, "tokens");
+        assert_eq!(pf.manifest.inputs[m - 1].name, "lens");
         assert_eq!(
             pf.manifest.input("tokens").unwrap().shape,
             vec![2, c.prefill_len]
         );
+        assert_eq!(pf.manifest.input("lens").unwrap().shape, vec![2]);
     }
 
     #[test]

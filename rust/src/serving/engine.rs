@@ -1,17 +1,29 @@
 //! The decode engine: owns device-resident weight buffers for one
-//! (allocation, batch-size) specialization and runs prefill + greedy decode
-//! loops entirely through the backend's device-buffer path. On the default
-//! CPU backend "device" buffers are host values (no copies crossing a
-//! boundary); on PJRT they are real device buffers that never leave the
-//! device between decode steps.
+//! (allocation, batch-size) specialization and exposes the stepwise
+//! serving primitives the continuous-batching scheduler is built on:
+//!
+//! * [`Engine::prefill_into_slots`] — run the fixed-batch prefill for a set
+//!   of (slot, ragged prompt) pairs (left-padded + `lens`-masked; parked
+//!   slots carry dummy prompts) and merge only those slots' KV-cache rows
+//!   into the live batch caches.
+//! * [`Engine::decode_step`] — one batched decode step with per-slot cache
+//!   write position (`fill`) and valid-window start (`starts`).
+//!
+//! [`Engine::generate`] remains as a thin greedy wrapper over the two (the
+//! benches and CLI drive it); it now accepts ragged prompts, which it
+//! left-pads under the same masking contract. On the default CPU backend
+//! "device" buffers are host values (no copies crossing a boundary); on
+//! PJRT they are real device buffers that never leave the device between
+//! decode steps.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Instant;
 
+use super::sampler::argmax;
 use crate::config::ModelCfg;
 use crate::model::{Allocation, ModuleAlloc, WeightStore};
-use crate::runtime::{Backend, DeviceArg, DeviceBuffer, Exe, Feed, Runtime};
+use crate::runtime::{Backend, DeviceArg, DeviceBuffer, Exe, Feed, Runtime, Value};
 use crate::svd::FactoredModel;
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
@@ -71,6 +83,29 @@ fn weight_tensor(
     Ok(ws.get(name).clone())
 }
 
+/// Splice the admitted slots' cache rows of `add` into `live` in place when
+/// both are host f32 buffers (the CPU backend's zero-copy admission path).
+/// Returns `false` when a backend round-trip is required instead.
+fn splice_host_rows(
+    live: &mut DeviceBuffer,
+    add: &DeviceBuffer,
+    batch: usize,
+    new: &[(usize, &[i32])],
+) -> bool {
+    if let (DeviceBuffer::Host(Value::F32(base)), DeviceBuffer::Host(Value::F32(incoming))) =
+        (live, add)
+    {
+        let row = base.data.len() / batch;
+        for &(slot, _) in new {
+            base.data[slot * row..(slot + 1) * row]
+                .copy_from_slice(&incoming.data[slot * row..(slot + 1) * row]);
+        }
+        true
+    } else {
+        false
+    }
+}
+
 impl Engine {
     /// Load (cached) executables and upload weights for `alloc` at batch
     /// size `b`.
@@ -91,6 +126,7 @@ impl Engine {
             for spec in &exe.manifest().inputs {
                 if spec.name == "tokens"
                     || spec.name == "lens"
+                    || spec.name == "starts"
                     || spec.name.starts_with("kcache")
                     || spec.name.starts_with("vcache")
                 {
@@ -122,8 +158,137 @@ impl Engine {
         })
     }
 
-    /// Greedy-generate `gen_len` tokens for a batch of equal-length prompts
-    /// (padded/truncated to cfg.prefill_len by the batcher).
+    /// Number of prompt tokens the prefill window keeps: the most recent
+    /// `prefill_len`, and at least one (empty prompts become a lone BOS).
+    pub fn real_len(&self, prompt: &[i32]) -> usize {
+        prompt.len().min(self.cfg.prefill_len).max(1)
+    }
+
+    /// Left-pad (or head-truncate) a prompt to the prefill window. Returns
+    /// the padded row and the number of real tokens (`== real_len`); the
+    /// real tokens occupy the rightmost slots, pads are BOS.
+    pub fn pad_prompt(&self, prompt: &[i32]) -> (Vec<i32>, usize) {
+        let p = self.cfg.prefill_len;
+        let keep = &prompt[prompt.len().saturating_sub(p)..];
+        let mut row = vec![crate::data::BOS_TOKEN; p];
+        row[p - keep.len()..].copy_from_slice(keep);
+        (row, self.real_len(prompt))
+    }
+
+    /// Run the fixed-batch prefill for `new` (slot, ragged prompt) pairs,
+    /// parking the remaining slots on dummy prompts, and merge **only** the
+    /// admitted slots' KV-cache rows into `caches` (`None` adopts the fresh
+    /// caches wholesale — the initial fill). Returns one final-position
+    /// logits row per entry of `new` (in order) plus the merged caches.
+    ///
+    /// Every row of the prefill graph is computed independently (left-pad +
+    /// `lens` masking), so an admitted slot's logits and cache rows are
+    /// bitwise identical to what a standalone full-batch prefill of the
+    /// same prompt would produce — the scheduler's parity guarantee.
+    pub fn prefill_into_slots(
+        &self,
+        new: &[(usize, &[i32])],
+        caches: Option<Vec<DeviceBuffer>>,
+    ) -> Result<(Vec<Vec<f32>>, Vec<DeviceBuffer>)> {
+        let b = self.batch;
+        let p = self.cfg.prefill_len;
+        let mut toks = vec![crate::data::BOS_TOKEN; b * p];
+        let mut lens = vec![p as i32; b]; // parked slots: all-BOS "full" rows
+        for &(slot, prompt) in new {
+            assert!(slot < b, "slot {slot} out of range for batch {b}");
+            let (row, n) = self.pad_prompt(prompt);
+            toks[slot * p..(slot + 1) * p].copy_from_slice(&row);
+            lens[slot] = n as i32;
+        }
+        let toks_t = IntTensor::from_vec(&[b, p], toks);
+        let lens_t = IntTensor::from_vec(&[b], lens);
+        // weights are borrowed (never copied); per-call tensors are owned
+        let mut args: Vec<DeviceArg> = self.pre_weights.iter().map(DeviceArg::Ref).collect();
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&toks_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&lens_t))?));
+        let outs = self
+            .prefill
+            .run_device_args(args)
+            .map_err(|e| crate::anyhow!("prefill: {e}"))?;
+        let mut outs_it = outs.into_iter();
+        let logit_buf = outs_it
+            .next()
+            .ok_or_else(|| crate::anyhow!("prefill returned no outputs"))?;
+        let logits = self.backend.download(&logit_buf)?;
+        let vocab = self.cfg.vocab;
+        let rows: Vec<Vec<f32>> = new
+            .iter()
+            .map(|&(slot, _)| logits.data[slot * vocab..(slot + 1) * vocab].to_vec())
+            .collect();
+        let fresh: Vec<DeviceBuffer> = outs_it.collect();
+        let merged = match caches {
+            None => fresh,
+            Some(mut old) => {
+                for (live, add) in old.iter_mut().zip(&fresh) {
+                    if splice_host_rows(live, add, b, new) {
+                        continue; // CPU backend: spliced in place, no copies
+                    }
+                    // real device buffers: one download+splice+upload per
+                    // cache tensor (admission only — decode stays on device)
+                    let mut base = self.backend.download(live)?;
+                    let incoming = self.backend.download(add)?;
+                    let row = base.data.len() / b;
+                    for &(slot, _) in new {
+                        base.data[slot * row..(slot + 1) * row]
+                            .copy_from_slice(&incoming.data[slot * row..(slot + 1) * row]);
+                    }
+                    *live = self.backend.upload(&Feed::F32(&base))?;
+                }
+                old
+            }
+        };
+        Ok((rows, merged))
+    }
+
+    /// One decode step over the whole batch: per-slot last token, cache
+    /// write position (`fill`), and valid-window start (`starts`). Caches
+    /// move in owned so the backend updates them in place; returns the
+    /// next-token logits `(batch, vocab)` and the updated caches.
+    pub fn decode_step(
+        &self,
+        caches: Vec<DeviceBuffer>,
+        tokens: &[i32],
+        fill: &[i32],
+        starts: &[i32],
+    ) -> Result<(Tensor, Vec<DeviceBuffer>)> {
+        let b = self.batch;
+        assert_eq!(tokens.len(), b, "tokens must cover every slot");
+        assert_eq!(fill.len(), b, "fill must cover every slot");
+        assert_eq!(starts.len(), b, "starts must cover every slot");
+        let tok_t = IntTensor::from_vec(&[b], tokens.to_vec());
+        let fill_t = IntTensor::from_vec(&[b], fill.to_vec());
+        let st_t = IntTensor::from_vec(&[b], starts.to_vec());
+        // weights stay borrowed across steps; caches move in owned so the
+        // interpreter updates them in place (no per-layer clone)
+        let mut args: Vec<DeviceArg> = self.dec_weights.iter().map(DeviceArg::Ref).collect();
+        for c in caches {
+            args.push(DeviceArg::Own(c));
+        }
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&tok_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&fill_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&st_t))?));
+        let outs = self
+            .decode
+            .run_device_args(args)
+            .map_err(|e| crate::anyhow!("decode step: {e}"))?;
+        let mut it = outs.into_iter();
+        let logit_buf = it
+            .next()
+            .ok_or_else(|| crate::anyhow!("decode returned no outputs"))?;
+        let logits = self.backend.download(&logit_buf)?;
+        Ok((logits, it.collect()))
+    }
+
+    /// Greedy-generate `gen_len` tokens for a batch of prompts (one per
+    /// engine slot; ragged lengths allowed — shorter prompts are left-padded
+    /// and masked, longer ones keep their most recent `prefill_len` tokens).
+    /// Thin wrapper over [`Engine::prefill_into_slots`] +
+    /// [`Engine::decode_step`], kept for the benches and CLI.
     pub fn generate(&self, prompts: &[Vec<i32>], gen_len: usize) -> Result<(Vec<Vec<i32>>, GenStats)> {
         let b = self.batch;
         let p = self.cfg.prefill_len;
@@ -132,81 +297,43 @@ impl Engine {
 
         // ---- prefill ----
         let t0 = Instant::now();
-        let mut toks = Vec::with_capacity(b * p);
-        for pr in prompts {
-            assert_eq!(pr.len(), p, "prompts must be prefill_len long");
-            toks.extend_from_slice(pr);
-        }
-        let toks = IntTensor::from_vec(&[b, p], toks);
-        let tok_buf = self.backend.upload(&Feed::I32(&toks))?;
-        // weights are borrowed (never copied); per-step tensors are owned
-        let mut args: Vec<DeviceArg> = self.pre_weights.iter().map(DeviceArg::Ref).collect();
-        args.push(DeviceArg::Own(tok_buf));
-        let outs = self
-            .prefill
-            .run_device_args(args)
-            .map_err(|e| crate::anyhow!("prefill: {e}"))?;
+        let slots: Vec<(usize, &[i32])> =
+            prompts.iter().enumerate().map(|(i, pr)| (i, pr.as_slice())).collect();
+        let (rows, mut caches) = self.prefill_into_slots(&slots, None)?;
         stats.prefill_s = t0.elapsed().as_secs_f64();
-
-        // outputs: [logits, kcache.0, vcache.0, ...] stay on device
-        let mut outs_it = outs.into_iter();
-        let logit_buf = outs_it
-            .next()
-            .ok_or_else(|| crate::anyhow!("prefill returned no outputs"))?;
-        let mut logits = self.backend.download(&logit_buf)?;
-        let mut caches: Vec<DeviceBuffer> = outs_it.collect();
 
         // ---- decode loop ----
         let t1 = Instant::now();
         let mut generated: Vec<Vec<i32>> = vec![Vec::with_capacity(gen_len); b];
-        let mut lens_host = vec![p as i32; b];
         let vocab = self.cfg.vocab;
-        for step in 0..gen_len {
-            // greedy next token from last logits
-            let mut next = Vec::with_capacity(b);
-            for s in 0..b {
-                let row = &logits.data[s * vocab..(s + 1) * vocab];
-                let arg = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                next.push(arg as i32);
-                generated[s].push(arg as i32);
+        let starts: Vec<i32> =
+            prompts.iter().map(|pr| (p - self.real_len(pr)) as i32).collect();
+        let mut fill = vec![p as i32; b];
+        let mut next: Vec<i32> = Vec::with_capacity(b);
+        if gen_len > 0 {
+            for (s, row) in rows.iter().enumerate() {
+                let tok = argmax(row) as i32;
+                next.push(tok);
+                generated[s].push(tok);
             }
-            if step + 1 == gen_len {
-                break;
-            }
-            if lens_host[0] as usize + 1 >= self.cfg.max_decode_seq {
+        }
+        for _step in 1..gen_len {
+            if fill[0] as usize + 1 >= self.cfg.max_decode_seq {
                 break; // cache full
             }
-            let tok_t = IntTensor::from_vec(&[b], next);
-            let lens_t = IntTensor::from_vec(&[b], lens_host.clone());
-            let tok_b = self.backend.upload(&Feed::I32(&tok_t))?;
-            let lens_b = self.backend.upload(&Feed::I32(&lens_t))?;
-            // weights stay borrowed across steps; caches move in owned so
-            // the interpreter updates them in place (no per-layer clone)
-            let mut args: Vec<DeviceArg> = self.dec_weights.iter().map(DeviceArg::Ref).collect();
-            for c in caches.drain(..) {
-                args.push(DeviceArg::Own(c));
-            }
-            args.push(DeviceArg::Own(tok_b));
-            args.push(DeviceArg::Own(lens_b));
-            let outs = self
-                .decode
-                .run_device_args(args)
-                .map_err(|e| crate::anyhow!("decode step {step}: {e}"))?;
-            let mut it = outs.into_iter();
-            let logit_buf = it
-                .next()
-                .ok_or_else(|| crate::anyhow!("decode returned no outputs"))?;
-            logits = self.backend.download(&logit_buf)?;
-            caches = it.collect();
-            for l in lens_host.iter_mut() {
-                *l += 1;
+            let (logits, new_caches) = self.decode_step(caches, &next, &fill, &starts)?;
+            caches = new_caches;
+            for f in fill.iter_mut() {
+                *f += 1;
             }
             stats.steps += 1;
+            next.clear();
+            for (s, gen) in generated.iter_mut().enumerate() {
+                let row = &logits.data[s * vocab..(s + 1) * vocab];
+                let tok = argmax(row) as i32;
+                next.push(tok);
+                gen.push(tok);
+            }
         }
         stats.decode_s = t1.elapsed().as_secs_f64();
         stats.tokens_generated = b * generated[0].len();

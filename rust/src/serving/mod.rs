@@ -1,5 +1,6 @@
-//! Batched serving engine (Appendix A.4 / Fig. 5): allocation-specialized
+//! Batched serving (Appendix A.4 / Fig. 5): allocation-specialized
 //! prefill + decode executables with device-resident weights and KV caches,
+//! a continuous-batching scheduler over ragged prompts, seeded samplers,
 //! a dynamic batcher, and a threaded router front-end.
 //!
 //! The engine is the L3 hot path and is backend-agnostic: after
@@ -8,11 +9,22 @@
 //! backend can update them in place (real device buffers on PJRT,
 //! recycled-in-place host values on the default CPU interpreter); only the
 //! (batch,) token/length vectors cross the host boundary each step.
+//!
+//! On top of the stepwise engine primitives (`prefill_into_slots`,
+//! `decode_step`), the [`Scheduler`] packs arbitrary-length prompts with
+//! per-request generation lengths and sampling params into the fixed-batch
+//! decode graph, admitting new requests into freed slots mid-flight —
+//! see `scheduler.rs` for the slot/masking contract and the bitwise
+//! parity guarantee against [`Engine::generate`].
 
 mod batcher;
 mod engine;
 mod router;
+mod sampler;
+mod scheduler;
 
 pub use batcher::{BatchPlan, DynamicBatcher};
 pub use engine::{Engine, GenStats};
 pub use router::{Router, ServeRequest, ServeResponse};
+pub use sampler::{argmax, Sampler, SamplingParams};
+pub use scheduler::{Completion, Request, SchedStats, Scheduler};

@@ -1,22 +1,34 @@
-//! Threaded router front-end: the engine (PJRT handles are not Sync) lives
-//! on a dedicated worker thread; callers submit requests over a channel and
-//! receive generated tokens over per-request reply channels. This is the
-//! process topology a multi-engine deployment would shard over.
+//! Threaded serve-loop front-end: the engine (PJRT handles are not Sync)
+//! lives on a dedicated worker thread driving a continuous-batching
+//! [`Scheduler`]; callers submit ragged prompts with per-request sampling
+//! params over a channel and receive generated tokens on per-request reply
+//! channels. Requests arriving mid-flight are admitted into freed slots
+//! between decode steps. This is the process topology a multi-engine
+//! deployment would shard over.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-/// One generation request.
+use super::engine::Engine;
+use super::sampler::SamplingParams;
+use super::scheduler::{Request, Scheduler};
+
+/// One generation request (ragged prompt; the scheduler left-pads).
 #[derive(Debug, Clone)]
 pub struct ServeRequest {
     pub prompt: Vec<i32>,
     pub gen_len: usize,
+    pub params: SamplingParams,
 }
 
 /// One generation response.
 #[derive(Debug, Clone)]
 pub struct ServeResponse {
     pub tokens: Vec<i32>,
+    /// The serve loop's running decode throughput at completion time
+    /// ([`super::SchedStats::decode_tok_per_s`]) — an engine-wide figure,
+    /// not a per-request one.
     pub decode_tok_per_s: f64,
 }
 
@@ -33,65 +45,91 @@ pub struct Router {
 
 impl Router {
     /// Spawn the engine worker. `engine_builder` runs on the worker thread
-    /// (PJRT state never crosses threads) and returns a closure that
-    /// generates a batch of prompt→tokens.
-    pub fn spawn<F>(engine_builder: F, batch: usize, prefill_len: usize, max_wait_ms: u64) -> Router
+    /// (PJRT state never crosses threads) and returns the engine the serve
+    /// loop drives. The worker blocks when idle; while serving it polls the
+    /// channel between scheduler steps, so new requests are admitted into
+    /// freed slots mid-flight (continuous batching).
+    pub fn spawn<F>(engine_builder: F) -> Router
     where
-        F: FnOnce() -> Box<dyn FnMut(&[Vec<i32>], usize) -> crate::Result<(Vec<Vec<i32>>, f64)>>
-            + Send
-            + 'static,
+        F: FnOnce() -> Engine + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
         let worker = std::thread::spawn(move || {
-            let mut generate = engine_builder();
-            let mut queue: Vec<(ServeRequest, mpsc::Sender<ServeResponse>)> = Vec::new();
+            let engine = engine_builder();
+            let mut sched = Scheduler::new(&engine);
+            let mut replies: HashMap<u64, mpsc::Sender<ServeResponse>> = HashMap::new();
+            let mut shutdown = false;
+            let mut failures = 0usize;
             loop {
-                // block for the first request, then drain within max_wait
-                match rx.recv() {
-                    Ok(Msg::Req(r, reply)) => queue.push((r, reply)),
-                    Ok(Msg::Shutdown) | Err(_) => break,
+                // drain the channel: block while idle, poll while serving
+                loop {
+                    let msg = if sched.is_idle() && !shutdown {
+                        match rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => {
+                                shutdown = true;
+                                break;
+                            }
+                        }
+                    } else {
+                        match rx.try_recv() {
+                            Ok(m) => m,
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                shutdown = true;
+                                break;
+                            }
+                        }
+                    };
+                    match msg {
+                        Msg::Req(r, reply) => {
+                            let id = sched.submit(Request {
+                                prompt: r.prompt,
+                                gen_len: r.gen_len,
+                                params: r.params,
+                            });
+                            replies.insert(id, reply);
+                        }
+                        Msg::Shutdown => shutdown = true,
+                    }
                 }
-                let deadline = std::time::Instant::now()
-                    + std::time::Duration::from_millis(max_wait_ms);
-                while queue.len() < batch {
-                    let now = std::time::Instant::now();
-                    if now >= deadline {
+                if sched.is_idle() {
+                    if shutdown {
                         break;
                     }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(Msg::Req(r, reply)) => queue.push((r, reply)),
-                        Ok(Msg::Shutdown) => break,
-                        Err(_) => break,
-                    }
+                    continue;
                 }
-                // run one padded batch
-                let n = queue.len().min(batch);
-                let mut prompts: Vec<Vec<i32>> = queue[..n]
-                    .iter()
-                    .map(|(r, _)| {
-                        let mut p = r.prompt.clone();
-                        p.resize(prefill_len, crate::data::BOS_TOKEN);
-                        p
-                    })
-                    .collect();
-                while prompts.len() < batch {
-                    prompts.push(vec![crate::data::BOS_TOKEN; prefill_len]);
-                }
-                let gen_len = queue[..n].iter().map(|(r, _)| r.gen_len).max().unwrap_or(1);
-                match generate(&prompts, gen_len) {
-                    Ok((tokens, tps)) => {
-                        for (i, (req, reply)) in queue.drain(..n).enumerate() {
-                            let mut t = tokens[i].clone();
-                            t.truncate(req.gen_len);
-                            let _ = reply.send(ServeResponse {
-                                tokens: t,
-                                decode_tok_per_s: tps,
-                            });
+                match sched.step() {
+                    Ok(done) => {
+                        failures = 0;
+                        let tps = sched.stats().decode_tok_per_s();
+                        for c in done {
+                            if let Some(reply) = replies.remove(&c.id) {
+                                let _ = reply.send(ServeResponse {
+                                    tokens: c.tokens,
+                                    decode_tok_per_s: tps,
+                                });
+                            }
                         }
                     }
                     Err(e) => {
-                        eprintln!("[router] batch failed: {e}");
-                        queue.drain(..n);
+                        // abort only the in-flight slots (their cache state
+                        // is gone) — queued requests survive in the
+                        // scheduler and are retried; dropping a reply
+                        // sender fails that caller's receiver
+                        eprintln!("[router] scheduler step failed: {e}");
+                        for id in sched.abort_active() {
+                            replies.remove(&id);
+                        }
+                        failures += 1;
+                        if failures >= 3 {
+                            eprintln!(
+                                "[router] persistent engine failure, dropping {} requests",
+                                replies.len()
+                            );
+                            replies.clear();
+                            break;
+                        }
                     }
                 }
             }
@@ -99,10 +137,14 @@ impl Router {
         Router { tx, worker: Some(worker) }
     }
 
-    /// Submit a request; returns the reply receiver.
+    /// Submit a request; returns the reply receiver. If the worker has
+    /// exited (persistent engine failure), the receiver's `recv()` errors
+    /// instead of this call panicking.
     pub fn submit(&self, req: ServeRequest) -> mpsc::Receiver<ServeResponse> {
         let (tx, rx) = mpsc::channel();
-        self.tx.send(Msg::Req(req, tx)).expect("router worker gone");
+        if self.tx.send(Msg::Req(req, tx)).is_err() {
+            eprintln!("[router] worker gone, dropping request");
+        }
         rx
     }
 }

@@ -1,0 +1,213 @@
+//! Token samplers for the serve loop: greedy argmax plus temperature /
+//! top-k / top-p (nucleus) sampling with a seeded per-request RNG
+//! ([`crate::data::Rng`]), so every sampled continuation is reproducible
+//! from its request seed alone — independent of batch composition,
+//! admission order, or thread count.
+
+use crate::data::Rng;
+
+/// Per-request sampling configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0.0` means greedy argmax (the default).
+    pub temperature: f64,
+    /// Keep only the `top_k` highest-logit tokens; `0` disables the cut.
+    pub top_k: usize,
+    /// Nucleus cut: keep the smallest prefix of the sorted distribution
+    /// with cumulative mass `>= top_p` (at least one token). `1.0`
+    /// disables the cut; `0.0` degenerates to the single best token.
+    pub top_p: f64,
+    /// Seed for the per-request RNG stream.
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    /// Greedy decoding (temperature 0): deterministic, seed-independent.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::greedy()
+    }
+}
+
+/// Greedy argmax over a logits row. Ties resolve to the highest index,
+/// matching the engine's original `max_by` behavior so greedy outputs stay
+/// stable across PRs.
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// One request's sampler: params + its private RNG stream.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Sampler {
+        let rng = Rng::new(params.seed);
+        Sampler { params, rng }
+    }
+
+    /// Draw the next token from a logits row.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        let p = &self.params;
+        if p.temperature <= 0.0 {
+            return argmax(logits) as i32;
+        }
+        // deterministic total order: logit desc, then index desc so the
+        // head of the order agrees with `argmax` on exact ties
+        let mut order: Vec<usize> = (0..logits.len()).collect();
+        order.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap().then(b.cmp(&a)));
+        let mut keep = order.len();
+        if p.top_k > 0 {
+            keep = keep.min(p.top_k);
+        }
+        keep = keep.max(1);
+        // max-shifted softmax over the kept prefix, in f64
+        let inv_t = 1.0 / p.temperature;
+        let m = logits[order[0]] as f64;
+        let mut probs: Vec<f64> = order[..keep]
+            .iter()
+            .map(|&i| ((logits[i] as f64 - m) * inv_t).exp())
+            .collect();
+        let z: f64 = probs.iter().sum();
+        for q in probs.iter_mut() {
+            *q /= z;
+        }
+        // nucleus cut: smallest prefix with cumulative mass >= top_p
+        if p.top_p < 1.0 {
+            let mut acc = 0.0;
+            let mut cut = 1;
+            for (j, &q) in probs.iter().enumerate() {
+                acc += q;
+                cut = j + 1;
+                if acc >= p.top_p {
+                    break;
+                }
+            }
+            probs.truncate(cut);
+            let z: f64 = probs.iter().sum();
+            for q in probs.iter_mut() {
+                *q /= z;
+            }
+        }
+        // inverse-CDF draw
+        let u = self.rng.f64();
+        let mut acc = 0.0;
+        for (j, &q) in probs.iter().enumerate() {
+            acc += q;
+            if u < acc {
+                return order[j] as i32;
+            }
+        }
+        order[probs.len() - 1] as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Vec<f32> {
+        // deterministic pseudo-logits, several near-ties
+        (0..32).map(|i| ((i * 37 % 17) as f32) * 0.3 - 1.0).collect()
+    }
+
+    #[test]
+    fn greedy_matches_argmax_and_ignores_seed() {
+        let r = row();
+        for seed in [0u64, 7, 123] {
+            let mut s = Sampler::new(SamplingParams { seed, ..SamplingParams::greedy() });
+            assert_eq!(s.sample(&r), argmax(&r) as i32);
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic_and_seed_sensitive() {
+        let r = row();
+        let params = SamplingParams { temperature: 0.9, top_k: 12, top_p: 0.95, seed: 42 };
+        let mut a = Sampler::new(params.clone());
+        let mut b = Sampler::new(params.clone());
+        let draws_a: Vec<i32> = (0..64).map(|_| a.sample(&r)).collect();
+        let draws_b: Vec<i32> = (0..64).map(|_| b.sample(&r)).collect();
+        assert_eq!(draws_a, draws_b, "same seed must replay the same stream");
+        let mut c = Sampler::new(SamplingParams { seed: 43, ..params });
+        let draws_c: Vec<i32> = (0..64).map(|_| c.sample(&r)).collect();
+        assert_ne!(draws_a, draws_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn top_p_zero_degenerates_to_best_token() {
+        let r = row();
+        let best = argmax(&r) as i32;
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 1.3,
+            top_k: 0,
+            top_p: 0.0,
+            seed: 5,
+        });
+        for _ in 0..32 {
+            assert_eq!(s.sample(&r), best);
+        }
+    }
+
+    #[test]
+    fn top_p_one_samples_full_support() {
+        // flat logits + top_p = 1.0: every token reachable, all draws valid
+        let r = vec![0.0f32; 8];
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 9,
+        });
+        let mut seen = [false; 8];
+        for _ in 0..400 {
+            let t = s.sample(&r);
+            assert!((0..8).contains(&t));
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&x| x).count() >= 6, "flat draw too narrow: {seen:?}");
+    }
+
+    #[test]
+    fn all_mass_on_one_token_always_wins() {
+        let mut r = vec![-4.0f32; 16];
+        r[11] = 60.0; // e^64 dwarfs the rest — nucleus is exactly {11}
+        for p in [0.0, 0.5, 1.0] {
+            let mut s = Sampler::new(SamplingParams {
+                temperature: 1.0,
+                top_k: 0,
+                top_p: p,
+                seed: 3,
+            });
+            for _ in 0..32 {
+                assert_eq!(s.sample(&r), 11, "top_p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let r = row();
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 2.0,
+            top_k: 1,
+            top_p: 1.0,
+            seed: 1,
+        });
+        for _ in 0..16 {
+            assert_eq!(s.sample(&r), argmax(&r) as i32);
+        }
+    }
+}

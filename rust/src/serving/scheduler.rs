@@ -1,0 +1,327 @@
+//! Continuous-batching scheduler: a request queue of ragged prompts packed
+//! into the engine's fixed-batch decode graph through per-request *slots*.
+//!
+//! Each of the engine's `batch` slots is either **active** (owns a live
+//! request, a window of the batched KV cache, and a seeded sampler) or
+//! **parked** (decodes a dummy token whose cache writes land in a scratch
+//! slot that the next admission overwrites). One [`Scheduler::step`]:
+//!
+//! 1. **Admit** — pop queued requests into free slots and run one batched
+//!    prefill ([`Engine::prefill_into_slots`]) that left-pads short
+//!    prompts, masks the pads, and splices only the admitted slots' cache
+//!    rows into the live caches. The first token of each admitted request
+//!    is sampled from its prefill logits row.
+//! 2. **Decode** — one [`Engine::decode_step`] over the whole batch with
+//!    per-slot `fill`/`starts` vectors, then sample one token per active
+//!    slot. Requests that reach `gen_len` (or run out of cache) complete
+//!    and free their slot for the next admission — requests join and leave
+//!    mid-flight, vLLM-style, at static-shape scale.
+//!
+//! Because every graph row is computed independently of its neighbors (the
+//! masking contract in `runtime/programs.rs`), a request's token sequence
+//! is **bitwise identical** to a standalone [`Engine::generate`] run of
+//! the same prompt — regardless of batch composition, admission order, or
+//! `ARA_THREADS` (pinned by `tests/scheduler.rs`).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::engine::Engine;
+use super::sampler::{Sampler, SamplingParams};
+use crate::runtime::DeviceBuffer;
+use crate::Result;
+
+/// One queued generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+    pub params: SamplingParams,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// Submission id (monotonically increasing per scheduler).
+    pub id: u64,
+    /// The engine slot the request ran in.
+    pub slot: usize,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Submit → prefill admission, seconds (queueing delay).
+    pub queued_s: f64,
+    /// Submit → completion, seconds.
+    pub latency_s: f64,
+}
+
+/// Aggregate serve-loop counters.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    pub steps: usize,
+    pub prefills: usize,
+    pub admitted: usize,
+    pub completed: usize,
+    pub tokens_generated: usize,
+    /// First tokens sampled from prefill logits (subset of
+    /// `tokens_generated`; excludes `gen_len = 0` admissions).
+    pub prefill_sampled: usize,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+}
+
+impl SchedStats {
+    /// Generated tokens per second of engine time (prefill + decode).
+    pub fn tok_per_s(&self) -> f64 {
+        self.tokens_generated as f64 / (self.prefill_s + self.decode_s).max(1e-9)
+    }
+
+    /// Decode-loop throughput: tokens produced by decode steps per second
+    /// of decode time (the first token of each request comes from its
+    /// prefill logits and is excluded) — comparable to
+    /// [`super::GenStats::tok_per_s`].
+    pub fn decode_tok_per_s(&self) -> f64 {
+        self.tokens_generated.saturating_sub(self.prefill_sampled) as f64
+            / self.decode_s.max(1e-9)
+    }
+}
+
+struct Pending {
+    id: u64,
+    req: Request,
+    submitted: Instant,
+}
+
+struct Active {
+    id: u64,
+    slot: usize,
+    prompt_len: usize,
+    gen_len: usize,
+    /// First valid cache slot: `prefill_len - real prompt len`.
+    start: i32,
+    /// Next cache write position.
+    fill: i32,
+    last: i32,
+    tokens: Vec<i32>,
+    sampler: Sampler,
+    submitted: Instant,
+    started: Instant,
+}
+
+/// The continuous-batching serve loop over one engine.
+pub struct Scheduler<'e> {
+    engine: &'e Engine,
+    queue: VecDeque<Pending>,
+    slots: Vec<Option<Active>>,
+    caches: Option<Vec<DeviceBuffer>>,
+    next_id: u64,
+    stats: SchedStats,
+}
+
+impl<'e> Scheduler<'e> {
+    pub fn new(engine: &'e Engine) -> Scheduler<'e> {
+        let mut slots = Vec::with_capacity(engine.batch);
+        slots.resize_with(engine.batch, || None);
+        Scheduler {
+            engine,
+            queue: VecDeque::new(),
+            slots,
+            caches: None,
+            next_id: 0,
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Enqueue a request; returns its completion id.
+    pub fn submit(&mut self, req: Request) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Pending { id, req, submitted: Instant::now() });
+        id
+    }
+
+    /// No queued and no in-flight requests.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(Option::is_none)
+    }
+
+    /// Requests currently decoding.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Requests waiting for a slot.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> &SchedStats {
+        &self.stats
+    }
+
+    /// One serve-loop iteration: admit into free slots, then decode one
+    /// token for every active slot. Returns the requests that finished.
+    ///
+    /// On `Err` the in-flight cache state is lost: call
+    /// [`Scheduler::abort_active`] before stepping again (queued requests
+    /// survive; only the active slots are aborted).
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+        self.admit(&mut done)?;
+        self.decode(&mut done)?;
+        self.stats.steps += 1;
+        Ok(done)
+    }
+
+    /// Drive [`Scheduler::step`] until every submitted request completed.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    fn admit(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        if self.queue.is_empty() {
+            return Ok(());
+        }
+        let mut admits: Vec<(usize, Pending)> = Vec::new();
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].is_some() {
+                continue;
+            }
+            match self.queue.pop_front() {
+                Some(p) => admits.push((slot, p)),
+                None => break,
+            }
+        }
+        if admits.is_empty() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let pairs: Vec<(usize, &[i32])> =
+            admits.iter().map(|(s, p)| (*s, p.req.prompt.as_slice())).collect();
+        let (rows, merged) = match self.engine.prefill_into_slots(&pairs, self.caches.take()) {
+            Ok(x) => x,
+            Err(e) => {
+                // transient engine error: put the popped requests back at
+                // the queue front (original order) instead of losing them;
+                // the live caches were consumed, so the caller must abort
+                // the active slots ([`Scheduler::abort_active`])
+                for (_, pending) in admits.into_iter().rev() {
+                    self.queue.push_front(pending);
+                }
+                return Err(e);
+            }
+        };
+        self.caches = Some(merged);
+        self.stats.prefill_s += t0.elapsed().as_secs_f64();
+        self.stats.prefills += 1;
+        let p = self.engine.config().prefill_len;
+        for ((slot, pending), row) in admits.into_iter().zip(rows) {
+            let n = self.engine.real_len(&pending.req.prompt);
+            let mut a = Active {
+                id: pending.id,
+                slot,
+                prompt_len: pending.req.prompt.len(),
+                gen_len: pending.req.gen_len,
+                start: (p - n) as i32,
+                fill: p as i32,
+                last: crate::data::BOS_TOKEN,
+                tokens: Vec::with_capacity(pending.req.gen_len),
+                sampler: Sampler::new(pending.req.params.clone()),
+                submitted: pending.submitted,
+                started: t0,
+            };
+            self.stats.admitted += 1;
+            if a.gen_len == 0 {
+                done.push(self.complete(a));
+                continue;
+            }
+            let tok = a.sampler.sample(&row);
+            a.last = tok;
+            a.tokens.push(tok);
+            self.stats.tokens_generated += 1;
+            self.stats.prefill_sampled += 1;
+            if self.finished(&a) {
+                done.push(self.complete(a));
+            } else {
+                self.slots[slot] = Some(a);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        if self.slots.iter().all(Option::is_none) {
+            return Ok(());
+        }
+        let b = self.engine.batch;
+        let p = self.engine.config().prefill_len;
+        // parked slots decode a dummy BOS whose cache write lands at slot
+        // `p` of their (dead) cache row — the next admission overwrites it
+        let mut toks = vec![crate::data::BOS_TOKEN; b];
+        let mut fill = vec![p as i32; b];
+        let mut starts = vec![0i32; b];
+        for a in self.slots.iter().flatten() {
+            toks[a.slot] = a.last;
+            fill[a.slot] = a.fill;
+            starts[a.slot] = a.start;
+        }
+        let t0 = Instant::now();
+        let caches = self.caches.take().expect("active slots imply live caches");
+        let (logits, new_caches) = self.engine.decode_step(caches, &toks, &fill, &starts)?;
+        self.caches = Some(new_caches);
+        self.stats.decode_s += t0.elapsed().as_secs_f64();
+        let vocab = self.engine.config().vocab;
+        for slot in 0..b {
+            let Some(mut a) = self.slots[slot].take() else { continue };
+            a.fill += 1;
+            let row = &logits.data[slot * vocab..(slot + 1) * vocab];
+            let tok = a.sampler.sample(row);
+            a.last = tok;
+            a.tokens.push(tok);
+            self.stats.tokens_generated += 1;
+            if self.finished(&a) {
+                done.push(self.complete(a));
+            } else {
+                self.slots[slot] = Some(a);
+            }
+        }
+        Ok(())
+    }
+
+    /// Engine-error recovery: abort every in-flight request (their cache
+    /// state is gone) but **keep the queue** — queued requests never
+    /// touched the engine and can still be served. Returns the aborted
+    /// request ids so a front-end can fail just those callers.
+    pub fn abort_active(&mut self) -> Vec<u64> {
+        self.caches = None;
+        let mut ids = Vec::new();
+        for s in self.slots.iter_mut() {
+            if let Some(a) = s.take() {
+                ids.push(a.id);
+            }
+        }
+        ids
+    }
+
+    /// Done when the request reached `gen_len` tokens or its next decode
+    /// would overrun the cache — the same guard as [`Engine::generate`], so
+    /// early-stopped outputs stay parity-comparable.
+    fn finished(&self, a: &Active) -> bool {
+        a.tokens.len() >= a.gen_len || (a.fill + 1) as usize >= self.engine.config().max_decode_seq
+    }
+
+    fn complete(&mut self, a: Active) -> Completion {
+        self.stats.completed += 1;
+        Completion {
+            id: a.id,
+            slot: a.slot,
+            prompt_len: a.prompt_len,
+            tokens: a.tokens,
+            queued_s: (a.started - a.submitted).as_secs_f64(),
+            latency_s: a.submitted.elapsed().as_secs_f64(),
+        }
+    }
+}
