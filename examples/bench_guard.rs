@@ -1,7 +1,8 @@
 //! Bench-health guard: parse the machine-readable bench baselines
-//! (`BENCH_PR2.json`, `BENCH_PR3.json`) with the in-crate JSON parser and
-//! exit non-zero when a required key is missing, non-numeric, or
-//! non-finite. Replaces the brittle `grep` checks the CI `bench-smoke` job
+//! (`BENCH_PR2.json`, `BENCH_PR3.json`, `BENCH_PR4.json`) with the
+//! in-crate JSON parser and exit non-zero when a required key is missing,
+//! non-numeric, non-finite — or, for rate/utilization keys, outside
+//! [0, 1]. Replaces the brittle `grep` checks the CI `bench-smoke` job
 //! used to run.
 //!
 //!   cargo run --release --example bench_guard            # real baselines
@@ -17,6 +18,8 @@ struct Check {
     file: &'static str,
     section: String,
     keys: Vec<String>,
+    /// Keys that must additionally lie in [0, 1] (rates, utilizations).
+    unit_keys: Vec<String>,
 }
 
 fn required(smoke: bool) -> Vec<Check> {
@@ -58,10 +61,43 @@ fn required(smoke: bool) -> Vec<Check> {
             sched_keys.push(format!("{a}_{m}"));
         }
     }
+    // paged-pool shared-prompt workload (fig5 part d): hit rate and pool
+    // utilization are fractions — enforce [0, 1] on top of finiteness
+    let mut paged_keys = Vec::new();
+    let mut paged_unit = Vec::new();
+    for a in sched_allocs {
+        paged_keys.push(format!("{a}_shared_tok_s"));
+        for m in ["prefix_hit_rate", "pool_util"] {
+            paged_keys.push(format!("{a}_{m}"));
+            paged_unit.push(format!("{a}_{m}"));
+        }
+    }
+    let none: Vec<String> = Vec::new();
     vec![
-        Check { file: "BENCH_PR2.json", section: format!("perf_micro{sfx}"), keys: pm_keys },
-        Check { file: "BENCH_PR2.json", section: format!("fig5_decode_tok_s{sfx}"), keys: f5_keys },
-        Check { file: "BENCH_PR3.json", section: format!("fig5_sched{sfx}"), keys: sched_keys },
+        Check {
+            file: "BENCH_PR2.json",
+            section: format!("perf_micro{sfx}"),
+            keys: pm_keys,
+            unit_keys: none.clone(),
+        },
+        Check {
+            file: "BENCH_PR2.json",
+            section: format!("fig5_decode_tok_s{sfx}"),
+            keys: f5_keys,
+            unit_keys: none.clone(),
+        },
+        Check {
+            file: "BENCH_PR3.json",
+            section: format!("fig5_sched{sfx}"),
+            keys: sched_keys,
+            unit_keys: none,
+        },
+        Check {
+            file: "BENCH_PR4.json",
+            section: format!("fig5_paged{sfx}"),
+            keys: paged_keys,
+            unit_keys: paged_unit,
+        },
     ]
 }
 
@@ -119,6 +155,12 @@ fn main() {
                     "{} [{}] {key}: non-finite value {v}",
                     check.file, check.section
                 )),
+                Some(Ok(v)) if check.unit_keys.contains(key) && !(0.0..=1.0).contains(&v) => {
+                    failures.push(format!(
+                        "{} [{}] {key}: {v} outside [0, 1]",
+                        check.file, check.section
+                    ))
+                }
                 Some(Ok(_)) => {}
             }
         }

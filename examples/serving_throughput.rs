@@ -14,7 +14,9 @@ use std::time::Instant;
 use ara_compress::coordinator::Pipeline;
 use ara_compress::data::{corpus_spec, generate_tokens, Rng};
 use ara_compress::runtime::{resolve_alloc, Runtime};
-use ara_compress::serving::{DynamicBatcher, Engine, Router, SamplingParams, ServeRequest};
+use ara_compress::serving::{
+    DynamicBatcher, Engine, FinishReason, Router, SamplingParams, ServeRequest,
+};
 use ara_compress::Result;
 
 fn main() -> Result<()> {
@@ -67,6 +69,7 @@ fn main() -> Result<()> {
         latencies.push(t_submit.elapsed().as_secs_f64());
         tps_last = resp.decode_tok_per_s;
         assert_eq!(resp.tokens.len(), gen_len);
+        assert_eq!(resp.finish_reason, FinishReason::Stop, "no request should truncate");
     }
     let wall = t0.elapsed().as_secs_f64();
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());

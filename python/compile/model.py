@@ -564,3 +564,90 @@ def make_prefill(cfg, alloc, batch):
 
     outs = ["logits"] + [n for n, *_ in _cache_spec(cfg, batch)]
     return fn, spec, outs
+
+
+def _pool_spec(cfg, block_len, num_blocks):
+    rows, width = num_blocks * block_len, kv_dim(cfg)
+    out = []
+    for i in range(cfg["n_layers"]):
+        out += [(f"kpool.{i}", (rows, width), F32),
+                (f"vpool.{i}", (rows, width), F32)]
+    return out
+
+
+def make_decode_paged(cfg, alloc, batch, block_len, num_blocks):
+    """One decode step over a **block-paged KV pool** (mirrors
+    ``rust/src/runtime/programs.rs:decode_paged`` — the continuous-batching
+    scheduler's hot path; artifact name
+    ``decode_paged_<alloc>_b<B>_blk<block_len>x<num_blocks>``).
+
+    Per layer the pool is a 2-D row table ``(num_blocks·block_len,
+    nkv·head_dim)``: row ``r`` holds every kv-head's vector for token slot
+    ``r % block_len`` of block ``r // block_len``. Block 0 is the reserved
+    scratch block parked slots write into. Inputs per slot: ``tokens[b]``,
+    ``lens[b]`` — the **virtual** write/attend position (the paged layout
+    drops the contiguous path's left-pad, so the rope position is ``lens``
+    and there is no ``starts``), ``rows[b]`` — the physical pool row the
+    new k/v is scattered to (``btable[i, lens[i]//block_len]·block_len +
+    lens[i] % block_len``, precomputed by the scheduler), and
+    ``btable[b, bps]`` — the block table the attention window is gathered
+    through (padded entries point at the scratch block and are masked).
+    Virtual slots above ``lens[i]`` are masked, so stale rows never
+    contribute. With ``block_len = max_decode_seq`` (one block per
+    sequence) every token stream is bitwise identical to ``make_decode``.
+    """
+    wspec = _to_spec3(spec_alloc(cfg, alloc))
+    pspec = _pool_spec(cfg, block_len, num_blocks)
+    bps = -(-cfg["max_decode_seq"] // block_len)  # blocks per sequence
+    S = bps * block_len
+    spec = wspec + pspec + [("tokens", (batch,), I32), ("lens", (batch,), I32),
+                            ("rows", (batch,), I32), ("btable", (batch, bps), I32)]
+    names = [n for n, *_ in spec]
+    unflatten = _bind(names)
+    d, nh, nkv, dh = cfg["d_model"], cfg["n_heads"], cfg["n_kv_heads"], head_dim(cfg)
+    width = nkv * dh
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, lens = params["tokens"], params["lens"]
+        wrows, btable = params["rows"], params["btable"]
+        b = batch
+        h = params["embed"][tokens]                          # (b, d)
+        pos = lens                                           # virtual rope position
+        new_pools = []
+        for i in range(cfg["n_layers"]):
+            p = f"layers.{i}."
+            x = rmsnorm(h, params[p + "ln1"])
+            q = _linear_alloc(params, p + "attn.wq", x).reshape(b, nh, dh)
+            k = _linear_alloc(params, p + "attn.wk", x).reshape(b, nkv, dh)
+            v = _linear_alloc(params, p + "attn.wv", x).reshape(b, nkv, dh)
+            if cfg["family"] == "qwen":
+                q = rmsnorm(q.reshape(-1, dh), params[p + "qnorm"]).reshape(b, nh, dh)
+                k = rmsnorm(k.reshape(-1, dh), params[p + "knorm"]).reshape(b, nkv, dh)
+            q = _rope(q[:, None], pos[:, None], cfg["rope_theta"])[:, 0]
+            k = _rope(k[:, None], pos[:, None], cfg["rope_theta"])[:, 0]
+            # scatter the new k/v rows into the pool (the rust interpreter
+            # resolves duplicate parked-slot rows to the highest batch index)
+            kp = params[f"kpool.{i}"].at[wrows].set(k.reshape(b, width))
+            vp = params[f"vpool.{i}"].at[wrows].set(v.reshape(b, width))
+            new_pools += [kp, vp]
+            # gather each slot's window through its block table:
+            # (b, bps) block ids → (b, S) physical rows → (b, nkv, S, dh)
+            prow = (btable * block_len)[:, :, None] \
+                + jnp.arange(block_len, dtype=I32)[None, None, :]
+            prow = prow.reshape(b, S)
+            kc = kp[prow].reshape(b, S, nkv, dh).transpose(0, 2, 1, 3)
+            vc = vp[prow].reshape(b, S, nkv, dh).transpose(0, 2, 1, 3)
+            # attend over virtual slots ≤ lens (starts = 0 in paged layout)
+            o = _attend_cache(cfg, q, kc, vc, lens + 1, None)
+            h = h + _linear_alloc(params, p + "attn.wo", o.reshape(b, d))
+            x = rmsnorm(h, params[p + "ln2"])
+            g = _linear_alloc(params, p + "mlp.wgate", x)
+            u = _linear_alloc(params, p + "mlp.wup", x)
+            h = h + _linear_alloc(params, p + "mlp.wdown", (g * jax.nn.sigmoid(g)) * u)
+        h = rmsnorm(h, params["norm_f"])
+        logits = h @ params["head"].T
+        return (logits, *new_pools)
+
+    outs = ["logits"] + [n for n, *_ in pspec]
+    return fn, spec, outs

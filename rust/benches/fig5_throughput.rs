@@ -8,9 +8,12 @@
 //! tokens/sec are appended to `BENCH_PR2.json` (section
 //! `fig5_decode_tok_s`); the continuous-batching scheduler trace (req/s,
 //! tok/s, p50/p95 latency under Poisson-ish arrivals with mixed prompt
-//! lengths) is appended to `BENCH_PR3.json` (section `fig5_sched`).
-//! `ARA_BENCH_SMOKE=1` shrinks the sweep to a build/emit check for CI;
-//! `ARA_SCHED_REQS` overrides the trace length.
+//! lengths) is appended to `BENCH_PR3.json` (section `fig5_sched`); the
+//! paged-KV shared-system-prompt workload (tok/s, prefix-cache hit rate,
+//! pool utilization — part d) is appended to `BENCH_PR4.json` (section
+//! `fig5_paged`). `ARA_BENCH_SMOKE=1` shrinks the sweep to a build/emit
+//! check for CI; `ARA_SCHED_REQS` / `ARA_PAGED_REQS` override the trace
+//! lengths.
 
 mod common;
 
@@ -113,7 +116,13 @@ fn main() {
         format!("Fig 5a — decode tok/s vs batch size (gen_len={gen_len})"),
         &{
             let mut h = vec!["Alloc"];
-            h.extend(batches.iter().map(|b| match b { 1 => "B=1", 2 => "B=2", 4 => "B=4", 8 => "B=8", _ => "B=16" }));
+            h.extend(batches.iter().map(|b| match b {
+                1 => "B=1",
+                2 => "B=2",
+                4 => "B=4",
+                8 => "B=8",
+                _ => "B=16",
+            }));
             h
         },
     );
@@ -169,6 +178,67 @@ fn main() {
         &bench_json_path_named("BENCH_PR3.json"),
         &bench_section("fig5_sched"),
         &sched_entries,
+    );
+
+    // --- (d) paged KV pool under a shared-system-prompt workload ---
+    // every request opens with the same system prompt (the full prefill
+    // window); the paged scheduler prefills the shared blocks once and
+    // serves the rest from the prefix cache — measured: decode tok/s,
+    // prefix-cache hit rate, and pool high-water utilization.
+    let paged_allocs: &[&str] = if smoke { &["uniform-80"] } else { &["uniform-80", "ara-80"] };
+    let n_shared = std::env::var("ARA_PAGED_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 5 } else { ara_compress::config::scaled(32, 12) });
+    let sys_prompt: Vec<i32> = stream[..pl.cfg.prefill_len].to_vec();
+    let mut tp = Table::new(
+        format!("Fig 5d — paged KV pool, {n_shared} shared-prompt requests, B={bmax}"),
+        &["Alloc", "tok/s", "hit rate", "pool util", "prefills"],
+    );
+    let mut paged_entries: Vec<(String, f64)> = Vec::new();
+    for alloc_name in paged_allocs {
+        let engine = pl.engine(&ws, &fm, alloc_name, bmax).expect("engine");
+        let mut sched = Scheduler::new(&engine);
+        let mut rng = Rng::new(4321);
+        // the first request registers the shared chain; one step, then the
+        // fleet arrives and rides the prefix cache
+        sched.submit(Request {
+            prompt: sys_prompt.clone(),
+            gen_len: 2 + rng.below(10),
+            params: SamplingParams::greedy(),
+        });
+        let t0 = Instant::now();
+        sched.step().expect("scheduler step");
+        for _ in 1..n_shared {
+            sched.submit(Request {
+                prompt: sys_prompt.clone(),
+                gen_len: 2 + rng.below(10),
+                params: SamplingParams::greedy(),
+            });
+        }
+        sched.run_to_completion().expect("drain");
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let stats = sched.stats();
+        let tok_s = stats.tokens_generated as f64 / wall;
+        let hit = stats.prefix_hit_rate();
+        let util = stats.pool_peak_util;
+        tp.row(vec![
+            alloc_name.to_string(),
+            format!("{tok_s:.0}"),
+            format!("{hit:.2}"),
+            format!("{util:.2}"),
+            format!("{}", stats.prefills),
+        ]);
+        paged_entries.push((format!("{alloc_name}_shared_tok_s"), tok_s));
+        paged_entries.push((format!("{alloc_name}_prefix_hit_rate"), hit));
+        paged_entries.push((format!("{alloc_name}_pool_util"), util));
+    }
+    tp.print();
+    paged_entries.sort_by(|a, b| a.0.cmp(&b.0));
+    record_bench_at(
+        &bench_json_path_named("BENCH_PR4.json"),
+        &bench_section("fig5_paged"),
+        &paged_entries,
     );
 
     if smoke {

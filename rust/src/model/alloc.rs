@@ -33,8 +33,23 @@ impl Allocation {
         self.modules.insert(module.to_string(), a);
     }
 
+    /// Fallible lookup with the module name in the error — the form every
+    /// caller that can propagate a [`crate::error::Error`] should use.
+    pub fn try_get(&self, module: &str) -> Result<ModuleAlloc> {
+        self.modules.get(module).copied().ok_or_else(|| {
+            crate::anyhow!(
+                "allocation `{}` has no entry for module `{module}` ({} modules present)",
+                self.name,
+                self.modules.len()
+            )
+        })
+    }
+
+    /// Infallible lookup for contexts that already validated the allocation
+    /// (graph builders after `validate_alloc`); panics with the module name
+    /// instead of the old opaque `BTreeMap` index panic.
     pub fn get(&self, module: &str) -> ModuleAlloc {
-        self.modules[module]
+        self.try_get(module).unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn to_json(&self) -> String {
@@ -123,5 +138,15 @@ mod tests {
     fn rejects_missing_rank() {
         let text = r#"{"name": "x", "modules": {"m": {"dense": false}}}"#;
         assert!(Allocation::from_json(text).is_err());
+    }
+
+    #[test]
+    fn try_get_names_the_missing_module() {
+        let mut a = Allocation::new("partial");
+        a.set("layers.0.attn.wq", ModuleAlloc::Rank(4));
+        assert_eq!(a.try_get("layers.0.attn.wq").unwrap(), ModuleAlloc::Rank(4));
+        let err = a.try_get("layers.9.mlp.wup").unwrap_err().to_string();
+        assert!(err.contains("layers.9.mlp.wup"), "{err}");
+        assert!(err.contains("partial"), "{err}");
     }
 }

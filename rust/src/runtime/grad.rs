@@ -284,8 +284,12 @@ pub fn append_gradients(g: &mut Graph, loss: Id, wrt: &[Id]) -> Vec<Id> {
                     acc(g, &mut adj, &needs, x, c);
                 }
             }
-            Op::ScatterAddRows { .. } | Op::ScatterLast { .. } | Op::UpdateAt { .. } => {
-                panic!("no VJP for scatter ops (serving/adjoint-only)")
+            Op::ScatterAddRows { .. }
+            | Op::ScatterLast { .. }
+            | Op::UpdateAt { .. }
+            | Op::UpdateRows { .. }
+            | Op::GatherBlocks { .. } => {
+                panic!("no VJP for scatter/paged-KV ops (serving/adjoint-only)")
             }
         }
     }

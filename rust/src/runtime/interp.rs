@@ -101,6 +101,15 @@ pub enum Op {
     /// KV-cache write: cache (b,h,s,d) ← kv (b,h,d) at per-batch position
     /// pos (b,) — the decode-step dynamic-update-slice.
     UpdateAt { cache: Id, kv: Id, pos: Id },
+    /// Row write into a 2-D table: table (R, D) ← upd (b, D) at per-batch
+    /// row pos (b,). The paged-KV pool write (rows are token slots of the
+    /// block pool); duplicate positions resolve to the highest batch index.
+    UpdateRows { table: Id, upd: Id, pos: Id },
+    /// Block-table gather over a paged KV pool: pool (R, heads·dh) with
+    /// R = num_blocks·block_len rows, idx (b, nblk) i32 block ids →
+    /// out (b, heads, nblk·block_len, dh) — the per-request attention
+    /// window, reassembled from scattered blocks.
+    GatherBlocks { pool: Id, idx: Id, block_len: usize, heads: usize },
     /// f32 ramp [0, len).
     Iota { len: usize },
 }
@@ -142,6 +151,8 @@ impl Op {
             Op::ScatterAddRows { idx, upd, .. } => vec![*idx, *upd],
             Op::ScatterLast { idx, upd, .. } => vec![*idx, *upd],
             Op::UpdateAt { cache, kv, pos } => vec![*cache, *kv, *pos],
+            Op::UpdateRows { table, upd, pos } => vec![*table, *upd, *pos],
+            Op::GatherBlocks { pool, idx, .. } => vec![*pool, *idx],
         }
     }
 }
@@ -439,6 +450,32 @@ impl Graph {
         assert_eq!(self.shape(pos), &[sc[0]][..], "update_at pos shape");
         assert_eq!(self.dtype(pos), DType::I32);
         self.push(Op::UpdateAt { cache, kv, pos }, sc, DType::F32)
+    }
+
+    pub fn update_rows(&mut self, table: Id, upd: Id, pos: Id) -> Id {
+        let st = self.shape(table).to_vec();
+        assert_eq!(st.len(), 2, "update_rows table must be 2-D (rows, d)");
+        assert_eq!(
+            self.shape(upd),
+            &[self.shape(pos)[0], st[1]][..],
+            "update_rows upd shape"
+        );
+        assert_eq!(self.shape(pos).len(), 1, "update_rows pos must be (b,)");
+        assert_eq!(self.dtype(pos), DType::I32);
+        self.push(Op::UpdateRows { table, upd, pos }, st, DType::F32)
+    }
+
+    pub fn gather_blocks(&mut self, pool: Id, idx: Id, block_len: usize, heads: usize) -> Id {
+        let sp = self.shape(pool).to_vec();
+        assert_eq!(sp.len(), 2, "gather_blocks pool must be 2-D (rows, heads*dh)");
+        assert_eq!(self.dtype(idx), DType::I32, "gather_blocks idx must be i32");
+        let si = self.shape(idx).to_vec();
+        assert_eq!(si.len(), 2, "gather_blocks idx must be (b, nblk)");
+        assert!(block_len > 0 && sp[0] % block_len == 0, "pool rows % block_len != 0");
+        assert!(heads > 0 && sp[1] % heads == 0, "pool width % heads != 0");
+        let dh = sp[1] / heads;
+        let shape = vec![si[0], heads, si[1] * block_len, dh];
+        self.push(Op::GatherBlocks { pool, idx, block_len, heads }, shape, DType::F32)
     }
 
     pub fn iota(&mut self, len: usize) -> Id {
@@ -1000,6 +1037,63 @@ impl Graph {
                 }
                 Value::F32(ct)
             }
+            Op::UpdateRows { table, upd, pos } => {
+                // steal the dying pool (paged decode steady state: zero
+                // copies); fall back to one copy when the table is live
+                let mut tt = match self.take_donor(id, plan, vals, args) {
+                    Some(t) => t,
+                    None => {
+                        let t = self.f32_of(vals, args, *table)?;
+                        let mut buf = arena.take(t.data.len());
+                        buf.copy_from_slice(&t.data);
+                        Tensor::from_vec(&t.shape, buf)
+                    }
+                };
+                let ut = self.f32_of(vals, args, *upd)?;
+                let pt = self.i32_of(vals, args, *pos)?;
+                let (rows, d) = (tt.shape[0], tt.shape[1]);
+                for (j, &p) in pt.data.iter().enumerate() {
+                    let p = p as usize;
+                    if p >= rows {
+                        return Err(crate::anyhow!(
+                            "update_rows position {p} out of range ({rows})"
+                        ));
+                    }
+                    tt.data[p * d..(p + 1) * d].copy_from_slice(&ut.data[j * d..(j + 1) * d]);
+                }
+                Value::F32(tt)
+            }
+            Op::GatherBlocks { pool, idx, block_len, heads } => {
+                let (bl, hs) = (*block_len, *heads);
+                let pt = self.f32_of(vals, args, *pool)?;
+                let it = self.i32_of(vals, args, *idx)?;
+                let width = pt.shape[1];
+                let dh = width / hs;
+                let nb = pt.shape[0] / bl;
+                let (b, nblk) = (it.shape[0], it.shape[1]);
+                let s = nblk * bl;
+                let mut buf = arena.take(b * hs * s * dh);
+                for bb in 0..b {
+                    for (j, &blk) in it.data[bb * nblk..(bb + 1) * nblk].iter().enumerate() {
+                        let blk = blk as usize;
+                        if blk >= nb {
+                            return Err(crate::anyhow!(
+                                "gather_blocks block id {blk} out of range ({nb})"
+                            ));
+                        }
+                        for o in 0..bl {
+                            let src = (blk * bl + o) * width;
+                            let dst_t = j * bl + o;
+                            for h in 0..hs {
+                                let dst = ((bb * hs + h) * s + dst_t) * dh;
+                                buf[dst..dst + dh]
+                                    .copy_from_slice(&pt.data[src + h * dh..src + (h + 1) * dh]);
+                            }
+                        }
+                    }
+                }
+                Value::F32(Tensor::from_vec(out_shape, buf))
+            }
             Op::Iota { len } => {
                 let mut buf = arena.take(*len);
                 for (i, slot) in buf.iter_mut().enumerate() {
@@ -1171,6 +1265,12 @@ impl ExecPlan {
                 Op::UpdateAt { cache, .. } => {
                     if donatable(*cache, id, out_shape) {
                         donor[id] = Some(*cache);
+                    }
+                    Aux::None
+                }
+                Op::UpdateRows { table, .. } => {
+                    if donatable(*table, id, out_shape) {
+                        donor[id] = Some(*table);
                     }
                     Aux::None
                 }
@@ -1568,6 +1668,83 @@ mod tests {
         let got = run1(&g, up, &[Feed::F32(&cache), Feed::F32(&kvt), Feed::I32(&pos)]);
         assert_eq!(got.data, vec![1., 2., 0., 0., 0., 0.]);
         assert!(cache.data.iter().all(|&x| x == 0.0), "borrowed cache untouched");
+    }
+
+    #[test]
+    fn update_rows_writes_and_steals_owned_table() {
+        // paged-pool write: owned (R, D) table updated in place; duplicate
+        // positions resolve to the highest batch index (parked-slot rule)
+        let mut g = Graph::default();
+        let tb = g.input(&[4, 2], DType::F32);
+        let up = g.input(&[3, 2], DType::F32);
+        let p = g.input(&[3], DType::I32);
+        let w = g.update_rows(tb, up, p);
+        let plan = ExecPlan::new(&g, &[w]);
+        let table = Tensor::zeros(&[4, 2]);
+        let ptr = table.data.as_ptr();
+        let upd = t(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let pos = IntTensor::from_vec(&[3], vec![2, 0, 2]);
+        let mut args = vec![
+            Arg::from_value(Value::F32(table)),
+            Arg::F32(&upd),
+            Arg::I32(&pos),
+        ];
+        let out = g.eval_plan(&mut args, &plan, &mut Arena::new()).unwrap();
+        let Value::F32(got) = &out[0] else { panic!("expected f32") };
+        assert_eq!(got.data, vec![3., 4., 0., 0., 5., 6., 0., 0.]);
+        assert_eq!(got.data.as_ptr(), ptr, "table must be updated in place");
+    }
+
+    #[test]
+    fn update_rows_rejects_out_of_range_position() {
+        let mut g = Graph::default();
+        let tb = g.input(&[2, 1], DType::F32);
+        let up = g.input(&[1, 1], DType::F32);
+        let p = g.input(&[1], DType::I32);
+        let w = g.update_rows(tb, up, p);
+        let table = Tensor::zeros(&[2, 1]);
+        let upd = t(&[1, 1], vec![7.]);
+        let pos = IntTensor::from_vec(&[1], vec![2]);
+        let err = g
+            .eval(&[Feed::F32(&table), Feed::F32(&upd), Feed::I32(&pos)], &[w])
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn gather_blocks_reassembles_window_from_block_table() {
+        // pool of 3 blocks × 2 slots × (2 heads × 1 dh); a table [2, 0]
+        // must produce the window [block2 slots, block0 slots] per head
+        let (nb, bl, heads, dh) = (3usize, 2usize, 2usize, 1usize);
+        let width = heads * dh;
+        let mut g = Graph::default();
+        let pool = g.input(&[nb * bl, width], DType::F32);
+        let idx = g.input(&[1, 2], DType::I32);
+        let out = g.gather_blocks(pool, idx, bl, heads);
+        assert_eq!(g.shape(out), &[1, heads, 2 * bl, dh][..]);
+        // row r holds [h0 = 10r, h1 = 10r + 1]
+        let pt = t(
+            &[nb * bl, width],
+            (0..nb * bl * width)
+                .map(|i| (10 * (i / width) + i % width) as f32)
+                .collect(),
+        );
+        let it = IntTensor::from_vec(&[1, 2], vec![2, 0]);
+        let got = run1(&g, out, &[Feed::F32(&pt), Feed::I32(&it)]);
+        // head 0: rows 4,5 (block 2) then 0,1 (block 0); head 1: same + 1
+        assert_eq!(got.data, vec![40., 50., 0., 10., 41., 51., 1., 11.]);
+    }
+
+    #[test]
+    fn gather_blocks_rejects_out_of_range_block() {
+        let mut g = Graph::default();
+        let pool = g.input(&[4, 1], DType::F32);
+        let idx = g.input(&[1, 1], DType::I32);
+        let out = g.gather_blocks(pool, idx, 2, 1);
+        let pt = Tensor::zeros(&[4, 1]);
+        let it = IntTensor::from_vec(&[1, 1], vec![2]);
+        let err = g.eval(&[Feed::F32(&pt), Feed::I32(&it)], &[out]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]

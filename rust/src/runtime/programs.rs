@@ -44,10 +44,17 @@ pub fn build(cfg: &ModelCfg, paths: &Paths, name: &str) -> Result<Program> {
             if let Some(rest) = name.strip_prefix("prefill_") {
                 let (alloc_name, batch) = parse_serving(rest, name)?;
                 let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
+                validate_alloc(cfg, &alloc)?;
                 Ok(prefill(cfg, &alloc, batch, name))
+            } else if let Some(rest) = name.strip_prefix("decode_paged_") {
+                let (alloc_name, batch, block_len, num_blocks) = parse_paged(rest, name)?;
+                let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
+                validate_alloc(cfg, &alloc)?;
+                Ok(decode_paged(cfg, &alloc, batch, block_len, num_blocks, name))
             } else if let Some(rest) = name.strip_prefix("decode_") {
                 let (alloc_name, batch) = parse_serving(rest, name)?;
                 let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
+                validate_alloc(cfg, &alloc)?;
                 Ok(decode(cfg, &alloc, batch, name))
             } else {
                 Err(crate::anyhow!("unknown artifact `{name}` (cpu backend)"))
@@ -56,16 +63,30 @@ pub fn build(cfg: &ModelCfg, paths: &Paths, name: &str) -> Result<Program> {
     }
 }
 
+/// Every compressible module must have an allocation entry before a serving
+/// graph is specialized on it — a proper error beats a builder panic.
+fn validate_alloc(cfg: &ModelCfg, alloc: &Allocation) -> Result<()> {
+    for d in module_dims(cfg) {
+        alloc.try_get(&d.name)?;
+    }
+    Ok(())
+}
+
 /// Cheap name check: would [`build`] recognize this artifact name?
 /// (Does not validate that a named allocation actually resolves.)
 pub(crate) fn is_known_artifact(name: &str) -> bool {
     matches!(
         name,
         "train_step" | "calibrate" | "score_dense" | "score_masked" | "mask_fwd_grad" | "lora_step"
-    ) || name
-        .strip_prefix("prefill_")
-        .or_else(|| name.strip_prefix("decode_"))
-        .is_some_and(|rest| parse_serving(rest, name).is_ok())
+    ) || if let Some(rest) = name.strip_prefix("decode_paged_") {
+        // must not fall through to the plain-decode parse: a malformed
+        // paged name would misparse as alloc `paged_…`
+        parse_paged(rest, name).is_ok()
+    } else {
+        name.strip_prefix("prefill_")
+            .or_else(|| name.strip_prefix("decode_"))
+            .is_some_and(|rest| parse_serving(rest, name).is_ok())
+    }
 }
 
 /// Split `"<alloc>_b<B>"` into (alloc, B).
@@ -81,6 +102,28 @@ fn parse_serving(rest: &str, full: &str) -> Result<(String, usize)> {
         return Err(crate::anyhow!("bad serving artifact name `{full}`"));
     }
     Ok((alloc, batch))
+}
+
+/// Split `"<alloc>_b<B>_blk<L>x<N>"` into (alloc, B, block_len, num_blocks).
+fn parse_paged(rest: &str, full: &str) -> Result<(String, usize, usize, usize)> {
+    let pos = rest
+        .rfind("_blk")
+        .ok_or_else(|| crate::anyhow!("bad paged artifact name `{full}` (missing _blk)"))?;
+    let (bl_s, nb_s) = rest[pos + 4..]
+        .split_once('x')
+        .ok_or_else(|| crate::anyhow!("bad pool geometry in artifact name `{full}`"))?;
+    let block_len: usize = bl_s
+        .parse()
+        .map_err(|_| crate::anyhow!("bad block_len in artifact name `{full}`"))?;
+    let num_blocks: usize = nb_s
+        .parse()
+        .map_err(|_| crate::anyhow!("bad num_blocks in artifact name `{full}`"))?;
+    let (alloc, batch) = parse_serving(&rest[..pos], full)?;
+    if block_len == 0 || num_blocks < 2 {
+        // block 0 is the reserved scratch block — a usable pool needs ≥ 2
+        return Err(crate::anyhow!("degenerate pool geometry in artifact name `{full}`"));
+    }
+    Ok((alloc, batch, block_len, num_blocks))
 }
 
 /// Resolve a serving allocation by name (mirrors aot.py:resolve_alloc).
@@ -941,6 +984,162 @@ fn decode(cfg: &ModelCfg, alloc: &Allocation, batch: usize, name: &str) -> Progr
     net.finish(name, outputs, names)
 }
 
+fn pool_names(cfg: &ModelCfg) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..cfg.n_layers {
+        out.push(format!("kpool.{i}"));
+        out.push(format!("vpool.{i}"));
+    }
+    out
+}
+
+/// One decode step over a **block-paged** KV pool (the continuous-batching
+/// scheduler's hot path — see `serving/kvpool.rs`). Per layer the pool is a
+/// 2-D row table `(num_blocks·block_len, nkv·dh)` whose row `r` holds every
+/// kv-head's vector for token slot `r % block_len` of block `r / block_len`.
+/// Inputs per slot: the token, `lens[i]` — the slot's **virtual** write
+/// position (= number of tokens already in its window; also the highest
+/// virtual slot attended, rope position `lens[i]` — the paged layout drops
+/// the contiguous path's left-pad, so `starts` is always 0 and is omitted),
+/// `rows[i]` — the precomputed physical pool row
+/// `btable[i][lens[i]/block_len]·block_len + lens[i]%block_len` the new K/V
+/// is written to (`UpdateRows`), and `btable[i]` — the block table the
+/// attention window is gathered through (`GatherBlocks`). Virtual slots
+/// above `lens[i]` are masked, so stale rows in partially-filled or padded
+/// blocks never contribute. With `block_len = max_decode_seq` (one block
+/// per sequence) the gathered window is that block verbatim and every
+/// token stream is bitwise identical to the contiguous `decode` graph —
+/// the degenerate-config parity anchor pinned in `tests/scheduler.rs`.
+fn decode_paged(
+    cfg: &ModelCfg,
+    alloc: &Allocation,
+    batch: usize,
+    block_len: usize,
+    num_blocks: usize,
+    name: &str,
+) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Alloc);
+    net.add_aux_inputs();
+    net.add_alloc_module_inputs(alloc);
+    let b = batch;
+    let (d, nh, nkv, dh) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+    let bps = cfg.max_decode_seq.div_ceil(block_len); // blocks per sequence
+    let s = bps * block_len; // gathered virtual window length
+    let rows = num_blocks * block_len;
+    let width = nkv * dh;
+    let mut pool_in = Vec::new();
+    for i in 0..cfg.n_layers {
+        let kp = net.input_f32(&format!("kpool.{i}"), &[rows, width]);
+        let vp = net.input_f32(&format!("vpool.{i}"), &[rows, width]);
+        pool_in.push((kp, vp));
+    }
+    let tokens = net.input_i32("tokens", &[b]);
+    let lens = net.input_i32("lens", &[b]);
+    let wrow = net.input_i32("rows", &[b]);
+    let btable = net.input_i32("btable", &[b, bps]);
+
+    let embed = net.p("embed");
+    let mut h = net.g.gather(embed, tokens); // (b, d)
+    let lens_f = net.g.cast_f32(lens); // (b,) = rope position (starts = 0)
+    let pos = net.g.reshape(lens_f, &[b, 1]);
+    // valid-slot window, shared by every layer: virtual slot ≤ lens
+    let one = net.g.scalar(1.0);
+    let plus1 = net.g.add(lens_f, one); // (b,)
+    let pl3 = net.g.reshape(plus1, &[b, 1, 1]);
+    let ramp = net.g.iota(s);
+    let valid = net.g.less(ramp, pl3); // (b, 1, s): slot ≤ lens
+    let mut pools_out = Vec::new();
+    for layer in 0..cfg.n_layers {
+        let pfx = format!("layers.{layer}.");
+        let ln1 = net.p(&format!("{pfx}ln1"));
+        let x = net.rmsnorm(h, ln1); // (b, d)
+        let q0 = net.linear(&format!("{pfx}attn.wq"), x);
+        let k0 = net.linear(&format!("{pfx}attn.wk"), x);
+        let v0 = net.linear(&format!("{pfx}attn.wv"), x);
+        let mut q = net.g.reshape(q0, &[b, nh, dh]);
+        let mut k = net.g.reshape(k0, &[b, nkv, dh]);
+        let v = net.g.reshape(v0, &[b, nkv, dh]);
+        if cfg.family == "qwen" {
+            let qn = net.p(&format!("{pfx}qnorm"));
+            let kn = net.p(&format!("{pfx}knorm"));
+            let qf = net.g.reshape(q, &[b * nh, dh]);
+            let qn2 = net.rmsnorm(qf, qn);
+            q = net.g.reshape(qn2, &[b, nh, dh]);
+            let kf = net.g.reshape(k, &[b * nkv, dh]);
+            let kn2 = net.rmsnorm(kf, kn);
+            k = net.g.reshape(kn2, &[b, nkv, dh]);
+        }
+        // rope on a singleton time axis at per-sequence virtual position
+        let q4 = net.g.reshape(q, &[b, 1, nh, dh]);
+        let q4r = net.rope(q4, pos);
+        q = net.g.reshape(q4r, &[b, nh, dh]);
+        let k4 = net.g.reshape(k, &[b, 1, nkv, dh]);
+        let k4r = net.rope(k4, pos);
+        k = net.g.reshape(k4r, &[b, nkv, dh]);
+
+        // write the new k/v into the pool at the block-indexed rows, then
+        // gather each slot's window back through its block table
+        let (kp_in, vp_in) = pool_in[layer];
+        let k2 = net.g.reshape(k, &[b, width]);
+        let v2 = net.g.reshape(v, &[b, width]);
+        let kp = net.g.update_rows(kp_in, k2, wrow);
+        let vp = net.g.update_rows(vp_in, v2, wrow);
+        pools_out.push(kp);
+        pools_out.push(vp);
+        let kc = net.g.gather_blocks(kp, btable, block_len, nkv); // (b,nkv,s,dh)
+        let vc = net.g.gather_blocks(vp, btable, block_len, nkv);
+
+        // attend over gathered virtual slots ≤ lens (identical math to the
+        // contiguous decode graph from here on)
+        let rep = nh / nkv;
+        let (kr, vr) = if rep == 1 {
+            (kc, vc)
+        } else {
+            let k5 = net.g.reshape(kc, &[b, nkv, 1, s, dh]);
+            let kb = net.g.broadcast(k5, &[b, nkv, rep, s, dh]);
+            let kr = net.g.reshape(kb, &[b, nh, s, dh]);
+            let v5 = net.g.reshape(vc, &[b, nkv, 1, s, dh]);
+            let vb = net.g.broadcast(v5, &[b, nkv, rep, s, dh]);
+            let vr = net.g.reshape(vb, &[b, nh, s, dh]);
+            (kr, vr)
+        };
+        let q3 = net.g.reshape(q, &[b * nh, 1, dh]);
+        let kr3 = net.g.reshape(kr, &[b * nh, s, dh]);
+        let raw = net.g.bmm(q3, kr3, false, true); // (b·nh, 1, s)
+        let raw3 = net.g.reshape(raw, &[b, nh, s]);
+        let sc = net.g.scalar((dh as f32).powf(-0.5));
+        let scores = net.g.mul(raw3, sc);
+        let masked = net.mask_fill(scores, valid);
+        let p = net.softmax3(masked); // (b, nh, s)
+        let p3 = net.g.reshape(p, &[b * nh, 1, s]);
+        let vr3 = net.g.reshape(vr, &[b * nh, s, dh]);
+        let o = net.g.bmm(p3, vr3, false, false); // (b·nh, 1, dh)
+        let o2 = net.g.reshape(o, &[b, d]);
+        let attn = net.linear(&format!("{pfx}attn.wo"), o2);
+        h = net.g.add(h, attn);
+
+        let ln2 = net.p(&format!("{pfx}ln2"));
+        let x = net.rmsnorm(h, ln2);
+        let gt = net.linear(&format!("{pfx}mlp.wgate"), x);
+        let up = net.linear(&format!("{pfx}mlp.wup"), x);
+        let sg = net.g.sigmoid(gt);
+        let silu = net.g.mul(gt, sg);
+        let y = net.g.mul(silu, up);
+        let down = net.linear(&format!("{pfx}mlp.wdown"), y);
+        h = net.g.add(h, down);
+    }
+    let nf = net.p("norm_f");
+    let hf = net.rmsnorm(h, nf);
+    let head = net.p("head");
+    let logits = net.g.matmul(hf, head, false, true); // (b, vocab)
+
+    let mut outputs = vec![logits];
+    outputs.extend(pools_out);
+    let mut names = vec!["logits".to_string()];
+    names.extend(pool_names(cfg));
+    net.finish(name, outputs, names)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1063,5 +1262,52 @@ mod tests {
         let paths = Paths::discover().unwrap();
         assert!(build(&c, &paths, "nonexistent_graph").is_err());
         assert!(build(&c, &paths, "decode_bogus").is_err());
+    }
+
+    #[test]
+    fn paged_decode_manifest_contract() {
+        let c = cfg("micro-llama");
+        let paths = Paths::discover().unwrap();
+        let p = build(&c, &paths, "decode_paged_uniform-80_b2_blk8x19").unwrap();
+        let n = p.manifest.inputs.len();
+        assert_eq!(p.manifest.inputs[n - 4].name, "tokens");
+        assert_eq!(p.manifest.inputs[n - 3].name, "lens");
+        assert_eq!(p.manifest.inputs[n - 2].name, "rows");
+        assert_eq!(p.manifest.inputs[n - 1].name, "btable");
+        let bps = c.max_decode_seq.div_ceil(8);
+        assert_eq!(p.manifest.input("btable").unwrap().shape, vec![2, bps]);
+        assert_eq!(p.manifest.input("btable").unwrap().dtype, "i32");
+        assert_eq!(
+            p.manifest.input("kpool.0").unwrap().shape,
+            vec![19 * 8, c.n_kv_heads * c.head_dim()]
+        );
+        assert_eq!(p.manifest.outputs[0], "logits");
+        assert_eq!(p.manifest.outputs.len(), 1 + 2 * c.n_layers);
+
+        // the engine shares weight buffers between the contiguous and paged
+        // decode executables — their weight prefixes must match exactly
+        let dec = build(&c, &paths, "decode_uniform-80_b2").unwrap();
+        let wp = p
+            .manifest
+            .inputs
+            .iter()
+            .position(|s| s.name.starts_with("kpool"))
+            .unwrap();
+        let wd = dec
+            .manifest
+            .inputs
+            .iter()
+            .position(|s| s.name.starts_with("kcache"))
+            .unwrap();
+        assert_eq!(wp, wd, "weight prefix lengths differ");
+        for (a, b) in p.manifest.inputs[..wp].iter().zip(&dec.manifest.inputs[..wd]) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+        }
+
+        assert!(is_known_artifact("decode_paged_uniform-80_b2_blk8x19"));
+        assert!(!is_known_artifact("decode_paged_uniform-80_b2"));
+        assert!(!is_known_artifact("decode_paged_uniform-80_b2_blk0x4"));
+        assert!(!is_known_artifact("decode_paged_uniform-80_b2_blk8x1"));
     }
 }

@@ -7,7 +7,11 @@
 //!   slots carry dummy prompts) and merge only those slots' KV-cache rows
 //!   into the live batch caches.
 //! * [`Engine::decode_step`] — one batched decode step with per-slot cache
-//!   write position (`fill`) and valid-window start (`starts`).
+//!   write position (`fill`) and valid-window start (`starts`) over the
+//!   contiguous per-slot caches (the standalone / parity-reference path).
+//! * [`Engine::decode_step_paged`] — one batched decode step over the
+//!   block-paged KV pool via per-slot block tables (the scheduler's hot
+//!   path; see `serving/kvpool.rs`).
 //!
 //! [`Engine::generate`] remains as a thin greedy wrapper over the two (the
 //! benches and CLI drive it); it now accepts ragged prompts, which it
@@ -16,10 +20,12 @@
 //! PJRT they are real device buffers that never leave the device between
 //! decode steps.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Instant;
 
+use super::kvpool::KvPoolCfg;
 use super::sampler::argmax;
 use crate::config::ModelCfg;
 use crate::model::{Allocation, ModuleAlloc, WeightStore};
@@ -28,6 +34,16 @@ use crate::svd::FactoredModel;
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
 
+/// Why a request's generation ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Reached its requested `gen_len`.
+    Stop,
+    /// Hit a capacity bound first: the decode window (`max_decode_seq`) or
+    /// an unrecoverable KV-pool exhaustion.
+    Length,
+}
+
 /// Generation statistics for throughput reporting (Fig. 5).
 #[derive(Debug, Clone, Default)]
 pub struct GenStats {
@@ -35,6 +51,9 @@ pub struct GenStats {
     pub decode_s: f64,
     pub tokens_generated: usize,
     pub steps: usize,
+    /// Per-slot finish reason — `Length` marks requests truncated by the
+    /// decode window instead of silently stopping short.
+    pub finish: Vec<FinishReason>,
 }
 
 impl GenStats {
@@ -45,17 +64,31 @@ impl GenStats {
 }
 
 /// One (allocation, batch) specialization with device-resident weights.
+/// Carries two decode specializations: the contiguous per-slot cache graph
+/// (`decode_step` — the standalone/parity reference) and the block-paged
+/// pool graph (`decode_step_paged` — the scheduler's hot path).
 pub struct Engine {
     cfg: ModelCfg,
     pub batch: usize,
     pub alloc_name: String,
+    /// `"decode_paged_<alloc>_b<B>_<suffix>"` artifact stem pieces for
+    /// [`Engine::enable_paged`] re-specialization.
+    alloc_artifact: String,
     prefill: Rc<Exe>,
     decode: Rc<Exe>,
-    /// Device buffers for the weight prefix, in decode-manifest order.
+    /// The paged-pool decode specialization. `None` on backends without
+    /// paged artifacts (PJRT keeps the contiguous serving path).
+    paged: Option<Rc<Exe>>,
+    paged_cfg: KvPoolCfg,
+    /// Device buffers for the weight prefix, in decode-manifest order
+    /// (shared with the paged decode — identical weight prefix, pinned by
+    /// `runtime::programs` tests).
     dec_weights: Vec<DeviceBuffer>,
     /// Device buffers for the weight prefix, in prefill-manifest order.
     pre_weights: Vec<DeviceBuffer>,
     backend: Rc<dyn Backend>,
+    /// Test instrumentation: fail the n-th subsequent decode step once.
+    fault: Cell<Option<usize>>,
 }
 
 /// Materialize the host tensor for a weight input name under an allocation.
@@ -66,14 +99,14 @@ fn weight_tensor(
     alloc: &Allocation,
 ) -> Result<Tensor> {
     if let Some(base) = name.strip_suffix(".u") {
-        let k = match alloc.get(base) {
+        let k = match alloc.try_get(base)? {
             ModuleAlloc::Rank(k) => k,
             ModuleAlloc::Dense => return Err(crate::anyhow!("{base} is dense, no .u")),
         };
         return Ok(fm.factors[base].truncate(k).0);
     }
     if let Some(base) = name.strip_suffix(".v") {
-        let k = match alloc.get(base) {
+        let k = match alloc.try_get(base)? {
             ModuleAlloc::Rank(k) => k,
             ModuleAlloc::Dense => return Err(crate::anyhow!("{base} is dense, no .v")),
         };
@@ -106,6 +139,26 @@ fn splice_host_rows(
     }
 }
 
+/// The paged decode must share the contiguous decode's weight prefix (the
+/// engine binds one buffer set to both); verify names before trusting it.
+fn check_paged_prefix(decode: &Rc<Exe>, paged: &Rc<Exe>, n_weights: usize) -> Result<()> {
+    let d = &decode.manifest().inputs;
+    let p = &paged.manifest().inputs;
+    if p.len() < n_weights {
+        return Err(crate::anyhow!("paged decode manifest shorter than the weight prefix"));
+    }
+    for (ds, ps) in d[..n_weights].iter().zip(&p[..n_weights]) {
+        if ds.name != ps.name || ds.shape != ps.shape {
+            return Err(crate::anyhow!(
+                "paged decode weight prefix diverges at `{}` vs `{}`",
+                ds.name,
+                ps.name
+            ));
+        }
+    }
+    Ok(())
+}
+
 impl Engine {
     /// Load (cached) executables and upload weights for `alloc` at batch
     /// size `b`.
@@ -120,6 +173,17 @@ impl Engine {
     ) -> Result<Engine> {
         let prefill = rt.load(&format!("prefill_{alloc_artifact}_b{batch}"))?;
         let decode = rt.load(&format!("decode_{alloc_artifact}_b{batch}"))?;
+        let paged_cfg = KvPoolCfg::from_env(cfg, batch);
+        // the paged graph is interpreter-built; PJRT ships no paged HLO
+        // artifacts and keeps the contiguous serving path
+        let paged = if rt.backend().name() == "cpu" {
+            Some(rt.load(&format!(
+                "decode_paged_{alloc_artifact}_b{batch}_{}",
+                paged_cfg.artifact_suffix()
+            ))?)
+        } else {
+            None
+        };
 
         let upload = |exe: &Rc<Exe>| -> Result<Vec<DeviceBuffer>> {
             let mut bufs = Vec::new();
@@ -146,16 +210,71 @@ impl Engine {
             Ok(bufs)
         };
 
+        let dec_weights = upload(&decode)?;
+        if let Some(p) = &paged {
+            check_paged_prefix(&decode, p, dec_weights.len())?;
+        }
         Ok(Engine {
             cfg: cfg.clone(),
             batch,
             alloc_name: alloc.name.clone(),
-            dec_weights: upload(&decode)?,
+            alloc_artifact: alloc_artifact.to_string(),
+            dec_weights,
             pre_weights: upload(&prefill)?,
             prefill,
             decode,
+            paged,
+            paged_cfg,
             backend: rt.backend(),
+            fault: Cell::new(None),
         })
+    }
+
+    /// Re-specialize the paged decode graph for an explicit pool geometry
+    /// (tests pin the degenerate `block_len = max_decode_seq` config this
+    /// way; production geometry comes from `ARA_KV_BLOCK`/`ARA_KV_BLOCKS`
+    /// at construction). Weights are shared with the contiguous decode —
+    /// no re-upload.
+    pub fn enable_paged(&mut self, rt: &Runtime, pcfg: KvPoolCfg) -> Result<()> {
+        let paged = rt.load(&format!(
+            "decode_paged_{}_b{}_{}",
+            self.alloc_artifact,
+            self.batch,
+            pcfg.artifact_suffix()
+        ))?;
+        check_paged_prefix(&self.decode, &paged, self.dec_weights.len())?;
+        self.paged = Some(paged);
+        self.paged_cfg = pcfg;
+        Ok(())
+    }
+
+    /// The pool geometry the active paged decode graph was compiled for.
+    pub fn paged_cfg(&self) -> KvPoolCfg {
+        self.paged_cfg
+    }
+
+    /// Whether this engine carries a paged decode specialization (true on
+    /// the CPU backend; PJRT serves through the contiguous path only).
+    pub fn has_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// Test instrumentation: make the n-th subsequent decode step (either
+    /// path) fail once with a transient error, for error-recovery tests.
+    #[doc(hidden)]
+    pub fn inject_decode_fault(&self, after_steps: usize) {
+        self.fault.set(Some(after_steps));
+    }
+
+    fn check_fault(&self) -> Result<()> {
+        if let Some(n) = self.fault.get() {
+            if n == 0 {
+                self.fault.set(None);
+                return Err(crate::anyhow!("injected decode fault (test instrumentation)"));
+            }
+            self.fault.set(Some(n - 1));
+        }
+        Ok(())
     }
 
     /// Number of prompt tokens the prefill window keeps: the most recent
@@ -256,6 +375,7 @@ impl Engine {
         fill: &[i32],
         starts: &[i32],
     ) -> Result<(Tensor, Vec<DeviceBuffer>)> {
+        self.check_fault()?;
         let b = self.batch;
         assert_eq!(tokens.len(), b, "tokens must cover every slot");
         assert_eq!(fill.len(), b, "fill must cover every slot");
@@ -284,12 +404,68 @@ impl Engine {
         Ok((logits, it.collect()))
     }
 
+    /// One decode step over the **block-paged KV pool** — the scheduler's
+    /// hot path. `pool` moves in owned (2·layers buffers in `kpool.0,
+    /// vpool.0, …` order, from [`super::KvPool::take_bufs`]) so the
+    /// interpreter writes the new K/V rows in place; weights stay
+    /// borrowed. Per slot: `tokens[i]` the last token, `vlens[i]` the
+    /// virtual write/attend position, `rows[i]` the physical pool row the
+    /// K/V lands in, `btable[i]` the block table (padded with the scratch
+    /// block 0 — padded blocks are masked). Returns the next-token logits
+    /// and the updated pool buffers.
+    pub fn decode_step_paged(
+        &self,
+        pool: Vec<DeviceBuffer>,
+        tokens: &[i32],
+        vlens: &[i32],
+        rows: &[i32],
+        btable: &[i32],
+    ) -> Result<(Tensor, Vec<DeviceBuffer>)> {
+        self.check_fault()?;
+        let paged = self
+            .paged
+            .as_ref()
+            .ok_or_else(|| crate::anyhow!("paged decode unavailable on this backend"))?;
+        let b = self.batch;
+        let bps = self.paged_cfg.blocks_per_seq(&self.cfg);
+        assert_eq!(tokens.len(), b, "tokens must cover every slot");
+        assert_eq!(vlens.len(), b, "vlens must cover every slot");
+        assert_eq!(rows.len(), b, "rows must cover every slot");
+        assert_eq!(btable.len(), b * bps, "btable must be (batch, blocks_per_seq)");
+        assert_eq!(pool.len(), 2 * self.cfg.n_layers, "pool buffer count");
+        let tok_t = IntTensor::from_vec(&[b], tokens.to_vec());
+        let len_t = IntTensor::from_vec(&[b], vlens.to_vec());
+        let row_t = IntTensor::from_vec(&[b], rows.to_vec());
+        let bt_t = IntTensor::from_vec(&[b, bps], btable.to_vec());
+        let mut args: Vec<DeviceArg> = self.dec_weights.iter().map(DeviceArg::Ref).collect();
+        for p in pool {
+            args.push(DeviceArg::Own(p));
+        }
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&tok_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&len_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&row_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&bt_t))?));
+        let outs = paged
+            .run_device_args(args)
+            .map_err(|e| crate::anyhow!("paged decode step: {e}"))?;
+        let mut it = outs.into_iter();
+        let logit_buf = it
+            .next()
+            .ok_or_else(|| crate::anyhow!("paged decode returned no outputs"))?;
+        let logits = self.backend.download(&logit_buf)?;
+        Ok((logits, it.collect()))
+    }
+
     /// Greedy-generate `gen_len` tokens for a batch of prompts (one per
     /// engine slot; ragged lengths allowed — shorter prompts are left-padded
     /// and masked, longer ones keep their most recent `prefill_len` tokens).
     /// Thin wrapper over [`Engine::prefill_into_slots`] +
     /// [`Engine::decode_step`], kept for the benches and CLI.
-    pub fn generate(&self, prompts: &[Vec<i32>], gen_len: usize) -> Result<(Vec<Vec<i32>>, GenStats)> {
+    pub fn generate(
+        &self,
+        prompts: &[Vec<i32>],
+        gen_len: usize,
+    ) -> Result<(Vec<Vec<i32>>, GenStats)> {
         let b = self.batch;
         let p = self.cfg.prefill_len;
         assert_eq!(prompts.len(), b, "prompt count must equal engine batch");
@@ -319,7 +495,7 @@ impl Engine {
         }
         for _step in 1..gen_len {
             if fill[0] as usize + 1 >= self.cfg.max_decode_seq {
-                break; // cache full
+                break; // decode window full — surfaced via `finish` below
             }
             let (logits, new_caches) = self.decode_step(caches, &next, &fill, &starts)?;
             caches = new_caches;
@@ -337,6 +513,10 @@ impl Engine {
         }
         stats.decode_s = t1.elapsed().as_secs_f64();
         stats.tokens_generated = b * generated[0].len();
+        stats.finish = generated
+            .iter()
+            .map(|g| if g.len() >= gen_len { FinishReason::Stop } else { FinishReason::Length })
+            .collect();
         Ok((generated, stats))
     }
 

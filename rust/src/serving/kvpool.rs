@@ -1,0 +1,581 @@
+//! Block-paged KV-cache pool with ref-counted blocks and prefix sharing —
+//! the memory manager under the continuous-batching scheduler (vLLM's
+//! PagedAttention design at static-shape scale).
+//!
+//! Layout: per layer one K and one V **row table** of shape
+//! `(num_blocks · block_len, n_kv_heads · head_dim)` — row `r` holds every
+//! kv-head's vector for token slot `r % block_len` of block
+//! `r / block_len`. A request owns a *block table* (ordered physical block
+//! ids); its virtual token position `i` lives at pool row
+//! `table[i / block_len] · block_len + i % block_len`. The paged layout
+//! drops the contiguous path's left-pad: virtual slot `i` is token `i`, so
+//! content-equal prompt prefixes map to bitwise-equal K/V rows and can
+//! share physical blocks across requests of different lengths.
+//!
+//! Invariants:
+//! * **Block 0 is scratch** — parked decode slots write their dummy token
+//!   there; it is never allocated to a request.
+//! * **Ref-counting** — a block is held once per request table entry and
+//!   once per prefix-cache chain that lists it; it returns to the free
+//!   list when the count reaches zero. Allocation order is deterministic
+//!   (ascending ids via a LIFO free list seeded in descending order).
+//! * **Copy-on-write** — shared blocks are never written. Full blocks of a
+//!   cached chain are read-only by construction (decode writes land at
+//!   virtual positions ≥ the prompt length, i.e. past every shared full
+//!   block); a reused *partial* tail block is [`KvPool::cow_block`]-copied
+//!   before the borrowing request appends into it.
+//! * **Prefix map** — `hash(prefix) → block chain`, at full-block
+//!   granularity, plus a full-prompt entry that also caches the prefill's
+//!   final-position logits row: a request whose entire (windowed) prompt
+//!   is cached skips prefill compute entirely. Entries are evicted LRU
+//!   when the pool runs dry or the map outgrows its cap; token contents
+//!   are stored and compared on lookup, so hash collisions degrade to
+//!   misses, never to wrong reuse.
+//!
+//! The pool is host-resident (the default CPU backend's "device" memory is
+//! host memory); the PJRT serving path keeps the contiguous caches.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::ModelCfg;
+use crate::runtime::{DeviceBuffer, Value};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Pool geometry + policy for one engine specialization. Baked into the
+/// `decode_paged_<alloc>_b<B>_blk<L>x<N>` artifact shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolCfg {
+    /// Token slots per block (`ARA_KV_BLOCK`; default: `prefill_len`).
+    pub block_len: usize,
+    /// Total blocks incl. the reserved scratch block 0 (`ARA_KV_BLOCKS`;
+    /// default: `1 + (batch + 1) · ceil(max_decode_seq / block_len)`).
+    pub num_blocks: usize,
+    /// Reuse cached prefix chains (`ARA_KV_SHARE=0` disables; default on).
+    pub prefix_sharing: bool,
+}
+
+impl KvPoolCfg {
+    /// Resolve the pool geometry from the environment with model-shaped
+    /// defaults: block = the prefill window, capacity = every slot at its
+    /// longest sequence plus one sequence of headroom for the prefix cache.
+    pub fn from_env(cfg: &ModelCfg, batch: usize) -> KvPoolCfg {
+        let env = |k: &str| std::env::var(k).ok().and_then(|v| v.trim().parse::<usize>().ok());
+        let block_len = env("ARA_KV_BLOCK")
+            .unwrap_or(cfg.prefill_len)
+            .clamp(1, cfg.max_decode_seq);
+        let bps = cfg.max_decode_seq.div_ceil(block_len);
+        let num_blocks = env("ARA_KV_BLOCKS").unwrap_or(1 + (batch + 1) * bps).max(2);
+        let prefix_sharing = !matches!(std::env::var("ARA_KV_SHARE").as_deref(), Ok("0"));
+        KvPoolCfg { block_len, num_blocks, prefix_sharing }
+    }
+
+    /// Max blocks one sequence can span (the block-table width per slot).
+    pub fn blocks_per_seq(&self, cfg: &ModelCfg) -> usize {
+        cfg.max_decode_seq.div_ceil(self.block_len)
+    }
+
+    /// The artifact-name suffix this geometry compiles to.
+    pub fn artifact_suffix(&self) -> String {
+        format!("blk{}x{}", self.block_len, self.num_blocks)
+    }
+}
+
+/// A successful prefix-map lookup. Returned blocks are already retained
+/// for the caller (one count per block) — release them on drop-out paths.
+pub enum PrefixHit {
+    /// The entire effective prompt is cached: the chain covers all
+    /// `ceil(n / block_len)` blocks and `logits` is the prefill's
+    /// final-position row — prefill can be skipped outright.
+    Full { blocks: Vec<usize>, logits: Vec<f32> },
+    /// The first `covered` tokens (a whole number of blocks) are cached.
+    Partial { blocks: Vec<usize>, covered: usize },
+}
+
+struct ChainEntry {
+    tokens: Vec<i32>,
+    blocks: Vec<usize>,
+    /// Final-position prefill logits (full-prompt entries only).
+    logits: Option<Vec<f32>>,
+}
+
+/// Max cached chains before LRU eviction kicks in preemptively.
+const PREFIX_CAP: usize = 64;
+
+/// Pool-accounting counters (also surfaced through `SchedStats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    pub prefix_lookups: usize,
+    pub prefix_hits: usize,
+    pub full_hits: usize,
+    pub evictions: usize,
+    pub cow_copies: usize,
+}
+
+pub struct KvPool {
+    n_layers: usize,
+    nkv: usize,
+    dh: usize,
+    pub cfg: KvPoolCfg,
+    /// 2·n_layers buffers in (kpool.0, vpool.0, kpool.1, …) order; `None`
+    /// while moved into a decode step (or lost to a failed one).
+    bufs: Vec<Option<DeviceBuffer>>,
+    refs: Vec<u32>,
+    /// LIFO free list seeded descending, so allocation is ascending-id.
+    free: Vec<usize>,
+    prefix: HashMap<u64, ChainEntry>,
+    lru: VecDeque<u64>,
+    peak_used: usize,
+    pub stats: PoolStats,
+}
+
+fn host_ref(buf: &DeviceBuffer) -> Result<&Tensor> {
+    match buf {
+        DeviceBuffer::Host(Value::F32(t)) => Ok(t),
+        _ => Err(crate::anyhow!("kv pool requires host f32 buffers (cpu backend)")),
+    }
+}
+
+fn host_mut(buf: &mut DeviceBuffer) -> Result<&mut Tensor> {
+    match buf {
+        DeviceBuffer::Host(Value::F32(t)) => Ok(t),
+        _ => Err(crate::anyhow!("kv pool requires host f32 buffers (cpu backend)")),
+    }
+}
+
+/// FNV-1a over a tag, the token count, and the token bytes.
+fn chain_hash(tag: u64, tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut step = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for b in tag.to_le_bytes() {
+        step(b);
+    }
+    for b in (tokens.len() as u64).to_le_bytes() {
+        step(b);
+    }
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            step(b);
+        }
+    }
+    h
+}
+
+const TAG_BLOCKS: u64 = 0;
+const TAG_FULL: u64 = 1;
+
+impl KvPool {
+    pub fn new(cfg: &ModelCfg, pcfg: KvPoolCfg) -> KvPool {
+        let rows = pcfg.num_blocks * pcfg.block_len;
+        let width = cfg.n_kv_heads * cfg.head_dim();
+        let mut bufs = Vec::with_capacity(2 * cfg.n_layers);
+        for _ in 0..2 * cfg.n_layers {
+            bufs.push(Some(DeviceBuffer::Host(Value::F32(Tensor::zeros(&[rows, width])))));
+        }
+        let mut refs = vec![0u32; pcfg.num_blocks];
+        refs[0] = 1; // scratch block: permanently held, never allocated
+        KvPool {
+            n_layers: cfg.n_layers,
+            nkv: cfg.n_kv_heads,
+            dh: cfg.head_dim(),
+            cfg: pcfg,
+            bufs,
+            refs,
+            free: (1..pcfg.num_blocks).rev().collect(),
+            prefix: HashMap::new(),
+            lru: VecDeque::new(),
+            peak_used: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    // ---------------- block accounting ----------------
+
+    /// Blocks currently available without evicting cached chains.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks held by requests or cached chains (scratch excluded).
+    pub fn used_blocks(&self) -> usize {
+        self.cfg.num_blocks - 1 - self.free.len()
+    }
+
+    /// Current used fraction of the allocatable pool, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / (self.cfg.num_blocks - 1).max(1) as f64
+    }
+
+    /// High-water used fraction since construction/reset, in [0, 1].
+    pub fn peak_utilization(&self) -> f64 {
+        self.peak_used as f64 / (self.cfg.num_blocks - 1).max(1) as f64
+    }
+
+    pub fn ref_count(&self, block: usize) -> u32 {
+        self.refs[block]
+    }
+
+    /// Cached prefix chains currently held.
+    pub fn cached_chains(&self) -> usize {
+        self.prefix.len()
+    }
+
+    pub fn retain(&mut self, block: usize) {
+        debug_assert!(block != 0, "scratch block is not retainable");
+        self.refs[block] += 1;
+    }
+
+    pub fn release(&mut self, block: usize) {
+        debug_assert!(block != 0, "scratch block is not releasable");
+        debug_assert!(self.refs[block] > 0, "double release of block {block}");
+        self.refs[block] -= 1;
+        if self.refs[block] == 0 {
+            self.free.push(block);
+        }
+    }
+
+    /// Allocate one block (ref count 1), evicting LRU cached chains when
+    /// the free list is dry. `None` means genuinely exhausted — the
+    /// scheduler preempts.
+    pub fn alloc(&mut self) -> Option<usize> {
+        loop {
+            if let Some(b) = self.free.pop() {
+                self.refs[b] = 1;
+                self.peak_used = self.peak_used.max(self.used_blocks());
+                return Some(b);
+            }
+            if !self.evict_one() {
+                return None;
+            }
+        }
+    }
+
+    fn evict_one(&mut self) -> bool {
+        while let Some(key) = self.lru.pop_front() {
+            if let Some(entry) = self.prefix.remove(&key) {
+                for b in entry.blocks {
+                    self.release(b);
+                }
+                self.stats.evictions += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    // ---------------- prefix map ----------------
+
+    /// Longest cached reuse for an effective (windowed) prompt. Retains
+    /// every returned block for the caller. Misses (or sharing disabled)
+    /// return `None`.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<PrefixHit> {
+        if !self.cfg.prefix_sharing || tokens.is_empty() {
+            return None;
+        }
+        self.stats.prefix_lookups += 1;
+        let bl = self.cfg.block_len;
+        // exact full-prompt hit first: blocks + cached logits
+        let hf = chain_hash(TAG_FULL, tokens);
+        if let Some(e) = self.prefix.get(&hf) {
+            if e.tokens == tokens {
+                if let Some(logits) = e.logits.clone() {
+                    let blocks = e.blocks.clone();
+                    for &b in &blocks {
+                        self.retain(b);
+                    }
+                    self.touch(hf);
+                    self.stats.prefix_hits += 1;
+                    self.stats.full_hits += 1;
+                    return Some(PrefixHit::Full { blocks, logits });
+                }
+            }
+        }
+        // longest full-block chain
+        for j in (1..=tokens.len() / bl).rev() {
+            let pfx = &tokens[..j * bl];
+            let h = chain_hash(TAG_BLOCKS, pfx);
+            if let Some(e) = self.prefix.get(&h) {
+                if e.tokens == pfx {
+                    let blocks = e.blocks.clone();
+                    for &b in &blocks {
+                        self.retain(b);
+                    }
+                    self.touch(h);
+                    self.stats.prefix_hits += 1;
+                    return Some(PrefixHit::Partial { blocks, covered: j * bl });
+                }
+            }
+        }
+        None
+    }
+
+    /// Register a freshly prefilled prompt's chain: one entry per
+    /// full-block prefix depth plus a full-prompt entry carrying the
+    /// prefill logits row. Each entry retains its blocks, so chains
+    /// outlive the registering request until evicted.
+    pub fn register(&mut self, tokens: &[i32], table: &[usize], logits: &[f32]) {
+        if !self.cfg.prefix_sharing || tokens.is_empty() {
+            return;
+        }
+        let bl = self.cfg.block_len;
+        debug_assert_eq!(table.len(), tokens.len().div_ceil(bl), "table must cover the prompt");
+        while self.prefix.len() >= PREFIX_CAP {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        for j in 1..=tokens.len() / bl {
+            let pfx = &tokens[..j * bl];
+            self.insert(chain_hash(TAG_BLOCKS, pfx), pfx, &table[..j], None);
+        }
+        self.insert(chain_hash(TAG_FULL, tokens), tokens, table, Some(logits.to_vec()));
+    }
+
+    fn insert(&mut self, key: u64, tokens: &[i32], blocks: &[usize], logits: Option<Vec<f32>>) {
+        if self.prefix.contains_key(&key) {
+            return; // first registration wins (incl. hash collisions)
+        }
+        for &b in blocks {
+            self.retain(b);
+        }
+        self.prefix.insert(
+            key,
+            ChainEntry { tokens: tokens.to_vec(), blocks: blocks.to_vec(), logits },
+        );
+        self.lru.push_back(key);
+    }
+
+    fn touch(&mut self, key: u64) {
+        if let Some(pos) = self.lru.iter().position(|&k| k == key) {
+            self.lru.remove(pos);
+            self.lru.push_back(key);
+        }
+    }
+
+    // ---------------- data movement ----------------
+
+    /// Copy-on-write: duplicate every layer's rows of `src` into a fresh
+    /// block (ref 1). The caller swaps its table entry and releases its
+    /// hold on `src`. `None` on exhaustion.
+    pub fn cow_block(&mut self, src: usize) -> Result<Option<usize>> {
+        let Some(dst) = self.alloc() else { return Ok(None) };
+        let bl = self.cfg.block_len;
+        let width = self.nkv * self.dh;
+        for buf in &mut self.bufs {
+            let t = host_mut(buf.as_mut().ok_or_else(|| {
+                crate::anyhow!("kv pool buffers are checked out (mid decode step?)")
+            })?)?;
+            let (s, d) = (src * bl * width, dst * bl * width);
+            let row = t.data[s..s + bl * width].to_vec();
+            t.data[d..d + bl * width].copy_from_slice(&row);
+        }
+        self.stats.cow_copies += 1;
+        Ok(Some(dst))
+    }
+
+    /// Splice one admitted request's prefill KV into its blocks: virtual
+    /// positions `[from, n)` come from slot `slot` of the fresh prefill
+    /// cache outputs (`(b, nkv, s_max, dh)` per layer, positions
+    /// `pad_start + i` — the contiguous prefill's left-pad layout).
+    pub fn write_prefill(
+        &mut self,
+        fresh: &[DeviceBuffer],
+        slot: usize,
+        pad_start: usize,
+        n: usize,
+        from: usize,
+        table: &[usize],
+    ) -> Result<()> {
+        if fresh.len() != 2 * self.n_layers {
+            return Err(crate::anyhow!(
+                "expected {} prefill cache outputs, got {}",
+                2 * self.n_layers,
+                fresh.len()
+            ));
+        }
+        let bl = self.cfg.block_len;
+        let (nkv, dh) = (self.nkv, self.dh);
+        let width = nkv * dh;
+        for (l, src_buf) in fresh.iter().enumerate() {
+            let src = host_ref(src_buf)?;
+            let s_max = src.shape[2];
+            let dst = host_mut(self.bufs[l].as_mut().ok_or_else(|| {
+                crate::anyhow!("kv pool buffers are checked out (mid decode step?)")
+            })?)?;
+            for i in from..n {
+                let blk = *table.get(i / bl).ok_or_else(|| {
+                    crate::anyhow!("block table too short for prompt position {i}")
+                })?;
+                let prow = (blk * bl + i % bl) * width;
+                for h in 0..nkv {
+                    let s_off = ((slot * nkv + h) * s_max + pad_start + i) * dh;
+                    dst.data[prow + h * dh..prow + (h + 1) * dh]
+                        .copy_from_slice(&src.data[s_off..s_off + dh]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Move the pool buffers out for one decode step (`kpool.0, vpool.0,
+    /// …` order). Must be paired with [`KvPool::restore_bufs`]; a step
+    /// that errors loses them — [`KvPool::reset`] rebuilds.
+    pub fn take_bufs(&mut self) -> Result<Vec<DeviceBuffer>> {
+        let mut out = Vec::with_capacity(self.bufs.len());
+        for b in &mut self.bufs {
+            out.push(b.take().ok_or_else(|| {
+                crate::anyhow!("kv pool buffers already checked out (unbalanced take)")
+            })?);
+        }
+        Ok(out)
+    }
+
+    pub fn restore_bufs(&mut self, bufs: Vec<DeviceBuffer>) {
+        assert_eq!(bufs.len(), self.bufs.len(), "pool buffer count changed");
+        for (slot, b) in self.bufs.iter_mut().zip(bufs) {
+            *slot = Some(b);
+        }
+    }
+
+    /// Drop every request/chain and rebuild zeroed buffers — the recovery
+    /// path after an engine error consumed the in-flight pool state.
+    pub fn reset(&mut self) {
+        let rows = self.cfg.num_blocks * self.cfg.block_len;
+        let width = self.nkv * self.dh;
+        for b in &mut self.bufs {
+            *b = Some(DeviceBuffer::Host(Value::F32(Tensor::zeros(&[rows, width]))));
+        }
+        self.refs.fill(0);
+        self.refs[0] = 1;
+        self.free = (1..self.cfg.num_blocks).rev().collect();
+        self.prefix.clear();
+        self.lru.clear();
+        self.peak_used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_by_name, Paths};
+
+    fn pool(bl: usize, nb: usize, share: bool) -> KvPool {
+        let paths = Paths::discover().unwrap();
+        let cfg = model_by_name(&paths.configs, "micro-llama").unwrap();
+        KvPool::new(&cfg, KvPoolCfg { block_len: bl, num_blocks: nb, prefix_sharing: share })
+    }
+
+    #[test]
+    fn alloc_release_is_deterministic_and_scratch_reserved() {
+        let mut p = pool(8, 4, false);
+        assert_eq!(p.free_blocks(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        assert_eq!((a, b, c), (1, 2, 3), "ascending allocation order");
+        assert!(p.alloc().is_none(), "pool exhausted");
+        assert_eq!(p.used_blocks(), 3);
+        assert!((p.utilization() - 1.0).abs() < 1e-12);
+        p.release(b);
+        assert_eq!(p.alloc().unwrap(), 2, "freed block comes back");
+        p.retain(a);
+        p.release(a);
+        assert_eq!(p.free_blocks(), 0, "refcounted block stays held");
+        p.release(a);
+        assert_eq!(p.free_blocks(), 1);
+    }
+
+    #[test]
+    fn prefix_chain_reuse_and_lru_eviction() {
+        let mut p = pool(4, 6, true);
+        // register a 2-block chain for an 8-token prompt
+        let toks: Vec<i32> = (1..=8).collect();
+        let b0 = p.alloc().unwrap();
+        let b1 = p.alloc().unwrap();
+        p.register(&toks, &[b0, b1], &[0.5; 4]);
+        // the registering request releases its own holds
+        p.release(b0);
+        p.release(b1);
+        assert_eq!(p.used_blocks(), 2, "cache keeps the chain alive");
+        assert_eq!(p.cached_chains(), 3, "2 block-depth entries + 1 full entry");
+
+        // exact full-prompt hit returns blocks + logits, retained
+        match p.lookup(&toks).expect("full hit") {
+            PrefixHit::Full { blocks, logits } => {
+                assert_eq!(blocks, vec![b0, b1]);
+                assert_eq!(logits, vec![0.5; 4]);
+                for b in blocks {
+                    p.release(b);
+                }
+            }
+            PrefixHit::Partial { .. } => panic!("expected full hit"),
+        }
+        // longer prompt sharing the first block: partial hit at depth 1
+        let longer: Vec<i32> = (1..=7).map(|x| if x <= 4 { x } else { 100 + x }).collect();
+        match p.lookup(&longer).expect("partial hit") {
+            PrefixHit::Partial { blocks, covered } => {
+                assert_eq!(blocks, vec![b0]);
+                assert_eq!(covered, 4);
+                p.release(b0);
+            }
+            PrefixHit::Full { .. } => panic!("expected partial hit"),
+        }
+        // a different prompt misses
+        assert!(p.lookup(&[9, 9, 9, 9]).is_none());
+        assert_eq!(p.stats.prefix_lookups, 3);
+        assert_eq!(p.stats.prefix_hits, 2);
+        assert_eq!(p.stats.full_hits, 1);
+
+        // exhaust the pool: allocation evicts cached chains to make room
+        let mut got = Vec::new();
+        while let Some(b) = p.alloc() {
+            got.push(b);
+        }
+        assert_eq!(got.len(), 5, "eviction reclaimed the cached blocks");
+        assert_eq!(p.cached_chains(), 0);
+        assert!(p.stats.evictions > 0);
+    }
+
+    #[test]
+    fn sharing_disabled_never_hits() {
+        let mut p = pool(4, 4, false);
+        let toks: Vec<i32> = (1..=4).collect();
+        let b = p.alloc().unwrap();
+        p.register(&toks, &[b], &[0.0; 2]);
+        assert!(p.lookup(&toks).is_none());
+        assert_eq!(p.cached_chains(), 0);
+        assert_eq!(p.stats.prefix_lookups, 0);
+    }
+
+    #[test]
+    fn reset_rebuilds_a_fresh_pool() {
+        let mut p = pool(4, 4, true);
+        let toks: Vec<i32> = (1..=4).collect();
+        let b = p.alloc().unwrap();
+        p.register(&toks, &[b], &[0.0; 2]);
+        let taken = p.take_bufs().unwrap();
+        assert!(p.take_bufs().is_err(), "double take must fail");
+        drop(taken); // simulate a failed decode step losing the buffers
+        p.reset();
+        assert_eq!(p.free_blocks(), 3);
+        assert_eq!(p.cached_chains(), 0);
+        let bufs = p.take_bufs().unwrap();
+        assert_eq!(bufs.len(), 2 * 2); // micro-llama: 2 layers × k/v
+        p.restore_bufs(bufs);
+    }
+
+    #[test]
+    fn from_env_defaults_are_sane() {
+        let paths = Paths::discover().unwrap();
+        let cfg = model_by_name(&paths.configs, "micro-llama").unwrap();
+        let pc = KvPoolCfg::from_env(&cfg, 2);
+        assert!(pc.block_len >= 1 && pc.block_len <= cfg.max_decode_seq);
+        assert!(pc.num_blocks >= 2);
+        // every slot must be able to reach max_decode_seq
+        assert!(pc.blocks_per_seq(&cfg) * pc.block_len >= cfg.max_decode_seq);
+        assert_eq!(pc.artifact_suffix(), format!("blk{}x{}", pc.block_len, pc.num_blocks));
+    }
+}

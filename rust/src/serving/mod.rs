@@ -11,20 +11,27 @@
 //! (batch,) token/length vectors cross the host boundary each step.
 //!
 //! On top of the stepwise engine primitives (`prefill_into_slots`,
-//! `decode_step`), the [`Scheduler`] packs arbitrary-length prompts with
-//! per-request generation lengths and sampling params into the fixed-batch
-//! decode graph, admitting new requests into freed slots mid-flight —
-//! see `scheduler.rs` for the slot/masking contract and the bitwise
-//! parity guarantee against [`Engine::generate`].
+//! `decode_step`, `decode_step_paged`), the [`Scheduler`] packs
+//! arbitrary-length prompts with per-request generation lengths and
+//! sampling params into the fixed-batch decode graph, admitting new
+//! requests into freed slots mid-flight. Serving memory is managed by a
+//! block-paged, ref-counted [`KvPool`] with prefix sharing (`kvpool.rs`):
+//! admission is gated on free blocks, identical prompt prefixes share
+//! physical blocks copy-on-write, and pool exhaustion preempts the
+//! youngest request instead of failing — see `scheduler.rs` for the
+//! slot/block-table contract and the bitwise parity guarantee against
+//! [`Engine::generate`].
 
 mod batcher;
 mod engine;
+mod kvpool;
 mod router;
 mod sampler;
 mod scheduler;
 
 pub use batcher::{BatchPlan, DynamicBatcher};
-pub use engine::{Engine, GenStats};
+pub use engine::{Engine, FinishReason, GenStats};
+pub use kvpool::{KvPool, KvPoolCfg, PoolStats, PrefixHit};
 pub use router::{Router, ServeRequest, ServeResponse};
 pub use sampler::{argmax, Sampler, SamplingParams};
 pub use scheduler::{Completion, Request, SchedStats, Scheduler};

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use super::engine::Engine;
+use super::engine::{Engine, FinishReason};
 use super::sampler::SamplingParams;
 use super::scheduler::{Request, Scheduler};
 
@@ -26,6 +26,10 @@ pub struct ServeRequest {
 #[derive(Debug, Clone)]
 pub struct ServeResponse {
     pub tokens: Vec<i32>,
+    /// Why generation ended: `Stop` (reached `gen_len`) or `Length`
+    /// (truncated by the decode window / KV-pool capacity) — KV
+    /// exhaustion is surfaced, never silently swallowed.
+    pub finish_reason: FinishReason,
     /// The serve loop's running decode throughput at completion time
     /// ([`super::SchedStats::decode_tok_per_s`]) — an engine-wide figure,
     /// not a per-request one.
@@ -107,6 +111,7 @@ impl Router {
                             if let Some(reply) = replies.remove(&c.id) {
                                 let _ = reply.send(ServeResponse {
                                     tokens: c.tokens,
+                                    finish_reason: c.finish_reason,
                                     decode_tok_per_s: tps,
                                 });
                             }

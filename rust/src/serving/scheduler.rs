@@ -1,34 +1,43 @@
-//! Continuous-batching scheduler: a request queue of ragged prompts packed
-//! into the engine's fixed-batch decode graph through per-request *slots*.
+//! Continuous-batching scheduler over a **block-paged KV pool**: a request
+//! queue of ragged prompts packed into the engine's fixed-batch paged
+//! decode graph through per-request *slots* and per-request *block tables*
+//! (see [`super::kvpool`] for the pool/prefix-sharing contract).
 //!
 //! Each of the engine's `batch` slots is either **active** (owns a live
-//! request, a window of the batched KV cache, and a seeded sampler) or
-//! **parked** (decodes a dummy token whose cache writes land in a scratch
-//! slot that the next admission overwrites). One [`Scheduler::step`]:
+//! request, a block table into the shared pool, and a seeded sampler) or
+//! **parked** (decodes a dummy token whose pool write lands in the
+//! reserved scratch block). One [`Scheduler::step`]:
 //!
-//! 1. **Admit** — pop queued requests into free slots and run one batched
-//!    prefill ([`Engine::prefill_into_slots`]) that left-pads short
-//!    prompts, masks the pads, and splices only the admitted slots' cache
-//!    rows into the live caches. The first token of each admitted request
-//!    is sampled from its prefill logits row.
-//! 2. **Decode** — one [`Engine::decode_step`] over the whole batch with
-//!    per-slot `fill`/`starts` vectors, then sample one token per active
-//!    slot. Requests that reach `gen_len` (or run out of cache) complete
-//!    and free their slot for the next admission — requests join and leave
-//!    mid-flight, vLLM-style, at static-shape scale.
+//! 1. **Admit** — pop queued requests into free slots, gated on pool
+//!    capacity: a request is admitted only when its prompt's blocks are
+//!    coverable (counting prefix-cache reuse); otherwise admission stops
+//!    (strict FIFO). Prompts whose effective window is fully cached skip
+//!    prefill outright (first token from the cached logits row); the rest
+//!    run one batched prefill whose KV is spliced into fresh pool blocks
+//!    — shared full blocks are *not* rewritten (their contents are
+//!    bitwise identical by the masking contract). Fresh chains are
+//!    registered in the prefix map for later reuse.
+//! 2. **Decode** — grow each slot's block table on demand (evicting cached
+//!    chains first, then **preempting the youngest active request** —
+//!    released back to the queue front, restarted deterministically — on
+//!    true pool exhaustion), then one [`Engine::decode_step_paged`] over
+//!    the whole batch and one sampled token per active slot. Requests
+//!    that finish report a [`FinishReason`]: `Stop` (reached `gen_len`)
+//!    or `Length` (decode window / unrecoverable pool bound).
 //!
-//! Because every graph row is computed independently of its neighbors (the
-//! masking contract in `runtime/programs.rs`), a request's token sequence
-//! is **bitwise identical** to a standalone [`Engine::generate`] run of
-//! the same prompt — regardless of batch composition, admission order, or
-//! `ARA_THREADS` (pinned by `tests/scheduler.rs`).
+//! Parity: a request's token stream is **bitwise identical** to a
+//! standalone [`Engine::generate`] run of the same prompt over the
+//! contiguous-cache graph — regardless of batch composition, admission
+//! order, block size, prefix reuse, preemption, or `ARA_THREADS` (pinned
+//! by `tests/scheduler.rs`, incl. the degenerate `block_len =
+//! max_decode_seq` config that reproduces the pre-paged layout exactly).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use super::engine::Engine;
+use super::engine::{Engine, FinishReason};
+use super::kvpool::{KvPool, PrefixHit};
 use super::sampler::{Sampler, SamplingParams};
-use crate::runtime::DeviceBuffer;
 use crate::Result;
 
 /// One queued generation request.
@@ -44,10 +53,13 @@ pub struct Request {
 pub struct Completion {
     /// Submission id (monotonically increasing per scheduler).
     pub id: u64,
-    /// The engine slot the request ran in.
+    /// The engine slot the request (last) ran in.
     pub slot: usize,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
+    /// `Stop`: reached `gen_len`; `Length`: truncated by the decode
+    /// window or unrecoverable pool exhaustion.
+    pub finish_reason: FinishReason,
     /// Submit → prefill admission, seconds (queueing delay).
     pub queued_s: f64,
     /// Submit → completion, seconds.
@@ -62,11 +74,23 @@ pub struct SchedStats {
     pub admitted: usize,
     pub completed: usize,
     pub tokens_generated: usize,
-    /// First tokens sampled from prefill logits (subset of
-    /// `tokens_generated`; excludes `gen_len = 0` admissions).
+    /// First tokens sampled from prefill (or cached-prefix) logits (subset
+    /// of `tokens_generated`; excludes `gen_len = 0` admissions).
     pub prefill_sampled: usize,
     pub prefill_s: f64,
     pub decode_s: f64,
+    /// Prefix-cache probes at admission (mirrors the pool's counters).
+    /// These three are **per admission event**: a preempted request that
+    /// restarts probes (and may hit) the cache again and is counted again.
+    pub prefix_lookups: usize,
+    /// Admissions that reused at least one cached block chain.
+    pub prefix_hits: usize,
+    /// Admissions that skipped prefill entirely (full-prompt cache hit).
+    pub prefill_skipped: usize,
+    /// Requests preempted (requeued) on pool exhaustion.
+    pub preemptions: usize,
+    /// High-water fraction of the pool's allocatable blocks in use.
+    pub pool_peak_util: f64,
 }
 
 impl SchedStats {
@@ -83,6 +107,15 @@ impl SchedStats {
         self.tokens_generated.saturating_sub(self.prefill_sampled) as f64
             / self.decode_s.max(1e-9)
     }
+
+    /// Prefix-cache hit rate over admission lookups, in [0, 1].
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
 }
 
 struct Pending {
@@ -94,38 +127,58 @@ struct Pending {
 struct Active {
     id: u64,
     slot: usize,
-    prompt_len: usize,
-    gen_len: usize,
-    /// First valid cache slot: `prefill_len - real prompt len`.
+    req: Request,
+    /// First valid slot in **padded** coordinates (`prefill_len - n`);
+    /// kept so the decode-window guard stays step-identical to the
+    /// contiguous path. Virtual (pool) position = `fill - start`.
     start: i32,
-    /// Next cache write position.
+    /// Next write position in padded coordinates.
     fill: i32,
     last: i32,
+    /// Physical pool blocks backing virtual positions, grown on demand.
+    table: Vec<usize>,
     tokens: Vec<i32>,
     sampler: Sampler,
     submitted: Instant,
     started: Instant,
 }
 
-/// The continuous-batching serve loop over one engine.
+/// One planned admission (capacity already secured).
+struct Admit {
+    pending: Pending,
+    slot: usize,
+    /// Effective (windowed) prompt tokens — what the KV layout sees.
+    eff: Vec<i32>,
+    table: Vec<usize>,
+    /// Virtual positions `[0, covered)` already present in shared blocks.
+    covered: usize,
+    /// Cached prefill logits row (full-prompt hit ⇒ prefill skipped).
+    cached_logits: Option<Vec<f32>>,
+}
+
+/// The continuous-batching serve loop over one engine and its KV pool.
 pub struct Scheduler<'e> {
     engine: &'e Engine,
+    pool: KvPool,
     queue: VecDeque<Pending>,
     slots: Vec<Option<Active>>,
-    caches: Option<Vec<DeviceBuffer>>,
     next_id: u64,
     stats: SchedStats,
 }
 
 impl<'e> Scheduler<'e> {
+    /// Build over the engine's active paged-decode specialization
+    /// (geometry from `ARA_KV_BLOCK` / `ARA_KV_BLOCKS`, or whatever
+    /// [`Engine::enable_paged`] pinned last).
     pub fn new(engine: &'e Engine) -> Scheduler<'e> {
+        let pool = KvPool::new(engine.config(), engine.paged_cfg());
         let mut slots = Vec::with_capacity(engine.batch);
         slots.resize_with(engine.batch, || None);
         Scheduler {
             engine,
+            pool,
             queue: VecDeque::new(),
             slots,
-            caches: None,
             next_id: 0,
             stats: SchedStats::default(),
         }
@@ -158,17 +211,32 @@ impl<'e> Scheduler<'e> {
         &self.stats
     }
 
-    /// One serve-loop iteration: admit into free slots, then decode one
-    /// token for every active slot. Returns the requests that finished.
+    /// Pool accounting (block refcounts, utilization, cached chains).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// One serve-loop iteration: admit into free slots (capacity-gated),
+    /// then decode one token for every active slot. Returns the requests
+    /// that finished.
     ///
-    /// On `Err` the in-flight cache state is lost: call
+    /// On `Err` the in-flight pool state is lost: call
     /// [`Scheduler::abort_active`] before stepping again (queued requests
     /// survive; only the active slots are aborted).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        // fail fast before any prefill work is wasted: the paged scheduler
+        // needs the paged decode graph (CPU backend; PJRT serves through
+        // the contiguous `Engine::generate` path only)
+        if !self.engine.has_paged() {
+            return Err(crate::anyhow!(
+                "scheduler requires a paged decode specialization (cpu backend)"
+            ));
+        }
         let mut done = Vec::new();
         self.admit(&mut done)?;
         self.decode(&mut done)?;
         self.stats.steps += 1;
+        self.sync_pool_stats();
         Ok(done)
     }
 
@@ -181,97 +249,267 @@ impl<'e> Scheduler<'e> {
         Ok(out)
     }
 
+    fn sync_pool_stats(&mut self) {
+        self.stats.prefix_lookups = self.pool.stats.prefix_lookups;
+        self.stats.prefix_hits = self.pool.stats.prefix_hits;
+        self.stats.pool_peak_util = self.pool.peak_utilization();
+    }
+
+    /// The prompt window the KV layout actually sees: the most recent
+    /// `real_len` tokens (a lone BOS for empty prompts) — the unit prefix
+    /// hashing and block accounting run over.
+    fn effective_prompt(&self, prompt: &[i32]) -> Vec<i32> {
+        let n = self.engine.real_len(prompt);
+        if prompt.is_empty() {
+            vec![crate::data::BOS_TOKEN]
+        } else {
+            prompt[prompt.len() - n..].to_vec()
+        }
+    }
+
     fn admit(&mut self, done: &mut Vec<Completion>) -> Result<()> {
         if self.queue.is_empty() {
             return Ok(());
         }
-        let mut admits: Vec<(usize, Pending)> = Vec::new();
+        let bl = self.pool.cfg.block_len;
+        let mut admits: Vec<Admit> = Vec::new();
         for slot in 0..self.slots.len() {
             if self.slots[slot].is_some() {
                 continue;
             }
-            match self.queue.pop_front() {
-                Some(p) => admits.push((slot, p)),
-                None => break,
+            let Some(pending) = self.queue.pop_front() else { break };
+            let eff = self.effective_prompt(&pending.req.prompt);
+            let n = eff.len();
+            let total_blocks = n.div_ceil(bl);
+            // prefix reuse (retains returned blocks for this request)
+            let (mut table, mut covered, cached_logits) = match self.pool.lookup(&eff) {
+                Some(PrefixHit::Full { blocks, logits }) => (blocks, n, Some(logits)),
+                Some(PrefixHit::Partial { blocks, covered }) => (blocks, covered, None),
+                None => (Vec::new(), 0, None),
+            };
+            // a fully-cached prompt whose tail block is partial will be
+            // appended into — copy-on-write it now (shared blocks are
+            // never written)
+            let mut ok = true;
+            if cached_logits.is_some() && n % bl != 0 {
+                let tail = *table.last().expect("full hit implies blocks");
+                match self.pool.cow_block(tail) {
+                    Ok(Some(fresh)) => {
+                        self.pool.release(tail);
+                        *table.last_mut().unwrap() = fresh;
+                    }
+                    Ok(None) => ok = false,
+                    Err(e) => {
+                        // pool unusable (buffers lost mid-step): roll back
+                        // so the request survives in the queue
+                        for b in table {
+                            self.pool.release(b);
+                        }
+                        self.queue.push_front(pending);
+                        return Err(e);
+                    }
+                }
             }
+            // fresh blocks for the uncovered positions [covered, n)
+            while ok && table.len() < total_blocks {
+                match self.pool.alloc() {
+                    Some(b) => table.push(b),
+                    None => ok = false,
+                }
+            }
+            if !ok {
+                // pool can't cover this prompt right now: roll back and
+                // stop admitting (strict FIFO — no head-of-line skips)
+                for b in table {
+                    self.pool.release(b);
+                }
+                self.queue.push_front(pending);
+                break;
+            }
+            if cached_logits.is_some() {
+                covered = n; // COW restored full coverage
+                self.stats.prefill_skipped += 1;
+            }
+            admits.push(Admit { pending, slot, eff, table, covered, cached_logits });
         }
         if admits.is_empty() {
             return Ok(());
         }
+
+        // one batched prefill over the admissions that missed the cache
         let t0 = Instant::now();
-        let pairs: Vec<(usize, &[i32])> =
-            admits.iter().map(|(s, p)| (*s, p.req.prompt.as_slice())).collect();
-        let (rows, merged) = match self.engine.prefill_into_slots(&pairs, self.caches.take()) {
-            Ok(x) => x,
-            Err(e) => {
-                // transient engine error: put the popped requests back at
-                // the queue front (original order) instead of losing them;
-                // the live caches were consumed, so the caller must abort
-                // the active slots ([`Scheduler::abort_active`])
-                for (_, pending) in admits.into_iter().rev() {
-                    self.queue.push_front(pending);
+        let misses: Vec<(usize, &[i32])> = admits
+            .iter()
+            .filter(|a| a.cached_logits.is_none())
+            .map(|a| (a.slot, a.pending.req.prompt.as_slice()))
+            .collect();
+        let mut fresh_rows: VecDeque<Vec<f32>> = VecDeque::new();
+        let mut fresh_caches = Vec::new();
+        if !misses.is_empty() {
+            match self.engine.prefill_into_slots(&misses, None) {
+                Ok((rows, caches)) => {
+                    fresh_rows = rows.into();
+                    fresh_caches = caches;
+                    self.stats.prefills += 1;
                 }
-                return Err(e);
+                Err(e) => {
+                    // transient engine error: roll the pool back and put
+                    // every popped request back at the queue front in
+                    // original order — nothing was lost
+                    for a in admits.into_iter().rev() {
+                        for b in a.table {
+                            self.pool.release(b);
+                        }
+                        self.queue.push_front(a.pending);
+                    }
+                    return Err(e);
+                }
             }
-        };
-        self.caches = Some(merged);
+        }
         self.stats.prefill_s += t0.elapsed().as_secs_f64();
-        self.stats.prefills += 1;
+
         let p = self.engine.config().prefill_len;
-        for ((slot, pending), row) in admits.into_iter().zip(rows) {
-            let n = self.engine.real_len(&pending.req.prompt);
-            let mut a = Active {
+        let mut admits: VecDeque<Admit> = admits.into();
+        while let Some(a) = admits.pop_front() {
+            let Admit { pending, slot, eff, table, covered, cached_logits } = a;
+            let n = eff.len();
+            let row = match cached_logits {
+                Some(row) => row,
+                None => {
+                    // splice this slot's fresh KV rows into its blocks
+                    // (shared blocks keep their bitwise-identical contents)
+                    let row = fresh_rows.pop_front().expect("one logits row per miss");
+                    if let Err(e) =
+                        self.pool.write_prefill(&fresh_caches, slot, p - n, n, covered, &table)
+                    {
+                        // roll back this and every not-yet-placed admission
+                        // so queued requests survive (already-placed slots
+                        // keep running; the abort contract covers them)
+                        while let Some(rest) = admits.pop_back() {
+                            for b in rest.table {
+                                self.pool.release(b);
+                            }
+                            self.queue.push_front(rest.pending);
+                        }
+                        for b in table {
+                            self.pool.release(b);
+                        }
+                        self.queue.push_front(pending);
+                        return Err(e);
+                    }
+                    self.pool.register(&eff, &table, &row);
+                    row
+                }
+            };
+            let mut act = Active {
                 id: pending.id,
                 slot,
-                prompt_len: pending.req.prompt.len(),
-                gen_len: pending.req.gen_len,
                 start: (p - n) as i32,
                 fill: p as i32,
                 last: crate::data::BOS_TOKEN,
+                table,
                 tokens: Vec::with_capacity(pending.req.gen_len),
                 sampler: Sampler::new(pending.req.params.clone()),
                 submitted: pending.submitted,
                 started: t0,
+                req: pending.req,
             };
             self.stats.admitted += 1;
-            if a.gen_len == 0 {
-                done.push(self.complete(a));
+            if act.req.gen_len == 0 {
+                done.push(self.complete(act, FinishReason::Stop));
                 continue;
             }
-            let tok = a.sampler.sample(&row);
-            a.last = tok;
-            a.tokens.push(tok);
+            let tok = act.sampler.sample(&row);
+            act.last = tok;
+            act.tokens.push(tok);
             self.stats.tokens_generated += 1;
             self.stats.prefill_sampled += 1;
-            if self.finished(&a) {
-                done.push(self.complete(a));
-            } else {
-                self.slots[slot] = Some(a);
+            match self.finish_reason(&act) {
+                Some(reason) => done.push(self.complete(act, reason)),
+                None => self.slots[slot] = Some(act),
             }
         }
         Ok(())
     }
 
+    /// Make sure `slot`'s next write position has a backing block,
+    /// evicting cached chains first (inside [`KvPool::alloc`]) and
+    /// preempting the youngest active request on true exhaustion. May
+    /// complete (`Length`) or preempt the slot itself.
+    fn ensure_block(&mut self, slot: usize, done: &mut Vec<Completion>) {
+        loop {
+            let Some(a) = self.slots[slot].as_ref() else { return };
+            let vpos = (a.fill - a.start) as usize;
+            if vpos / self.pool.cfg.block_len < a.table.len() {
+                return; // capacity already present
+            }
+            if let Some(b) = self.pool.alloc() {
+                self.slots[slot].as_mut().unwrap().table.push(b);
+                return;
+            }
+            let youngest = (0..self.slots.len())
+                .filter(|&s| self.slots[s].is_some())
+                .max_by_key(|&s| self.slots[s].as_ref().unwrap().id)
+                .expect("slot itself is active");
+            if youngest == slot && self.active() == 1 {
+                // nothing left to preempt: truncate this request
+                let act = self.slots[slot].take().unwrap();
+                done.push(self.complete(act, FinishReason::Length));
+                return;
+            }
+            let victim = self.slots[youngest].take().unwrap();
+            self.requeue(victim);
+            if youngest == slot {
+                return; // preempted ourselves; slot is parked this step
+            }
+        }
+    }
+
+    /// Preemption: drop the request's pool state and put it back at the
+    /// queue front — it restarts from prefill with its original sampler
+    /// seed, so its final token stream is unchanged (determinism).
+    fn requeue(&mut self, a: Active) {
+        for b in &a.table {
+            self.pool.release(*b);
+        }
+        self.stats.preemptions += 1;
+        // un-count its sampled tokens: they will be re-generated
+        self.stats.tokens_generated -= a.tokens.len();
+        self.stats.prefill_sampled -= 1;
+        self.stats.admitted -= 1;
+        self.queue.push_front(Pending { id: a.id, req: a.req, submitted: a.submitted });
+    }
+
     fn decode(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        for slot in 0..self.slots.len() {
+            self.ensure_block(slot, done);
+        }
         if self.slots.iter().all(Option::is_none) {
             return Ok(());
         }
         let b = self.engine.batch;
-        let p = self.engine.config().prefill_len;
-        // parked slots decode a dummy BOS whose cache write lands at slot
-        // `p` of their (dead) cache row — the next admission overwrites it
+        let bl = self.pool.cfg.block_len;
+        let bps = self.pool.cfg.blocks_per_seq(self.engine.config());
+        // parked slots decode a dummy BOS into the scratch block (block 0,
+        // row 0) over an all-scratch table — their output is discarded
         let mut toks = vec![crate::data::BOS_TOKEN; b];
-        let mut fill = vec![p as i32; b];
-        let mut starts = vec![0i32; b];
+        let mut vlens = vec![0i32; b];
+        let mut rows = vec![0i32; b];
+        let mut btable = vec![0i32; b * bps];
         for a in self.slots.iter().flatten() {
+            let vpos = (a.fill - a.start) as usize;
             toks[a.slot] = a.last;
-            fill[a.slot] = a.fill;
-            starts[a.slot] = a.start;
+            vlens[a.slot] = vpos as i32;
+            rows[a.slot] = (a.table[vpos / bl] * bl + vpos % bl) as i32;
+            for (j, &blk) in a.table.iter().enumerate() {
+                btable[a.slot * bps + j] = blk as i32;
+            }
         }
         let t0 = Instant::now();
-        let caches = self.caches.take().expect("active slots imply live caches");
-        let (logits, new_caches) = self.engine.decode_step(caches, &toks, &fill, &starts)?;
-        self.caches = Some(new_caches);
+        let bufs = self.pool.take_bufs()?;
+        let (logits, new_bufs) =
+            self.engine.decode_step_paged(bufs, &toks, &vlens, &rows, &btable)?;
+        self.pool.restore_bufs(new_bufs);
         self.stats.decode_s += t0.elapsed().as_secs_f64();
         let vocab = self.engine.config().vocab;
         for slot in 0..b {
@@ -282,44 +520,54 @@ impl<'e> Scheduler<'e> {
             a.last = tok;
             a.tokens.push(tok);
             self.stats.tokens_generated += 1;
-            if self.finished(&a) {
-                done.push(self.complete(a));
-            } else {
-                self.slots[slot] = Some(a);
+            match self.finish_reason(&a) {
+                Some(reason) => done.push(self.complete(a, reason)),
+                None => self.slots[slot] = Some(a),
             }
         }
         Ok(())
     }
 
-    /// Engine-error recovery: abort every in-flight request (their cache
+    /// Engine-error recovery: abort every in-flight request (their pool
     /// state is gone) but **keep the queue** — queued requests never
     /// touched the engine and can still be served. Returns the aborted
     /// request ids so a front-end can fail just those callers.
     pub fn abort_active(&mut self) -> Vec<u64> {
-        self.caches = None;
         let mut ids = Vec::new();
         for s in self.slots.iter_mut() {
             if let Some(a) = s.take() {
                 ids.push(a.id);
             }
         }
+        self.pool.reset();
         ids
     }
 
-    /// Done when the request reached `gen_len` tokens or its next decode
-    /// would overrun the cache — the same guard as [`Engine::generate`], so
+    /// Done when the request reached `gen_len` tokens (`Stop`) or its next
+    /// decode would overrun the decode window (`Length`) — the same guard,
+    /// in the same padded coordinates, as [`Engine::generate`], so
     /// early-stopped outputs stay parity-comparable.
-    fn finished(&self, a: &Active) -> bool {
-        a.tokens.len() >= a.gen_len || (a.fill + 1) as usize >= self.engine.config().max_decode_seq
+    fn finish_reason(&self, a: &Active) -> Option<FinishReason> {
+        if a.tokens.len() >= a.req.gen_len {
+            Some(FinishReason::Stop)
+        } else if (a.fill + 1) as usize >= self.engine.config().max_decode_seq {
+            Some(FinishReason::Length)
+        } else {
+            None
+        }
     }
 
-    fn complete(&mut self, a: Active) -> Completion {
+    fn complete(&mut self, a: Active, finish_reason: FinishReason) -> Completion {
+        for b in &a.table {
+            self.pool.release(*b);
+        }
         self.stats.completed += 1;
         Completion {
             id: a.id,
             slot: a.slot,
-            prompt_len: a.prompt_len,
+            prompt_len: a.req.prompt.len(),
             tokens: a.tokens,
+            finish_reason,
             queued_s: (a.started - a.submitted).as_secs_f64(),
             latency_s: a.submitted.elapsed().as_secs_f64(),
         }

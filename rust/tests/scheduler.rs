@@ -1,6 +1,9 @@
 //! Continuous-batching scheduler tests: ragged-prompt parity with the
-//! monolithic `Engine::generate` path, mid-flight admission and slot
-//! reuse, and seeded-sampling determinism at the serve-loop level.
+//! monolithic `Engine::generate` path (which runs the contiguous per-slot
+//! cache graph while the scheduler runs the block-paged pool graph — a
+//! cross-implementation bitwise pin), mid-flight admission and slot reuse,
+//! prefix sharing and pool accounting, preemption under pool exhaustion,
+//! seeded-sampling determinism, and router error recovery.
 //! (Pure sampler edge cases live in `src/serving/sampler.rs` unit tests.)
 
 use std::sync::Mutex;
@@ -8,7 +11,9 @@ use std::sync::Mutex;
 use ara_compress::coordinator::Pipeline;
 use ara_compress::data::{corpus_spec, generate_tokens};
 use ara_compress::model::WeightStore;
-use ara_compress::serving::{Request, SamplingParams, Scheduler};
+use ara_compress::serving::{
+    FinishReason, KvPoolCfg, Request, Router, SamplingParams, Scheduler, ServeRequest,
+};
 use ara_compress::svd::FactoredModel;
 
 fn pipeline() -> Pipeline {
@@ -76,8 +81,13 @@ fn scheduler_matches_engine_generate_under_continuous_batching() {
         assert!(!c.tokens.is_empty());
         assert!(c.tokens.len() <= reqs[i].gen_len);
     }
-    // the cache-guard request stopped early, exactly like generate
+    // the cache-guard request stopped early, exactly like generate, and
+    // reports Length (KV exhaustion surfaced, not silently swallowed)
     assert!(done[4].tokens.len() < gens[4], "cache guard must bound generation");
+    assert_eq!(done[4].finish_reason, FinishReason::Length);
+    for c in &done[..4] {
+        assert_eq!(c.finish_reason, FinishReason::Stop, "request {} reason", c.id);
+    }
 
     // 5 requests over 2 slots ⇒ both slots must have been reused, and
     // admission happened across several prefill rounds (mid-flight)
@@ -186,4 +196,230 @@ fn late_submission_into_running_batch_keeps_parity() {
         let (toks, _) = engine.generate(&prompts, r.gen_len).expect("generate");
         assert_eq!(c.tokens, toks[0], "late-admitted request diverged");
     }
+}
+
+/// Degenerate-config parity anchor: with `block_len = max_decode_seq` (one
+/// block per sequence — the pre-paged contiguous layout, physically) and
+/// prefix sharing disabled, the paged scheduler must produce bitwise the
+/// same token streams as both the default-geometry paged run and the
+/// contiguous `Engine::generate` reference, over the same mixed-length
+/// trace as the main parity test.
+#[test]
+fn degenerate_block_config_matches_default_and_contiguous_paths() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 11, 4096);
+    let lens = [3usize, 8, 5, 1, 7];
+    let gens = [6usize, 3, 9, 5, 12];
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request {
+            prompt: stream[i * 17..i * 17 + lens[i]].to_vec(),
+            gen_len: gens[i],
+            params: SamplingParams::greedy(),
+        })
+        .collect();
+
+    let run = |engine: &ara_compress::serving::Engine| -> Vec<Vec<i32>> {
+        let mut sched = Scheduler::new(engine);
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let mut done = sched.run_to_completion().expect("serve loop");
+        done.sort_by_key(|c| c.id);
+        done.into_iter().map(|c| c.tokens).collect()
+    };
+
+    // default geometry (env defaults: block = prefill window)
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let default_out = run(&engine);
+
+    // degenerate geometry: one block spans the whole decode window
+    let mut degen = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    degen
+        .enable_paged(
+            &pl.rt,
+            KvPoolCfg {
+                block_len: pl.cfg.max_decode_seq,
+                num_blocks: 4,
+                prefix_sharing: false,
+            },
+        )
+        .expect("degenerate paged specialization");
+    let degen_out = run(&degen);
+    assert_eq!(degen_out, default_out, "block size must not change outputs");
+
+    // contiguous reference, one request at a time
+    for (i, r) in reqs.iter().enumerate() {
+        let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+        let (toks, _) = engine.generate(&prompts, r.gen_len).expect("generate");
+        assert_eq!(degen_out[i], toks[0], "request {i} diverged from contiguous path");
+    }
+}
+
+/// Prefix sharing: ≥ 4 requests with an identical (full prefill-window)
+/// prompt — the prefill runs once, later admissions reuse the cached
+/// chain + logits row (asserted via pool accounting), and every greedy
+/// output still matches a standalone `Engine::generate`.
+#[test]
+fn shared_prompt_prefills_once_and_keeps_parity() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let mut engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let p = pl.cfg.prefill_len;
+    // pin the geometry (env-independent): block = the prefill window, so
+    // the shared prompt fills exactly one full block
+    engine
+        .enable_paged(&pl.rt, KvPoolCfg { block_len: p, num_blocks: 16, prefix_sharing: true })
+        .expect("paged specialization");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 47, 2048);
+    let shared: Vec<i32> = stream[..p].to_vec(); // the whole prefill window
+
+    let gens = [4usize, 5, 6, 7];
+    let mut sched = Scheduler::new(&engine);
+    sched.submit(Request {
+        prompt: shared.clone(),
+        gen_len: gens[0],
+        params: SamplingParams::greedy(),
+    });
+    // admit + register the first request's chain before the sharers arrive
+    let mut done = sched.step().expect("first step");
+    for &g in &gens[1..] {
+        sched.submit(Request {
+            prompt: shared.clone(),
+            gen_len: g,
+            params: SamplingParams::greedy(),
+        });
+    }
+    done.extend(sched.run_to_completion().expect("drain"));
+    assert_eq!(done.len(), 4);
+    done.sort_by_key(|c| c.id);
+
+    // pool accounting: one prefill total, three full-prompt cache hits
+    let stats = sched.stats();
+    assert_eq!(stats.prefills, 1, "prefill must run once for the shared blocks");
+    assert_eq!(stats.prefill_skipped, 3, "sharers must skip prefill");
+    assert_eq!(stats.prefix_hits, 3);
+    assert!(stats.prefix_hit_rate() > 0.7, "rate {}", stats.prefix_hit_rate());
+    // the cached chain outlives the requests (held by the prefix map)
+    assert!(sched.pool().cached_chains() >= 1);
+    assert!(sched.pool().used_blocks() >= 1, "cache must keep the shared block");
+
+    // parity: every sharer matches the standalone contiguous path
+    for (c, &g) in done.iter().zip(&gens) {
+        let prompts = vec![shared.clone(), vec![1i32; p]];
+        let (toks, _) = engine.generate(&prompts, g).expect("generate");
+        assert_eq!(c.tokens, toks[0], "shared-prefix request {} diverged", c.id);
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+    }
+}
+
+/// Pool exhaustion: with a pool too small for two full-length sequences,
+/// the youngest request is preempted (requeued, restarted) instead of the
+/// batch failing — and both requests still finish with parity outputs.
+#[test]
+fn pool_exhaustion_preempts_youngest_and_recovers() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len; // 8
+    let mut engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    // 4 allocatable blocks of 8 slots: two 20-token generations (4 blocks
+    // each) cannot coexist — the younger one must be preempted
+    engine
+        .enable_paged(&pl.rt, KvPoolCfg { block_len: p, num_blocks: 5, prefix_sharing: false })
+        .expect("small pool");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 53, 2048);
+    let reqs: Vec<Request> = (0..2)
+        .map(|i| Request {
+            prompt: stream[i * 31..i * 31 + p].to_vec(),
+            gen_len: 20,
+            params: SamplingParams::greedy(),
+        })
+        .collect();
+
+    let mut sched = Scheduler::new(&engine);
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut done = sched.run_to_completion().expect("serve loop");
+    assert_eq!(done.len(), 2);
+    done.sort_by_key(|c| c.id);
+    assert!(sched.stats().preemptions >= 1, "expected at least one preemption");
+    assert!(sched.stats().pool_peak_util > 0.9, "pool should have run hot");
+    for (c, r) in done.iter().zip(&reqs) {
+        let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+        let (toks, _) = engine.generate(&prompts, r.gen_len).expect("generate");
+        assert_eq!(c.tokens, toks[0], "preempted request diverged after restart");
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+    }
+}
+
+/// Router error recovery: a transient engine failure mid-trace aborts only
+/// the in-flight slots; queued requests survive, complete through the
+/// reset pool, and their outputs still match the standalone path. The
+/// router keeps serving afterwards.
+#[test]
+fn router_recovers_queued_requests_after_transient_engine_failure() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    // parity reference engine on this thread
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 67, 4096);
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            prompt: stream[i * 19..i * 19 + 2 + i].to_vec(),
+            gen_len: 6,
+            params: SamplingParams::greedy(),
+        })
+        .collect();
+
+    // the worker engine rebuilds the (disk-cached) substrate on its own
+    // thread and trips one injected decode fault a few steps in
+    let router = Router::spawn(move || {
+        let pl = pipeline();
+        let (ws, fm) = substrate(&pl);
+        let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("worker engine");
+        engine.inject_decode_fault(3);
+        engine
+    });
+
+    let receivers: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            router.submit(ServeRequest {
+                prompt: r.prompt.clone(),
+                gen_len: r.gen_len,
+                params: r.params.clone(),
+            })
+        })
+        .collect();
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for (rx, r) in receivers.into_iter().zip(&reqs) {
+        match rx.recv() {
+            Ok(resp) => {
+                completed += 1;
+                let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+                let (toks, _) = engine.generate(&prompts, r.gen_len).expect("generate");
+                assert_eq!(resp.tokens, toks[0], "recovered request diverged");
+                assert_eq!(resp.finish_reason, FinishReason::Stop);
+            }
+            Err(_) => failed += 1, // was in-flight when the fault hit
+        }
+    }
+    assert_eq!(completed + failed, 6);
+    assert!(failed <= 2, "only active slots may abort, {failed} failed");
+    assert!(completed >= 4, "queued requests must survive the fault");
+
+    // the router is still alive and serving after the recovery
+    let rx = router.submit(ServeRequest {
+        prompt: stream[500..504].to_vec(),
+        gen_len: 3,
+        params: SamplingParams::greedy(),
+    });
+    let resp = rx.recv().expect("router must keep serving after recovery");
+    let prompts = vec![stream[500..504].to_vec(), vec![1i32; p]];
+    let (toks, _) = engine.generate(&prompts, 3).expect("generate");
+    assert_eq!(resp.tokens, toks[0]);
 }
