@@ -1,9 +1,10 @@
 //! Bench-health guard: parse the machine-readable bench baselines
-//! (`BENCH_PR2.json`, `BENCH_PR3.json`, `BENCH_PR4.json`) with the
-//! in-crate JSON parser and exit non-zero when a required key is missing,
-//! non-numeric, non-finite — or, for rate/utilization keys, outside
-//! [0, 1]. Replaces the brittle `grep` checks the CI `bench-smoke` job
-//! used to run.
+//! (`BENCH_PR2.json`, `BENCH_PR3.json`, `BENCH_PR4.json`,
+//! `BENCH_PR5.json`) with the in-crate JSON parser and exit non-zero when
+//! a required key is missing, non-numeric, non-finite — or out of range:
+//! rate/utilization keys must lie in [0, 1], achieved compression ratios
+//! in (0, 1], and wall-clock keys must be ≥ 0. Replaces the brittle
+//! `grep` checks the CI `bench-smoke` job used to run.
 //!
 //!   cargo run --release --example bench_guard            # real baselines
 //!   cargo run --release --example bench_guard -- --smoke # CI smoke run
@@ -20,6 +21,10 @@ struct Check {
     keys: Vec<String>,
     /// Keys that must additionally lie in [0, 1] (rates, utilizations).
     unit_keys: Vec<String>,
+    /// Keys that must lie in (0, 1] (achieved compression ratios).
+    ratio_keys: Vec<String>,
+    /// Keys that must be ≥ 0 (wall-clock durations, counts).
+    pos_keys: Vec<String>,
 }
 
 fn required(smoke: bool) -> Vec<Check> {
@@ -72,6 +77,25 @@ fn required(smoke: bool) -> Vec<Check> {
             paged_unit.push(format!("{a}_{m}"));
         }
     }
+    // fig_sweep (PR 5): per-spec achieved ratio ∈ (0, 1], dense count and
+    // wall-ms ≥ 0. Smoke runs the micro grid; real spot-checks the
+    // minillama-s Table 1/2 grid corners.
+    let sweep_specs: &[&str] = if smoke {
+        &["uniform@0.5", "dlp@0.5", "ara@0.5"]
+    } else {
+        &["uniform@0.35", "dobi@0.35", "ara@0.35", "ara@0.25"]
+    };
+    let mut sweep_keys = Vec::new();
+    let mut sweep_ratio = Vec::new();
+    let mut sweep_pos = Vec::new();
+    for sp in sweep_specs {
+        sweep_keys.push(format!("{sp}_achieved"));
+        sweep_ratio.push(format!("{sp}_achieved"));
+        for m in ["dense_count", "wall_ms"] {
+            sweep_keys.push(format!("{sp}_{m}"));
+            sweep_pos.push(format!("{sp}_{m}"));
+        }
+    }
     let none: Vec<String> = Vec::new();
     vec![
         Check {
@@ -79,24 +103,40 @@ fn required(smoke: bool) -> Vec<Check> {
             section: format!("perf_micro{sfx}"),
             keys: pm_keys,
             unit_keys: none.clone(),
+            ratio_keys: none.clone(),
+            pos_keys: none.clone(),
         },
         Check {
             file: "BENCH_PR2.json",
             section: format!("fig5_decode_tok_s{sfx}"),
             keys: f5_keys,
             unit_keys: none.clone(),
+            ratio_keys: none.clone(),
+            pos_keys: none.clone(),
         },
         Check {
             file: "BENCH_PR3.json",
             section: format!("fig5_sched{sfx}"),
             keys: sched_keys,
-            unit_keys: none,
+            unit_keys: none.clone(),
+            ratio_keys: none.clone(),
+            pos_keys: none.clone(),
         },
         Check {
             file: "BENCH_PR4.json",
             section: format!("fig5_paged{sfx}"),
             keys: paged_keys,
             unit_keys: paged_unit,
+            ratio_keys: none.clone(),
+            pos_keys: none.clone(),
+        },
+        Check {
+            file: "BENCH_PR5.json",
+            section: format!("fig_sweep{sfx}"),
+            keys: sweep_keys,
+            unit_keys: none.clone(),
+            ratio_keys: sweep_ratio,
+            pos_keys: sweep_pos,
         },
     ]
 }
@@ -158,6 +198,18 @@ fn main() {
                 Some(Ok(v)) if check.unit_keys.contains(key) && !(0.0..=1.0).contains(&v) => {
                     failures.push(format!(
                         "{} [{}] {key}: {v} outside [0, 1]",
+                        check.file, check.section
+                    ))
+                }
+                Some(Ok(v)) if check.ratio_keys.contains(key) && (v <= 0.0 || v > 1.0) => {
+                    failures.push(format!(
+                        "{} [{}] {key}: {v} outside (0, 1]",
+                        check.file, check.section
+                    ))
+                }
+                Some(Ok(v)) if check.pos_keys.contains(key) && v < 0.0 => {
+                    failures.push(format!(
+                        "{} [{}] {key}: {v} is negative",
                         check.file, check.section
                     ))
                 }

@@ -14,7 +14,7 @@
 //!
 //! ~10–20 minutes on first run (the pre-trained substrate is cached).
 
-use ara_compress::coordinator::{MethodKind, Pipeline};
+use ara_compress::coordinator::Pipeline;
 use ara_compress::report::Table;
 use ara_compress::training::{pretrain, PretrainConfig};
 use ara_compress::Result;
@@ -64,13 +64,14 @@ fn main() -> Result<()> {
         "-".into(),
     ]);
     for ratio in [0.8, 0.6] {
-        for m in [MethodKind::Uniform, MethodKind::Ara] {
-            let alloc = pl.allocate(m, ratio, &ws, &grams, &fm)?;
+        for id in ["uniform", "ara"] {
+            let plan = pl.allocate_spec(&format!("{id}@{ratio}"), &ws, &grams, &fm)?;
+            let alloc = &plan.allocation;
             let row = pl.evaluate(
-                &format!("{}@{:.0}%", m.name(), ratio * 100.0),
+                &format!("{}@{:.0}%", plan.label, ratio * 100.0),
                 &ws,
                 &fm,
-                &alloc,
+                alloc,
             )?;
             t.row(vec![
                 row.method.clone(),

@@ -6,7 +6,7 @@
 //! and with ARA at 70%, and prints the PPL comparison — about a minute on
 //! first run, seconds after caching.
 
-use ara_compress::coordinator::{MethodKind, Pipeline};
+use ara_compress::coordinator::Pipeline;
 use ara_compress::report::{f2, Table};
 use ara_compress::Result;
 
@@ -21,14 +21,18 @@ fn main() -> Result<()> {
     let grams = pl.grams(&ws)?;
     let fm = pl.factored(&ws, &grams)?;
 
-    // 3. allocate ranks: uniform vs ARA at a 70% parameter budget
-    let uniform = pl.allocate(MethodKind::Uniform, 0.7, &ws, &grams, &fm)?;
-    let ara = pl.allocate(MethodKind::Ara, 0.7, &ws, &grams, &fm)?;
+    // 3. allocate ranks through the method registry: uniform vs ARA at a
+    //    70% parameter budget — each result is a versioned CompressionPlan
+    let uniform = pl.allocate_spec("uniform@0.7", &ws, &grams, &fm)?.allocation;
+    let ara_plan = pl.allocate_spec("ara@0.7", &ws, &grams, &fm)?;
     println!(
-        "ARA kept {} of {} modules dense (the R≥1 guidance switch)",
-        ara.dense_count(),
-        ara.modules.len()
+        "{}: achieved {:.3}, kept {} of {} modules dense (the R≥1 guidance switch)",
+        ara_plan.spec,
+        ara_plan.achieved,
+        ara_plan.allocation.dense_count(),
+        ara_plan.allocation.modules.len()
     );
+    let ara = ara_plan.allocation;
 
     // 4. evaluate
     let mut t = Table::new("quickstart — micro-llama @ 70%", &["Config", "Wiki2 PPL", "C4 PPL"]);

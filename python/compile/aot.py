@@ -34,6 +34,7 @@ import jax
 from jax._src.lib import xla_client as xc
 
 from . import model as M
+from . import plans
 
 
 def to_hlo_text(lowered) -> str:
@@ -132,9 +133,13 @@ def resolve_alloc(cfg, alloc_name, configs_dir, artifacts_dir):
     path = os.path.join(configs_dir, "allocations",
                         f"{cfg['name']}.{alloc_name}.json")
     if os.path.exists(path):
-        with open(path) as f:
-            alloc = json.load(f)
-        print(f"  [alloc] {alloc_name}: loaded {path}")
+        # plans.load_alloc_file accepts both versioned CompressionPlan
+        # documents (rust `ara compress --out`, schema mirrored in
+        # plans.py) and legacy bare-Allocation JSON
+        alloc, plan = plans.load_alloc_file(path)
+        prov = f" (plan {plan['spec']}, schema v{plan['schema_version']})" \
+            if plan else ""
+        print(f"  [alloc] {alloc_name}: loaded {path}{prov}")
         return alloc
     if alloc_name == "dense":
         alloc = dense_alloc(cfg)

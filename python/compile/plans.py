@@ -1,0 +1,95 @@
+"""CompressionPlan schema mirror (PR 5) — importable WITHOUT jax.
+
+The rust side (`rust/src/compress/plan.rs`) writes versioned plan JSON:
+
+  {
+   "schema_version": 1,
+   "spec": "ara@0.8?epochs=5",      # registry method spec
+   "method": "ara", "label": "ARA",
+   "target": 0.8, "achieved": 0.7931,
+   "seed": 7,                        # null for data-free methods
+   "scale": {"alloc_samples": 96, "alloc_epochs": 10},
+   "wall_ms": 1234.5,
+   "allocation": {"name": ..., "modules": {...}}   # the legacy schema
+  }
+
+`aot.py` resolves serving allocations through `load_alloc_file`, so a
+plan file dropped into configs/allocations/ specializes serving exactly
+like a legacy bare-Allocation file. The CLI `--roundtrip` mode re-emits a
+plan through this parser; rust's tests/registry.rs pins the cross-language
+round-trip bit-for-bit.
+"""
+
+import json
+import sys
+
+SCHEMA_VERSION = 1
+
+PLAN_KEYS = (
+    "schema_version", "spec", "method", "label", "target", "achieved",
+    "seed", "scale", "wall_ms", "allocation",
+)
+
+
+def is_plan(doc):
+    """A plan carries schema_version; a legacy bare Allocation does not."""
+    return isinstance(doc, dict) and "schema_version" in doc
+
+
+def validate_plan(doc):
+    """Check the plan shape; raises ValueError naming what is wrong."""
+    version = doc.get("schema_version")
+    if not isinstance(version, int) or version < 0:
+        raise ValueError(f"bad schema_version {version!r}")
+    if version > SCHEMA_VERSION:
+        raise ValueError(
+            f"plan schema_version {version} newer than supported {SCHEMA_VERSION}")
+    for key in PLAN_KEYS:
+        if key not in doc:
+            raise ValueError(f"plan missing key `{key}`")
+    alloc = doc["allocation"]
+    if "name" not in alloc or "modules" not in alloc:
+        raise ValueError("plan allocation missing name/modules")
+    scale = doc["scale"]
+    for key in ("alloc_samples", "alloc_epochs"):
+        if key not in scale:
+            raise ValueError(f"plan scale missing `{key}`")
+    return doc
+
+
+def load_alloc_file(path):
+    """Load an allocation from a plan OR legacy bare-Allocation file.
+
+    Returns (allocation_dict, plan_or_None)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if is_plan(doc):
+        validate_plan(doc)
+        return doc["allocation"], doc
+    return doc, None
+
+
+def dump_plan(plan, path):
+    """Write a plan compactly (matching the rust serializer's key order)."""
+    validate_plan(plan)
+    ordered = {k: plan[k] for k in PLAN_KEYS}
+    with open(path, "w") as f:
+        json.dump(ordered, f, separators=(",", ":"))
+
+
+def main(argv):
+    if len(argv) == 3 and argv[0] == "--roundtrip":
+        alloc, plan = load_alloc_file(argv[1])
+        if plan is None:
+            raise SystemExit(f"{argv[1]} is a legacy allocation, not a plan")
+        dump_plan(plan, argv[2])
+        print(f"roundtripped {argv[1]} -> {argv[2]} "
+              f"(schema v{plan['schema_version']}, spec {plan['spec']}, "
+              f"{len(alloc['modules'])} modules)")
+        return 0
+    print("usage: plans.py --roundtrip <plan.json> <out.json>", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,57 @@
+//! fig_sweep: the Table 1/2 allocation grid driven through
+//! `Pipeline::sweep` — every registry method × the standard operating
+//! ratios, sharing one pretrain/calibrate/factorize substrate. Emits a
+//! machine-readable `fig_sweep` section (per-spec achieved ratio, dense
+//! count, allocation wall-ms) to `BENCH_PR5.json`, guarded by
+//! `examples/bench_guard.rs` (achieved ∈ (0, 1], wall-ms ≥ 0).
+//!
+//! `ARA_BENCH_SMOKE=1` (CI) runs a tiny grid on the micro preset into the
+//! `fig_sweep_smoke` section; the real baseline covers all seven methods
+//! on minillama-s at the paper-equivalent 35%/25% points.
+
+mod common;
+
+use ara_compress::compress::ALL_METHOD_IDS;
+use ara_compress::report::Table;
+use common::{bench_json_path_named, bench_section, pipeline, record_bench_at, smoke};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let smoke = smoke();
+    let model = if smoke { "micro-llama" } else { "minillama-s" };
+    let specs: Vec<String> = if smoke {
+        ["uniform", "dlp", "ara"].iter().map(|s| s.to_string()).collect()
+    } else {
+        ALL_METHOD_IDS.iter().map(|s| s.to_string()).collect()
+    };
+    let ratios: Vec<f64> = if smoke { vec![0.5] } else { vec![0.35, 0.25] };
+
+    let pl = pipeline(model);
+    let plans = pl.sweep(&specs, &ratios).expect("sweep");
+
+    let mut t = Table::new(
+        format!("fig_sweep — {model}, {} specs × {} ratios", specs.len(), ratios.len()),
+        &["Spec", "Target", "Achieved", "Dense", "Wall ms"],
+    );
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    for p in &plans {
+        t.row(vec![
+            p.spec.clone(),
+            format!("{:.2}", p.target),
+            format!("{:.4}", p.achieved),
+            format!("{}/{}", p.allocation.dense_count(), p.allocation.modules.len()),
+            format!("{:.0}", p.wall_ms),
+        ]);
+        entries.push((format!("{}_achieved", p.spec), p.achieved));
+        entries.push((format!("{}_dense_count", p.spec), p.allocation.dense_count() as f64));
+        entries.push((format!("{}_wall_ms", p.spec), p.wall_ms));
+    }
+    t.print();
+
+    record_bench_at(
+        &bench_json_path_named("BENCH_PR5.json"),
+        &bench_section("fig_sweep"),
+        &entries,
+    );
+    println!("fig_sweep wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -111,7 +111,9 @@ fn main() {
     // score executables: masked (pallas lowrank path) vs dense
     {
         use ara_compress::eval::{perplexity_dense, perplexity_masked};
-        let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, 0.8);
+        let alloc = ara_compress::compress::computed_alloc(&pl.cfg, "uniform-80")
+            .expect("computed name")
+            .expect("uniform-80");
         let masks = alloc_masks(&pl.cfg, &alloc);
         let d = bench("score_dense (1 batch eval)", iters, || {
             perplexity_dense(&pl.cfg, &pl.rt, &ws, "synwiki", 1).unwrap();

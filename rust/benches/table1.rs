@@ -7,10 +7,14 @@
 //! here — the bends of our curve. Reproduction target is the *shape*:
 //! mask-trained methods (ARA, Dobi) beat Uniform; layerwise heuristics
 //! (DLP, FARMS) trail.
+//!
+//! Methods run through the registry (`compress::ALL_METHOD_IDS` specs),
+//! so every row's provenance is a named spec, not an enum variant.
 
 mod common;
 
-use ara_compress::coordinator::{EvalRow, MethodKind, ALL_METHODS};
+use ara_compress::compress::ALL_METHOD_IDS;
+use ara_compress::coordinator::EvalRow;
 use ara_compress::report::Table;
 use common::{claim, pipeline, push_row, table_headers};
 
@@ -29,23 +33,23 @@ fn main() {
                 &table_headers(),
             );
             push_row(&mut t, &dense);
-            let mut rows: Vec<(MethodKind, EvalRow)> = Vec::new();
-            for m in ALL_METHODS {
-                let alloc = match pl.allocate(m, ratio, &ws, &grams, &fm) {
-                    Ok(a) => a,
+            let mut rows: Vec<(&str, EvalRow)> = Vec::new();
+            for id in ALL_METHOD_IDS {
+                let plan = match pl.allocate_spec(&format!("{id}@{ratio}"), &ws, &grams, &fm) {
+                    Ok(p) => p,
                     Err(e) => {
-                        eprintln!("  {} failed: {e}", m.name());
+                        eprintln!("  {id} failed: {e}");
                         continue;
                     }
                 };
-                let row = pl.evaluate(m.name(), &ws, &fm, &alloc).expect("eval");
+                let row = pl.evaluate(&plan.label, &ws, &fm, &plan.allocation).expect("eval");
                 push_row(&mut t, &row);
-                rows.push((m, row));
+                rows.push((id, row));
             }
             t.print();
 
-            let get = |k: MethodKind| rows.iter().find(|(m, _)| *m == k).map(|(_, r)| r);
-            if let (Some(ara), Some(uni)) = (get(MethodKind::Ara), get(MethodKind::Uniform)) {
+            let get = |id: &str| rows.iter().find(|(m, _)| *m == id).map(|(_, r)| r);
+            if let (Some(ara), Some(uni)) = (get("ara"), get("uniform")) {
                 claim(
                     &format!("{model}@{ratio}: ARA wiki2 PPL ≤ Uniform"),
                     ara.wiki_ppl <= uni.wiki_ppl * 1.02,
@@ -55,7 +59,7 @@ fn main() {
                     ara.avg_acc >= uni.avg_acc - 1.0,
                 );
             }
-            if let (Some(ara), Some(dobi)) = (get(MethodKind::Ara), get(MethodKind::Dobi)) {
+            if let (Some(ara), Some(dobi)) = (get("ara"), get("dobi")) {
                 claim(
                     &format!("{model}@{ratio}: ARA C4 PPL ≤ Dobi-SVD1"),
                     ara.c4_ppl <= dobi.c4_ppl * 1.02,

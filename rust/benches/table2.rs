@@ -4,7 +4,8 @@
 
 mod common;
 
-use ara_compress::coordinator::{EvalRow, MethodKind, ALL_METHODS};
+use ara_compress::compress::ALL_METHOD_IDS;
+use ara_compress::coordinator::EvalRow;
 use ara_compress::report::Table;
 use common::{claim, pipeline, push_row, table_headers};
 
@@ -19,23 +20,23 @@ fn main() {
 
         let mut t = Table::new(format!("Table 2 — {model} @ 35% compression (≙ paper 80%)"), &table_headers());
         push_row(&mut t, &dense);
-        let mut rows: Vec<(MethodKind, EvalRow)> = Vec::new();
-        for m in ALL_METHODS {
-            let alloc = match pl.allocate(m, 0.35, &ws, &grams, &fm) {
-                Ok(a) => a,
+        let mut rows: Vec<(&str, EvalRow)> = Vec::new();
+        for id in ALL_METHOD_IDS {
+            let plan = match pl.allocate_spec(&format!("{id}@0.35"), &ws, &grams, &fm) {
+                Ok(p) => p,
                 Err(e) => {
-                    eprintln!("  {} failed: {e}", m.name());
+                    eprintln!("  {id} failed: {e}");
                     continue;
                 }
             };
-            let row = pl.evaluate(m.name(), &ws, &fm, &alloc).expect("eval");
+            let row = pl.evaluate(&plan.label, &ws, &fm, &plan.allocation).expect("eval");
             push_row(&mut t, &row);
-            rows.push((m, row));
+            rows.push((id, row));
         }
         t.print();
 
-        let get = |k: MethodKind| rows.iter().find(|(m, _)| *m == k).map(|(_, r)| r);
-        if let (Some(ara), Some(uni)) = (get(MethodKind::Ara), get(MethodKind::Uniform)) {
+        let get = |id: &str| rows.iter().find(|(m, _)| *m == id).map(|(_, r)| r);
+        if let (Some(ara), Some(uni)) = (get("ara"), get("uniform")) {
             claim(
                 &format!("{model}: ARA wiki2 PPL ≤ Uniform"),
                 ara.wiki_ppl <= uni.wiki_ppl * 1.02,

@@ -6,7 +6,6 @@
 
 mod common;
 
-use ara_compress::coordinator::MethodKind;
 use ara_compress::linalg::Mat;
 use ara_compress::model::module_dims;
 use ara_compress::quant::{gptq_quantize, QuantCfg};
@@ -27,8 +26,9 @@ fn main() {
 
     // --- ARA @80% + 4-bit on factors ---
     let alloc = pl
-        .allocate(MethodKind::Ara, 0.35, &ws, &grams, &fm)
-        .expect("ara alloc");
+        .allocate_spec("ara@0.35", &ws, &grams, &fm)
+        .expect("ara alloc")
+        .allocation;
     let masks = alloc_masks(&pl.cfg, &alloc);
     let mut fm_q = fm.clone();
     let mut ara_bytes = 0usize;
@@ -51,8 +51,9 @@ fn main() {
 
     // --- Uniform @80% + 4-bit ---
     let ualloc = pl
-        .allocate(MethodKind::Uniform, 0.35, &ws, &grams, &fm)
-        .expect("uniform");
+        .allocate_spec("uniform@0.35", &ws, &grams, &fm)
+        .expect("uniform")
+        .allocation;
     let umasks = alloc_masks(&pl.cfg, &ualloc);
     let mut fm_u = fm.clone();
     let mut uni_bytes = 0usize;

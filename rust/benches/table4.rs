@@ -7,7 +7,6 @@ mod common;
 use std::collections::BTreeMap;
 
 use ara_compress::baselines::pruning::{flap, llm_pruner, slicegpt};
-use ara_compress::coordinator::MethodKind;
 use ara_compress::data::{batches, corpus_spec, generate_tokens};
 use ara_compress::eval::{perplexity_dense, zero_shot_suite, Scorer};
 use ara_compress::report::Table;
@@ -74,8 +73,9 @@ fn main() {
     }
 
     let alloc = pl
-        .allocate(MethodKind::Ara, 0.35, &ws, &grams, &fm)
-        .expect("ara");
+        .allocate_spec("ara@0.35", &ws, &grams, &fm)
+        .expect("ara")
+        .allocation;
     let ara = pl.evaluate("ARA", &ws, &fm, &alloc).expect("eval");
     t.row(vec![
         "ARA".into(),

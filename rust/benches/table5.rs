@@ -5,7 +5,7 @@
 
 mod common;
 
-use ara_compress::coordinator::MethodKind;
+use ara_compress::coordinator::EvalRow;
 use ara_compress::report::Table;
 use common::{claim, pipeline, push_row, table_headers};
 
@@ -21,23 +21,23 @@ fn main() {
             format!("Table 5 — mask ablation (no L_g) @ {:.0}%", ratio * 100.0),
             &table_headers(),
         );
-        let mut results = Vec::new();
-        for m in [MethodKind::Ars, MethodKind::Dobi, MethodKind::AraNoGuidance] {
-            let alloc = pl.allocate(m, ratio, &ws, &grams, &fm).expect("alloc");
-            let row = pl.evaluate(m.name(), &ws, &fm, &alloc).expect("eval");
+        let mut results: Vec<(&str, EvalRow)> = Vec::new();
+        for id in ["ars", "dobi", "ara-nolg"] {
+            let plan = pl.allocate_spec(&format!("{id}@{ratio}"), &ws, &grams, &fm).expect("alloc");
+            let row = pl.evaluate(&plan.label, &ws, &fm, &plan.allocation).expect("eval");
             push_row(&mut t, &row);
-            results.push((m, row));
+            results.push((id, row));
         }
         t.print();
 
-        let get = |k: MethodKind| results.iter().find(|(m, _)| *m == k).map(|(_, r)| r);
-        if let (Some(ara), Some(ars)) = (get(MethodKind::AraNoGuidance), get(MethodKind::Ars)) {
+        let get = |id: &str| results.iter().find(|(m, _)| *m == id).map(|(_, r)| r);
+        if let (Some(ara), Some(ars)) = (get("ara-nolg"), get("ars")) {
             claim(
                 &format!("@{ratio}: staircase mask ≤ Gumbel-Sigmoid (wiki2)"),
                 ara.wiki_ppl <= ars.wiki_ppl * 1.02,
             );
         }
-        if let (Some(ara), Some(dobi)) = (get(MethodKind::AraNoGuidance), get(MethodKind::Dobi)) {
+        if let (Some(ara), Some(dobi)) = (get("ara-nolg"), get("dobi")) {
             claim(
                 &format!("@{ratio}: staircase mask ≤ tanh mask (c4)"),
                 ara.c4_ppl <= dobi.c4_ppl * 1.05,

@@ -4,7 +4,6 @@
 
 mod common;
 
-use ara_compress::coordinator::MethodKind;
 use ara_compress::lora::{lora_finetune_and_merge, LoraConfig};
 use ara_compress::report::Table;
 use ara_compress::svd::alloc_masks;
@@ -23,8 +22,9 @@ fn main() {
 
     for ratio in [0.35, 0.25] {
         let alloc = pl
-            .allocate(MethodKind::Ara, ratio, &ws, &grams, &fm)
-            .expect("ara");
+            .allocate_spec(&format!("ara@{ratio}"), &ws, &grams, &fm)
+            .expect("ara")
+            .allocation;
         let masks = alloc_masks(&pl.cfg, &alloc);
         let mut before = pl.evaluate(
             &format!("ARA@{:.0}%", ratio * 100.0),

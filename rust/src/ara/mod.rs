@@ -1,18 +1,20 @@
 //! The paper's contribution: Adaptive Rank Allocation (Sec. 3, Alg. 1).
 //!
-//! * [`staircase`] — the mapping matrix M and the monotone probabilistic
+//! * [`Staircase`] — the mapping matrix M and the monotone probabilistic
 //!   mask p = α·M (Eq. 2) with its exact STE chain rule (Eq. 5);
-//! * [`masks`] — per-module compression ratio R (Eq. 3) and binary mask
-//!   (Eq. 4), including the R ≥ 1 → dense switch (Eq. 8);
-//! * [`guidance`] — the full-rank guidance metric G_R and loss L_g
-//!   (Eq. 6–7) that exploits the non-smooth gain at R = 1;
-//! * [`runner`] — shared executor of the AOT `mask_fwd_grad` graph (also
-//!   used by the ARS / Dobi-SVD₁ baselines so all mask methods train
-//!   through the identical loss surface);
-//! * [`trainer`] — the joint objective (Eq. 9), AdamW over the simplex
+//! * [`binary_mask`] / [`module_ratio`] — per-module compression ratio R
+//!   (Eq. 3) and binary mask (Eq. 4), including the R ≥ 1 → dense switch
+//!   (Eq. 8);
+//! * [`guidance_metric`] / [`guidance_loss`] — the full-rank guidance
+//!   metric G_R and loss L_g (Eq. 6–7) that exploits the non-smooth gain
+//!   at R = 1;
+//! * [`MaskGradRunner`] — shared executor of the AOT `mask_fwd_grad`
+//!   graph (also used by the ARS / Dobi-SVD₁ baselines so all mask
+//!   methods train through the identical loss surface);
+//! * [`train_ara`] — the joint objective (Eq. 9), AdamW over the simplex
 //!   vectors α, and the final proportional rescale (Alg. 1 step 26);
-//! * [`rescale`] — bisection water-filling that meets the target ratio
-//!   exactly while honoring the dense cap.
+//! * [`rescale_to_target`] — bisection water-filling that meets the
+//!   target ratio exactly while honoring the dense cap.
 
 mod guidance;
 mod masks;

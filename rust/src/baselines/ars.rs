@@ -21,12 +21,23 @@ pub struct ArsConfig {
     pub temperature: f64,
     pub epochs: usize,
     pub lr: f64,
+    /// Gumbel-noise RNG seed (the method's own randomness).
     pub seed: u64,
+    /// Seed of the shared [`MaskGradRunner`] data stream.
+    pub data_seed: u64,
 }
 
 impl Default for ArsConfig {
     fn default() -> Self {
-        ArsConfig { target: 0.8, lambda: 100.0, temperature: 0.4, epochs: 10, lr: 5e-2, seed: 11 }
+        ArsConfig {
+            target: 0.8,
+            lambda: 100.0,
+            temperature: 0.4,
+            epochs: 10,
+            lr: 5e-2,
+            seed: 11,
+            data_seed: 4,
+        }
     }
 }
 

@@ -11,6 +11,20 @@ use crate::config::ModelCfg;
 use crate::linalg::Mat;
 use crate::model::{module_dims, Allocation, ModuleAlloc, WeightStore};
 
+/// DLP's parameter set (the registry's `dlp` method; DESIGN.md §4).
+#[derive(Debug, Clone)]
+pub struct DlpConfig {
+    /// Bound on the layerwise deviation from the mean ratio (paper: 0.15;
+    /// spec override: `dlp@R?tail=0.2`).
+    pub tail: f64,
+}
+
+impl Default for DlpConfig {
+    fn default() -> Self {
+        DlpConfig { tail: 0.15 }
+    }
+}
+
 /// `alpha` bounds the layerwise deviation from the mean ratio (paper: 0.15).
 pub fn dlp_alloc(
     cfg: &ModelCfg,

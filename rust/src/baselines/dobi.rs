@@ -22,11 +22,13 @@ pub struct DobiConfig {
     pub beta: f64,
     pub epochs: usize,
     pub lr: f64,
+    /// Seed of the shared [`MaskGradRunner`] data stream.
+    pub data_seed: u64,
 }
 
 impl Default for DobiConfig {
     fn default() -> Self {
-        DobiConfig { target: 0.8, lambda: 100.0, beta: 0.5, epochs: 20, lr: 2.0 }
+        DobiConfig { target: 0.8, lambda: 100.0, beta: 0.5, epochs: 20, lr: 2.0, data_seed: 5 }
     }
 }
 

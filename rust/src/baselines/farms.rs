@@ -9,6 +9,20 @@ use crate::config::ModelCfg;
 use crate::model::{module_dims, Allocation, ModuleAlloc};
 use crate::svd::FactoredModel;
 
+/// FARMS' parameter set (the registry's `farms` method; DESIGN.md §4).
+#[derive(Debug, Clone)]
+pub struct FarmsConfig {
+    /// Bound on the layerwise deviation, relative to the target (paper:
+    /// 0.3; spec override: `farms@R?eps=0.2`).
+    pub eps: f64,
+}
+
+impl Default for FarmsConfig {
+    fn default() -> Self {
+        FarmsConfig { eps: 0.3 }
+    }
+}
+
 /// Hill estimator over the top half of the spectrum:
 /// α = 1 + k / Σ_{i<k} ln(λᵢ/λ_k).
 pub fn hill_alpha(sigma: &[f64]) -> f64 {

@@ -1,15 +1,18 @@
 //! Every comparison method from the paper's evaluation:
 //!
-//! * [`uniform`]  — SVD-LLM-style uniform per-module ratio (the "Uniform" row);
-//! * [`strs`]     — Sensitivity-based Truncation Rank Searching (ASVD);
-//! * [`ars`]      — Gumbel-Sigmoid mask training (no monotonicity);
-//! * [`dobi`]     — Dobi-SVD₁ tanh-mask training (monotone, local updates);
-//! * [`dlp`]      — outlier-based layerwise ratio allocation;
-//! * [`farms`]    — heavy-tailed ESD (Hill estimator) layerwise allocation;
-//! * [`pruning`]  — structured-pruning comparators for Table 4.
+//! * [`uniform_alloc`] — SVD-LLM-style uniform per-module ratio (the "Uniform" row);
+//! * [`strs_alloc`]    — Sensitivity-based Truncation Rank Searching (ASVD);
+//! * [`ars_alloc`]     — Gumbel-Sigmoid mask training (no monotonicity);
+//! * [`dobi_alloc`]    — Dobi-SVD₁ tanh-mask training (monotone, local updates);
+//! * [`dlp_alloc`]     — outlier-based layerwise ratio allocation;
+//! * [`farms_alloc`]   — heavy-tailed ESD (Hill estimator) layerwise allocation;
+//! * [`pruning`]       — structured-pruning comparators for Table 4.
 //!
 //! All methods emit a [`crate::model::Allocation`] normalized to the target
 //! budget through the same rescale as ARA, so comparisons are controlled.
+//! Callers go through the unified registry (`crate::compress`) — these free
+//! functions are the implementations behind its [`crate::compress::AllocMethod`]
+//! impls, not an entry point.
 
 mod ars;
 mod dlp;
@@ -20,8 +23,8 @@ mod strs;
 mod uniform;
 
 pub use ars::{ars_alloc, ArsConfig};
-pub use dlp::dlp_alloc;
+pub use dlp::{dlp_alloc, DlpConfig};
 pub use dobi::{dobi_alloc, DobiConfig};
-pub use farms::farms_alloc;
+pub use farms::{farms_alloc, FarmsConfig};
 pub use strs::{strs_alloc, StrsConfig};
 pub use uniform::uniform_alloc;

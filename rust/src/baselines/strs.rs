@@ -20,11 +20,18 @@ pub struct StrsConfig {
     pub ratios: Vec<f64>,
     /// Probe batches per measurement.
     pub probe_batches: usize,
+    /// Seed of the shared [`MaskGradRunner`] data stream (the calibration
+    /// batch order the sensitivity probes see).
+    pub data_seed: u64,
 }
 
 impl Default for StrsConfig {
     fn default() -> Self {
-        StrsConfig { ratios: (1..=9).map(|i| i as f64 / 10.0).collect(), probe_batches: 1 }
+        StrsConfig {
+            ratios: (1..=9).map(|i| i as f64 / 10.0).collect(),
+            probe_batches: 1,
+            data_seed: 3,
+        }
     }
 }
 

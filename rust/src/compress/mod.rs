@@ -1,0 +1,167 @@
+//! The unified compression-method API (PR 5).
+//!
+//! Three public surfaces replace the old hardwired `match` in
+//! `Pipeline::allocate`:
+//!
+//! * [`AllocMethod`] + [`AllocCtx`] — every allocation strategy (ARA and
+//!   all baselines, [`methods`]) behind one trait, with the substrate
+//!   bundle (`ModelCfg`/`Runtime`/`WeightStore`/grams/`FactoredModel`/
+//!   [`RunScale`]) passed as one context instead of six arguments;
+//! * [`registry`] — string-addressable method specs (`ara@0.8`,
+//!   `dobi@0.75?epochs=20`) parsed into boxed methods, with unknown
+//!   methods/parameters failing by spec name;
+//! * [`CompressionPlan`] ([`plan`]) — the versioned artifact wrapping an
+//!   `Allocation` with its provenance (spec, target/achieved ratio, seed,
+//!   scale knobs, timing); serving resolves plans, legacy bare-allocation
+//!   JSON stays loadable.
+//!
+//! The old `MethodKind`-based entry points survive one release as thin
+//! deprecated shims (see `coordinator::Pipeline::allocate`) so parity can
+//! be pinned before deletion.
+
+pub mod methods;
+pub mod plan;
+pub mod registry;
+
+use std::collections::BTreeMap;
+
+use crate::config::{scaled, ModelCfg};
+use crate::linalg::Mat;
+use crate::model::{Allocation, WeightStore};
+use crate::runtime::Runtime;
+use crate::svd::FactoredModel;
+use crate::Result;
+
+pub use methods::{computed_alloc, heuristic_ara_alloc};
+pub use plan::{CompressionPlan, PlanScale, PLAN_SCHEMA_VERSION};
+pub use registry::{build_method, method_for, MethodSpec, ALL_METHOD_IDS};
+
+/// Experiment-scale knobs (all counts, no shapes) with bench defaults.
+#[derive(Debug, Clone)]
+pub struct RunScale {
+    pub pretrain_steps: usize,
+    pub calib_batches: usize,
+    pub alloc_samples: usize,
+    pub alloc_epochs: usize,
+    pub eval_batches: usize,
+    pub zs_items: usize,
+}
+
+impl Default for RunScale {
+    fn default() -> Self {
+        // scaled by ARA_SCALE (config::scaled)
+        RunScale {
+            // NOT scaled by ARA_SCALE: the pre-trained substrate is cached
+            // on disk and shared by every harness regardless of scale
+            // (override with ARA_PRETRAIN_STEPS)
+            pretrain_steps: std::env::var("ARA_PRETRAIN_STEPS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1200),
+            calib_batches: scaled(8, 2),
+            alloc_samples: scaled(96, 16),
+            alloc_epochs: scaled(10, 3),
+            eval_batches: scaled(6, 2),
+            zs_items: scaled(24, 8),
+        }
+    }
+}
+
+/// Everything an allocation method may consume, bundled: the model
+/// preset, the runtime (for mask-gradient training), the dense weights,
+/// the calibration Grams, the whitened factorization, and the experiment
+/// scale. Borrowed — building a ctx is free.
+pub struct AllocCtx<'a> {
+    pub cfg: &'a ModelCfg,
+    pub rt: &'a Runtime,
+    pub ws: &'a WeightStore,
+    pub grams: &'a BTreeMap<String, Mat>,
+    pub fm: &'a FactoredModel,
+    pub scale: &'a RunScale,
+}
+
+/// One allocation strategy: maps a target parameter ratio to a rank
+/// [`Allocation`] over the shared substrate. Implementations live in
+/// [`methods`]; instances are built from specs by [`registry`].
+pub trait AllocMethod {
+    /// Canonical registry id (`ara`, `dlp`, …) — the spec's method field.
+    fn id(&self) -> &str;
+
+    /// Display label for tables (`ARA`, `Dobi-SVD1`, …).
+    fn label(&self) -> &str {
+        self.id()
+    }
+
+    /// The method's RNG seed, when it has one (recorded in the plan).
+    fn seed(&self) -> Option<u64> {
+        None
+    }
+
+    /// The **effective** sample/epoch budget this method trains with under
+    /// `scale` — spec overrides included — recorded in the plan so its
+    /// provenance never contradicts what actually ran.
+    fn budget(&self, scale: &RunScale) -> plan::PlanScale {
+        plan::PlanScale { alloc_samples: scale.alloc_samples, alloc_epochs: scale.alloc_epochs }
+    }
+
+    /// Run the method at `target` over the bundled substrate.
+    fn allocate(&self, ctx: &AllocCtx, target: f64) -> Result<Allocation>;
+}
+
+/// All allocation methods of Table 1/2 (legacy enum; the registry's
+/// string ids are the supported surface).
+#[deprecated(note = "use compress::registry method specs (`ara@0.8`) instead")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodKind {
+    Uniform,
+    Dlp,
+    Farms,
+    Strs,
+    Ars,
+    Dobi,
+    Ara,
+    /// ARA without the guidance loss (Table 5 / Fig. 4b ablation).
+    AraNoGuidance,
+}
+
+#[allow(deprecated)]
+#[deprecated(note = "use compress::ALL_METHOD_IDS instead")]
+pub const ALL_METHODS: [MethodKind; 7] = [
+    MethodKind::Uniform,
+    MethodKind::Dlp,
+    MethodKind::Farms,
+    MethodKind::Strs,
+    MethodKind::Ars,
+    MethodKind::Dobi,
+    MethodKind::Ara,
+];
+
+#[allow(deprecated)]
+impl MethodKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Uniform => "Uniform",
+            MethodKind::Dlp => "DLP",
+            MethodKind::Farms => "FARMS",
+            MethodKind::Strs => "STRS",
+            MethodKind::Ars => "ARS",
+            MethodKind::Dobi => "Dobi-SVD1",
+            MethodKind::Ara => "ARA",
+            MethodKind::AraNoGuidance => "ARA(noLg)",
+        }
+    }
+
+    /// The registry id this kind maps to (the shim's bridge).
+    pub fn spec_id(&self) -> &'static str {
+        match self {
+            MethodKind::Uniform => "uniform",
+            MethodKind::Dlp => "dlp",
+            MethodKind::Farms => "farms",
+            MethodKind::Strs => "strs",
+            MethodKind::Ars => "ars",
+            MethodKind::Dobi => "dobi",
+            MethodKind::Ara => "ara",
+            MethodKind::AraNoGuidance => "ara-nolg",
+        }
+    }
+}

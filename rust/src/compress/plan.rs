@@ -1,0 +1,223 @@
+//! Versioned [`CompressionPlan`] artifacts — the unit serving consumes.
+//!
+//! A plan wraps the raw [`Allocation`] with the provenance the ROADMAP's
+//! scenario sweeps need: which method spec produced it, at what target,
+//! what it actually achieved, which seed and scale knobs were in effect,
+//! and how long allocation took. The JSON schema is mirrored by
+//! `python/compile/plans.py` (imported by `aot.py`), and
+//! `runtime::resolve_alloc` accepts **both** plan files and legacy
+//! bare-`Allocation` files, so pre-PR-5 allocation JSONs keep resolving.
+
+use std::path::Path;
+
+use crate::json::{self, Json};
+use crate::model::Allocation;
+use crate::Result;
+
+/// Current plan schema version. Version `0` is reserved for plans
+/// synthesized from legacy bare-`Allocation` files or computed serving
+/// fallbacks — they carry no recorded provenance.
+pub const PLAN_SCHEMA_VERSION: u32 = 1;
+
+/// The **effective** sample/epoch budget a mask-trained allocation ran
+/// with — [`crate::compress::RunScale`] defaults with any spec overrides
+/// applied (see `AllocMethod::budget`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanScale {
+    pub alloc_samples: usize,
+    pub alloc_epochs: usize,
+}
+
+/// A rank allocation plus the provenance needed to reproduce it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionPlan {
+    /// [`PLAN_SCHEMA_VERSION`] for freshly produced plans; `0` marks a
+    /// legacy/computed plan with no recorded provenance.
+    pub schema_version: u32,
+    /// Canonical method spec (`ara@0.8?epochs=5`) that produced this plan.
+    pub spec: String,
+    /// Registry method id (`ara`), or `legacy` / `computed`.
+    pub method: String,
+    /// Display label for tables (`ARA`, `Dobi-SVD1`, …).
+    pub label: String,
+    /// Requested parameter ratio.
+    pub target: f64,
+    /// Achieved parameter ratio (`model::alloc_ratio`).
+    pub achieved: f64,
+    /// The method's RNG seed, when it has one (mask-trained methods).
+    pub seed: Option<u64>,
+    pub scale: PlanScale,
+    /// Allocation wall time in milliseconds.
+    pub wall_ms: f64,
+    pub allocation: Allocation,
+}
+
+impl CompressionPlan {
+    /// Wrap a bare [`Allocation`] (legacy file or computed serving
+    /// fallback) as an unprovenanced plan.
+    pub fn legacy(method: &str, allocation: Allocation, achieved: f64) -> CompressionPlan {
+        CompressionPlan {
+            schema_version: 0,
+            spec: allocation.name.clone(),
+            method: method.to_string(),
+            label: allocation.name.clone(),
+            target: achieved,
+            achieved,
+            seed: None,
+            scale: PlanScale { alloc_samples: 0, alloc_epochs: 0 },
+            wall_ms: 0.0,
+            allocation,
+        }
+    }
+
+    /// Does this plan carry recorded provenance (vs a legacy wrap)?
+    pub fn provenanced(&self) -> bool {
+        self.schema_version >= 1
+    }
+
+    /// One-line provenance summary for serving stats / CLI output.
+    pub fn provenance_line(&self) -> String {
+        format!(
+            "plan {} (schema v{}, achieved {:.4}, seed {}, {:.0} ms)",
+            self.spec,
+            self.schema_version,
+            self.achieved,
+            self.seed.map_or("-".to_string(), |s| s.to_string()),
+            self.wall_ms
+        )
+    }
+
+    pub fn to_json(&self) -> String {
+        let alloc = json::parse(&self.allocation.to_json()).expect("allocation JSON is valid");
+        json::obj(vec![
+            ("schema_version", json::n(self.schema_version as f64)),
+            ("spec", json::s(&self.spec)),
+            ("method", json::s(&self.method)),
+            ("label", json::s(&self.label)),
+            ("target", json::n(self.target)),
+            ("achieved", json::n(self.achieved)),
+            ("seed", self.seed.map_or(Json::Null, |s| json::n(s as f64))),
+            (
+                "scale",
+                json::obj(vec![
+                    ("alloc_samples", json::n(self.scale.alloc_samples as f64)),
+                    ("alloc_epochs", json::n(self.scale.alloc_epochs as f64)),
+                ]),
+            ),
+            ("wall_ms", json::n(self.wall_ms)),
+            ("allocation", alloc),
+        ])
+        .dump()
+    }
+
+    /// Parse a plan **or** a legacy bare-`Allocation` document (detected by
+    /// the absence of `schema_version`); newer schema versions are
+    /// rejected by name instead of being misread.
+    pub fn from_json(text: &str) -> Result<CompressionPlan> {
+        let j = json::parse(text)?;
+        if j.get("schema_version").is_none() {
+            // legacy bare-Allocation file: {"name": ..., "modules": {...}}
+            let alloc = Allocation::from_json(text)?;
+            return Ok(CompressionPlan::legacy("legacy", alloc, f64::NAN));
+        }
+        let version = j.req("schema_version")?.as_usize()? as u32;
+        if version > PLAN_SCHEMA_VERSION {
+            return Err(crate::anyhow!(
+                "compression plan schema_version {version} is newer than supported \
+                 {PLAN_SCHEMA_VERSION} — upgrade this binary"
+            ));
+        }
+        let seed = match j.req("seed")? {
+            Json::Null => None,
+            s => Some(s.as_usize()? as u64),
+        };
+        let scale = j.req("scale")?;
+        Ok(CompressionPlan {
+            schema_version: version,
+            spec: j.req("spec")?.as_str()?.to_string(),
+            method: j.req("method")?.as_str()?.to_string(),
+            label: j.req("label")?.as_str()?.to_string(),
+            target: j.req("target")?.as_f64()?,
+            achieved: j.req("achieved")?.as_f64()?,
+            seed,
+            scale: PlanScale {
+                alloc_samples: scale.req("alloc_samples")?.as_usize()?,
+                alloc_epochs: scale.req("alloc_epochs")?.as_usize()?,
+            },
+            wall_ms: j.req("wall_ms")?.as_f64()?,
+            allocation: Allocation::from_json(&j.req("allocation")?.dump())?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<CompressionPlan> {
+        CompressionPlan::from_json(
+            &std::fs::read_to_string(path).map_err(|e| crate::anyhow!("read {path:?}: {e}"))?,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModuleAlloc;
+
+    fn sample_plan() -> CompressionPlan {
+        let mut a = Allocation::new("ara-80");
+        a.set("layers.0.attn.wq", ModuleAlloc::Rank(7));
+        a.set("layers.0.attn.wv", ModuleAlloc::Dense);
+        CompressionPlan {
+            schema_version: PLAN_SCHEMA_VERSION,
+            spec: "ara@0.8?epochs=5".to_string(),
+            method: "ara".to_string(),
+            label: "ARA".to_string(),
+            target: 0.8,
+            achieved: 0.7931,
+            seed: Some(7),
+            scale: PlanScale { alloc_samples: 96, alloc_epochs: 5 },
+            wall_ms: 1234.5,
+            allocation: a,
+        }
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let p = sample_plan();
+        let q = CompressionPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn seedless_plan_roundtrips_null_seed() {
+        let mut p = sample_plan();
+        p.seed = None;
+        let q = CompressionPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(q.seed, None);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn legacy_bare_allocation_loads_as_unprovenanced_plan() {
+        let mut a = Allocation::new("uniform-80");
+        a.set("layers.0.attn.wq", ModuleAlloc::Rank(3));
+        let p = CompressionPlan::from_json(&a.to_json()).unwrap();
+        assert!(!p.provenanced());
+        assert_eq!(p.method, "legacy");
+        assert_eq!(p.allocation, a);
+    }
+
+    #[test]
+    fn newer_schema_version_is_rejected_by_name() {
+        let mut p = sample_plan();
+        p.schema_version = PLAN_SCHEMA_VERSION + 1;
+        let err = CompressionPlan::from_json(&p.to_json()).unwrap_err().to_string();
+        assert!(err.contains("schema_version"), "{err}");
+    }
+}

@@ -1,0 +1,360 @@
+//! String-addressable method registry: parses method specs like
+//! `ara@0.8`, `dobi@0.75?epochs=20`, or `dlp@0.8?tail=0.15` into boxed
+//! [`AllocMethod`]s. Unknown methods, unknown parameters, malformed
+//! values, and out-of-range targets all fail with the offending **spec
+//! named in the error**, so a typo in a sweep grid or CLI invocation is
+//! diagnosable from the message alone.
+//!
+//! Grammar (DESIGN.md §4):
+//!
+//! ```text
+//! spec    := method [ '@' target ] [ '?' params ]
+//! method  := one of ALL_METHOD_IDS (plus aliases: dobi-svd1 → dobi)
+//! target  := parameter ratio in (0, 1]
+//! params  := key '=' value ( '&' key '=' value )*
+//! ```
+
+use crate::Result;
+
+use super::methods::{Ara, Ars, Dlp, Dobi, Farms, Strs, Uniform};
+use super::AllocMethod;
+
+/// Canonical ids of the Table 1/2 comparison set, in paper row order.
+/// (`ara-nolg`, the Table 5 ablation, is registered but not part of the
+/// standard grid.)
+pub const ALL_METHOD_IDS: [&str; 7] = ["uniform", "dlp", "farms", "strs", "ars", "dobi", "ara"];
+
+/// A parsed method spec: method id, optional target ratio, raw parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MethodSpec {
+    pub method: String,
+    pub target: Option<f64>,
+    pub params: Vec<(String, String)>,
+}
+
+impl MethodSpec {
+    /// Parse `method[@target][?k=v[&k=v]*]`; errors name the full spec.
+    pub fn parse(spec: &str) -> Result<MethodSpec> {
+        let bad = |why: &str| crate::anyhow!("bad method spec `{spec}`: {why}");
+        let (head, query) = match spec.split_once('?') {
+            Some((h, q)) => (h, Some(q)),
+            None => (spec, None),
+        };
+        let (method, target) = match head.split_once('@') {
+            None => (head, None),
+            Some((m, t)) => {
+                let r: f64 = t
+                    .parse()
+                    .map_err(|_| bad(&format!("target `{t}` is not a number")))?;
+                // NB: the finiteness check also rejects `NaN`, which every
+                // plain comparison would wave through
+                if !r.is_finite() || r <= 0.0 || r > 1.0 {
+                    return Err(bad(&format!("target {r} outside (0, 1]")));
+                }
+                (m, Some(r))
+            }
+        };
+        if method.is_empty() {
+            return Err(bad("empty method name"));
+        }
+        // method ids are case-insensitive (the pre-registry CLI lowercased
+        // its `--method` argument; keep that contract)
+        let method = method.to_lowercase();
+        let mut params = Vec::new();
+        if let Some(q) = query {
+            for kv in q.split('&') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| bad(&format!("parameter `{kv}` is not key=value")))?;
+                if k.is_empty() || v.is_empty() {
+                    return Err(bad(&format!("parameter `{kv}` has an empty key or value")));
+                }
+                if params.iter().any(|(pk, _)| pk == k) {
+                    return Err(bad(&format!("duplicate parameter `{k}`")));
+                }
+                params.push((k.to_string(), v.to_string()));
+            }
+        }
+        Ok(MethodSpec { method, target, params })
+    }
+
+    /// The canonical spec string (method@target?k=v&…), used as the plan's
+    /// recorded provenance and as bench JSON keys.
+    pub fn canonical(&self) -> String {
+        let mut s = self.method.clone();
+        if let Some(t) = self.target {
+            s.push_str(&format!("@{t}"));
+        }
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            s.push(if i == 0 { '?' } else { '&' });
+            s.push_str(&format!("{k}={v}"));
+        }
+        s
+    }
+
+    /// A copy of this spec with the target replaced (sweep grids).
+    pub fn with_target(&self, target: f64) -> MethodSpec {
+        MethodSpec { target: Some(target), ..self.clone() }
+    }
+}
+
+/// Typed parameter extraction with errors that name the spec.
+struct Params<'s> {
+    spec: &'s str,
+    left: Vec<(String, String)>,
+}
+
+impl<'s> Params<'s> {
+    fn take(&mut self, key: &str) -> Option<String> {
+        let i = self.left.iter().position(|(k, _)| k == key)?;
+        Some(self.left.remove(i).1)
+    }
+
+    fn parsed<T: std::str::FromStr>(&mut self, key: &str, what: &str) -> Result<Option<T>> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                crate::anyhow!("spec `{}`: parameter `{key}={v}` is not {what}", self.spec)
+            }),
+        }
+    }
+
+    fn f64(&mut self, key: &str) -> Result<Option<f64>> {
+        self.parsed(key, "a number")
+    }
+    fn usize(&mut self, key: &str) -> Result<Option<usize>> {
+        self.parsed(key, "a non-negative integer")
+    }
+    fn u64(&mut self, key: &str) -> Result<Option<u64>> {
+        self.parsed(key, "a non-negative integer")
+    }
+    fn bool(&mut self, key: &str) -> Result<Option<bool>> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => match v.as_str() {
+                "1" | "true" => Ok(Some(true)),
+                "0" | "false" => Ok(Some(false)),
+                _ => Err(crate::anyhow!(
+                    "spec `{}`: parameter `{key}={v}` is not a bool (0/1/true/false)",
+                    self.spec
+                )),
+            },
+        }
+    }
+
+    /// Every parameter must have been consumed; leftovers are unknown.
+    fn finish(self, allowed: &[&str]) -> Result<()> {
+        if let Some((k, _)) = self.left.first() {
+            return Err(crate::anyhow!(
+                "unknown parameter `{k}` for method `{}` in spec `{}` (allowed: {})",
+                self.spec.split(['@', '?']).next().unwrap_or(self.spec),
+                self.spec,
+                if allowed.is_empty() { "none".to_string() } else { allowed.join(", ") }
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Build the boxed method a parsed spec names, applying its parameters.
+pub fn build_method(spec: &MethodSpec) -> Result<Box<dyn AllocMethod>> {
+    let canonical = spec.canonical();
+    let mut p = Params { spec: &canonical, left: spec.params.clone() };
+    let method: Box<dyn AllocMethod> = match spec.method.as_str() {
+        "uniform" => {
+            p.finish(&[])?;
+            Box::new(Uniform)
+        }
+        "dlp" => {
+            let mut m = Dlp::default();
+            if let Some(t) = p.f64("tail")? {
+                m.cfg.tail = t;
+            }
+            p.finish(&["tail"])?;
+            Box::new(m)
+        }
+        "farms" => {
+            let mut m = Farms::default();
+            if let Some(e) = p.f64("eps")? {
+                m.cfg.eps = e;
+            }
+            p.finish(&["eps"])?;
+            Box::new(m)
+        }
+        "strs" => {
+            let mut m = Strs::default();
+            if let Some(s) = p.u64("seed")? {
+                m.cfg.data_seed = s;
+            }
+            if let Some(b) = p.usize("probe_batches")? {
+                m.cfg.probe_batches = b;
+            }
+            p.finish(&["seed", "probe_batches"])?;
+            Box::new(m)
+        }
+        "ars" => {
+            let mut m = Ars::default();
+            m.epochs = p.usize("epochs")?;
+            if let Some(v) = p.f64("lambda")? {
+                m.cfg.lambda = v;
+            }
+            if let Some(v) = p.f64("temperature")? {
+                m.cfg.temperature = v;
+            }
+            if let Some(v) = p.f64("lr")? {
+                m.cfg.lr = v;
+            }
+            if let Some(v) = p.u64("seed")? {
+                m.cfg.seed = v;
+            }
+            if let Some(v) = p.u64("data_seed")? {
+                m.cfg.data_seed = v;
+            }
+            p.finish(&["epochs", "lambda", "temperature", "lr", "seed", "data_seed"])?;
+            Box::new(m)
+        }
+        "dobi" | "dobi-svd1" => {
+            let mut m = Dobi::default();
+            m.epochs = p.usize("epochs")?;
+            if let Some(v) = p.f64("lambda")? {
+                m.cfg.lambda = v;
+            }
+            if let Some(v) = p.f64("beta")? {
+                m.cfg.beta = v;
+            }
+            if let Some(v) = p.f64("lr")? {
+                m.cfg.lr = v;
+            }
+            if let Some(v) = p.u64("data_seed")? {
+                m.cfg.data_seed = v;
+            }
+            p.finish(&["epochs", "lambda", "beta", "lr", "data_seed"])?;
+            Box::new(m)
+        }
+        "ara" | "ara-nolg" => {
+            let mut m = Ara::default();
+            m.cfg.use_guidance = spec.method == "ara";
+            m.epochs = p.usize("epochs")?;
+            m.samples = p.usize("samples")?;
+            if let Some(v) = p.f64("lambda1")? {
+                m.cfg.lambda1 = v;
+            }
+            if let Some(v) = p.f64("lambda2")? {
+                m.cfg.lambda2 = v;
+            }
+            if let Some(v) = p.usize("d")? {
+                m.cfg.d = v;
+            }
+            if let Some(v) = p.f64("lr")? {
+                m.cfg.lr = v;
+            }
+            if let Some(v) = p.u64("seed")? {
+                m.cfg.seed = v;
+            }
+            match (spec.method.as_str(), p.bool("guidance")?) {
+                ("ara", Some(g)) => m.cfg.use_guidance = g,
+                ("ara-nolg", Some(_)) => {
+                    return Err(crate::anyhow!(
+                        "spec `{canonical}`: `guidance` is only valid on `ara` \
+                         (`ara-nolg` pins it off)"
+                    ));
+                }
+                _ => {}
+            }
+            p.finish(&["epochs", "samples", "lambda1", "lambda2", "d", "lr", "seed", "guidance"])?;
+            Box::new(m)
+        }
+        other => {
+            return Err(crate::anyhow!(
+                "unknown method `{other}` in spec `{canonical}` (known: {}, ara-nolg)",
+                ALL_METHOD_IDS.join(", ")
+            ));
+        }
+    };
+    Ok(method)
+}
+
+/// Parse a spec string and build its method in one step.
+pub fn method_for(spec: &str) -> Result<(MethodSpec, Box<dyn AllocMethod>)> {
+    let parsed = MethodSpec::parse(spec)?;
+    let method = build_method(&parsed)?;
+    Ok((parsed, method))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_and_parameterized_specs() {
+        let s = MethodSpec::parse("ara@0.8").unwrap();
+        assert_eq!(s.method, "ara");
+        assert_eq!(s.target, Some(0.8));
+        assert!(s.params.is_empty());
+        assert_eq!(s.canonical(), "ara@0.8");
+
+        let s = MethodSpec::parse("dobi@0.75?epochs=20&lr=1.5").unwrap();
+        assert_eq!(s.target, Some(0.75));
+        assert_eq!(s.params.len(), 2);
+        assert_eq!(s.canonical(), "dobi@0.75?epochs=20&lr=1.5");
+
+        let s = MethodSpec::parse("uniform").unwrap();
+        assert_eq!(s.target, None);
+
+        // method ids are case-insensitive (legacy CLI contract)
+        let s = MethodSpec::parse("ARA@0.8").unwrap();
+        assert_eq!(s.method, "ara");
+        assert_eq!(s.canonical(), "ara@0.8");
+        assert!(method_for("Dobi-SVD1@0.5").is_ok());
+    }
+
+    #[test]
+    fn non_finite_targets_are_rejected() {
+        for bad in ["ara@NaN", "ara@inf", "ara@-inf"] {
+            let err = MethodSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("outside (0, 1]"), "`{bad}` must be rejected: {err}");
+        }
+    }
+
+    #[test]
+    fn errors_name_the_spec() {
+        for bad in ["nosuch@0.8", "ara@1.8", "ara@x", "dlp@0.8?tail", "@0.5", "ara@0.5?k=1&k=2"] {
+            let err = MethodSpec::parse(bad)
+                .map_err(|e| e.to_string())
+                .and_then(|s| build_method(&s).map(|_| ()).map_err(|e| e.to_string()))
+                .unwrap_err();
+            assert!(err.contains(bad), "error for `{bad}` should name it: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_parameter_names_spec_and_allowed_set() {
+        let err = method_for("ara@0.8?bogus=1").unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        assert!(err.contains("ara@0.8?bogus=1"), "{err}");
+        assert!(err.contains("epochs"), "should list allowed params: {err}");
+    }
+
+    #[test]
+    fn every_canonical_id_builds() {
+        for id in ALL_METHOD_IDS {
+            let (_, m) = method_for(&format!("{id}@0.5")).unwrap();
+            assert_eq!(m.id(), id);
+        }
+        let (_, m) = method_for("ara-nolg@0.5").unwrap();
+        assert_eq!(m.id(), "ara-nolg");
+        let (_, m) = method_for("dobi-svd1@0.5").unwrap();
+        assert_eq!(m.id(), "dobi");
+    }
+
+    #[test]
+    fn parameters_reach_the_config() {
+        let (_, m) = method_for("dlp@0.8?tail=0.15").unwrap();
+        assert_eq!(m.id(), "dlp");
+        let (_, m) = method_for("ara@0.8?guidance=0").unwrap();
+        // guidance=0 flips the id to the ablation
+        assert_eq!(m.id(), "ara-nolg");
+        assert!(method_for("strs@0.8?seed=9").is_ok());
+        assert!(method_for("uniform@0.8?x=1").is_err());
+    }
+}

@@ -1,7 +1,13 @@
 //! Experiment coordinator: the staged pipeline every table/figure harness
 //! drives — pretrain (disk-cached) → calibrate → factorize → allocate
-//! (any method) → evaluate — plus the method registry.
+//! (any registry method spec) → evaluate. The method registry itself
+//! lives in [`crate::compress`]; the legacy `MethodKind` surface is
+//! re-exported here as a deprecated shim for one release.
 
 mod pipeline;
 
-pub use pipeline::{EvalRow, MethodKind, Pipeline, RunScale, ALL_METHODS};
+pub use pipeline::{EvalRow, Pipeline};
+
+pub use crate::compress::RunScale;
+#[allow(deprecated)]
+pub use crate::compress::{MethodKind, ALL_METHODS};

@@ -1,15 +1,19 @@
 //! The staged experiment pipeline with disk caching of the expensive
 //! stages (pre-trained weights under runs/<model>/), so the 12 bench
 //! harnesses share substrate work instead of repeating it.
+//!
+//! Allocation routes through the unified method registry
+//! (`compress::registry`): [`Pipeline::allocate_spec`] turns a spec like
+//! `ara@0.8?epochs=5` into a versioned [`CompressionPlan`], and
+//! [`Pipeline::sweep`] drives whole spec × ratio grids over the shared
+//! calibration cache. The old `MethodKind` entry point survives as a
+//! deprecated shim for one release.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
-use crate::ara::{train_ara, AraConfig, MaskGradRunner};
-use crate::baselines::{
-    ars_alloc, dlp_alloc, dobi_alloc, farms_alloc, strs_alloc, uniform_alloc, ArsConfig,
-    DobiConfig, StrsConfig,
-};
-use crate::config::{model_by_name, scaled, ModelCfg, Paths};
+use crate::compress::{registry, AllocCtx, CompressionPlan, PlanScale, RunScale};
+use crate::config::{model_by_name, ModelCfg, Paths};
 use crate::eval::zeroshot::Scorer;
 use crate::eval::{perplexity_masked, zero_shot_suite};
 use crate::linalg::Mat;
@@ -19,76 +23,6 @@ use crate::serving::Engine;
 use crate::svd::{alloc_masks, calibrate, factorize, FactoredModel};
 use crate::training::{pretrain, PretrainConfig};
 use crate::Result;
-
-/// Experiment-scale knobs (all counts, no shapes) with bench defaults.
-#[derive(Debug, Clone)]
-pub struct RunScale {
-    pub pretrain_steps: usize,
-    pub calib_batches: usize,
-    pub alloc_samples: usize,
-    pub alloc_epochs: usize,
-    pub eval_batches: usize,
-    pub zs_items: usize,
-}
-
-impl Default for RunScale {
-    fn default() -> Self {
-        // scaled by ARA_SCALE (config::scaled)
-        RunScale {
-            // NOT scaled by ARA_SCALE: the pre-trained substrate is cached
-            // on disk and shared by every harness regardless of scale
-            // (override with ARA_PRETRAIN_STEPS)
-            pretrain_steps: std::env::var("ARA_PRETRAIN_STEPS")
-                .ok()
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(1200),
-            calib_batches: scaled(8, 2),
-            alloc_samples: scaled(96, 16),
-            alloc_epochs: scaled(10, 3),
-            eval_batches: scaled(6, 2),
-            zs_items: scaled(24, 8),
-        }
-    }
-}
-
-/// All allocation methods of Table 1/2.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MethodKind {
-    Uniform,
-    Dlp,
-    Farms,
-    Strs,
-    Ars,
-    Dobi,
-    Ara,
-    /// ARA without the guidance loss (Table 5 / Fig. 4b ablation).
-    AraNoGuidance,
-}
-
-pub const ALL_METHODS: [MethodKind; 7] = [
-    MethodKind::Uniform,
-    MethodKind::Dlp,
-    MethodKind::Farms,
-    MethodKind::Strs,
-    MethodKind::Ars,
-    MethodKind::Dobi,
-    MethodKind::Ara,
-];
-
-impl MethodKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            MethodKind::Uniform => "Uniform",
-            MethodKind::Dlp => "DLP",
-            MethodKind::Farms => "FARMS",
-            MethodKind::Strs => "STRS",
-            MethodKind::Ars => "ARS",
-            MethodKind::Dobi => "Dobi-SVD1",
-            MethodKind::Ara => "ARA",
-            MethodKind::AraNoGuidance => "ARA(noLg)",
-        }
-    }
-}
 
 /// One evaluated configuration: the Table 1 row.
 #[derive(Debug, Clone)]
@@ -146,11 +80,105 @@ impl Pipeline {
         factorize(&self.cfg, ws, grams, 1e-3)
     }
 
+    /// The borrowed substrate bundle every [`crate::compress::AllocMethod`]
+    /// consumes.
+    pub fn alloc_ctx<'a>(
+        &'a self,
+        ws: &'a WeightStore,
+        grams: &'a BTreeMap<String, Mat>,
+        fm: &'a FactoredModel,
+    ) -> AllocCtx<'a> {
+        AllocCtx {
+            cfg: &self.cfg,
+            rt: &self.rt,
+            ws,
+            grams,
+            fm,
+            scale: &self.scalecfg,
+        }
+    }
+
+    /// Run the allocation method a spec names (`ara@0.8`,
+    /// `dobi@0.75?epochs=20`, …) and wrap the result in a versioned
+    /// [`CompressionPlan`] recording spec, achieved ratio, seed, scale
+    /// knobs, and wall time. Unknown methods/parameters fail with the
+    /// spec named; a spec without an `@target` is an error here.
+    pub fn allocate_spec(
+        &self,
+        spec: &str,
+        ws: &WeightStore,
+        grams: &BTreeMap<String, Mat>,
+        fm: &FactoredModel,
+    ) -> Result<CompressionPlan> {
+        let (parsed, method) = registry::method_for(spec)?;
+        let target = parsed.target.ok_or_else(|| {
+            crate::anyhow!(
+                "spec `{spec}` has no target ratio (expected `{}@<ratio>`)",
+                parsed.method
+            )
+        })?;
+        let ctx = self.alloc_ctx(ws, grams, fm);
+        let t0 = Instant::now();
+        let allocation = method.allocate(&ctx, target)?;
+        Ok(CompressionPlan {
+            schema_version: crate::compress::PLAN_SCHEMA_VERSION,
+            spec: parsed.canonical(),
+            method: method.id().to_string(),
+            label: method.label().to_string(),
+            target,
+            achieved: alloc_ratio(&self.cfg, &allocation),
+            seed: method.seed(),
+            // effective budget (spec overrides included), not the raw
+            // RunScale defaults — provenance must match what actually ran
+            scale: method.budget(&self.scalecfg),
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            allocation,
+        })
+    }
+
+    /// Drive a spec × ratio grid (the Table 1/2 shape) through the shared
+    /// substrate: pretrain/calibrate/factorize run **once** (disk- and
+    /// in-process-cached) and every cell reuses them. Specs carrying an
+    /// explicit `@target` run once as-is; bare specs (`ara`, `dlp?tail=0.2`)
+    /// are crossed with every entry of `ratios`. Returns one plan per cell,
+    /// in grid order.
+    pub fn sweep(&self, specs: &[String], ratios: &[f64]) -> Result<Vec<CompressionPlan>> {
+        let ws = self.pretrained()?;
+        let grams = self.grams(&ws)?;
+        let fm = self.factored(&ws, &grams)?;
+        let mut plans = Vec::new();
+        for spec in specs {
+            let parsed = registry::MethodSpec::parse(spec)?;
+            registry::build_method(&parsed)?; // fail fast, before any training
+            let cells: Vec<String> = if parsed.target.is_some() {
+                vec![parsed.canonical()]
+            } else {
+                ratios.iter().map(|r| parsed.with_target(*r).canonical()).collect()
+            };
+            for cell in cells {
+                let plan = self.allocate_spec(&cell, &ws, &grams, &fm)?;
+                eprintln!(
+                    "[sweep {}] {}: achieved {:.4}, dense {}/{}, {:.0} ms",
+                    self.cfg.name,
+                    plan.spec,
+                    plan.achieved,
+                    plan.allocation.dense_count(),
+                    plan.allocation.modules.len(),
+                    plan.wall_ms
+                );
+                plans.push(plan);
+            }
+        }
+        Ok(plans)
+    }
+
     /// Build an allocation-specialized serving [`Engine`] at batch size
     /// `batch`, resolving `alloc_name` with the same precedence as the
     /// artifact builders (configs/allocations → artifacts/allocations →
-    /// computed `dense` / `uniform-R` / `ara-R`). This is the front door
-    /// the serving benches and the continuous-batching scheduler share.
+    /// computed `dense` / `uniform-R` / `ara-R`). Both [`CompressionPlan`]
+    /// files and legacy bare-`Allocation` files resolve; a plan's
+    /// provenance is threaded into the engine's serving stats. This is the
+    /// front door the serving benches and the scheduler share.
     pub fn engine(
         &self,
         ws: &WeightStore,
@@ -158,54 +186,53 @@ impl Pipeline {
         alloc_name: &str,
         batch: usize,
     ) -> Result<Engine> {
-        let alloc = crate::runtime::resolve_alloc(&self.cfg, &self.paths, alloc_name)?;
-        Engine::new(&self.cfg, &self.rt, ws, fm, &alloc, alloc_name, batch)
+        let plan = crate::runtime::resolve_plan(&self.cfg, &self.paths, alloc_name)?;
+        let mut engine =
+            Engine::new(&self.cfg, &self.rt, ws, fm, &plan.allocation, alloc_name, batch)?;
+        if plan.provenanced() {
+            engine.set_provenance(plan.provenance_line());
+        }
+        Ok(engine)
     }
 
-    /// Run one allocation method at `target`.
-    #[allow(clippy::too_many_arguments)]
+    /// Build a serving [`Engine`] directly from a [`CompressionPlan`]: the
+    /// plan is published under `artifacts/allocations/` (so the artifact
+    /// builders resolve the identical allocation) and its provenance is
+    /// threaded into the engine.
+    pub fn engine_for_plan(
+        &self,
+        ws: &WeightStore,
+        fm: &FactoredModel,
+        plan: &CompressionPlan,
+        batch: usize,
+    ) -> Result<Engine> {
+        let name = plan.allocation.name.clone();
+        let path = self
+            .paths
+            .artifacts
+            .join("allocations")
+            .join(format!("{}.{}.json", self.cfg.name, name));
+        plan.save(&path)?;
+        let mut engine = Engine::new(&self.cfg, &self.rt, ws, fm, &plan.allocation, &name, batch)?;
+        if plan.provenanced() {
+            engine.set_provenance(plan.provenance_line());
+        }
+        Ok(engine)
+    }
+
+    /// Run one allocation method at `target` (legacy enum entry point).
+    #[deprecated(note = "use Pipeline::allocate_spec with a registry spec (`ara@0.8`)")]
+    #[allow(deprecated)]
     pub fn allocate(
         &self,
-        method: MethodKind,
+        method: crate::compress::MethodKind,
         target: f64,
         ws: &WeightStore,
         grams: &BTreeMap<String, Mat>,
         fm: &FactoredModel,
     ) -> Result<Allocation> {
-        let sc = &self.scalecfg;
-        match method {
-            MethodKind::Uniform => Ok(uniform_alloc(&self.cfg, target)),
-            MethodKind::Dlp => Ok(dlp_alloc(&self.cfg, ws, grams, target, 0.15)),
-            MethodKind::Farms => Ok(farms_alloc(&self.cfg, fm, target, 0.3)),
-            MethodKind::Strs => {
-                let runner =
-                    MaskGradRunner::new(&self.cfg, &self.rt, ws, fm, "sync4", sc.alloc_samples, 3)?;
-                strs_alloc(&self.cfg, &runner, fm, target, &StrsConfig::default())
-            }
-            MethodKind::Ars => {
-                let runner =
-                    MaskGradRunner::new(&self.cfg, &self.rt, ws, fm, "sync4", sc.alloc_samples, 4)?;
-                let ac = ArsConfig { target, epochs: sc.alloc_epochs, ..Default::default() };
-                ars_alloc(&self.cfg, &runner, &ac)
-            }
-            MethodKind::Dobi => {
-                let runner =
-                    MaskGradRunner::new(&self.cfg, &self.rt, ws, fm, "sync4", sc.alloc_samples, 5)?;
-                let dc = DobiConfig { target, epochs: sc.alloc_epochs * 2, ..Default::default() };
-                dobi_alloc(&self.cfg, &runner, &dc)
-            }
-            MethodKind::Ara | MethodKind::AraNoGuidance => {
-                let ac = AraConfig {
-                    target,
-                    epochs: sc.alloc_epochs,
-                    samples: sc.alloc_samples,
-                    use_guidance: method == MethodKind::Ara,
-                    ..Default::default()
-                };
-                let (alloc, _) = train_ara(&self.cfg, &self.rt, ws, fm, &ac)?;
-                Ok(alloc)
-            }
-        }
+        self.allocate_spec(&format!("{}@{target}", method.spec_id()), ws, grams, fm)
+            .map(|p| p.allocation)
     }
 
     /// Evaluate a compressed configuration into a table row.

@@ -11,11 +11,13 @@
 //!
 //! The public API is organized bottom-up: substrates ([`tensor`], [`kernels`],
 //! [`linalg`], [`data`], [`model`], [`runtime`]), the compression stack ([`svd`],
-//! [`ara`], [`baselines`], [`quant`], [`lora`]), and the harnesses
+//! [`ara`], [`baselines`], [`compress`] — the unified method registry and
+//! plan artifacts — [`quant`], [`lora`]), and the harnesses
 //! ([`training`], [`eval`], [`serving`], [`coordinator`], [`report`]).
 
 pub mod ara;
 pub mod baselines;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -3,33 +3,112 @@
 //! executed once beforehand.
 //!
 //! Argument parsing is hand-rolled (the offline vendor set has no clap):
-//! `ara <subcommand> [--key value]…`.
+//! `ara <subcommand> [--key value]…`. Each subcommand validates its flag
+//! set — an unknown or duplicated flag errors with that subcommand's
+//! usage line instead of being silently ignored.
+//!
+//! Allocation methods are addressed by **registry spec**
+//! (`method@ratio[?key=val&…]`, e.g. `ara@0.8`, `dobi@0.75?epochs=20`);
+//! see DESIGN.md §4 for the grammar and the per-method parameter sets.
 
 use std::collections::HashMap;
 
+use ara_compress::compress::ALL_METHOD_IDS;
 use ara_compress::config::Paths;
-use ara_compress::coordinator::{MethodKind, Pipeline};
-use ara_compress::model::{alloc_ratio, Allocation};
+use ara_compress::coordinator::Pipeline;
 use ara_compress::report::{f2, Table};
 use ara_compress::Result;
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
+/// One subcommand's contract: its usage line and its allowed flag set.
+struct SubCmd {
+    name: &'static str,
+    usage: &'static str,
+    flags: &'static [&'static str],
+}
+
+const SUBCOMMANDS: &[SubCmd] = &[
+    SubCmd {
+        name: "pretrain",
+        usage: "pretrain --model M [--steps N]              pre-train the substrate LM (cached)",
+        flags: &["model", "steps"],
+    },
+    SubCmd {
+        name: "compress",
+        usage: "compress --model M --spec S [--out PATH]    run a method spec (e.g. ara@0.8);\n          [--method X --ratio R]              --out writes a CompressionPlan JSON",
+        flags: &["model", "spec", "method", "ratio", "out"],
+    },
+    SubCmd {
+        name: "eval",
+        usage: "eval      --model M --spec S                PPL + zero-shot vs dense",
+        flags: &["model", "spec", "method", "ratio"],
+    },
+    SubCmd {
+        name: "sweep",
+        usage: "sweep     --model M [--specs a,b,…] [--ratios r1,r2,…]   method × ratio grid",
+        flags: &["model", "specs", "ratios"],
+    },
+    SubCmd {
+        name: "serve",
+        usage: "serve     --model M --alloc A --batch B     continuous-batching generation demo\n          [--gen-len N] [--requests N]",
+        flags: &["model", "alloc", "batch", "gen-len", "requests"],
+    },
+    SubCmd {
+        name: "info",
+        usage: "info                                        list presets and artifacts",
+        flags: &[],
+    },
+];
+
+fn usage() -> String {
+    let mut s = String::from(
+        "ara — Adaptive Rank Allocation for SVD LLM compression\n\n\
+         USAGE: ara <command> [--flag value]...\n\nCOMMANDS:\n",
+    );
+    for sc in SUBCOMMANDS {
+        s.push_str("  ");
+        s.push_str(sc.usage);
+        s.push('\n');
+    }
+    s.push_str(
+        "\nMETHOD SPECS: method@ratio[?key=val&key=val]   (ratio in (0,1])\n  methods: ",
+    );
+    s.push_str(&ALL_METHOD_IDS.join(" "));
+    s.push_str(" ara-nolg\n  examples: ara@0.8   dobi@0.75?epochs=20   dlp@0.8?tail=0.15\n");
+    s
+}
+
+/// Tiny flag parser: `--key value` pairs, validated against one
+/// subcommand's allowed set. Unknown and duplicate flags are errors that
+/// name the subcommand and print its usage line.
 struct Args {
     flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Result<Args> {
+    fn parse(sub: &SubCmd, argv: &[String]) -> Result<Args> {
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             let k = argv[i]
                 .strip_prefix("--")
                 .ok_or_else(|| ara_compress::anyhow!("expected --flag, got {}", argv[i]))?;
+            if !sub.flags.contains(&k) {
+                return Err(ara_compress::anyhow!(
+                    "unknown flag --{k} for `{}`\nusage: {}",
+                    sub.name,
+                    sub.usage
+                ));
+            }
             let v = argv
                 .get(i + 1)
                 .ok_or_else(|| ara_compress::anyhow!("--{k} needs a value"))?;
-            flags.insert(k.to_string(), v.clone());
+            if flags.insert(k.to_string(), v.clone()).is_some() {
+                return Err(ara_compress::anyhow!(
+                    "duplicate flag --{k} for `{}`\nusage: {}",
+                    sub.name,
+                    sub.usage
+                ));
+            }
             i += 2;
         }
         Ok(Args { flags })
@@ -46,56 +125,37 @@ impl Args {
         }
     }
 
-    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
-        match self.flags.get(key) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|_| ara_compress::anyhow!("--{key}: bad number {v}")),
+    /// The method spec for `compress`/`eval`: `--spec` wins; otherwise the
+    /// legacy `--method X --ratio R` pair is assembled into `X@R` (X may
+    /// itself already carry `@`/`?` parts).
+    fn spec(&self) -> String {
+        if let Some(s) = self.flags.get("spec") {
+            return s.clone();
+        }
+        let method = self.get("method", "ara");
+        if method.contains('@') {
+            method
+        } else {
+            format!("{method}@{}", self.get("ratio", "0.8"))
         }
     }
-}
-
-const USAGE: &str = "\
-ara — Adaptive Rank Allocation for SVD LLM compression
-
-USAGE: ara <command> [--flag value]...
-
-COMMANDS:
-  pretrain  --model M [--steps N]           pre-train the substrate LM (cached)
-  compress  --model M --method X --ratio R  run an allocation method
-            [--out PATH]                    write allocation JSON for aot.py
-  eval      --model M --method X --ratio R  PPL + zero-shot vs dense
-  serve     --model M --alloc A --batch B   batched generation demo
-            [--gen-len N] [--requests N]
-  info                                      list presets and artifacts
-
-METHODS: uniform dlp farms strs ars dobi ara ara-nolg
-";
-
-fn parse_method(s: &str) -> Result<MethodKind> {
-    Ok(match s.to_lowercase().as_str() {
-        "uniform" => MethodKind::Uniform,
-        "dlp" => MethodKind::Dlp,
-        "farms" => MethodKind::Farms,
-        "strs" => MethodKind::Strs,
-        "ars" => MethodKind::Ars,
-        "dobi" | "dobi-svd1" => MethodKind::Dobi,
-        "ara" => MethodKind::Ara,
-        "ara-nolg" => MethodKind::AraNoGuidance,
-        other => return Err(ara_compress::anyhow!("unknown method {other}")),
-    })
 }
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
-        print!("{USAGE}");
+        print!("{}", usage());
         return;
     }
     let cmd = argv[0].clone();
-    let args = match Args::parse(&argv[1..]) {
+    let Some(sub) = SUBCOMMANDS.iter().find(|s| s.name == cmd) else {
+        eprintln!("error: unknown command `{cmd}`\n{}", usage());
+        std::process::exit(2);
+    };
+    let args = match Args::parse(sub, &argv[1..]) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n{USAGE}");
+            eprintln!("error: {e}");
             std::process::exit(2);
         }
     };
@@ -118,46 +178,84 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "compress" => {
             let model = args.get("model", "minillama-s");
-            let method = parse_method(&args.get("method", "ara"))?;
-            let ratio = args.get_f64("ratio", 0.8)?;
+            let spec = args.spec();
             let pl = Pipeline::new(&model)?;
             let ws = pl.pretrained()?;
             let grams = pl.grams(&ws)?;
             let fm = pl.factored(&ws, &grams)?;
-            let alloc = pl.allocate(method, ratio, &ws, &grams, &fm)?;
+            let plan = pl.allocate_spec(&spec, &ws, &grams, &fm)?;
             println!(
-                "{}: achieved ratio {:.4}, dense modules {}/{}",
-                alloc.name,
-                alloc_ratio(&pl.cfg, &alloc),
-                alloc.dense_count(),
-                alloc.modules.len()
+                "{}: achieved ratio {:.4} (target {:.2}), dense modules {}/{}, {:.0} ms",
+                plan.spec,
+                plan.achieved,
+                plan.target,
+                plan.allocation.dense_count(),
+                plan.allocation.modules.len(),
+                plan.wall_ms
             );
-            for (name, a) in &alloc.modules {
+            for (name, a) in &plan.allocation.modules {
                 println!("  {name}: {a:?}");
             }
             if let Some(path) = args.flags.get("out") {
                 let path = std::path::PathBuf::from(path);
-                alloc.save(&path)?;
-                println!("wrote {path:?} — re-run `make artifacts` to specialize serving");
+                plan.save(&path)?;
+                println!(
+                    "wrote plan {path:?} (schema v{}) — re-run `make artifacts` \
+                     to specialize serving",
+                    plan.schema_version
+                );
             }
         }
         "eval" => {
             let model = args.get("model", "minillama-s");
-            let method = parse_method(&args.get("method", "ara"))?;
-            let ratio = args.get_f64("ratio", 0.8)?;
+            let spec = args.spec();
             let pl = Pipeline::new(&model)?;
             let ws = pl.pretrained()?;
             let grams = pl.grams(&ws)?;
             let fm = pl.factored(&ws, &grams)?;
             let dense = pl.evaluate_dense(&ws)?;
-            let alloc = pl.allocate(method, ratio, &ws, &grams, &fm)?;
-            let row = pl.evaluate(method.name(), &ws, &fm, &alloc)?;
+            let plan = pl.allocate_spec(&spec, &ws, &grams, &fm)?;
+            let row = pl.evaluate(&plan.label, &ws, &fm, &plan.allocation)?;
             let mut t = Table::new(
-                format!("{model} @ {:.0}%", ratio * 100.0),
+                format!("{model} @ {:.0}%", plan.target * 100.0),
                 &["Method", "Wiki2 PPL", "C4 PPL", "Avg acc %"],
             );
             for r in [&dense, &row] {
                 t.row(vec![r.method.clone(), f2(r.wiki_ppl), f2(r.c4_ppl), f2(r.avg_acc)]);
+            }
+            t.print();
+        }
+        "sweep" => {
+            let model = args.get("model", "minillama-s");
+            let specs: Vec<String> = args
+                .get("specs", &ALL_METHOD_IDS.join(","))
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let ratios: Vec<f64> = args
+                .get("ratios", "0.35,0.25")
+                .split(',')
+                .map(|r| {
+                    r.trim()
+                        .parse::<f64>()
+                        .map_err(|_| ara_compress::anyhow!("--ratios: bad number `{r}`"))
+                })
+                .collect::<Result<_>>()?;
+            let pl = Pipeline::new(&model)?;
+            let plans = pl.sweep(&specs, &ratios)?;
+            let mut t = Table::new(
+                format!("sweep — {model} ({} cells)", plans.len()),
+                &["Spec", "Target", "Achieved", "Dense", "Wall ms"],
+            );
+            for p in &plans {
+                t.row(vec![
+                    p.spec.clone(),
+                    format!("{:.2}", p.target),
+                    format!("{:.4}", p.achieved),
+                    format!("{}/{}", p.allocation.dense_count(), p.allocation.modules.len()),
+                    format!("{:.0}", p.wall_ms),
+                ]);
             }
             t.print();
         }
@@ -184,69 +282,108 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             }
         }
         other => {
-            return Err(ara_compress::anyhow!("unknown command `{other}`\n{USAGE}"));
+            return Err(ara_compress::anyhow!("unknown command `{other}`\n{}", usage()));
         }
     }
     Ok(())
 }
 
-fn serve(model: &str, alloc_name: &str, batch: usize, gen_len: usize, requests: usize) -> Result<()> {
+/// Continuous-batching serve demo: submits `requests` ragged prompts to
+/// the paged-pool [`Scheduler`](ara_compress::serving::Scheduler), prints
+/// each request's [`FinishReason`](ara_compress::serving::FinishReason)
+/// (`Stop` vs `Length` — KV exhaustion is visible, never swallowed), and
+/// closes with the prefix-hit-rate / pool-utilization summary. Falls back
+/// to batched `Engine::generate` on backends without a paged decode
+/// specialization (PJRT).
+fn serve(
+    model: &str,
+    alloc_name: &str,
+    batch: usize,
+    gen_len: usize,
+    requests: usize,
+) -> Result<()> {
     use ara_compress::data::{corpus_spec, generate_tokens};
-    use ara_compress::serving::Engine;
+    use ara_compress::serving::{Request, SamplingParams, Scheduler};
 
     let pl = Pipeline::new(model)?;
     let ws = pl.pretrained()?;
     let grams = pl.grams(&ws)?;
     let fm = pl.factored(&ws, &grams)?;
-
-    // allocation must match what the serving artifacts were specialized to
-    let cfg_path = pl
-        .paths
-        .configs
-        .join("allocations")
-        .join(format!("{model}.{alloc_name}.json"));
-    let art_path = pl
-        .paths
-        .artifacts
-        .join("allocations")
-        .join(format!("{model}.{alloc_name}.json"));
-    let alloc = if cfg_path.exists() {
-        Allocation::load(&cfg_path)?
-    } else {
-        Allocation::load(&art_path)?
-    };
-
-    let engine = Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, alloc_name, batch)?;
-    let stream = generate_tokens(
-        pl.cfg.vocab,
-        corpus_spec("synwiki"),
-        55,
-        (requests + batch) * pl.cfg.prefill_len,
-    );
-    let mut done = 0;
-    let mut total_tps = 0.0;
-    let mut rounds = 0;
-    while done < requests {
-        let mut prompts = Vec::with_capacity(batch);
-        for i in 0..batch {
-            let off = ((done + i) * pl.cfg.prefill_len) % (stream.len() - pl.cfg.prefill_len);
-            prompts.push(stream[off..off + pl.cfg.prefill_len].to_vec());
-        }
-        let (tokens, stats) = engine.generate(&prompts, gen_len)?;
-        done += batch;
-        rounds += 1;
-        total_tps += stats.tok_per_s();
-        println!(
-            "batch {rounds}: {} seqs × {} tokens, decode {:.1} tok/s (first seq: {:?}…)",
-            batch,
-            tokens[0].len(),
-            stats.tok_per_s(),
-            &tokens[0][..tokens[0].len().min(8)]
-        );
+    let engine = pl.engine(&ws, &fm, alloc_name, batch)?;
+    if let Some(p) = engine.provenance() {
+        println!("serving {p}");
     }
+
+    let p = pl.cfg.prefill_len;
+    let stream =
+        generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 55, (requests + batch + 1) * p);
+    // ragged prompt lengths exercise the left-pad masking contract
+    let prompts: Vec<Vec<i32>> = (0..requests)
+        .map(|i| {
+            let len = p - (i % 3).min(p.saturating_sub(1));
+            let off = (i * p) % (stream.len() - p);
+            stream[off..off + len].to_vec()
+        })
+        .collect();
+
+    if !engine.has_paged() {
+        // contiguous fallback (PJRT): batched greedy generate; the fixed
+        // batch is padded with wrap-around prompts, but only the `n`
+        // genuinely-submitted requests of each round are reported
+        let mut done = 0;
+        while done < requests {
+            let batch_prompts: Vec<Vec<i32>> = (0..batch)
+                .map(|i| prompts[(done + i) % requests].clone())
+                .collect();
+            let (tokens, stats) = engine.generate(&batch_prompts, gen_len)?;
+            let n = batch.min(requests - done);
+            for s in 0..n {
+                println!(
+                    "req {:>3}: {} tokens, finish={:?}",
+                    done + s,
+                    tokens[s].len(),
+                    stats.finish[s]
+                );
+            }
+            done += n;
+            println!("  decode {:.1} tok/s", stats.tok_per_s());
+        }
+        return Ok(());
+    }
+
+    let mut sched = Scheduler::new(&engine);
+    for prompt in prompts {
+        sched.submit(Request { prompt, gen_len, params: SamplingParams::greedy() });
+    }
+    while !sched.is_idle() {
+        for c in sched.step()? {
+            println!(
+                "req {:>3}: {} prompt + {} generated tokens, finish={:?}, latency {:.1} ms",
+                c.id,
+                c.prompt_len,
+                c.tokens.len(),
+                c.finish_reason,
+                c.latency_s * 1e3
+            );
+        }
+    }
+    let st = sched.stats();
     println!(
-        "served {done} requests, mean decode throughput {:.1} tok/s",
-        total_tps / rounds as f64
+        "served {} requests in {} steps: {:.1} tok/s decode ({:.1} tok/s end-to-end)",
+        st.completed,
+        st.steps,
+        st.decode_tok_per_s(),
+        st.tok_per_s()
+    );
+    println!(
+        "kv pool: prefix-hit-rate {:.2} ({} lookups, {} hits, {} prefills skipped), \
+         peak utilization {:.2}, preemptions {}",
+        st.prefix_hit_rate(),
+        st.prefix_lookups,
+        st.prefix_hits,
+        st.prefill_skipped,
+        st.pool_peak_util,
+        st.preemptions
     );
     Ok(())
 }

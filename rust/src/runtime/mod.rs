@@ -27,7 +27,8 @@ mod xla;
 pub use cpu::CpuBackend;
 pub use exec::{DeviceArg, DeviceBuffer, Exe, Executable, Feed, Outputs, Value};
 pub use manifest::{Manifest, TensorSpec};
-pub use programs::{heuristic_ara_alloc, resolve_alloc};
+pub use crate::compress::heuristic_ara_alloc;
+pub use programs::{resolve_alloc, resolve_plan};
 #[cfg(feature = "pjrt")]
 pub use xla::XlaBackend;
 

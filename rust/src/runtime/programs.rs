@@ -17,8 +17,9 @@ use std::collections::HashMap;
 use super::grad::append_gradients;
 use super::interp::{DType, ExecPlan, Graph, Id};
 use super::manifest::{Manifest, TensorSpec};
+use crate::compress::CompressionPlan;
 use crate::config::{ModelCfg, Paths};
-use crate::model::{aux_param_shapes, module_dims, Allocation, ModuleAlloc, ModuleDim};
+use crate::model::{aux_param_shapes, module_dims, Allocation, ModuleAlloc};
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -126,115 +127,67 @@ fn parse_paged(rest: &str, full: &str) -> Result<(String, usize, usize, usize)> 
     Ok((alloc, batch, block_len, num_blocks))
 }
 
-/// Resolve a serving allocation by name (mirrors aot.py:resolve_alloc).
+/// Resolve a serving allocation by name (mirrors aot.py:resolve_alloc),
+/// dropping the plan provenance. Precedence: configs/allocations →
+/// artifacts/allocations → computed (`dense` / `uniform-R` / `ara-R`
+/// heuristic). Files at either location may be versioned
+/// `CompressionPlan` documents **or** legacy bare-`Allocation` JSON.
 pub fn resolve_alloc(cfg: &ModelCfg, paths: &Paths, alloc_name: &str) -> Result<Allocation> {
+    resolve_plan(cfg, paths, alloc_name).map(|p| p.allocation)
+}
+
+/// Like [`resolve_alloc`], but keeps the [`CompressionPlan`] wrapper so
+/// callers (the serving engine front door) can thread provenance through.
+/// Legacy files and computed fallbacks come back as unprovenanced plans
+/// (`schema_version` 0).
+pub fn resolve_plan(
+    cfg: &ModelCfg,
+    paths: &Paths,
+    alloc_name: &str,
+) -> Result<CompressionPlan> {
     let cfg_path = paths
         .configs
         .join("allocations")
         .join(format!("{}.{}.json", cfg.name, alloc_name));
     if cfg_path.exists() {
-        return Allocation::load(&cfg_path);
+        return load_plan_with_ratio(cfg, &cfg_path);
     }
     let art_path = paths
         .artifacts
         .join("allocations")
         .join(format!("{}.{}.json", cfg.name, alloc_name));
     if art_path.exists() {
-        return Allocation::load(&art_path);
+        return load_plan_with_ratio(cfg, &art_path);
     }
-    let alloc = if alloc_name == "dense" {
-        let mut a = Allocation::new("dense");
-        for d in module_dims(cfg) {
-            a.set(&d.name, ModuleAlloc::Dense);
+    let alloc = match crate::compress::computed_alloc(cfg, alloc_name) {
+        Some(a) => a?,
+        None => {
+            return Err(crate::anyhow!(
+                "allocation `{alloc_name}` for {} not found (looked in {:?} and {:?})",
+                cfg.name,
+                cfg_path,
+                art_path
+            ));
         }
-        a
-    } else if let Some(pct) = alloc_name.strip_prefix("uniform-") {
-        let ratio: f64 = pct
-            .parse::<f64>()
-            .map_err(|_| crate::anyhow!("bad allocation name `{alloc_name}`"))?
-            / 100.0;
-        crate::baselines::uniform_alloc(cfg, ratio)
-    } else if let Some(pct) = alloc_name.strip_prefix("ara-") {
-        let ratio: f64 = pct
-            .parse::<f64>()
-            .map_err(|_| crate::anyhow!("bad allocation name `{alloc_name}`"))?
-            / 100.0;
-        heuristic_ara_alloc(cfg, ratio)
-    } else {
-        return Err(crate::anyhow!(
-            "allocation `{alloc_name}` for {} not found (looked in {:?} and {:?})",
-            cfg.name,
-            cfg_path,
-            art_path
-        ));
     };
     // dump the resolved allocation for inspection / reuse (best effort)
     if alloc.save(&art_path).is_err() {
         eprintln!("[programs] could not write {art_path:?} (read-only checkout?)");
     }
-    Ok(alloc)
+    let achieved = crate::model::alloc_ratio(cfg, &alloc);
+    Ok(CompressionPlan::legacy("computed", alloc, achieved))
 }
 
-/// Paper-shaped fallback (Fig. 4 structure): keep v/down dense where the
-/// budget allows, compress q/k hardest — port of aot.py:heuristic_ara_alloc.
-pub fn heuristic_ara_alloc(cfg: &ModelCfg, ratio: f64) -> Allocation {
-    let dims = module_dims(cfg);
-    let total: f64 = dims.iter().map(|d| d.dense_params() as f64).sum();
-    let budget = ratio * total;
-    let weight = |name: &str| -> f64 {
-        match name.rsplit('.').next().unwrap_or("") {
-            "wq" | "wk" => 0.45,
-            "wv" | "wdown" => 1.0,
-            "wo" | "wup" => 0.9,
-            "wgate" => 1.1,
-            _ => 1.0,
-        }
-    };
-
-    let mut dense_set: Vec<String> = Vec::new();
-    let prefer: Vec<&ModuleDim> = dims
-        .iter()
-        .filter(|d| d.name.ends_with(".wv") || d.name.ends_with(".wdown"))
-        .collect();
-    for cand in prefer {
-        let used: f64 = dims
-            .iter()
-            .filter(|d| dense_set.contains(&d.name))
-            .map(|d| d.dense_params() as f64)
-            .sum();
-        let min_rest: f64 = dims
-            .iter()
-            .filter(|d| !dense_set.contains(&d.name) && d.name != cand.name)
-            .map(|d| (d.m + d.n) as f64)
-            .sum();
-        if used + cand.dense_params() as f64 + min_rest <= budget {
-            dense_set.push(cand.name.clone());
-        }
+/// Load a plan (or legacy allocation) file, backfilling the achieved
+/// ratio on legacy wraps now that a `ModelCfg` is at hand.
+fn load_plan_with_ratio(cfg: &ModelCfg, path: &std::path::Path) -> Result<CompressionPlan> {
+    let mut plan = CompressionPlan::load(path)?;
+    if !plan.provenanced() {
+        let achieved = crate::model::alloc_ratio(cfg, &plan.allocation);
+        plan.achieved = achieved;
+        plan.target = achieved;
     }
-
-    let used: f64 = dims
-        .iter()
-        .filter(|d| dense_set.contains(&d.name))
-        .map(|d| d.dense_params() as f64)
-        .sum();
-    let wsum: f64 = dims
-        .iter()
-        .filter(|d| !dense_set.contains(&d.name))
-        .map(|d| weight(&d.name) * d.dense_params() as f64)
-        .sum::<f64>()
-        .max(1.0);
-
-    let mut alloc = Allocation::new(format!("ara-{}", (ratio * 100.0).round() as usize));
-    for d in &dims {
-        if dense_set.contains(&d.name) {
-            alloc.set(&d.name, ModuleAlloc::Dense);
-            continue;
-        }
-        let share = (budget - used) * weight(&d.name) * d.dense_params() as f64 / wsum;
-        let k = ((share / (d.m + d.n) as f64) as usize).clamp(1, d.r_full());
-        alloc.set(&d.name, ModuleAlloc::Rank(k));
-    }
-    alloc
+    Ok(plan)
 }
 
 // ---------------------------------------------------------------------------
@@ -1232,28 +1185,6 @@ mod tests {
             vec![2, c.prefill_len]
         );
         assert_eq!(pf.manifest.input("lens").unwrap().shape, vec![2]);
-    }
-
-    #[test]
-    fn heuristic_alloc_meets_budget_and_prefers_v_down() {
-        let c = cfg("minillama-s");
-        let dims = module_dims(&c);
-        for ratio in [0.8, 0.6] {
-            let a = heuristic_ara_alloc(&c, ratio);
-            let got = crate::model::alloc_ratio(&c, &a);
-            assert!(
-                got <= ratio + 0.05,
-                "heuristic overshoots: {got} vs target {ratio}"
-            );
-            for d in &dims {
-                if let ModuleAlloc::Rank(k) = a.get(&d.name) {
-                    assert!(k >= 1 && k <= d.r_full());
-                }
-            }
-        }
-        // at a generous budget some v/down modules stay dense
-        let a = heuristic_ara_alloc(&c, 0.8);
-        assert!(a.dense_count() > 0, "expected dense v/down under 0.8 budget");
     }
 
     #[test]

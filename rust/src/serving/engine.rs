@@ -54,6 +54,10 @@ pub struct GenStats {
     /// Per-slot finish reason — `Length` marks requests truncated by the
     /// decode window instead of silently stopping short.
     pub finish: Vec<FinishReason>,
+    /// Provenance line of the [`crate::compress::CompressionPlan`] the
+    /// engine was specialized from, when it was built from one — so
+    /// throughput reports can name exactly what they measured.
+    pub provenance: Option<String>,
 }
 
 impl GenStats {
@@ -87,6 +91,9 @@ pub struct Engine {
     /// Device buffers for the weight prefix, in prefill-manifest order.
     pre_weights: Vec<DeviceBuffer>,
     backend: Rc<dyn Backend>,
+    /// Compression-plan provenance line (set when the engine was built
+    /// from a [`crate::compress::CompressionPlan`]).
+    provenance: Option<String>,
     /// Test instrumentation: fail the n-th subsequent decode step once.
     fault: Cell<Option<usize>>,
 }
@@ -226,8 +233,22 @@ impl Engine {
             paged,
             paged_cfg,
             backend: rt.backend(),
+            provenance: None,
             fault: Cell::new(None),
         })
+    }
+
+    /// Record the provenance line of the compression plan this engine was
+    /// specialized from (`Pipeline::engine` / `Pipeline::engine_for_plan`
+    /// set it when a versioned plan resolved). Threaded into
+    /// [`GenStats::provenance`] so serving reports can name their plan.
+    pub fn set_provenance(&mut self, line: String) {
+        self.provenance = Some(line);
+    }
+
+    /// The plan provenance line, when one was recorded.
+    pub fn provenance(&self) -> Option<&str> {
+        self.provenance.as_deref()
     }
 
     /// Re-specialize the paged decode graph for an explicit pool geometry
@@ -469,7 +490,7 @@ impl Engine {
         let b = self.batch;
         let p = self.cfg.prefill_len;
         assert_eq!(prompts.len(), b, "prompt count must equal engine batch");
-        let mut stats = GenStats::default();
+        let mut stats = GenStats { provenance: self.provenance.clone(), ..Default::default() };
 
         // ---- prefill ----
         let t0 = Instant::now();

@@ -8,9 +8,17 @@
 
 use std::sync::Mutex;
 
-use ara_compress::coordinator::{MethodKind, Pipeline};
+use ara_compress::coordinator::Pipeline;
 use ara_compress::model::{alloc_ratio, module_dims, Allocation, ModuleAlloc, WeightStore};
 use ara_compress::svd::alloc_masks;
+
+/// Computed uniform allocation via the compress registry (tests never
+/// call `baselines::*_alloc` free functions directly — PR 5 cut-over).
+fn uniform(pl: &Pipeline, pct: usize) -> Allocation {
+    ara_compress::compress::computed_alloc(&pl.cfg, &format!("uniform-{pct}"))
+        .expect("computed name")
+        .expect("uniform alloc")
+}
 
 fn pipeline() -> Pipeline {
     let mut pl = Pipeline::new("micro-llama").expect("pipeline (cpu backend needs no artifacts)");
@@ -74,8 +82,8 @@ fn truncation_monotone_in_ratio() {
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
     let mut last = 0.0;
-    for ratio in [0.9, 0.5, 0.15] {
-        let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, ratio);
+    for pct in [90, 50, 15] {
+        let alloc = uniform(&pl, pct);
         let masks = alloc_masks(&pl.cfg, &alloc);
         let ppl =
             ara_compress::eval::perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2)
@@ -92,19 +100,16 @@ fn every_method_hits_its_budget() {
     let ws = pretrained(&pl);
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
-    for m in [
-        MethodKind::Uniform,
-        MethodKind::Dlp,
-        MethodKind::Farms,
-        MethodKind::Ars,
-        MethodKind::Dobi,
-        MethodKind::Ara,
-        MethodKind::AraNoGuidance,
-    ] {
-        let alloc = pl.allocate(m, 0.5, &ws, &grams, &fm).unwrap();
-        let got = alloc_ratio(&pl.cfg, &alloc);
-        assert!((got - 0.5).abs() < 0.12, "{}: achieved {got} for target 0.5", m.name());
-        for (name, a) in &alloc.modules {
+    for id in ["uniform", "dlp", "farms", "ars", "dobi", "ara", "ara-nolg"] {
+        let plan = pl.allocate_spec(&format!("{id}@0.5"), &ws, &grams, &fm).unwrap();
+        let got = alloc_ratio(&pl.cfg, &plan.allocation);
+        assert!((got - 0.5).abs() < 0.12, "{id}: achieved {got} for target 0.5");
+        assert!(
+            (plan.achieved - got).abs() < 1e-12,
+            "{id}: plan records achieved {} but ratio is {got}",
+            plan.achieved
+        );
+        for (name, a) in &plan.allocation.modules {
             if let ModuleAlloc::Rank(k) = a {
                 assert!(*k >= 1, "{name}: zero rank");
             }
@@ -136,7 +141,7 @@ fn serving_engine_generates_and_is_deterministic() {
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
     // the same uniform-80 allocation the backend resolves for the artifact
-    let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, 0.8);
+    let alloc = uniform(&pl, 80);
     let engine =
         ara_compress::serving::Engine::new(&pl.cfg, &pl.rt, &ws, &fm, &alloc, "uniform-80", 2)
             .unwrap();
@@ -184,7 +189,7 @@ fn lora_merge_preserves_or_improves_ppl() {
     let ws = pretrained(&pl);
     let grams = pl.grams(&ws).unwrap();
     let fm = pl.factored(&ws, &grams).unwrap();
-    let alloc = ara_compress::baselines::uniform_alloc(&pl.cfg, 0.4);
+    let alloc = uniform(&pl, 40);
     let masks = alloc_masks(&pl.cfg, &alloc);
     let before =
         ara_compress::eval::perplexity_masked(&pl.cfg, &pl.rt, &ws, &fm, &masks, "synwiki", 2)

@@ -1,0 +1,240 @@
+//! PR 5 cut-over tests: the unified compression-method API.
+//!
+//! * registry errors name the offending spec (`nosuch@0.8`,
+//!   `ara@0.8?bogus=1`);
+//! * `CompressionPlan` JSON round-trips, and `runtime::resolve_alloc`
+//!   accepts both plan files and legacy bare-`Allocation` files;
+//! * **parity pins**: for every method in the Table 1/2 set (plus the
+//!   ara-nolg ablation), the registry path produces a bitwise-identical
+//!   `Allocation` to the pre-refactor direct-call path on the micro
+//!   preset — the contract that lets the deprecated shims be deleted
+//!   next release;
+//! * a freshly written plan round-trips through the Python mirror
+//!   (`python/compile/plans.py`), pinning the cross-language schema.
+
+use std::sync::Mutex;
+
+use ara_compress::ara::{train_ara, AraConfig, MaskGradRunner};
+use ara_compress::compress::{CompressionPlan, PlanScale, PLAN_SCHEMA_VERSION};
+use ara_compress::coordinator::Pipeline;
+use ara_compress::model::{Allocation, ModuleAlloc, WeightStore};
+use ara_compress::Result;
+
+fn pipeline() -> Pipeline {
+    let mut pl = Pipeline::new("micro-llama").expect("pipeline (cpu backend needs no artifacts)");
+    pl.scalecfg.pretrain_steps = std::env::var("ARA_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    pl.scalecfg.calib_batches = 2;
+    pl.scalecfg.alloc_samples = 16;
+    pl.scalecfg.alloc_epochs = 2;
+    pl.scalecfg.eval_batches = 2;
+    pl.scalecfg.zs_items = 6;
+    pl
+}
+
+/// Serialize the train-or-load step against the shared disk cache (same
+/// contract as tests/integration.rs).
+fn pretrained(pl: &Pipeline) -> WeightStore {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _guard = LOCK.lock().unwrap();
+    pl.pretrained().expect("pretrain substrate")
+}
+
+#[test]
+fn unknown_method_and_param_errors_name_the_spec() {
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+
+    let err = pl.allocate_spec("nosuch@0.8", &ws, &grams, &fm).unwrap_err().to_string();
+    assert!(err.contains("nosuch@0.8"), "must name the spec: {err}");
+    assert!(err.contains("uniform"), "must list known methods: {err}");
+
+    let err = pl.allocate_spec("ara@0.8?bogus=1", &ws, &grams, &fm).unwrap_err().to_string();
+    assert!(err.contains("ara@0.8?bogus=1"), "must name the spec: {err}");
+    assert!(err.contains("bogus"), "must name the parameter: {err}");
+
+    // a spec without a target is an error at the pipeline front door
+    let err = pl.allocate_spec("uniform", &ws, &grams, &fm).unwrap_err().to_string();
+    assert!(err.contains("uniform"), "{err}");
+    assert!(err.contains("target"), "{err}");
+}
+
+/// The pre-refactor `Pipeline::allocate` construction, reproduced verbatim
+/// (method free functions + inline constants: DLP tail 0.15, FARMS 0.3,
+/// runner data seeds 3/4/5, Dobi 2× epochs). This is the ONLY place
+/// outside `compress/` still touching the `*_alloc` free functions — it
+/// exists to pin the registry bitwise-identical to the old path before
+/// the deprecated shims are deleted.
+fn pre_refactor_alloc(
+    pl: &Pipeline,
+    id: &str,
+    target: f64,
+    ws: &WeightStore,
+    grams: &std::collections::BTreeMap<String, ara_compress::linalg::Mat>,
+    fm: &ara_compress::svd::FactoredModel,
+) -> Result<Allocation> {
+    use ara_compress::baselines as b;
+    let sc = &pl.scalecfg;
+    match id {
+        "uniform" => Ok(b::uniform_alloc(&pl.cfg, target)),
+        "dlp" => Ok(b::dlp_alloc(&pl.cfg, ws, grams, target, 0.15)),
+        "farms" => Ok(b::farms_alloc(&pl.cfg, fm, target, 0.3)),
+        "strs" => {
+            let runner =
+                MaskGradRunner::new(&pl.cfg, &pl.rt, ws, fm, "sync4", sc.alloc_samples, 3)?;
+            b::strs_alloc(&pl.cfg, &runner, fm, target, &b::StrsConfig::default())
+        }
+        "ars" => {
+            let runner =
+                MaskGradRunner::new(&pl.cfg, &pl.rt, ws, fm, "sync4", sc.alloc_samples, 4)?;
+            let ac = b::ArsConfig { target, epochs: sc.alloc_epochs, ..Default::default() };
+            b::ars_alloc(&pl.cfg, &runner, &ac)
+        }
+        "dobi" => {
+            let runner =
+                MaskGradRunner::new(&pl.cfg, &pl.rt, ws, fm, "sync4", sc.alloc_samples, 5)?;
+            let dc = b::DobiConfig { target, epochs: sc.alloc_epochs * 2, ..Default::default() };
+            b::dobi_alloc(&pl.cfg, &runner, &dc)
+        }
+        "ara" | "ara-nolg" => {
+            let ac = AraConfig {
+                target,
+                epochs: sc.alloc_epochs,
+                samples: sc.alloc_samples,
+                use_guidance: id == "ara",
+                ..Default::default()
+            };
+            let (alloc, _) = train_ara(&pl.cfg, &pl.rt, ws, fm, &ac)?;
+            Ok(alloc)
+        }
+        other => Err(ara_compress::anyhow!("no pre-refactor recipe for {other}")),
+    }
+}
+
+#[test]
+fn registry_path_is_bitwise_identical_to_pre_refactor_path() {
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+    // ALL_METHODS (Table 1/2 grid) plus the Table 5 ablation
+    for id in ["uniform", "dlp", "farms", "strs", "ars", "dobi", "ara", "ara-nolg"] {
+        let old = pre_refactor_alloc(&pl, id, 0.5, &ws, &grams, &fm).expect("pre-refactor path");
+        let plan = pl
+            .allocate_spec(&format!("{id}@0.5"), &ws, &grams, &fm)
+            .expect("registry path");
+        assert_eq!(
+            old, plan.allocation,
+            "{id}: registry allocation diverged from the pre-refactor path"
+        );
+    }
+}
+
+#[test]
+fn resolve_alloc_accepts_plans_and_legacy_allocation_files() {
+    let pl = pipeline();
+    // point artifact resolution at a scratch dir; configs stay real
+    let tmp = std::env::temp_dir().join(format!("ara-registry-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let mut paths = pl.paths.clone();
+    paths.artifacts = tmp.clone();
+    let dir = tmp.join("allocations");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // legacy bare-Allocation file
+    let legacy = ara_compress::compress::computed_alloc(&pl.cfg, "uniform-70")
+        .unwrap()
+        .unwrap();
+    let mut legacy_named = legacy.clone();
+    legacy_named.name = "legacyfile".to_string();
+    legacy_named.save(&dir.join(format!("{}.legacyfile.json", pl.cfg.name))).unwrap();
+    let resolved =
+        ara_compress::runtime::resolve_alloc(&pl.cfg, &paths, "legacyfile").unwrap();
+    assert_eq!(resolved, legacy_named);
+
+    // versioned plan file resolves to its wrapped allocation, with
+    // provenance surfaced through resolve_plan
+    let plan = CompressionPlan {
+        schema_version: PLAN_SCHEMA_VERSION,
+        spec: "uniform@0.7".to_string(),
+        method: "uniform".to_string(),
+        label: "Uniform".to_string(),
+        target: 0.7,
+        achieved: 0.69,
+        seed: None,
+        scale: PlanScale { alloc_samples: 16, alloc_epochs: 2 },
+        wall_ms: 3.0,
+        allocation: legacy.clone(),
+    };
+    plan.save(&dir.join(format!("{}.planfile.json", pl.cfg.name))).unwrap();
+    let p = ara_compress::runtime::resolve_plan(&pl.cfg, &paths, "planfile").unwrap();
+    assert!(p.provenanced());
+    assert_eq!(p.spec, "uniform@0.7");
+    assert_eq!(p.allocation, legacy);
+    assert_eq!(
+        ara_compress::runtime::resolve_alloc(&pl.cfg, &paths, "planfile").unwrap(),
+        legacy
+    );
+
+    // unknown names still fail, naming both lookup locations
+    let err = ara_compress::runtime::resolve_alloc(&pl.cfg, &paths, "missing-alloc")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("missing-alloc"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn plan_roundtrips_through_python_mirror() {
+    let pl = pipeline();
+    let mut alloc = Allocation::new("ara-80");
+    alloc.set("layers.0.attn.wq", ModuleAlloc::Rank(5));
+    alloc.set("layers.0.attn.wv", ModuleAlloc::Dense);
+    let plan = CompressionPlan {
+        schema_version: PLAN_SCHEMA_VERSION,
+        spec: "ara@0.8?epochs=2".to_string(),
+        method: "ara".to_string(),
+        label: "ARA".to_string(),
+        target: 0.8,
+        achieved: 0.7931,
+        seed: Some(7),
+        scale: PlanScale { alloc_samples: 16, alloc_epochs: 2 },
+        wall_ms: 12.5,
+        allocation: alloc,
+    };
+    let tmp = std::env::temp_dir().join(format!("ara-plan-py-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let inp = tmp.join("plan.json");
+    let out = tmp.join("plan.roundtrip.json");
+    plan.save(&inp).unwrap();
+
+    let script = pl
+        .paths
+        .configs
+        .parent()
+        .expect("repo root")
+        .join("python/compile/plans.py");
+    let status = match std::process::Command::new("python3")
+        .arg(&script)
+        .arg("--roundtrip")
+        .arg(&inp)
+        .arg(&out)
+        .status()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            // no python3 on this machine: the schema is still pinned by CI
+            eprintln!("skipping python mirror round-trip (python3 unavailable: {e})");
+            return;
+        }
+    };
+    assert!(status.success(), "plans.py --roundtrip failed");
+    let back = CompressionPlan::load(&out).unwrap();
+    assert_eq!(plan, back, "plan changed across the python round-trip");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
