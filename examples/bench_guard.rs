@@ -1,10 +1,10 @@
 //! Bench-health guard: parse the machine-readable bench baselines
-//! (`BENCH_PR2.json`, `BENCH_PR3.json`, `BENCH_PR4.json`,
-//! `BENCH_PR5.json`) with the in-crate JSON parser and exit non-zero when
-//! a required key is missing, non-numeric, non-finite — or out of range:
-//! rate/utilization keys must lie in [0, 1], achieved compression ratios
-//! in (0, 1], and wall-clock keys must be ≥ 0. Replaces the brittle
-//! `grep` checks the CI `bench-smoke` job used to run.
+//! (`BENCH_PR2.json` … `BENCH_PR6.json`) with the in-crate JSON parser
+//! and exit non-zero when a required key is missing, non-numeric,
+//! non-finite — or out of range: rate/utilization keys must lie in
+//! [0, 1], achieved compression ratios in (0, 1], wall-clock keys must be
+//! ≥ 0, and native-SIMD speedups must be ≥ 1 in real baselines. Replaces
+//! the brittle `grep` checks the CI `bench-smoke` job used to run.
 //!
 //!   cargo run --release --example bench_guard            # real baselines
 //!   cargo run --release --example bench_guard -- --smoke # CI smoke run
@@ -25,6 +25,8 @@ struct Check {
     ratio_keys: Vec<String>,
     /// Keys that must be ≥ 0 (wall-clock durations, counts).
     pos_keys: Vec<String>,
+    /// Keys that must be ≥ 1 (speedup ratios: native SIMD over scalar).
+    min_one_keys: Vec<String>,
 }
 
 fn required(smoke: bool) -> Vec<Check> {
@@ -96,6 +98,31 @@ fn required(smoke: bool) -> Vec<Check> {
             sweep_pos.push(format!("{sp}_{m}"));
         }
     }
+    // simd_tiers (PR 6): per-tier matmul GFLOP/s on both micro-kernel
+    // paths. Only the scalar keys are required (other tiers are
+    // host-dependent; the finiteness sweep covers whatever ran). The
+    // native/scalar speedup key must be ≥ 1 in real baselines — single-
+    // iteration smoke timings are too noisy to gate on, so smoke only
+    // requires it to exist and be finite.
+    let (tier_keys, tier_min_one) = if smoke {
+        (
+            vec![
+                s("matmul_64x64x64_scalar_gflops"),
+                s("matmul_4x64x64_dot_scalar_gflops"),
+                s("matmul_64x64x64_native_speedup"),
+            ],
+            Vec::new(),
+        )
+    } else {
+        (
+            vec![
+                s("matmul_256x256x256_scalar_gflops"),
+                s("matmul_4x512x512_dot_scalar_gflops"),
+                s("matmul_256x256x256_native_speedup"),
+            ],
+            vec![s("matmul_256x256x256_native_speedup")],
+        )
+    };
     let none: Vec<String> = Vec::new();
     vec![
         Check {
@@ -105,6 +132,7 @@ fn required(smoke: bool) -> Vec<Check> {
             unit_keys: none.clone(),
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
+            min_one_keys: none.clone(),
         },
         Check {
             file: "BENCH_PR2.json",
@@ -113,6 +141,7 @@ fn required(smoke: bool) -> Vec<Check> {
             unit_keys: none.clone(),
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
+            min_one_keys: none.clone(),
         },
         Check {
             file: "BENCH_PR3.json",
@@ -121,6 +150,7 @@ fn required(smoke: bool) -> Vec<Check> {
             unit_keys: none.clone(),
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
+            min_one_keys: none.clone(),
         },
         Check {
             file: "BENCH_PR4.json",
@@ -129,6 +159,7 @@ fn required(smoke: bool) -> Vec<Check> {
             unit_keys: paged_unit,
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
+            min_one_keys: none.clone(),
         },
         Check {
             file: "BENCH_PR5.json",
@@ -137,6 +168,16 @@ fn required(smoke: bool) -> Vec<Check> {
             unit_keys: none.clone(),
             ratio_keys: sweep_ratio,
             pos_keys: sweep_pos,
+            min_one_keys: none.clone(),
+        },
+        Check {
+            file: "BENCH_PR6.json",
+            section: format!("simd_tiers{sfx}"),
+            keys: tier_keys,
+            unit_keys: none.clone(),
+            ratio_keys: none.clone(),
+            pos_keys: none.clone(),
+            min_one_keys: tier_min_one,
         },
     ]
 }
@@ -210,6 +251,12 @@ fn main() {
                 Some(Ok(v)) if check.pos_keys.contains(key) && v < 0.0 => {
                     failures.push(format!(
                         "{} [{}] {key}: {v} is negative",
+                        check.file, check.section
+                    ))
+                }
+                Some(Ok(v)) if check.min_one_keys.contains(key) && v < 1.0 => {
+                    failures.push(format!(
+                        "{} [{}] {key}: speedup {v} below 1 (native SIMD slower than scalar)",
                         check.file, check.section
                     ))
                 }

@@ -92,6 +92,54 @@ fn main() {
         }
     }
 
+    // PR 6: per-SIMD-tier kernel throughput, recorded to BENCH_PR6.json.
+    // Both micro-kernel paths are swept on every tier the host can run:
+    // the packed axpy path (square shape, tb=false) and the small-m dot
+    // fast path (decode projection shape, tb=true). The native-vs-scalar
+    // speedup on the packed shape is the tier's reason to exist — the
+    // bench guard requires it ≥ 1 in real baselines.
+    println!("== perf_micro: SIMD tier sweep (active: {}) ==", kernels::active_tier().name());
+    {
+        use ara_compress::kernels::{available_tiers, matmul_f32_tier, SimdTier};
+        let mut tier_entries: Vec<(String, f64)> = Vec::new();
+        let nt = kernels::num_threads();
+        let (packed, dot) = if smoke { ((64, 64, 64), (4, 64, 64)) } else { ((256, 256, 256), (4, 512, 512)) };
+        let mut rng = Rng::new(4);
+        let mut sweep = |m: usize, k: usize, n: usize, tb: bool, rng: &mut Rng| -> Vec<(SimdTier, f64)> {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut out = vec![0.0f32; m * n];
+            let tag = if tb { "_dot" } else { "" };
+            available_tiers()
+                .into_iter()
+                .map(|tier| {
+                    let per =
+                        bench(&format!("matmul {m}x{k}x{n}{tag} [{}]", tier.name()), iters.max(3), || {
+                            out.fill(0.0);
+                            matmul_f32_tier(tier, &a, &b, m, k, n, false, tb, &mut out, nt);
+                        });
+                    let gflops = (2.0 * (m * k * n) as f64) / per / 1e9;
+                    tier_entries.push((format!("matmul_{m}x{k}x{n}{tag}_{}_gflops", tier.name()), gflops));
+                    (tier, gflops)
+                })
+                .collect()
+        };
+        let packed_res = sweep(packed.0, packed.1, packed.2, false, &mut rng);
+        sweep(dot.0, dot.1, dot.2, true, &mut rng);
+        // best-first tier order: [0] is native, last is scalar
+        let native = packed_res[0].1;
+        let scalar = packed_res.last().unwrap().1;
+        let speedup = native / scalar;
+        println!("    -> native/scalar speedup {speedup:.2}x on the packed path");
+        tier_entries
+            .push((format!("matmul_{}x{}x{}_native_speedup", packed.0, packed.1, packed.2), speedup));
+        common::record_bench_at(
+            &common::bench_json_path_named("BENCH_PR6.json"),
+            &bench_section("simd_tiers"),
+            &tier_entries,
+        );
+    }
+
     println!("== perf_micro: train-step latency ==");
     {
         let presets: &[&str] =

@@ -12,16 +12,28 @@
 //!   (`m` = batch) never pay a pack.
 //! * **Blocking** — the packed kernel walks `k` in `KC`-sized panels with a
 //!   j-contiguous axpy inner loop, keeping the active `B` panel and the
-//!   output row hot in cache; the inner loop is a straight-line
-//!   slice-to-slice FMA that the compiler auto-vectorizes.
+//!   output row hot in cache.
+//! * **SIMD tiers** — the f32 axpy and dot inner loops dispatch to an
+//!   explicit-intrinsics tier ([`simd`]): AVX2 / AVX-512 (with the
+//!   `avx512` cargo feature) on x86-64, NEON on aarch64, a portable
+//!   scalar reference everywhere. The tier is picked at runtime from CPU
+//!   features, forcible with `ARA_SIMD`. Every tier is **bitwise-equal**
+//!   to scalar: axpy is elementwise multiply-then-add (width-invariant),
+//!   and the dot follows a fixed 8-virtual-lane reduction contract. The
+//!   f64 kernels (SVD path, not serving-hot) stay on plain scalar loops.
 //! * **Threading** — work is split over disjoint output row (or column)
 //!   ranges with `std::thread::scope`; the thread count comes from
 //!   `std::thread::available_parallelism` with an `ARA_THREADS` override,
 //!   gated so small problems stay single-threaded.
 //! * **Determinism** — each output element is produced by exactly one
-//!   thread, and the per-element accumulation order (ascending `k`) does
-//!   not depend on panel size, chunking, or the thread count, so results
-//!   are **bitwise identical** for any `ARA_THREADS` value.
+//!   thread, and the per-element accumulation order (ascending `k`, plus
+//!   the fixed dot reduction tree) does not depend on panel size,
+//!   chunking, the thread count, or the SIMD tier, so results are
+//!   **bitwise identical** for any `ARA_THREADS` and any `ARA_SIMD`.
+
+pub mod simd;
+
+pub use simd::{active_tier, available_tiers, SimdTier};
 
 use std::sync::OnceLock;
 
@@ -53,6 +65,215 @@ fn threads_for(flops: usize) -> usize {
 /// k-panel size for the packed axpy kernel (f32: 32 KiB of B panel at
 /// n=64; the panel is reused across every output row of the chunk).
 const KC: usize = 128;
+
+// ---------------------------------------------------------------------------
+// f32 kernels: tier-dispatched inner loops
+// ---------------------------------------------------------------------------
+
+/// Pack op(A) to row-major (m,k); copies only when `ta` is set.
+fn pack_a_f32<'a>(a: &'a [f32], m: usize, k: usize, ta: bool, buf: &'a mut Vec<f32>) -> &'a [f32] {
+    if !ta {
+        return a;
+    }
+    buf.resize(m * k, 0.0);
+    // A is stored (k,m); read rows sequentially, scatter to columns.
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        for (i, &v) in arow.iter().enumerate() {
+            buf[i * k + kk] = v;
+        }
+    }
+    buf
+}
+
+/// Pack op(B) to row-major (k,n); copies only when `tb` is set.
+fn pack_b_f32<'a>(b: &'a [f32], k: usize, n: usize, tb: bool, buf: &'a mut Vec<f32>) -> &'a [f32] {
+    if !tb {
+        return b;
+    }
+    buf.resize(k * n, 0.0);
+    // B is stored (n,k); read rows sequentially, scatter to columns.
+    for j in 0..n {
+        let brow = &b[j * k..(j + 1) * k];
+        for (kk, &v) in brow.iter().enumerate() {
+            buf[kk * n + j] = v;
+        }
+    }
+    buf
+}
+
+/// Output rows [i0, i0+rows) of A(m,k)·B(k,n) into `out` (len rows·n,
+/// pre-zeroed), walking k in KC panels with a j-contiguous axpy dispatched
+/// to `tier`. Per-element accumulation is ascending-k regardless of
+/// panelling, and the zero-rank row skip happens here — before dispatch —
+/// so it is identical on every tier.
+fn mm_rows_f32(
+    tier: SimdTier,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        for i in 0..rows {
+            let abase = (i0 + i) * k + k0;
+            let arow = &a[abase..abase + kc];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let bbase = (k0 + kk) * n;
+                simd::axpy(tier, orow, &b[bbase..bbase + n], av);
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// Dot micro-kernel over Bᵀ rows: out[i·os + j] = A row (i0+i) · Bᵀ row
+/// (j0+j), for the (ta=false, tb=true) small-m fast path, dispatched to
+/// `tier`. Overwrites its outputs (no pre-zero needed).
+#[allow(clippy::too_many_arguments)]
+fn mm_dot_f32(
+    tier: SimdTier,
+    a: &[f32],
+    bt: &[f32],
+    k: usize,
+    i0: usize,
+    rows: usize,
+    j0: usize,
+    cols: usize,
+    os: usize,
+    out: &mut [f32],
+) {
+    for i in 0..rows {
+        let arow = &a[(i0 + i) * k..(i0 + i) * k + k];
+        for j in 0..cols {
+            let brow = &bt[(j0 + j) * k..(j0 + j) * k + k];
+            out[i * os + j] = simd::dot(tier, arow, brow);
+        }
+    }
+}
+
+/// C = op(A)·op(B) with logical shapes (m,k)·(k,n) → `out` (len m·n,
+/// **pre-zeroed** by the caller) on an explicit SIMD `tier` and thread
+/// budget `nt`. `ta`/`tb` mark transposed storage ((k,m) / (n,k)
+/// respectively). Runs on up to `nt` threads over disjoint output regions;
+/// bitwise-deterministic for any `nt` and — by the tier contract — any
+/// `tier`. Parity tests and per-tier benches call this directly; everything
+/// else goes through [`matmul_f32`], which uses the process-wide tier.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_f32_tier(
+    tier: SimdTier,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    out: &mut [f32],
+    nt: usize,
+) {
+    debug_assert_eq!(out.len(), m * n, "matmul out buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Small-m transposed-B fast path: contiguous dot rows, no pack.
+    if tb && !ta && m < 8 {
+        let nt = nt.clamp(1, n);
+        if nt <= 1 {
+            mm_dot_f32(tier, a, b, k, 0, m, 0, n, n, out);
+        } else {
+            // Split columns; threads fill private (m × jw) tiles that
+            // are copied back sequentially (copy cost is 1/k of the
+            // dot work, and out need not be split non-contiguously).
+            let cols_per = n.div_ceil(nt);
+            let tiles: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                let mut j0 = 0;
+                while j0 < n {
+                    let jw = cols_per.min(n - j0);
+                    handles.push(s.spawn(move || {
+                        let mut tile = vec![0.0; m * jw];
+                        mm_dot_f32(tier, a, b, k, 0, m, j0, jw, jw, &mut tile);
+                        (j0, jw, tile)
+                    }));
+                    j0 += jw;
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (j0, jw, tile) in tiles {
+                for i in 0..m {
+                    out[i * n + j0..i * n + j0 + jw].copy_from_slice(&tile[i * jw..(i + 1) * jw]);
+                }
+            }
+        }
+        return;
+    }
+    // General path: normalize to packed (m,k)·(k,n), blocked axpy.
+    let mut abuf = Vec::new();
+    let mut bbuf = Vec::new();
+    let an = pack_a_f32(a, m, k, ta, &mut abuf);
+    let bn = pack_b_f32(b, k, n, tb, &mut bbuf);
+    let nt = nt.clamp(1, m);
+    if nt <= 1 {
+        mm_rows_f32(tier, an, bn, k, n, 0, m, out);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || {
+                let rows = chunk.len() / n;
+                mm_rows_f32(tier, an, bn, k, n, ci * rows_per, rows, chunk);
+            });
+        }
+    });
+}
+
+/// [`matmul_f32_tier`] on the process-wide [`active_tier`] with an explicit
+/// thread budget (determinism tests).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_f32_nt(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    out: &mut [f32],
+    nt: usize,
+) {
+    matmul_f32_tier(active_tier(), a, b, m, k, n, ta, tb, out, nt);
+}
+
+/// The `_nt` kernel with the thread count picked from the problem size and
+/// the `ARA_THREADS` / `available_parallelism` budget.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    out: &mut [f32],
+) {
+    matmul_f32_nt(a, b, m, k, n, ta, tb, out, threads_for(2 * m * k * n));
+}
+
+// ---------------------------------------------------------------------------
+// f64 kernels (SVD/whitening path): plain scalar loops, no tier dispatch
+// ---------------------------------------------------------------------------
 
 macro_rules! mm_impl {
     ($mm:ident, $mm_nt:ident, $rows_fn:ident, $dot_fn:ident, $pack_a:ident, $pack_b:ident, $ty:ty) => {
@@ -224,7 +445,6 @@ macro_rules! mm_impl {
     };
 }
 
-mm_impl!(matmul_f32, matmul_f32_nt, mm_rows_f32, mm_dot_f32, pack_a_f32, pack_b_f32, f32);
 mm_impl!(matmul_f64, matmul_f64_nt, mm_rows_f64, mm_dot_f64, pack_a_f64, pack_b_f64, f64);
 
 /// Batched C[i] = op(A[i])·op(B[i]) over the leading dim of (bs,·,·)
@@ -260,6 +480,25 @@ pub fn bmm_f32_nt(
     out: &mut [f32],
     nt: usize,
 ) {
+    bmm_f32_tier(active_tier(), a, b, bs, m, k, n, ta, tb, out, nt);
+}
+
+/// `bmm_f32` on an explicit SIMD `tier` and thread budget (parity tests,
+/// per-tier benches).
+#[allow(clippy::too_many_arguments)]
+pub fn bmm_f32_tier(
+    tier: SimdTier,
+    a: &[f32],
+    b: &[f32],
+    bs: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    out: &mut [f32],
+    nt: usize,
+) {
     debug_assert_eq!(out.len(), bs * m * n, "bmm out buffer size");
     if bs == 0 || m * n == 0 {
         return;
@@ -268,7 +507,8 @@ pub fn bmm_f32_nt(
     let nt = nt.clamp(1, bs);
     if nt <= 1 {
         for i in 0..bs {
-            matmul_f32_nt(
+            matmul_f32_tier(
+                tier,
                 &a[i * sa..(i + 1) * sa],
                 &b[i * sb..(i + 1) * sb],
                 m,
@@ -288,7 +528,8 @@ pub fn bmm_f32_nt(
             s.spawn(move || {
                 for (x, oc) in chunk.chunks_mut(so).enumerate() {
                     let i = ci * per + x;
-                    matmul_f32_nt(
+                    matmul_f32_tier(
+                        tier,
                         &a[i * sa..(i + 1) * sa],
                         &b[i * sb..(i + 1) * sb],
                         m,
@@ -422,6 +663,29 @@ mod tests {
         let mut four = vec![0.0; bs * m * n];
         bmm_f32_nt(&a, &b, bs, m, k, n, false, true, &mut four, 4);
         assert!(one.iter().zip(&four).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn every_available_tier_matches_scalar_bitwise() {
+        // the full parity matrix lives in tests/simd_parity.rs; this is the
+        // in-crate smoke check over one odd shape per kernel path
+        let (m, k, n) = (5, 137, 33);
+        let a = fill(m * k, 91);
+        for tier in available_tiers() {
+            for &tb in &[false, true] {
+                // tb=true takes the dot fast path (m < 8), tb=false the axpy path
+                let b = fill(k * n, 92 + tb as u64);
+                let mut scalar = vec![0.0; m * n];
+                matmul_f32_tier(SimdTier::Scalar, &a, &b, m, k, n, false, tb, &mut scalar, 1);
+                let mut tiered = vec![0.0; m * n];
+                matmul_f32_tier(tier, &a, &b, m, k, n, false, tb, &mut tiered, 1);
+                assert!(
+                    scalar.iter().zip(&tiered).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "tier {} differs from scalar at {m}x{k}x{n} tb={tb}",
+                    tier.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,60 @@
+//! AVX2 micro-kernels. Bitwise-equal to [`super::scalar`]: the axpy is
+//! elementwise (width-invariant by construction) and the dot implements
+//! the 8-virtual-lane contract with one 256-bit accumulator whose
+//! reduction tree is exactly the scalar one.
+
+use std::arch::x86_64::*;
+
+/// `out[j] += a * b[j]` over the zipped length, 8 lanes at a time with a
+/// scalar tail. `vmulps` + `vaddps` (no FMA), matching scalar bitwise.
+///
+/// # Safety
+/// Caller must have verified `avx2` via `is_x86_feature_detected!`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy(out: &mut [f32], b: &[f32], a: f32) {
+    let n = out.len().min(b.len());
+    let av = _mm256_set1_ps(a);
+    let mut j = 0;
+    while j + 8 <= n {
+        let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(ov, _mm256_mul_ps(av, bv)));
+        j += 8;
+    }
+    while j < n {
+        *out.get_unchecked_mut(j) += a * *b.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// Dot product under the 8-virtual-lane contract: one ymm accumulator
+/// (`vaddps(acc, vmulps(x, y))` per chunk), reduced by
+/// `vextractf128`+`vaddps` (s[l] = acc[l] + acc[l+4]),
+/// `vmovhlps`+`vaddps` (t0 = s0+s2, t1 = s1+s3), and a final
+/// `vshufps`+`vaddss` (t0 + t1); sequential scalar tail.
+///
+/// # Safety
+/// Caller must have verified `avx2` via `is_x86_feature_detected!`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot operand lengths");
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(c * 8));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(c * 8));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+    }
+    let lo = _mm256_castps256_ps128(acc); // acc[0..4]
+    let hi = _mm256_extractf128_ps(acc, 1); // acc[4..8]
+    let s = _mm_add_ps(lo, hi); // s[l] = acc[l] + acc[l+4]
+    let sh = _mm_movehl_ps(s, s); // [s2, s3, s2, s3]
+    let t = _mm_add_ps(s, sh); // [s0+s2, s1+s3, ..]
+    let tsh = _mm_shuffle_ps(t, t, 0b01); // lane 0 = t[1]
+    let mut total = _mm_cvtss_f32(_mm_add_ss(t, tsh)); // t0 + t1
+    for i in chunks * 8..n {
+        total += *x.get_unchecked(i) * *y.get_unchecked(i);
+    }
+    total
+}

@@ -1,0 +1,32 @@
+//! AVX-512 axpy micro-kernel (the dot stays on the 8-lane AVX2 kernel —
+//! see the contract in [`super`]). Elementwise multiply-then-add, so the
+//! 16-lane width is bitwise-invisible next to scalar/AVX2.
+//!
+//! Compiled only with the `avx512` cargo feature: the `_mm512_*` f32
+//! intrinsics need a recent stable toolchain, and the default build must
+//! keep working on older ones.
+
+use std::arch::x86_64::*;
+
+/// `out[j] += a * b[j]` over the zipped length, 16 lanes at a time with a
+/// scalar tail. `vmulps` + `vaddps` on zmm (no FMA), matching scalar
+/// bitwise.
+///
+/// # Safety
+/// Caller must have verified `avx512f` via `is_x86_feature_detected!`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn axpy(out: &mut [f32], b: &[f32], a: f32) {
+    let n = out.len().min(b.len());
+    let av = _mm512_set1_ps(a);
+    let mut j = 0;
+    while j + 16 <= n {
+        let ov = _mm512_loadu_ps(out.as_ptr().add(j));
+        let bv = _mm512_loadu_ps(b.as_ptr().add(j));
+        _mm512_storeu_ps(out.as_mut_ptr().add(j), _mm512_add_ps(ov, _mm512_mul_ps(av, bv)));
+        j += 16;
+    }
+    while j < n {
+        *out.get_unchecked_mut(j) += a * *b.get_unchecked(j);
+        j += 1;
+    }
+}

@@ -1,0 +1,258 @@
+//! Explicit-SIMD tier for the f32 matmul micro-kernels, selected once per
+//! process by runtime CPU-feature detection (the squirrel-json idiom: a
+//! portable scalar reference plus per-ISA `#[target_feature]` modules, with
+//! unsafe confined to the intrinsics bodies).
+//!
+//! Two micro-kernels are dispatched, matching the two inner loops of
+//! [`crate::kernels`]:
+//!
+//! * [`axpy`] — `out[j] += a * b[j]`, the j-contiguous inner loop of the
+//!   packed kernel. Elementwise multiply-then-add (never a fused
+//!   multiply-add), so the result is bitwise-identical at **any** vector
+//!   width: every tier agrees with scalar bit-for-bit.
+//! * [`dot`] — the small-m fast-path dot product, defined by an explicit
+//!   **8-virtual-lane contract**: 8 independent partial sums over full
+//!   8-element chunks, a fixed 3-level reduction tree
+//!   (`s[l] = acc[l] + acc[l+4]`, `t0 = s0 + s2`, `t1 = s1 + s3`,
+//!   `total = t0 + t1`), then a sequential scalar tail. Every tier
+//!   implements this exact schedule — AVX2 with one 8-lane register,
+//!   NEON with two 4-lane registers, AVX-512 by reusing the 8-lane AVX2
+//!   kernel (16 lanes would change the reduction shape) — so the dot is
+//!   also bitwise-identical across tiers.
+//!
+//! Tier choice: best available by default, forcible with `ARA_SIMD`
+//! (`scalar` | `avx2` | `avx512` | `neon` | `native`). Forcing a tier the
+//! CPU lacks warns on stderr and falls back to the best available one.
+//! The AVX-512 module additionally needs the `avx512` cargo feature (its
+//! intrinsics require a recent stable toolchain).
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub mod avx512;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+pub mod scalar;
+
+/// One ISA tier. All variants exist on every target so `ARA_SIMD` parsing
+/// and tier naming are portable; availability is a runtime property.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl SimdTier {
+    /// Stable lowercase name (env values, bench keys, stats).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    fn parse(s: &str) -> Option<SimdTier> {
+        match s {
+            "scalar" => Some(SimdTier::Scalar),
+            "avx2" => Some(SimdTier::Avx2),
+            "avx512" => Some(SimdTier::Avx512),
+            "neon" => Some(SimdTier::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this tier run on the current CPU (and build)?
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            SimdTier::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdTier::Avx512 => {
+                // axpy needs avx512f; the dot delegates to the AVX2 kernel,
+                // so the tier requires both. Gated behind the `avx512`
+                // cargo feature until the intrinsics baseline is everywhere.
+                #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                        && std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+                {
+                    false
+                }
+            }
+            SimdTier::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// Every tier runnable on this CPU, best first; `Scalar` is always last.
+/// Parity tests and `perf_micro` enumerate this instead of mutating
+/// `ARA_SIMD` (the active tier is latched once per process).
+pub fn available_tiers() -> Vec<SimdTier> {
+    let mut tiers = Vec::with_capacity(4);
+    for t in [SimdTier::Avx512, SimdTier::Avx2, SimdTier::Neon] {
+        if t.is_available() {
+            tiers.push(t);
+        }
+    }
+    tiers.push(SimdTier::Scalar);
+    tiers
+}
+
+/// The process-wide tier: `ARA_SIMD` if set (warning + best-available
+/// fallback when the named tier can't run here), else the best available.
+/// Latched on first use, like `ARA_THREADS`.
+pub fn active_tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        let best = available_tiers()[0];
+        let Ok(raw) = std::env::var("ARA_SIMD") else {
+            return best;
+        };
+        let s = raw.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "native" || s == "auto" {
+            return best;
+        }
+        match SimdTier::parse(&s) {
+            Some(t) if t.is_available() => t,
+            Some(t) => {
+                eprintln!(
+                    "ARA_SIMD={}: tier `{}` not available on this CPU/build, using `{}`",
+                    raw,
+                    t.name(),
+                    best.name()
+                );
+                best
+            }
+            None => {
+                eprintln!(
+                    "ARA_SIMD={raw}: unknown tier (expected scalar|avx2|avx512|neon|native), \
+                     using `{}`",
+                    best.name()
+                );
+                best
+            }
+        }
+    })
+}
+
+/// `out[j] += a * b[j]` over `min(out.len(), b.len())` elements on `tier`.
+///
+/// The caller decides the `a == 0.0` skip (zero-rank row elision) *before*
+/// dispatch, so skipping is tier-independent and NaN rows in `b` are
+/// elided identically on every tier.
+#[inline]
+pub fn axpy(tier: SimdTier, out: &mut [f32], b: &[f32], a: f32) {
+    match tier {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: dispatch reaches this arm only when `active_tier`/the
+        // caller verified `is_available()`, i.e. avx512f is present.
+        SimdTier::Avx512 => unsafe { avx512::axpy(out, b, a) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — Avx2 is only selected when avx2 is detected.
+        SimdTier::Avx2 => unsafe { avx2::axpy(out, b, a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: neon is a baseline feature of aarch64.
+        SimdTier::Neon => unsafe { neon::axpy(out, b, a) },
+        _ => scalar::axpy(out, b, a),
+    }
+}
+
+/// Dot product of `x`/`y` under the 8-virtual-lane contract on `tier`.
+/// AVX-512 reuses the AVX2 kernel: the contract is defined in 8-lane
+/// chunks, and widening to 16 lanes would change the reduction order.
+#[inline]
+pub fn dot(tier: SimdTier, x: &[f32], y: &[f32]) -> f32 {
+    match tier {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: Avx512 availability requires avx2 detection (see
+        // `is_available`), which is what the AVX2 kernel needs.
+        SimdTier::Avx512 => unsafe { avx2::dot(x, y) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected when avx2 is detected.
+        SimdTier::Avx2 => unsafe { avx2::dot(x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: neon is a baseline feature of aarch64.
+        SimdTier::Neon => unsafe { neon::dot(x, y) },
+        _ => scalar::dot(x, y),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_round_trip_through_parse() {
+        for t in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Avx512, SimdTier::Neon] {
+            assert_eq!(SimdTier::parse(t.name()), Some(t));
+        }
+        assert_eq!(SimdTier::parse("sse9"), None);
+        assert_eq!(SimdTier::parse("native"), None); // handled before parse
+    }
+
+    #[test]
+    fn available_tiers_ends_with_scalar_and_is_runnable() {
+        let tiers = available_tiers();
+        assert_eq!(*tiers.last().unwrap(), SimdTier::Scalar);
+        for t in &tiers {
+            assert!(t.is_available(), "listed tier {} not available", t.name());
+        }
+        // best-first: scalar appears exactly once, at the end
+        assert_eq!(tiers.iter().filter(|&&t| t == SimdTier::Scalar).count(), 1);
+    }
+
+    #[test]
+    fn active_tier_is_among_available() {
+        assert!(available_tiers().contains(&active_tier()));
+    }
+
+    #[test]
+    fn scalar_dot_follows_the_8_lane_contract() {
+        // hand-evaluate the contract on an 11-element input: one full
+        // 8-chunk through the tree, then a 3-element sequential tail
+        let x: Vec<f32> = (1..=11).map(|i| i as f32 * 0.5).collect();
+        let y: Vec<f32> = (1..=11).map(|i| 1.0 / i as f32).collect();
+        let mut acc = [0.0f32; 8];
+        for l in 0..8 {
+            acc[l] += x[l] * y[l];
+        }
+        let (s0, s1, s2, s3) =
+            (acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]);
+        let mut want = (s0 + s2) + (s1 + s3);
+        for i in 8..11 {
+            want += x[i] * y[i];
+        }
+        assert_eq!(scalar::dot(&x, &y).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn scalar_axpy_matches_plain_loop_bitwise() {
+        let b: Vec<f32> = (0..13).map(|i| (i as f32).sin()).collect();
+        let mut out = vec![0.25f32; 13];
+        let mut want = out.clone();
+        scalar::axpy(&mut out, &b, 1.5);
+        for (o, &bv) in want.iter_mut().zip(&b) {
+            *o += 1.5 * bv;
+        }
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,60 @@
+//! NEON micro-kernels (aarch64 baseline). The dot implements the shared
+//! 8-virtual-lane contract with two 4-lane accumulators: `acc0` holds
+//! virtual lanes 0..4, `acc1` lanes 4..8, and `vaddq(acc0, acc1)` is
+//! exactly the contract's `s[l] = acc[l] + acc[l+4]` step.
+
+use std::arch::aarch64::*;
+
+/// `out[j] += a * b[j]` over the zipped length, 4 lanes at a time with a
+/// scalar tail. `vmulq` + `vaddq` (no fused multiply-add), matching
+/// scalar bitwise.
+///
+/// # Safety
+/// NEON is a baseline aarch64 feature; callers reach this only on aarch64.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy(out: &mut [f32], b: &[f32], a: f32) {
+    let n = out.len().min(b.len());
+    let av = vdupq_n_f32(a);
+    let mut j = 0;
+    while j + 4 <= n {
+        let ov = vld1q_f32(out.as_ptr().add(j));
+        let bv = vld1q_f32(b.as_ptr().add(j));
+        vst1q_f32(out.as_mut_ptr().add(j), vaddq_f32(ov, vmulq_f32(av, bv)));
+        j += 4;
+    }
+    while j < n {
+        *out.get_unchecked_mut(j) += a * *b.get_unchecked(j);
+        j += 1;
+    }
+}
+
+/// Dot product under the 8-virtual-lane contract: two q-register
+/// accumulators per 8-chunk, `s = vaddq(acc0, acc1)`, then the fixed
+/// `(s0+s2) + (s1+s3)` tree via lane extraction; sequential scalar tail.
+///
+/// # Safety
+/// NEON is a baseline aarch64 feature; callers reach this only on aarch64.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot operand lengths");
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc0 = vdupq_n_f32(0.0); // virtual lanes 0..4
+    let mut acc1 = vdupq_n_f32(0.0); // virtual lanes 4..8
+    for c in 0..chunks {
+        let x0 = vld1q_f32(x.as_ptr().add(c * 8));
+        let x1 = vld1q_f32(x.as_ptr().add(c * 8 + 4));
+        let y0 = vld1q_f32(y.as_ptr().add(c * 8));
+        let y1 = vld1q_f32(y.as_ptr().add(c * 8 + 4));
+        acc0 = vaddq_f32(acc0, vmulq_f32(x0, y0));
+        acc1 = vaddq_f32(acc1, vmulq_f32(x1, y1));
+    }
+    let s = vaddq_f32(acc0, acc1); // s[l] = acc[l] + acc[l+4]
+    let t0 = vgetq_lane_f32::<0>(s) + vgetq_lane_f32::<2>(s);
+    let t1 = vgetq_lane_f32::<1>(s) + vgetq_lane_f32::<3>(s);
+    let mut total = t0 + t1;
+    for i in chunks * 8..n {
+        total += *x.get_unchecked(i) * *y.get_unchecked(i);
+    }
+    total
+}

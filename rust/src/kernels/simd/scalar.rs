@@ -1,0 +1,41 @@
+//! Portable reference implementations of the two dispatched micro-kernels.
+//! These are the semantic ground truth: every SIMD tier must match them
+//! **bitwise** (see the parity tests in `tests/simd_parity.rs`).
+
+/// `out[j] += a * b[j]` over the zipped length. Multiply-then-add — never
+/// a fused multiply-add — so wider tiers reproduce it exactly.
+#[inline]
+pub fn axpy(out: &mut [f32], b: &[f32], a: f32) {
+    for (o, &bv) in out.iter_mut().zip(b) {
+        *o += a * bv;
+    }
+}
+
+/// Dot product under the shared 8-virtual-lane contract: 8 independent
+/// partial sums over full 8-element chunks, the fixed reduction tree
+/// `s[l] = acc[l] + acc[l+4]; t0 = s0 + s2; t1 = s1 + s3; t0 + t1`, then a
+/// sequential scalar tail over the remainder.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot operand lengths");
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let xb = &x[c * 8..c * 8 + 8];
+        let yb = &y[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += xb[l] * yb[l];
+        }
+    }
+    // the tree mirrors extractf128+add / movehl+add / shuffle+add_ss
+    let s0 = acc[0] + acc[4];
+    let s1 = acc[1] + acc[5];
+    let s2 = acc[2] + acc[6];
+    let s3 = acc[3] + acc[7];
+    let mut total = (s0 + s2) + (s1 + s3);
+    for i in chunks * 8..n {
+        total += x[i] * y[i];
+    }
+    total
+}

@@ -1,0 +1,556 @@
+//! ExecPlan-construction-time op fusion for the interpreter hot path.
+//!
+//! The graph builders in [`super::programs`] emit fixed micro-op chains for
+//! rmsnorm, rotary embeddings, and softmax. Executed op-by-op, each chain
+//! round-trips every intermediate through the [`super::interp::Arena`] —
+//! seven materialized tensors for one rmsnorm. This module pattern-matches
+//! those exact chains once at plan time and replaces each with a single
+//! [`FusedOp`] executed at the chain's root node; interior nodes are
+//! skipped entirely and never materialize.
+//!
+//! Recognized patterns (priority order — larger first, so a super-pattern
+//! claims its sub-pattern's root before the sub-pattern is tried):
+//!
+//! 1. **RopeScore** — decode-shaped rope + attention-score: a `Bmm(q, k,
+//!    ta=false, tb=true)` whose `q` is a reshape chain over a single-token
+//!    rope concat. The roped query goes straight into the dot-product
+//!    kernel without ever materializing the concat.
+//! 2. **RmsNormMatmul** — `Matmul(rmsnorm(x, gain), w)` where the rmsnorm
+//!    root has no other consumer: normalized rows are written to one
+//!    scratch buffer and fed to the matmul kernel.
+//! 3. **Rope** — the standalone 13-node rotary chain rooted at its
+//!    `Concat` (prefill, and the decode key path feeding the cache write).
+//! 4. **RmsNorm** — the standalone 8-node chain rooted at its final `Mul`
+//!    (multi-consumer norms: decode ln1 feeds q/k/v projections).
+//! 5. **Softmax** — the 8-node shifted-softmax chain rooted at its `Div`,
+//!    computed row-in-place.
+//!
+//! **Determinism contract:** every fused kernel performs the *same
+//! primitive f32 operations in the same order* as the unfused op sequence
+//! it replaces, so fused and unfused execution are **bitwise identical**
+//! (pinned by the `fused_*` tests in [`super::interp`]). Fusion saves
+//! memory traffic and arena churn, never reassociates arithmetic. The
+//! `ARA_FUSE` knob (default on) disables fusion process-wide; training
+//! graphs de-fuse automatically because gradient nodes consume chain
+//! interiors, failing the all-consumers-in-group check.
+//!
+//! A pattern only fuses when every interior node (a) is consumed
+//! exclusively inside the group and (b) is not a graph output — so fusion
+//! is invisible to every caller by construction.
+
+use super::exec::Value;
+use super::interp::{Graph, Id, Op};
+
+/// One fused op group, executed at the root node id it replaced.
+/// Structural parameters and baked scalars are extracted at match time so
+/// the executor does no graph walking.
+#[derive(Debug, Clone)]
+pub(crate) enum FusedOp {
+    /// Shifted softmax over the last axis: `rows` rows of length `n`,
+    /// row-in-place capable.
+    Softmax { x: Id, rows: usize, n: usize },
+    /// RMSNorm over the last dim of 2-D `x` (rows, d) with gain (d,).
+    RmsNorm { x: Id, gain: Id, rows: usize, d: usize, inv_d: f32, eps: f32 },
+    /// RMSNorm feeding a single-consumer `Matmul(·, w, ta=false, tb)`:
+    /// normalized rows land in one scratch buffer, then the matmul kernel.
+    RmsNormMatmul {
+        x: Id,
+        gain: Id,
+        w: Id,
+        tb: bool,
+        rows: usize,
+        d: usize,
+        n: usize,
+        inv_d: f32,
+        eps: f32,
+    },
+    /// Rotary embedding of `x` (b, t, h, dh) with angles `ang` (pb, t,
+    /// dh/2); `pb` is 1 (broadcast) or `b`. In-place capable.
+    Rope { x: Id, ang: Id, b: usize, t: usize, pb: usize, h: usize, dh: usize },
+    /// Decode rope + attention score: roped single-token query (b, 1, h,
+    /// dh) dotted against `k` (b·h, n, dh) → (b·h, 1, n).
+    RopeScore { x: Id, ang: Id, k: Id, b: usize, pb: usize, h: usize, dh: usize, n: usize },
+}
+
+/// Fusion decisions for one (graph, outputs) pair.
+pub(crate) struct FusionPlan {
+    /// Per node: the fused group rooted here, if any.
+    pub fused: Vec<Option<FusedOp>>,
+    /// Per node: true when the node is a fused-group interior — never
+    /// executed, never materialized.
+    pub skip: Vec<bool>,
+    /// Per node: the root executing it (own id unless skipped). Used to
+    /// attribute operand reads at interior nodes to the root's position
+    /// when computing effective last-use.
+    pub root_of: Vec<Id>,
+}
+
+impl FusionPlan {
+    /// The no-fusion plan (`ARA_FUSE=0`, explicit `new_with(.., false)`).
+    pub fn disabled(n: usize) -> FusionPlan {
+        FusionPlan {
+            fused: (0..n).map(|_| None).collect(),
+            skip: vec![false; n],
+            root_of: (0..n).collect(),
+        }
+    }
+}
+
+/// Scalar f32 constant value of node `id`, if it is one.
+fn const_scalar(g: &Graph, id: Id) -> Option<f32> {
+    match &g.nodes[id].op {
+        Op::Const(Value::F32(t)) if t.data.len() == 1 => Some(t.data[0]),
+        _ => None,
+    }
+}
+
+/// A matched pattern: the op to run at the root plus the interior nodes
+/// it absorbs.
+struct Match {
+    op: FusedOp,
+    interior: Vec<Id>,
+}
+
+/// RMSNorm chain rooted at its final `Mul(xn, gain)` (see
+/// `programs.rs::rmsnorm`). Returns the match without checking consumers —
+/// validity is the caller's job.
+fn match_rmsnorm(g: &Graph, root: Id) -> Option<Match> {
+    let &Op::Mul(xn, gain) = &g.nodes[root].op else { return None };
+    let &Op::Mul(x, inv) = &g.nodes[xn].op else { return None };
+    let &Op::Rsqrt(mse) = &g.nodes[inv].op else { return None };
+    let &Op::Add(ms, eps_id) = &g.nodes[mse].op else { return None };
+    let eps = const_scalar(g, eps_id)?;
+    let &Op::Mul(ssum, invd_id) = &g.nodes[ms].op else { return None };
+    let inv_d = const_scalar(g, invd_id)?;
+    let Op::Reshape(rs, _) = &g.nodes[ssum].op else { return None };
+    let rs = *rs;
+    let &Op::ReduceSum(x2, 1) = &g.nodes[rs].op else { return None };
+    let &Op::Mul(xa, xb) = &g.nodes[x2].op else { return None };
+    if xa != x || xb != x {
+        return None;
+    }
+    let xs = g.nodes[x].shape.as_slice();
+    if xs.len() != 2 || g.nodes[gain].shape.as_slice() != [xs[1]] {
+        return None;
+    }
+    Some(Match {
+        op: FusedOp::RmsNorm { x, gain, rows: xs[0], d: xs[1], inv_d, eps },
+        interior: vec![xn, inv, mse, ms, ssum, rs, x2],
+    })
+}
+
+/// `Matmul(rmsnorm_root, w, ta=false)` where the rmsnorm root is consumed
+/// only by this matmul: the norm's output never materializes.
+fn match_rmsnorm_matmul(g: &Graph, root: Id, consumers: &[Vec<Id>]) -> Option<Match> {
+    let &Op::Matmul { a, b: w, ta: false, tb } = &g.nodes[root].op else { return None };
+    if consumers[a].len() != 1 {
+        return None;
+    }
+    let rms = match_rmsnorm(g, a)?;
+    let FusedOp::RmsNorm { x, gain, rows, d, inv_d, eps } = rms.op else { unreachable!() };
+    let n = g.nodes[root].shape[1];
+    let mut interior = rms.interior;
+    interior.push(a);
+    Some(Match {
+        op: FusedOp::RmsNormMatmul { x, gain, w, tb, rows, d, n, inv_d, eps },
+        interior,
+    })
+}
+
+/// Rotary chain rooted at its `Concat([lo, hi], 3)` (see
+/// `programs.rs::rope`). The angle tensor `ang` stays a regular node; the
+/// twelve nodes from cos/sin through the concat are absorbed.
+fn match_rope(g: &Graph, root: Id) -> Option<Match> {
+    let Op::Concat(parts, axis) = &g.nodes[root].op else { return None };
+    if *axis != 3 || parts.len() != 2 {
+        return None;
+    }
+    let (lo, hi) = (parts[0], parts[1]);
+    let &Op::Sub(a, b) = &g.nodes[lo].op else { return None };
+    let &Op::Add(c, d2) = &g.nodes[hi].op else { return None };
+    let &Op::Mul(x1, cos4) = &g.nodes[a].op else { return None };
+    let &Op::Mul(x2, sin4) = &g.nodes[b].op else { return None };
+    let &Op::Mul(x1b, sin4b) = &g.nodes[c].op else { return None };
+    let &Op::Mul(x2b, cos4b) = &g.nodes[d2].op else { return None };
+    if x1 != x1b || x2 != x2b || sin4 != sin4b || cos4 != cos4b {
+        return None;
+    }
+    let Op::Reshape(cos_id, _) = &g.nodes[cos4].op else { return None };
+    let cos_id = *cos_id;
+    let &Op::Cos(ang_c) = &g.nodes[cos_id].op else { return None };
+    let Op::Reshape(sin_id, _) = &g.nodes[sin4].op else { return None };
+    let sin_id = *sin_id;
+    let &Op::Sin(ang_s) = &g.nodes[sin_id].op else { return None };
+    if ang_c != ang_s {
+        return None;
+    }
+    let ang = ang_c;
+    let &Op::Slice { x: xx1, axis: 3, start: 0, len: half } = &g.nodes[x1].op else {
+        return None;
+    };
+    let &Op::Slice { x: xx2, axis: 3, start: st2, len: l2 } = &g.nodes[x2].op else {
+        return None;
+    };
+    if xx1 != xx2 || half == 0 || l2 != half || st2 != half {
+        return None;
+    }
+    let x = xx1;
+    let xs = g.nodes[x].shape.as_slice();
+    if xs.len() != 4 || xs[3] != 2 * half {
+        return None;
+    }
+    let angs = g.nodes[ang].shape.as_slice();
+    if angs.len() != 3 || angs[1] != xs[1] || angs[2] != half {
+        return None;
+    }
+    let pb = angs[0];
+    if pb != 1 && pb != xs[0] {
+        return None;
+    }
+    Some(Match {
+        op: FusedOp::Rope { x, ang, b: xs[0], t: xs[1], pb, h: xs[2], dh: xs[3] },
+        interior: vec![lo, hi, a, b, c, d2, x1, x2, cos4, sin4, cos_id, sin_id],
+    })
+}
+
+/// Decode attention-score bmm over a reshaped single-token rope: the
+/// `Bmm(q, k, ta=false, tb=true)` at `root` with `q` a single-consumer
+/// reshape chain down to a rope concat with t == 1.
+fn match_rope_score(g: &Graph, root: Id, consumers: &[Vec<Id>]) -> Option<Match> {
+    let &Op::Bmm { a: q, b: k, ta: false, tb: true } = &g.nodes[root].op else { return None };
+    // walk the reshape chain; every link must feed only the next one
+    let mut chain = Vec::new();
+    let mut cur = q;
+    while let Op::Reshape(next, _) = &g.nodes[cur].op {
+        if consumers[cur].len() != 1 {
+            return None;
+        }
+        chain.push(cur);
+        cur = *next;
+    }
+    if chain.is_empty() || consumers[cur].len() != 1 {
+        return None;
+    }
+    let rope = match_rope(g, cur)?;
+    let FusedOp::Rope { x, ang, b, t, pb, h, dh } = rope.op else { unreachable!() };
+    let out = g.nodes[root].shape.as_slice(); // (bs, m, n)
+    if t != 1 || out[1] != 1 || out[0] != b * h {
+        return None;
+    }
+    let mut interior = rope.interior;
+    interior.push(cur); // the concat root is absorbed too
+    interior.extend(chain);
+    Some(Match { op: FusedOp::RopeScore { x, ang, k, b, pb, h, dh, n: out[2] }, interior })
+}
+
+/// Shifted-softmax chain rooted at its `Div(e, sum)` (see
+/// `programs.rs::softmax3`); accepts any rank with a last-axis reduce.
+fn match_softmax(g: &Graph, root: Id) -> Option<Match> {
+    let &Op::Div(e, sk) = &g.nodes[root].op else { return None };
+    let Op::Reshape(rs, _) = &g.nodes[sk].op else { return None };
+    let rs = *rs;
+    let &Op::ReduceSum(e2, ax) = &g.nodes[rs].op else { return None };
+    if e2 != e {
+        return None;
+    }
+    let &Op::Exp(sh) = &g.nodes[e].op else { return None };
+    let &Op::Sub(x, ms) = &g.nodes[sh].op else { return None };
+    let &Op::StopGrad(mr) = &g.nodes[ms].op else { return None };
+    let Op::Reshape(rm, _) = &g.nodes[mr].op else { return None };
+    let rm = *rm;
+    let &Op::ReduceMax(x2, ax2) = &g.nodes[rm].op else { return None };
+    let xs = g.nodes[x].shape.as_slice();
+    if x2 != x || ax2 != ax || xs.is_empty() || ax != xs.len() - 1 {
+        return None;
+    }
+    let n = xs[ax];
+    if n == 0 {
+        return None;
+    }
+    let rows: usize = xs[..ax].iter().product();
+    Some(Match {
+        op: FusedOp::Softmax { x, rows, n },
+        interior: vec![e, sk, rs, sh, ms, mr, rm],
+    })
+}
+
+/// Is the matched group valid: no interior node claimed by another group,
+/// none a graph output, and every interior consumed only inside the group?
+fn group_ok(m: &Match, root: Id, outputs: &[Id], claimed: &[bool], consumers: &[Vec<Id>]) -> bool {
+    for &i in &m.interior {
+        if claimed[i] || outputs.contains(&i) {
+            return false;
+        }
+        for &c in &consumers[i] {
+            if c != root && !m.interior.contains(&c) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Match fused groups over the whole graph. Roots are visited in
+/// descending id order so super-patterns (RopeScore over a rope concat,
+/// RmsNormMatmul over an rmsnorm root) claim their chains before the
+/// standalone sub-patterns are tried.
+pub(crate) fn plan_fusion(g: &Graph, outputs: &[Id]) -> FusionPlan {
+    let n = g.nodes.len();
+    let mut consumers: Vec<Vec<Id>> = vec![Vec::new(); n];
+    for (id, node) in g.nodes.iter().enumerate() {
+        for o in node.op.operands() {
+            consumers[o].push(id);
+        }
+    }
+    let mut plan = FusionPlan::disabled(n);
+    let mut claimed = vec![false; n];
+    for root in (0..n).rev() {
+        if claimed[root] {
+            continue;
+        }
+        let candidates = [
+            match_rope_score(g, root, &consumers),
+            match_rmsnorm_matmul(g, root, &consumers),
+            match_rope(g, root),
+            match_rmsnorm(g, root),
+            match_softmax(g, root),
+        ];
+        for cand in candidates.into_iter().flatten() {
+            if !group_ok(&cand, root, outputs, &claimed, &consumers) {
+                continue;
+            }
+            claimed[root] = true;
+            for &i in &cand.interior {
+                claimed[i] = true;
+                plan.skip[i] = true;
+                plan.root_of[i] = root;
+            }
+            plan.fused[root] = Some(cand.op);
+            break;
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exec::{Feed, Value};
+    use super::super::interp::{Arena, Arg, DType, ExecPlan, Graph};
+    use super::*;
+    use crate::tensor::Tensor;
+
+    /// Deterministic pseudo-random fill (same LCG as the kernel tests).
+    fn fill(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    /// Execute with fusion explicitly on or off.
+    fn run(g: &Graph, outs: &[Id], feeds: &[Feed], fuse: bool) -> (Vec<Value>, usize) {
+        let plan = ExecPlan::new_with(g, outs, fuse);
+        let n = plan.fused_count();
+        let mut args: Vec<Arg> = feeds.iter().map(Arg::from_feed).collect();
+        (g.eval_plan(&mut args, &plan, &mut Arena::new()).unwrap(), n)
+    }
+
+    fn assert_bitwise_eq(a: &Value, b: &Value) {
+        let (Value::F32(a), Value::F32(b)) = (a, b) else { panic!("expected f32 outputs") };
+        assert_eq!(a.shape, b.shape);
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}: fused {x} != unfused {y}");
+        }
+    }
+
+    /// The exact chain `programs.rs::rmsnorm` emits.
+    fn build_rmsnorm(g: &mut Graph, x: Id, gain: Id) -> Id {
+        let d = g.shape(x)[1];
+        let x2 = g.mul(x, x);
+        let ssum = g.reduce_sum_keep(x2, 1);
+        let inv_d = g.scalar(1.0 / d as f32);
+        let ms = g.mul(ssum, inv_d);
+        let eps = g.scalar(1e-6);
+        let mse = g.add(ms, eps);
+        let inv = g.rsqrt(mse);
+        let xn = g.mul(x, inv);
+        g.mul(xn, gain)
+    }
+
+    /// The exact chain `programs.rs::softmax3` emits.
+    fn build_softmax3(g: &mut Graph, x: Id) -> Id {
+        let m = g.reduce_max_keep(x, 2);
+        let ms = g.stop_grad(m);
+        let sh = g.sub(x, ms);
+        let e = g.exp(sh);
+        let s = g.reduce_sum_keep(e, 2);
+        g.div(e, s)
+    }
+
+    /// The exact chain `programs.rs::rope` emits (f32 positions `pos`).
+    fn build_rope(g: &mut Graph, x: Id, pos: Id) -> Id {
+        let dh = *g.shape(x).last().unwrap();
+        let half = dh / 2;
+        let freqs: Vec<f32> = (0..half)
+            .map(|i| 1.0 / 10000f32.powf(i as f32 * 2.0 / dh as f32))
+            .collect();
+        let fq = g.constant(Tensor::from_vec(&[half], freqs));
+        let ps = g.shape(pos).to_vec();
+        let p3 = g.reshape(pos, &[ps[0], ps[1], 1]);
+        let ang = g.mul(p3, fq);
+        let cos = g.cos(ang);
+        let sin = g.sin(ang);
+        let cos4 = g.reshape(cos, &[ps[0], ps[1], 1, half]);
+        let sin4 = g.reshape(sin, &[ps[0], ps[1], 1, half]);
+        let x1 = g.slice(x, 3, 0, half);
+        let x2 = g.slice(x, 3, half, half);
+        let a = g.mul(x1, cos4);
+        let b = g.mul(x2, sin4);
+        let lo = g.sub(a, b);
+        let c = g.mul(x1, sin4);
+        let d2 = g.mul(x2, cos4);
+        let hi = g.add(c, d2);
+        g.concat(&[lo, hi], 3)
+    }
+
+    #[test]
+    fn rmsnorm_fuses_and_is_bitwise_identical() {
+        let mut g = Graph::default();
+        let x = g.input(&[3, 8], DType::F32);
+        let gain = g.input(&[8], DType::F32);
+        let root = build_rmsnorm(&mut g, x, gain);
+        let xt = Tensor::from_vec(&[3, 8], fill(24, 1));
+        let gt = Tensor::from_vec(&[8], fill(8, 2));
+        let feeds = [Feed::F32(&xt), Feed::F32(&gt)];
+        let (fused, nf) = run(&g, &[root], &feeds, true);
+        let (plain, np) = run(&g, &[root], &feeds, false);
+        assert_eq!(nf, 1, "rmsnorm chain should fuse");
+        assert_eq!(np, 0);
+        assert_bitwise_eq(&fused[0], &plain[0]);
+    }
+
+    #[test]
+    fn rmsnorm_matmul_fuses_as_one_group() {
+        let mut g = Graph::default();
+        let x = g.input(&[3, 8], DType::F32);
+        let gain = g.input(&[8], DType::F32);
+        let w = g.input(&[5, 8], DType::F32);
+        let norm = build_rmsnorm(&mut g, x, gain);
+        let root = g.matmul(norm, w, false, true);
+        let xt = Tensor::from_vec(&[3, 8], fill(24, 3));
+        let gt = Tensor::from_vec(&[8], fill(8, 4));
+        let wt = Tensor::from_vec(&[5, 8], fill(40, 5));
+        let feeds = [Feed::F32(&xt), Feed::F32(&gt), Feed::F32(&wt)];
+        let (fused, nf) = run(&g, &[root], &feeds, true);
+        let (plain, _) = run(&g, &[root], &feeds, false);
+        assert_eq!(nf, 1, "rmsnorm+matmul should fuse into one group");
+        assert_bitwise_eq(&fused[0], &plain[0]);
+    }
+
+    #[test]
+    fn multi_consumer_rmsnorm_fuses_standalone_not_into_matmul() {
+        // decode ln1: one norm feeding two projections — the matmuls must
+        // not claim it, the standalone rmsnorm still fires
+        let mut g = Graph::default();
+        let x = g.input(&[2, 8], DType::F32);
+        let gain = g.input(&[8], DType::F32);
+        let w1 = g.input(&[4, 8], DType::F32);
+        let w2 = g.input(&[4, 8], DType::F32);
+        let norm = build_rmsnorm(&mut g, x, gain);
+        let o1 = g.matmul(norm, w1, false, true);
+        let o2 = g.matmul(norm, w2, false, true);
+        let xt = Tensor::from_vec(&[2, 8], fill(16, 6));
+        let gt = Tensor::from_vec(&[8], fill(8, 7));
+        let w1t = Tensor::from_vec(&[4, 8], fill(32, 8));
+        let w2t = Tensor::from_vec(&[4, 8], fill(32, 9));
+        let feeds = [Feed::F32(&xt), Feed::F32(&gt), Feed::F32(&w1t), Feed::F32(&w2t)];
+        let (fused, nf) = run(&g, &[o1, o2], &feeds, true);
+        let (plain, _) = run(&g, &[o1, o2], &feeds, false);
+        assert_eq!(nf, 1, "standalone rmsnorm should fuse exactly once");
+        assert_bitwise_eq(&fused[0], &plain[0]);
+        assert_bitwise_eq(&fused[1], &plain[1]);
+    }
+
+    #[test]
+    fn softmax_fuses_and_is_bitwise_identical() {
+        let mut g = Graph::default();
+        let x = g.input(&[2, 3, 5], DType::F32);
+        let root = build_softmax3(&mut g, x);
+        // include mask-scale magnitudes like masked attention scores
+        let mut data = fill(30, 10);
+        data[4] = -1e30;
+        data[17] = -1e30;
+        let xt = Tensor::from_vec(&[2, 3, 5], data);
+        let feeds = [Feed::F32(&xt)];
+        let (fused, nf) = run(&g, &[root], &feeds, true);
+        let (plain, _) = run(&g, &[root], &feeds, false);
+        assert_eq!(nf, 1, "softmax chain should fuse");
+        assert_bitwise_eq(&fused[0], &plain[0]);
+    }
+
+    #[test]
+    fn softmax_with_interior_output_does_not_fuse() {
+        let mut g = Graph::default();
+        let x = g.input(&[1, 2, 4], DType::F32);
+        let m = g.reduce_max_keep(x, 2);
+        let ms = g.stop_grad(m);
+        let sh = g.sub(x, ms);
+        let e = g.exp(sh);
+        let s = g.reduce_sum_keep(e, 2);
+        let root = g.div(e, s);
+        // `e` escapes the group as a graph output — fusion must back off
+        let plan = ExecPlan::new_with(&g, &[root, e], true);
+        assert_eq!(plan.fused_count(), 0);
+    }
+
+    #[test]
+    fn rope_fuses_for_broadcast_and_per_batch_positions() {
+        for &pb in &[1usize, 2] {
+            let (b, t, h, dh) = (2, 3, 2, 6);
+            let mut g = Graph::default();
+            let x = g.input(&[b, t, h, dh], DType::F32);
+            let pos = g.input(&[pb, t], DType::F32);
+            let root = build_rope(&mut g, x, pos);
+            let xt = Tensor::from_vec(&[b, t, h, dh], fill(b * t * h * dh, 11));
+            let pt = Tensor::from_vec(&[pb, t], (0..pb * t).map(|i| i as f32).collect());
+            let feeds = [Feed::F32(&xt), Feed::F32(&pt)];
+            let (fused, nf) = run(&g, &[root], &feeds, true);
+            let (plain, _) = run(&g, &[root], &feeds, false);
+            assert_eq!(nf, 1, "rope chain should fuse (pb = {pb})");
+            assert_bitwise_eq(&fused[0], &plain[0]);
+        }
+    }
+
+    #[test]
+    fn decode_rope_score_fuses_through_the_reshape() {
+        // decode q-path: rope on a single-token query, reshape to packed
+        // heads, dot against the cached keys
+        let (b, h, dh, n) = (2, 3, 8, 5);
+        let mut g = Graph::default();
+        let x = g.input(&[b, 1, h, dh], DType::F32);
+        let pos = g.input(&[b, 1], DType::F32);
+        let k = g.input(&[b * h, n, dh], DType::F32);
+        let roped = build_rope(&mut g, x, pos);
+        let q3 = g.reshape(roped, &[b * h, 1, dh]);
+        let root = g.bmm(q3, k, false, true);
+        let xt = Tensor::from_vec(&[b, 1, h, dh], fill(b * h * dh, 12));
+        let pt = Tensor::from_vec(&[b, 1], vec![3.0, 7.0]);
+        let kt = Tensor::from_vec(&[b * h, n, dh], fill(b * h * n * dh, 13));
+        let feeds = [Feed::F32(&xt), Feed::F32(&pt), Feed::F32(&kt)];
+        let (fused, nf) = run(&g, &[root], &feeds, true);
+        let (plain, _) = run(&g, &[root], &feeds, false);
+        assert_eq!(nf, 1, "rope+score should fuse into one group");
+        assert_bitwise_eq(&fused[0], &plain[0]);
+    }
+
+    #[test]
+    fn disabled_plan_has_no_fusion() {
+        let plan = FusionPlan::disabled(4);
+        assert!(plan.fused.iter().all(Option::is_none));
+        assert!(plan.skip.iter().all(|&s| !s));
+        assert_eq!(plan.root_of, vec![0, 1, 2, 3]);
+    }
+}

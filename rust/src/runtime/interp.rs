@@ -19,9 +19,11 @@
 //! [`CpuBackend`]: super::cpu::CpuBackend
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use crate::kernels;
 use crate::runtime::exec::{Feed, Value};
+use crate::runtime::fusion::{plan_fusion, FusedOp, FusionPlan};
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
 
@@ -539,7 +541,14 @@ impl Graph {
             if matches!(self.nodes[id].op, Op::Input(_) | Op::Const(_)) {
                 continue; // read through `args` / the graph, never materialized
             }
-            let v = self.exec_node(id, &mut vals, args, plan, arena)?;
+            if plan.skip[id] {
+                continue; // fused-group interior: computed at its root
+            }
+            let v = if let Some(f) = &plan.fused[id] {
+                self.exec_fused(id, f, &mut vals, args, plan, arena)?
+            } else {
+                self.exec_node(id, &mut vals, args, plan, arena)?
+            };
             debug_assert_eq!(
                 v.shape(),
                 self.nodes[id].shape.as_slice(),
@@ -1104,6 +1113,173 @@ impl Graph {
         };
         Ok(val)
     }
+
+    /// Obtain a writable copy of f32 node `x`'s value at `id`: the planned
+    /// in-place donor when available, otherwise an arena buffer holding a
+    /// copy, shaped as `id`'s output.
+    fn writable_copy(
+        &self,
+        id: Id,
+        x: Id,
+        vals: &mut [Option<Value>],
+        args: &mut [Arg],
+        plan: &ExecPlan,
+        arena: &mut Arena,
+    ) -> Result<Tensor> {
+        if let Some(t) = self.take_donor(id, plan, vals, args) {
+            return Ok(t);
+        }
+        let xt = self.f32_of(vals, args, x)?;
+        let mut buf = arena.take(xt.data.len());
+        buf.copy_from_slice(&xt.data);
+        Ok(Tensor::from_vec(&self.nodes[id].shape, buf))
+    }
+
+    /// Execute one fused group at its root node. Every kernel below runs
+    /// the *same primitive f32 operations in the same order* as the unfused
+    /// op chain it replaces, so results are bitwise identical — fusion only
+    /// removes intermediate materialization (see [`crate::runtime::fusion`]).
+    fn exec_fused(
+        &self,
+        id: Id,
+        f: &FusedOp,
+        vals: &mut [Option<Value>],
+        args: &mut [Arg],
+        plan: &ExecPlan,
+        arena: &mut Arena,
+    ) -> Result<Value> {
+        let out_shape = &self.nodes[id].shape;
+        let val = match f {
+            FusedOp::Softmax { x, rows, n } => {
+                let mut t = self.writable_copy(id, *x, vals, args, plan, arena)?;
+                softmax_rows(&mut t.data, *rows, *n);
+                Value::F32(t)
+            }
+            FusedOp::RmsNorm { x, gain, rows, d, inv_d, eps } => {
+                let mut t = self.writable_copy(id, *x, vals, args, plan, arena)?;
+                let gt = self.f32_of(vals, args, *gain)?;
+                rmsnorm_rows(&mut t.data, &gt.data, *rows, *d, *inv_d, *eps);
+                Value::F32(t)
+            }
+            FusedOp::RmsNormMatmul { x, gain, w, tb, rows, d, n, inv_d, eps } => {
+                let xt = self.f32_of(vals, args, *x)?;
+                let mut scratch = arena.take(rows * d);
+                scratch.copy_from_slice(&xt.data);
+                let gt = self.f32_of(vals, args, *gain)?;
+                rmsnorm_rows(&mut scratch, &gt.data, *rows, *d, *inv_d, *eps);
+                let wt = self.f32_of(vals, args, *w)?;
+                let mut buf = arena.take_filled(rows * n, 0.0);
+                kernels::matmul_f32(&scratch, &wt.data, *rows, *d, *n, false, *tb, &mut buf);
+                arena.put(scratch);
+                Value::F32(Tensor::from_vec(out_shape, buf))
+            }
+            FusedOp::Rope { x, ang, b, t, pb, h, dh } => {
+                let mut xt = self.writable_copy(id, *x, vals, args, plan, arena)?;
+                let at = self.f32_of(vals, args, *ang)?;
+                rope_inplace(&mut xt.data, &at.data, *b, *t, *pb, *h, *dh, arena);
+                Value::F32(xt)
+            }
+            FusedOp::RopeScore { x, ang, k, b, pb, h, dh, n } => {
+                let bs = b * h;
+                let xt = self.f32_of(vals, args, *x)?;
+                let mut q = arena.take(bs * dh);
+                q.copy_from_slice(&xt.data);
+                let at = self.f32_of(vals, args, *ang)?;
+                rope_inplace(&mut q, &at.data, *b, 1, *pb, *h, *dh, arena);
+                let kt = self.f32_of(vals, args, *k)?;
+                let mut buf = arena.take_filled(bs * n, 0.0);
+                kernels::bmm_f32(&q, &kt.data, bs, 1, *dh, *n, false, true, &mut buf);
+                arena.put(q);
+                Value::F32(Tensor::from_vec(out_shape, buf))
+            }
+        };
+        Ok(val)
+    }
+}
+
+/// Shifted softmax over `rows` contiguous rows of length `n`, in place.
+/// Primitive order matches the unfused chain exactly: max fold (init
+/// `NEG_INFINITY`, ascending), `(x - m).exp()`, ascending sum from 0.0,
+/// divide — bitwise identical to ReduceMax/Sub/Exp/ReduceSum/Div.
+fn softmax_rows(data: &mut [f32], rows: usize, n: usize) {
+    for r in 0..rows {
+        let row = &mut data[r * n..(r + 1) * n];
+        let mut m = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            m = f32::max(m, v);
+        }
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+        }
+        let mut s = 0.0f32;
+        for &v in row.iter() {
+            s += v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+/// RMSNorm `rows` contiguous rows of length `d` in place against `gain`.
+/// Primitive order matches the unfused chain exactly: ascending sum of
+/// `v*v`, `1.0 / (ss*inv_d + eps).sqrt()`, then `(v * inv) * g` — bitwise
+/// identical to Mul/ReduceSum/Mul/Add/Rsqrt/Mul/Mul.
+fn rmsnorm_rows(data: &mut [f32], gain: &[f32], rows: usize, d: usize, inv_d: f32, eps: f32) {
+    for r in 0..rows {
+        let row = &mut data[r * d..(r + 1) * d];
+        let mut ss = 0.0f32;
+        for &v in row.iter() {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss * inv_d + eps).sqrt();
+        for (v, &g) in row.iter_mut().zip(gain) {
+            *v = (*v * inv) * g;
+        }
+    }
+}
+
+/// Rotary embedding of `x` (b, t, h, dh) against angles (pb, t, dh/2) in
+/// place, `pb ∈ {1, b}`. Per (batch, position) the cos/sin vectors are
+/// computed once into a scratch pair, then every head applies
+/// `lo = (x1*c) - (x2*s); hi = (x1*s) + (x2*c)` — the exact unfused
+/// Cos/Sin/Mul/Sub/Add order, bitwise identical.
+#[allow(clippy::too_many_arguments)]
+fn rope_inplace(
+    x: &mut [f32],
+    ang: &[f32],
+    b: usize,
+    t: usize,
+    pb: usize,
+    h: usize,
+    dh: usize,
+    arena: &mut Arena,
+) {
+    let half = dh / 2;
+    let mut cs = arena.take(2 * half);
+    {
+        let (cbuf, sbuf) = cs.split_at_mut(half);
+        for bb in 0..b {
+            let ab = if pb == 1 { 0 } else { bb };
+            for tt in 0..t {
+                let abase = (ab * t + tt) * half;
+                for j in 0..half {
+                    cbuf[j] = ang[abase + j].cos();
+                    sbuf[j] = ang[abase + j].sin();
+                }
+                for hh in 0..h {
+                    let base = ((bb * t + tt) * h + hh) * dh;
+                    for j in 0..half {
+                        let x1 = x[base + j];
+                        let x2 = x[base + half + j];
+                        x[base + j] = (x1 * cbuf[j]) - (x2 * sbuf[j]);
+                        x[base + half + j] = (x1 * sbuf[j]) + (x2 * cbuf[j]);
+                    }
+                }
+            }
+        }
+    }
+    arena.put(cs);
 }
 
 // ---------------------------------------------------------------------------
@@ -1168,28 +1344,93 @@ pub struct ExecPlan {
     /// (its last use, not an output, not a constant, compatible layout).
     donor: Vec<Option<Id>>,
     aux: Vec<Aux>,
+    /// Fused group rooted at each node ([`plan_fusion`]); all `None` when
+    /// fusion is off.
+    fused: Vec<Option<FusedOp>>,
+    /// Fused-group interiors: never executed, never materialized.
+    skip: Vec<bool>,
+}
+
+/// Process-wide fusion default, latched once from `ARA_FUSE` (on unless
+/// set to `0`/`off`/`false`).
+fn fuse_default() -> bool {
+    static FUSE: OnceLock<bool> = OnceLock::new();
+    *FUSE.get_or_init(|| match std::env::var("ARA_FUSE") {
+        Ok(v) => !matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "off" | "false"),
+        Err(_) => true,
+    })
 }
 
 impl ExecPlan {
     pub fn new(g: &Graph, outputs: &[Id]) -> ExecPlan {
+        ExecPlan::new_with(g, outputs, fuse_default())
+    }
+
+    /// Number of fused groups in this plan (observability / tests).
+    pub fn fused_count(&self) -> usize {
+        self.fused.iter().flatten().count()
+    }
+
+    /// Build a plan with fusion explicitly on or off. Fused and unfused
+    /// plans produce bitwise-identical outputs (see [`plan_fusion`]).
+    pub fn new_with(g: &Graph, outputs: &[Id], fuse: bool) -> ExecPlan {
         let n = g.nodes.len();
+        let fplan =
+            if fuse { plan_fusion(g, outputs) } else { FusionPlan::disabled(n) };
+        // Effective last use: an operand read at a fused-group interior
+        // happens when the group's root executes, so deaths are attributed
+        // to the root's position. Roots sit after their interiors but sites
+        // are no longer monotonic in id, hence the guarded max.
         let mut last_use = vec![usize::MAX; n];
         for (id, node) in g.nodes.iter().enumerate() {
+            let site = fplan.root_of[id];
             for o in node.op.operands() {
-                last_use[o] = id; // ids ascend, so the final write is the max
+                if last_use[o] == usize::MAX || last_use[o] < site {
+                    last_use[o] = site;
+                }
             }
         }
-        let free = g.free_plan(outputs);
+        let mut free = vec![Vec::new(); n];
+        for (o, &lu) in last_use.iter().enumerate() {
+            let keep = matches!(g.nodes[o].op, Op::Input(_) | Op::Const(_))
+                || outputs.contains(&o)
+                || fplan.skip[o];
+            if lu != usize::MAX && !keep {
+                free[lu].push(o);
+            }
+        }
         let mut donor: Vec<Option<Id>> = vec![None; n];
         let mut aux: Vec<Aux> = Vec::with_capacity(n);
         let donatable = |o: Id, id: Id, shape: &[usize]| -> bool {
             last_use[o] == id
+                && !fplan.skip[o]
                 && !outputs.contains(&o)
                 && !matches!(g.nodes[o].op, Op::Const(_))
                 && g.nodes[o].shape == shape
         };
         for (id, node) in g.nodes.iter().enumerate() {
             let out_shape = node.shape.as_slice();
+            if fplan.skip[id] {
+                aux.push(Aux::None); // never executed
+                continue;
+            }
+            if let Some(f) = &fplan.fused[id] {
+                // In-place fused groups may steal their input's buffer
+                // (root output shape equals the input shape for all three).
+                let inp = match f {
+                    FusedOp::Softmax { x, .. }
+                    | FusedOp::RmsNorm { x, .. }
+                    | FusedOp::Rope { x, .. } => Some(*x),
+                    FusedOp::RmsNormMatmul { .. } | FusedOp::RopeScore { .. } => None,
+                };
+                if let Some(x) = inp {
+                    if donatable(x, id, out_shape) {
+                        donor[id] = Some(x);
+                    }
+                }
+                aux.push(Aux::None);
+                continue;
+            }
             let a = match &node.op {
                 Op::Neg(x)
                 | Op::Exp(x)
@@ -1278,7 +1519,14 @@ impl ExecPlan {
             };
             aux.push(a);
         }
-        ExecPlan { outputs: outputs.to_vec(), free, donor, aux }
+        ExecPlan {
+            outputs: outputs.to_vec(),
+            free,
+            donor,
+            aux,
+            fused: fplan.fused,
+            skip: fplan.skip,
+        }
     }
 }
 

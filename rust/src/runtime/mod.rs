@@ -17,6 +17,7 @@
 
 mod cpu;
 mod exec;
+mod fusion;
 mod grad;
 mod interp;
 mod manifest;

@@ -58,6 +58,9 @@ pub struct GenStats {
     /// engine was specialized from, when it was built from one — so
     /// throughput reports can name exactly what they measured.
     pub provenance: Option<String>,
+    /// Active SIMD kernel tier name (`scalar`/`avx2`/`avx512`/`neon`) —
+    /// throughput numbers are only comparable within one tier.
+    pub simd_tier: &'static str,
 }
 
 impl GenStats {
@@ -490,7 +493,11 @@ impl Engine {
         let b = self.batch;
         let p = self.cfg.prefill_len;
         assert_eq!(prompts.len(), b, "prompt count must equal engine batch");
-        let mut stats = GenStats { provenance: self.provenance.clone(), ..Default::default() };
+        let mut stats = GenStats {
+            provenance: self.provenance.clone(),
+            simd_tier: crate::kernels::active_tier().name(),
+            ..Default::default()
+        };
 
         // ---- prefill ----
         let t0 = Instant::now();

@@ -1,0 +1,127 @@
+//! SIMD-tier determinism contract (DESIGN.md §performance): every tier
+//! runnable on this CPU must produce **bitwise-identical** results to the
+//! scalar reference for both matmul micro-kernel paths (packed axpy and
+//! small-m dot), on awkward non-lane-multiple shapes, zero-sized edges,
+//! NaN/subnormal inputs, and any thread count.
+
+use ara_compress::kernels::{available_tiers, bmm_f32_tier, matmul_f32_tier, SimdTier};
+
+/// Deterministic pseudo-random fill in [-0.5, 0.5).
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        })
+        .collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: elem {i} differs (tier {x:e} vs scalar {y:e})"
+        );
+    }
+}
+
+fn mm(tier: SimdTier, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, ta: bool, tb: bool, nt: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_f32_tier(tier, a, b, m, k, n, ta, tb, &mut out, nt);
+    out
+}
+
+#[test]
+fn every_tier_matches_scalar_on_non_lane_multiple_shapes() {
+    // k values straddle the 8-lane chunking (k % 8 ∈ {1, 3, 5, 7}); m
+    // values cover both the small-m dot fast path (m < 8 with tb) and the
+    // packed path; n values are not multiples of any vector width.
+    let shapes = [(1, 1, 1), (1, 131, 9), (3, 7, 5), (5, 137, 33), (7, 61, 1), (12, 45, 19)];
+    for tier in available_tiers() {
+        for &(m, k, n) in &shapes {
+            for &ta in &[false, true] {
+                for &tb in &[false, true] {
+                    let a = fill(m * k, 21 + m as u64);
+                    let b = fill(k * n, 22 + n as u64);
+                    let want = mm(SimdTier::Scalar, &a, &b, m, k, n, ta, tb, 1);
+                    let got = mm(tier, &a, &b, m, k, n, ta, tb, 1);
+                    assert_bits_eq(
+                        &got,
+                        &want,
+                        &format!("{} {m}x{k}x{n} ta={ta} tb={tb}", tier.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_sized_shapes_are_noops_on_every_tier() {
+    for tier in available_tiers() {
+        for &(m, k, n) in &[(0usize, 5usize, 3usize), (4, 0, 3), (4, 5, 0)] {
+            let a = fill(m * k, 31);
+            let b = fill(k * n, 32);
+            let out = mm(tier, &a, &b, m, k, n, false, false, 1);
+            // k == 0 contracts an empty axis: the output must stay zero
+            assert!(out.iter().all(|&v| v == 0.0), "{}: {m}x{k}x{n}", tier.name());
+        }
+    }
+}
+
+#[test]
+fn nan_inf_and_subnormal_inputs_propagate_identically() {
+    let (m, k, n) = (6, 37, 11);
+    let mut a = fill(m * k, 41);
+    let mut b = fill(k * n, 42);
+    a[3] = f32::NAN;
+    a[k + 5] = f32::INFINITY;
+    a[2 * k] = 0.0; // exercises the zero-rank skip against a NaN row of b
+    b[4 * n + 2] = f32::NAN;
+    b[7 * n + 1] = f32::NEG_INFINITY;
+    // subnormals: smallest positive and a mid-range denormal
+    a[5] = f32::from_bits(1);
+    b[9 * n + 3] = f32::from_bits(0x0000_4000);
+    for tier in available_tiers() {
+        for &tb in &[false, true] {
+            let want = mm(SimdTier::Scalar, &a, &b, m, k, n, false, tb, 1);
+            let got = mm(tier, &a, &b, m, k, n, false, tb, 1);
+            assert_bits_eq(&got, &want, &format!("{} nan/subnormal tb={tb}", tier.name()));
+        }
+    }
+}
+
+#[test]
+fn thread_count_is_invariant_within_each_tier() {
+    let (m, k, n) = (9, 130, 37);
+    let a = fill(m * k, 51);
+    let b = fill(k * n, 52);
+    for tier in available_tiers() {
+        let base = mm(tier, &a, &b, m, k, n, false, true, 1);
+        for nt in [2, 3, 4, 8] {
+            let got = mm(tier, &a, &b, m, k, n, false, true, nt);
+            assert_bits_eq(&got, &base, &format!("{} nt={nt}", tier.name()));
+        }
+    }
+}
+
+#[test]
+fn bmm_tiers_match_scalar_including_the_decode_dot_path() {
+    // m = 1 with tb is exactly the decode attention-score shape, which
+    // takes the dot fast path inside each batch slice
+    let (bs, m, k, n) = (5, 1, 24, 13);
+    let a = fill(bs * m * k, 61);
+    let b = fill(bs * n * k, 62);
+    for tier in available_tiers() {
+        for nt in [1, 4] {
+            let mut want = vec![0.0f32; bs * m * n];
+            bmm_f32_tier(SimdTier::Scalar, &a, &b, bs, m, k, n, false, true, &mut want, 1);
+            let mut got = vec![0.0f32; bs * m * n];
+            bmm_f32_tier(tier, &a, &b, bs, m, k, n, false, true, &mut got, nt);
+            assert_bits_eq(&got, &want, &format!("bmm {} nt={nt}", tier.name()));
+        }
+    }
+}
