@@ -1,5 +1,5 @@
 //! Bench-health guard: parse the machine-readable bench baselines
-//! (`BENCH_PR2.json` … `BENCH_PR6.json`) with the in-crate JSON parser
+//! (`BENCH_PR2.json` … `BENCH_PR7.json`) with the in-crate JSON parser
 //! and exit non-zero when a required key is missing, non-numeric,
 //! non-finite — or out of range: rate/utilization keys must lie in
 //! [0, 1], achieved compression ratios in (0, 1], wall-clock keys must be
@@ -123,6 +123,24 @@ fn required(smoke: bool) -> Vec<Check> {
             vec![s("matmul_256x256x256_native_speedup")],
         )
     };
+    // fig_chaos (PR 7): per-fault-rate resilience metrics. Rates are
+    // fractions in [0, 1]; goodput/latency/fault counts must be ≥ 0
+    // (goodput may legitimately be 0 when every request was shed or
+    // quarantined — the guard checks health, not performance).
+    let chaos_rates: &[&str] = if smoke { &["r0", "r25"] } else { &["r0", "r10", "r25"] };
+    let mut chaos_keys = Vec::new();
+    let mut chaos_unit = Vec::new();
+    let mut chaos_pos = Vec::new();
+    for r in chaos_rates {
+        for m in ["retry_success_rate", "shed_rate"] {
+            chaos_keys.push(format!("{r}_{m}"));
+            chaos_unit.push(format!("{r}_{m}"));
+        }
+        for m in ["goodput_tok_s", "p50_ms", "p95_ms", "decode_faults"] {
+            chaos_keys.push(format!("{r}_{m}"));
+            chaos_pos.push(format!("{r}_{m}"));
+        }
+    }
     let none: Vec<String> = Vec::new();
     vec![
         Check {
@@ -178,6 +196,15 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
             min_one_keys: tier_min_one,
+        },
+        Check {
+            file: "BENCH_PR7.json",
+            section: format!("fig_chaos{sfx}"),
+            keys: chaos_keys,
+            unit_keys: chaos_unit,
+            ratio_keys: none.clone(),
+            pos_keys: chaos_pos,
+            min_one_keys: none.clone(),
         },
     ]
 }

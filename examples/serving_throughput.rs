@@ -55,11 +55,14 @@ fn main() -> Result<()> {
         let off = (i * prefill_len) % (stream.len() - prefill_len);
         receivers.push((
             Instant::now(),
-            router.submit(ServeRequest {
-                prompt: stream[off..off + len].to_vec(),
-                gen_len,
-                params: SamplingParams::greedy(),
-            }),
+            router
+                .submit(ServeRequest {
+                    prompt: stream[off..off + len].to_vec(),
+                    gen_len,
+                    params: SamplingParams::greedy(),
+                    ..Default::default()
+                })
+                .expect("router worker alive"),
         ));
     }
     let mut latencies = Vec::new();

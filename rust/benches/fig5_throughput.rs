@@ -46,6 +46,7 @@ fn sched_trace(pl: &Pipeline, engine: &Engine, n_req: usize, seed: u64) -> (f64,
                 prompt: stream[off..off + len].to_vec(),
                 gen_len,
                 params: SamplingParams::greedy(),
+                ..Default::default()
             };
             (at.floor() as usize, req)
         })
@@ -206,6 +207,7 @@ fn main() {
             prompt: sys_prompt.clone(),
             gen_len: 2 + rng.below(10),
             params: SamplingParams::greedy(),
+            ..Default::default()
         });
         let t0 = Instant::now();
         sched.step().expect("scheduler step");
@@ -214,6 +216,7 @@ fn main() {
                 prompt: sys_prompt.clone(),
                 gen_len: 2 + rng.below(10),
                 params: SamplingParams::greedy(),
+                ..Default::default()
             });
         }
         sched.run_to_completion().expect("drain");

@@ -60,21 +60,10 @@ impl MethodSpec {
         // method ids are case-insensitive (the pre-registry CLI lowercased
         // its `--method` argument; keep that contract)
         let method = method.to_lowercase();
-        let mut params = Vec::new();
-        if let Some(q) = query {
-            for kv in q.split('&') {
-                let (k, v) = kv
-                    .split_once('=')
-                    .ok_or_else(|| bad(&format!("parameter `{kv}` is not key=value")))?;
-                if k.is_empty() || v.is_empty() {
-                    return Err(bad(&format!("parameter `{kv}` has an empty key or value")));
-                }
-                if params.iter().any(|(pk, _)| pk == k) {
-                    return Err(bad(&format!("duplicate parameter `{k}`")));
-                }
-                params.push((k.to_string(), v.to_string()));
-            }
-        }
+        let params = match query {
+            Some(q) => parse_query(spec, q)?,
+            None => Vec::new(),
+        };
         Ok(MethodSpec { method, target, params })
     }
 
@@ -98,19 +87,49 @@ impl MethodSpec {
     }
 }
 
+/// Parse a `key=value&key=value` query segment with empty/duplicate checks;
+/// errors name `spec` (the full string the query was cut from). Shared by
+/// [`MethodSpec::parse`] and the fault-plan grammar
+/// ([`crate::serving::FaultPlan`]), which reuses the `?k=v` syntax.
+pub(crate) fn parse_query(spec: &str, q: &str) -> Result<Vec<(String, String)>> {
+    let bad = |why: &str| crate::anyhow!("bad spec `{spec}`: {why}");
+    let mut params = Vec::new();
+    for kv in q.split('&') {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| bad(&format!("parameter `{kv}` is not key=value")))?;
+        if k.is_empty() || v.is_empty() {
+            return Err(bad(&format!("parameter `{kv}` has an empty key or value")));
+        }
+        if params.iter().any(|(pk, _)| pk == k) {
+            return Err(bad(&format!("duplicate parameter `{k}`")));
+        }
+        params.push((k.to_string(), v.to_string()));
+    }
+    Ok(params)
+}
+
 /// Typed parameter extraction with errors that name the spec.
-struct Params<'s> {
+pub(crate) struct Params<'s> {
     spec: &'s str,
     left: Vec<(String, String)>,
 }
 
 impl<'s> Params<'s> {
-    fn take(&mut self, key: &str) -> Option<String> {
+    pub(crate) fn new(spec: &'s str, params: Vec<(String, String)>) -> Params<'s> {
+        Params { spec, left: params }
+    }
+
+    pub(crate) fn take(&mut self, key: &str) -> Option<String> {
         let i = self.left.iter().position(|(k, _)| k == key)?;
         Some(self.left.remove(i).1)
     }
 
-    fn parsed<T: std::str::FromStr>(&mut self, key: &str, what: &str) -> Result<Option<T>> {
+    pub(crate) fn parsed<T: std::str::FromStr>(
+        &mut self,
+        key: &str,
+        what: &str,
+    ) -> Result<Option<T>> {
         match self.take(key) {
             None => Ok(None),
             Some(v) => v.parse::<T>().map(Some).map_err(|_| {
@@ -119,16 +138,16 @@ impl<'s> Params<'s> {
         }
     }
 
-    fn f64(&mut self, key: &str) -> Result<Option<f64>> {
+    pub(crate) fn f64(&mut self, key: &str) -> Result<Option<f64>> {
         self.parsed(key, "a number")
     }
-    fn usize(&mut self, key: &str) -> Result<Option<usize>> {
+    pub(crate) fn usize(&mut self, key: &str) -> Result<Option<usize>> {
         self.parsed(key, "a non-negative integer")
     }
-    fn u64(&mut self, key: &str) -> Result<Option<u64>> {
+    pub(crate) fn u64(&mut self, key: &str) -> Result<Option<u64>> {
         self.parsed(key, "a non-negative integer")
     }
-    fn bool(&mut self, key: &str) -> Result<Option<bool>> {
+    pub(crate) fn bool(&mut self, key: &str) -> Result<Option<bool>> {
         match self.take(key) {
             None => Ok(None),
             Some(v) => match v.as_str() {
@@ -143,10 +162,10 @@ impl<'s> Params<'s> {
     }
 
     /// Every parameter must have been consumed; leftovers are unknown.
-    fn finish(self, allowed: &[&str]) -> Result<()> {
+    pub(crate) fn finish(self, allowed: &[&str]) -> Result<()> {
         if let Some((k, _)) = self.left.first() {
             return Err(crate::anyhow!(
-                "unknown parameter `{k}` for method `{}` in spec `{}` (allowed: {})",
+                "unknown parameter `{k}` for `{}` in spec `{}` (allowed: {})",
                 self.spec.split(['@', '?']).next().unwrap_or(self.spec),
                 self.spec,
                 if allowed.is_empty() { "none".to_string() } else { allowed.join(", ") }
@@ -159,7 +178,7 @@ impl<'s> Params<'s> {
 /// Build the boxed method a parsed spec names, applying its parameters.
 pub fn build_method(spec: &MethodSpec) -> Result<Box<dyn AllocMethod>> {
     let canonical = spec.canonical();
-    let mut p = Params { spec: &canonical, left: spec.params.clone() };
+    let mut p = Params::new(&canonical, spec.params.clone());
     let method: Box<dyn AllocMethod> = match spec.method.as_str() {
         "uniform" => {
             p.finish(&[])?;

@@ -353,7 +353,12 @@ fn serve(
 
     let mut sched = Scheduler::new(&engine);
     for prompt in prompts {
-        sched.submit(Request { prompt, gen_len, params: SamplingParams::greedy() });
+        sched.submit(Request {
+            prompt,
+            gen_len,
+            params: SamplingParams::greedy(),
+            ..Default::default()
+        });
     }
     while !sched.is_idle() {
         for c in sched.step()? {

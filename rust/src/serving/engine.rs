@@ -34,7 +34,9 @@ use crate::svd::FactoredModel;
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
 
-/// Why a request's generation ended.
+/// Why a request's generation ended. Every request terminates with exactly
+/// one of these — the resilience contract (DESIGN.md §5) forbids dropped
+/// reply channels as an error signal.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
     /// Reached its requested `gen_len`.
@@ -42,6 +44,23 @@ pub enum FinishReason {
     /// Hit a capacity bound first: the decode window (`max_decode_seq`) or
     /// an unrecoverable KV-pool exhaustion.
     Length,
+    /// The caller's cancellation token fired; partial tokens returned.
+    Cancelled,
+    /// The request's step-budget deadline expired (queued or mid-decode).
+    DeadlineExceeded,
+    /// Shed at admission: the router's queue depth was full.
+    Rejected,
+    /// Quarantined after exhausting its retry budget (`retries` fault
+    /// hits), or failed by an unrecoverable router/scheduler error.
+    Failed { retries: u32 },
+}
+
+impl FinishReason {
+    /// Whether the request ran to its natural end (`Stop`/`Length`) rather
+    /// than being cut short by cancellation, deadline, shedding, or faults.
+    pub fn is_natural(&self) -> bool {
+        matches!(self, FinishReason::Stop | FinishReason::Length)
+    }
 }
 
 /// Generation statistics for throughput reporting (Fig. 5).
@@ -99,6 +118,8 @@ pub struct Engine {
     provenance: Option<String>,
     /// Test instrumentation: fail the n-th subsequent decode step once.
     fault: Cell<Option<usize>>,
+    /// Test instrumentation: fail the n-th subsequent batched prefill once.
+    fault_prefill: Cell<Option<usize>>,
 }
 
 /// Materialize the host tensor for a weight input name under an allocation.
@@ -238,6 +259,7 @@ impl Engine {
             backend: rt.backend(),
             provenance: None,
             fault: Cell::new(None),
+            fault_prefill: Cell::new(None),
         })
     }
 
@@ -301,6 +323,25 @@ impl Engine {
         Ok(())
     }
 
+    /// Test instrumentation: make the n-th subsequent batched prefill fail
+    /// once with a transient error — exercises the scheduler's
+    /// fault-isolated admission rollback (active slots keep decoding).
+    #[doc(hidden)]
+    pub fn inject_prefill_fault(&self, after_calls: usize) {
+        self.fault_prefill.set(Some(after_calls));
+    }
+
+    fn check_prefill_fault(&self) -> Result<()> {
+        if let Some(n) = self.fault_prefill.get() {
+            if n == 0 {
+                self.fault_prefill.set(None);
+                return Err(crate::anyhow!("injected prefill fault (test instrumentation)"));
+            }
+            self.fault_prefill.set(Some(n - 1));
+        }
+        Ok(())
+    }
+
     /// Number of prompt tokens the prefill window keeps: the most recent
     /// `prefill_len`, and at least one (empty prompts become a lone BOS).
     pub fn real_len(&self, prompt: &[i32]) -> usize {
@@ -333,6 +374,9 @@ impl Engine {
         new: &[(usize, &[i32])],
         caches: Option<Vec<DeviceBuffer>>,
     ) -> Result<(Vec<Vec<f32>>, Vec<DeviceBuffer>)> {
+        // fires before any compute: the scheduler calls this with
+        // `caches: None`, so a prefill fault never damages pool state
+        self.check_prefill_fault()?;
         let b = self.batch;
         let p = self.cfg.prefill_len;
         let mut toks = vec![crate::data::BOS_TOKEN; b * p];

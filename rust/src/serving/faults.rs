@@ -1,0 +1,272 @@
+//! Seeded chaos harness for the serving resilience layer: a deterministic
+//! [`FaultPlan`] schedules decode faults, prefill faults, pool-pressure
+//! spikes, and latency stalls at specific scheduler steps. The scheduler
+//! consumes the plan between steps (see `scheduler.rs`), so the same plan
+//! against the same request trace produces the same fault sequence — and,
+//! by the retry-determinism contract (DESIGN.md §5), the same final token
+//! streams as a fault-free run.
+//!
+//! Grammar (`;`-separated events, each reusing the PR-5 `?k=v` helpers
+//! from [`crate::compress::registry`]):
+//!
+//! ```text
+//! plan    := event ( ';' event )*
+//! event   := kind [ '@' arg ] [ '?' key '=' value ( '&' key '=' value )* ]
+//! kind    := decode | prefill | spike | stall | rate
+//! ```
+//!
+//! * `decode@S?count=N&every=K` — fail the decode at steps `S, S+K, …`
+//!   (`N` times; defaults `count=1`, `every=1`).
+//! * `prefill@S?count=N&every=K` — same, for the batched prefill.
+//! * `spike@S?blocks=B&hold=H` — allocate `B` pool blocks at step `S` and
+//!   hold them for `H` steps (defaults `blocks=1`, `hold=1`), simulating
+//!   external memory pressure.
+//! * `stall@S?ms=M` — sleep `M` ms before step `S` (default `ms=10`),
+//!   simulating a latency hiccup.
+//! * `rate@R?seed=X&until=T` — seeded Bernoulli decode fault with
+//!   probability `R ∈ [0, 1]` at every step in `[0, T)` (defaults
+//!   `seed=0`, `until=256`). Expanded to concrete steps at **parse time**
+//!   with [`crate::data::Rng`], so the schedule is fully deterministic.
+//!
+//! Plans come from [`FaultPlan::parse`] or the `ARA_FAULT_PLAN` env knob
+//! ([`FaultPlan::from_env`]); a malformed plan is a hard error naming the
+//! offending event — chaos instrumentation must never half-apply.
+
+use crate::compress::registry::{parse_query, Params};
+use crate::data::Rng;
+use crate::Result;
+
+/// What an injected fault does to the step it fires on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The batched decode step fails transiently (before the pool buffers
+    /// are consumed — in-flight requests are re-queued per-slot).
+    Decode,
+    /// The batched prefill fails transiently (only the requests being
+    /// admitted that step are affected; active slots keep decoding).
+    Prefill,
+    /// Hold `blocks` pool blocks for `hold` steps (pool-pressure spike).
+    Spike { blocks: usize, hold: usize },
+    /// Sleep `ms` milliseconds before the step (latency stall).
+    Stall { ms: u64 },
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Scheduler step index ([`super::SchedStats::steps`]) the fault
+    /// fires on.
+    pub step: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule, consumed front-to-back as the
+/// scheduler's step counter advances.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Expanded schedule, stably sorted by step (events for the same step
+    /// fire in spec order).
+    events: Vec<FaultEvent>,
+    next: usize,
+}
+
+/// Seed-domain tag so `rate@R?seed=X` draws an independent stream from any
+/// other `Rng::new(X)` user.
+const RATE_SEED_TAG: u64 = 0x6661_756c_7470_6c6e; // "faultpln"
+
+impl FaultPlan {
+    /// Parse a plan spec; errors name the offending event.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for ev in spec.split(';') {
+            let ev = ev.trim();
+            if ev.is_empty() {
+                return Err(crate::anyhow!("bad fault plan `{spec}`: empty event"));
+            }
+            let (head, query) = match ev.split_once('?') {
+                Some((h, q)) => (h, Some(q)),
+                None => (ev, None),
+            };
+            let (kind, arg) = match head.split_once('@') {
+                Some((k, a)) => (k, Some(a)),
+                None => (head, None),
+            };
+            let step_arg = |what: &str| -> Result<usize> {
+                match arg {
+                    None => Ok(0),
+                    Some(a) => a.parse::<usize>().map_err(|_| {
+                        crate::anyhow!(
+                            "bad fault event `{ev}`: {what} `{a}` is not a non-negative integer"
+                        )
+                    }),
+                }
+            };
+            let params = match query {
+                Some(q) => parse_query(ev, q)?,
+                None => Vec::new(),
+            };
+            let mut p = Params::new(ev, params);
+            match kind {
+                "decode" | "prefill" => {
+                    let step = step_arg("step")?;
+                    let count = p.usize("count")?.unwrap_or(1);
+                    let every = p.usize("every")?.unwrap_or(1).max(1);
+                    p.finish(&["count", "every"])?;
+                    let k = if kind == "decode" { FaultKind::Decode } else { FaultKind::Prefill };
+                    for i in 0..count {
+                        events.push(FaultEvent { step: step + i * every, kind: k });
+                    }
+                }
+                "spike" => {
+                    let step = step_arg("step")?;
+                    let blocks = p.usize("blocks")?.unwrap_or(1);
+                    let hold = p.usize("hold")?.unwrap_or(1).max(1);
+                    p.finish(&["blocks", "hold"])?;
+                    events.push(FaultEvent { step, kind: FaultKind::Spike { blocks, hold } });
+                }
+                "stall" => {
+                    let step = step_arg("step")?;
+                    let ms = p.u64("ms")?.unwrap_or(10);
+                    p.finish(&["ms"])?;
+                    events.push(FaultEvent { step, kind: FaultKind::Stall { ms } });
+                }
+                "rate" => {
+                    let r: f64 = match arg {
+                        None => {
+                            return Err(crate::anyhow!(
+                                "bad fault event `{ev}`: `rate` needs a probability (rate@R)"
+                            ))
+                        }
+                        Some(a) => a.parse().map_err(|_| {
+                            crate::anyhow!("bad fault event `{ev}`: rate `{a}` is not a number")
+                        })?,
+                    };
+                    if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+                        return Err(crate::anyhow!(
+                            "bad fault event `{ev}`: rate {r} outside [0, 1]"
+                        ));
+                    }
+                    let seed = p.u64("seed")?.unwrap_or(0);
+                    let until = p.usize("until")?.unwrap_or(256);
+                    p.finish(&["seed", "until"])?;
+                    let mut rng = Rng::new(seed ^ RATE_SEED_TAG);
+                    for step in 0..until {
+                        if rng.f64() < r {
+                            events.push(FaultEvent { step, kind: FaultKind::Decode });
+                        }
+                    }
+                }
+                other => {
+                    return Err(crate::anyhow!(
+                        "bad fault event `{ev}`: unknown kind `{other}` \
+                         (known: decode, prefill, spike, stall, rate)"
+                    ));
+                }
+            }
+        }
+        events.sort_by_key(|e| e.step);
+        Ok(FaultPlan { events, next: 0 })
+    }
+
+    /// The plan named by `ARA_FAULT_PLAN`, if set. A malformed spec is an
+    /// `Err`, never a silently-ignored knob.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("ARA_FAULT_PLAN") {
+            Ok(s) if !s.trim().is_empty() => Self::parse(s.trim()).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// Scheduled events not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.next
+    }
+
+    /// Pop every event scheduled at or before `step`, in schedule order.
+    /// Consumption is monotone: a popped event never fires again, and
+    /// events whose step was skipped (the scheduler went idle) fire on the
+    /// next step taken.
+    pub fn events_at(&mut self, step: usize) -> Vec<FaultKind> {
+        let mut out = Vec::new();
+        while self.next < self.events.len() && self.events[self.next].step <= step {
+            out.push(self.events[self.next].kind);
+            self.next += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_expands_counts_and_sorts() {
+        let mut p = FaultPlan::parse("decode@4?count=3&every=2;stall@1?ms=5;spike@4?blocks=2")
+            .unwrap();
+        assert_eq!(p.remaining(), 5);
+        assert_eq!(p.events_at(0), vec![]);
+        assert_eq!(p.events_at(1), vec![FaultKind::Stall { ms: 5 }]);
+        // same-step events fire in spec order (decode listed before spike)
+        assert_eq!(
+            p.events_at(4),
+            vec![FaultKind::Decode, FaultKind::Spike { blocks: 2, hold: 1 }]
+        );
+        assert_eq!(p.events_at(5), vec![]);
+        assert_eq!(p.events_at(6), vec![FaultKind::Decode]);
+        assert_eq!(p.events_at(100), vec![FaultKind::Decode]);
+        assert_eq!(p.remaining(), 0);
+    }
+
+    #[test]
+    fn skipped_steps_still_fire_their_events() {
+        let mut p = FaultPlan::parse("decode@2;prefill@3").unwrap();
+        // scheduler idled past steps 2 and 3: both fire on the next step
+        assert_eq!(p.events_at(10), vec![FaultKind::Decode, FaultKind::Prefill]);
+        assert_eq!(p.remaining(), 0);
+    }
+
+    #[test]
+    fn rate_expansion_is_seeded_and_deterministic() {
+        let a = FaultPlan::parse("rate@0.5?seed=7&until=64").unwrap();
+        let b = FaultPlan::parse("rate@0.5?seed=7&until=64").unwrap();
+        assert_eq!(a, b, "same spec must expand to the same schedule");
+        assert!(a.remaining() > 0, "rate 0.5 over 64 steps fires ~32 times");
+        assert!(a.remaining() < 64);
+        assert_eq!(FaultPlan::parse("rate@0?until=64").unwrap().remaining(), 0);
+        assert_eq!(FaultPlan::parse("rate@1?until=16").unwrap().remaining(), 16);
+    }
+
+    #[test]
+    fn errors_name_the_event() {
+        for bad in [
+            "decode@x",
+            "flaky@3",
+            "rate@1.5",
+            "rate@nan",
+            "rate",
+            "decode@3?count=x",
+            "decode@3?bogus=1",
+            "spike@1?blocks=2&blocks=3",
+            "",
+            "decode@1;;decode@2",
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("fault") || err.contains("spec"),
+                "error for `{bad}` should be diagnosable: {err}"
+            );
+        }
+        // unknown-parameter errors name the event and the allowed set
+        let err = FaultPlan::parse("stall@2?mss=4").unwrap_err().to_string();
+        assert!(err.contains("stall@2?mss=4"), "{err}");
+        assert!(err.contains("ms"), "{err}");
+    }
+
+    #[test]
+    fn defaults_are_applied() {
+        let mut p = FaultPlan::parse("decode;stall@3").unwrap();
+        assert_eq!(p.events_at(0), vec![FaultKind::Decode]);
+        assert_eq!(p.events_at(3), vec![FaultKind::Stall { ms: 10 }]);
+    }
+}

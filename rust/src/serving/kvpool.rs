@@ -440,6 +440,42 @@ impl KvPool {
         }
     }
 
+    /// Whether the pool buffers are home (not checked out by a decode step
+    /// and not lost to a failed one). When this is false the only way
+    /// forward is [`KvPool::reset`].
+    pub fn bufs_present(&self) -> bool {
+        self.bufs.iter().all(Option::is_some)
+    }
+
+    /// Leak check: every block's ref count must be exactly what the prefix
+    /// cache plus the scratch reservation account for (no request holds
+    /// outstanding), the free list must contain exactly the zero-ref
+    /// blocks, and the buffers must be home. The scheduler runs this at
+    /// drop in debug builds, after draining — a failure means a
+    /// completion/abort path leaked or double-released a block.
+    pub fn assert_balanced(&self) {
+        let mut expect = vec![0u32; self.cfg.num_blocks];
+        expect[0] = 1; // scratch: permanently held
+        for entry in self.prefix.values() {
+            for &b in &entry.blocks {
+                expect[b] += 1;
+            }
+        }
+        for (b, (&got, &want)) in self.refs.iter().zip(&expect).enumerate() {
+            assert_eq!(
+                got, want,
+                "kv pool unbalanced at block {b}: ref count {got}, \
+                 but scratch + cached chains account for {want}"
+            );
+        }
+        let mut free = self.free.clone();
+        free.sort_unstable();
+        let zero: Vec<usize> =
+            (0..self.cfg.num_blocks).filter(|&b| self.refs[b] == 0).collect();
+        assert_eq!(free, zero, "kv pool free list out of sync with ref counts");
+        assert!(self.bufs_present(), "kv pool buffers not restored");
+    }
+
     /// Drop every request/chain and rebuild zeroed buffers — the recovery
     /// path after an engine error consumed the in-flight pool state.
     pub fn reset(&mut self) {
@@ -565,6 +601,47 @@ mod tests {
         let bufs = p.take_bufs().unwrap();
         assert_eq!(bufs.len(), 2 * 2); // micro-llama: 2 layers × k/v
         p.restore_bufs(bufs);
+    }
+
+    #[test]
+    fn assert_balanced_accepts_cache_holds_and_catches_leaks() {
+        let mut p = pool(4, 6, true);
+        p.assert_balanced(); // fresh pool is trivially balanced
+        let toks: Vec<i32> = (1..=8).collect();
+        let b0 = p.alloc().unwrap();
+        let b1 = p.alloc().unwrap();
+        p.register(&toks, &[b0, b1], &[0.5; 4]);
+        p.release(b0);
+        p.release(b1);
+        // blocks live only through the prefix cache now: balanced
+        p.assert_balanced();
+        match p.lookup(&toks).expect("full hit") {
+            PrefixHit::Full { blocks, .. } => {
+                for b in blocks {
+                    p.release(b);
+                }
+            }
+            PrefixHit::Partial { .. } => panic!("expected full hit"),
+        }
+        p.assert_balanced();
+    }
+
+    #[test]
+    #[should_panic(expected = "kv pool unbalanced")]
+    fn assert_balanced_panics_on_leaked_request_hold() {
+        let mut p = pool(4, 4, false);
+        let _leaked = p.alloc().unwrap(); // never released, no chain owns it
+        p.assert_balanced();
+    }
+
+    #[test]
+    fn bufs_present_tracks_checkout() {
+        let mut p = pool(4, 4, false);
+        assert!(p.bufs_present());
+        let taken = p.take_bufs().unwrap();
+        assert!(!p.bufs_present());
+        p.restore_bufs(taken);
+        assert!(p.bufs_present());
     }
 
     #[test]

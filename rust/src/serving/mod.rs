@@ -21,9 +21,18 @@
 //! youngest request instead of failing — see `scheduler.rs` for the
 //! slot/block-table contract and the bitwise parity guarantee against
 //! [`Engine::generate`].
+//!
+//! The resilience layer (DESIGN.md §5) sits on top: every request ends
+//! with a typed [`FinishReason`] (deadline, cancellation, shed, fault
+//! quarantine included), transient prefill/decode faults are contained to
+//! the affected requests and retried deterministically, the [`Router`]
+//! sheds load past a configurable queue depth, and a seeded
+//! [`FaultPlan`] (`faults.rs`, `ARA_FAULT_PLAN`) drives the chaos-testing
+//! harness (`tests/chaos.rs`, `benches/fig_chaos.rs`).
 
 mod batcher;
 mod engine;
+mod faults;
 mod kvpool;
 mod router;
 mod sampler;
@@ -31,7 +40,10 @@ mod scheduler;
 
 pub use batcher::{BatchPlan, DynamicBatcher};
 pub use engine::{Engine, FinishReason, GenStats};
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 pub use kvpool::{KvPool, KvPoolCfg, PoolStats, PrefixHit};
-pub use router::{Router, ServeRequest, ServeResponse};
+pub use router::{Router, RouterCfg, ServeRequest, ServeResponse};
 pub use sampler::{argmax, Sampler, SamplingParams};
-pub use scheduler::{Completion, Request, SchedStats, Scheduler};
+pub use scheduler::{
+    CancelToken, Completion, Request, SchedCfg, SchedStats, Scheduler, NO_SLOT,
+};

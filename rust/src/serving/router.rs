@@ -5,35 +5,93 @@
 //! channels. Requests arriving mid-flight are admitted into freed slots
 //! between decode steps. This is the process topology a multi-engine
 //! deployment would shard over.
+//!
+//! Resilience (DESIGN.md §5): admission is bounded — past
+//! [`RouterCfg::queue_depth`] in-flight requests, `submit` sheds with an
+//! immediate `Rejected` response instead of queueing unboundedly. Every
+//! tracked request always receives a typed [`ServeResponse`]; reply
+//! channels are never silently dropped. Transient engine faults are
+//! absorbed by the scheduler (bounded retry + quarantine) while the worker
+//! applies a capped exponential backoff between faulty steps; only an
+//! unrecoverable scheduler error fails the in-flight requests — with
+//! `Failed` responses carrying the cause — and the worker keeps serving.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::engine::{Engine, FinishReason};
 use super::sampler::SamplingParams;
-use super::scheduler::{Request, Scheduler};
+use super::scheduler::{CancelToken, Request, Scheduler};
+use crate::Result;
 
 /// One generation request (ragged prompt; the scheduler left-pads).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ServeRequest {
     pub prompt: Vec<i32>,
     pub gen_len: usize,
     pub params: SamplingParams,
+    /// Optional step-budget deadline (see [`Request::deadline_steps`]).
+    pub deadline_steps: Option<usize>,
+    /// Optional cooperative cancellation token.
+    pub cancel: Option<CancelToken>,
 }
 
-/// One generation response.
+/// One generation response. Every submitted request receives exactly one —
+/// shed, cancelled, expired, and failed requests included.
 #[derive(Debug, Clone)]
 pub struct ServeResponse {
     pub tokens: Vec<i32>,
-    /// Why generation ended: `Stop` (reached `gen_len`) or `Length`
-    /// (truncated by the decode window / KV-pool capacity) — KV
-    /// exhaustion is surfaced, never silently swallowed.
+    /// Why generation ended — the full typed taxonomy: `Stop`/`Length`
+    /// (natural), `Rejected` (shed at admission), `Cancelled`,
+    /// `DeadlineExceeded`, or `Failed { retries }` (fault quarantine or
+    /// unrecoverable engine error). Never a silently dropped channel.
     pub finish_reason: FinishReason,
+    /// Times the request was re-queued by a transient fault before
+    /// finishing.
+    pub retries: u32,
+    /// Failure cause, populated on `Failed` responses when known.
+    pub error: Option<String>,
     /// The serve loop's running decode throughput at completion time
     /// ([`super::SchedStats::decode_tok_per_s`]) — an engine-wide figure,
     /// not a per-request one.
     pub decode_tok_per_s: f64,
+}
+
+/// Router admission and backoff knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterCfg {
+    /// Max in-flight (accepted but unanswered) requests before `submit`
+    /// sheds with an immediate `Rejected` (`ARA_QUEUE_DEPTH`, default 256).
+    pub queue_depth: usize,
+    /// Worker sleep after a step that recorded a fault; doubles per
+    /// consecutive faulty step up to [`RouterCfg::backoff_cap`], resets on
+    /// a clean step.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for RouterCfg {
+    fn default() -> RouterCfg {
+        RouterCfg {
+            queue_depth: 256,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RouterCfg {
+    pub fn from_env() -> RouterCfg {
+        let queue_depth = std::env::var("ARA_QUEUE_DEPTH")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(256)
+            .max(1);
+        RouterCfg { queue_depth, ..RouterCfg::default() }
+    }
 }
 
 enum Msg {
@@ -45,25 +103,61 @@ enum Msg {
 pub struct Router {
     tx: mpsc::Sender<Msg>,
     worker: Option<JoinHandle<()>>,
+    cfg: RouterCfg,
+    /// Accepted-but-unanswered requests (incremented at submit, decremented
+    /// by the worker when a response is sent).
+    depth: Arc<AtomicUsize>,
+    /// Requests shed with `Rejected` at admission.
+    shed: Arc<AtomicUsize>,
+}
+
+fn failed_response(error: String, tps: f64) -> ServeResponse {
+    ServeResponse {
+        tokens: Vec::new(),
+        finish_reason: FinishReason::Failed { retries: 0 },
+        retries: 0,
+        error: Some(error),
+        decode_tok_per_s: tps,
+    }
 }
 
 impl Router {
+    /// Spawn with knobs from the environment (`ARA_QUEUE_DEPTH`, …).
+    pub fn spawn<F>(engine_builder: F) -> Router
+    where
+        F: FnOnce() -> Engine + Send + 'static,
+    {
+        Router::spawn_with(RouterCfg::from_env(), engine_builder)
+    }
+
     /// Spawn the engine worker. `engine_builder` runs on the worker thread
     /// (PJRT state never crosses threads) and returns the engine the serve
     /// loop drives. The worker blocks when idle; while serving it polls the
     /// channel between scheduler steps, so new requests are admitted into
     /// freed slots mid-flight (continuous batching).
-    pub fn spawn<F>(engine_builder: F) -> Router
+    pub fn spawn_with<F>(cfg: RouterCfg, engine_builder: F) -> Router
     where
         F: FnOnce() -> Engine + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let worker_depth = Arc::clone(&depth);
         let worker = std::thread::spawn(move || {
             let engine = engine_builder();
             let mut sched = Scheduler::new(&engine);
             let mut replies: HashMap<u64, mpsc::Sender<ServeResponse>> = HashMap::new();
             let mut shutdown = false;
-            let mut failures = 0usize;
+            let mut backoff = cfg.backoff_base;
+            let answer = |id: u64,
+                          resp: ServeResponse,
+                          replies: &mut HashMap<u64, mpsc::Sender<ServeResponse>>| {
+                worker_depth.fetch_sub(1, Ordering::SeqCst);
+                if let Some(reply) = replies.remove(&id) {
+                    // a send to a gone caller just drops the response; the
+                    // depth slot is freed either way
+                    let _ = reply.send(resp);
+                }
+            };
             loop {
                 // drain the channel: block while idle, poll while serving
                 loop {
@@ -91,6 +185,8 @@ impl Router {
                                 prompt: r.prompt,
                                 gen_len: r.gen_len,
                                 params: r.params,
+                                deadline_steps: r.deadline_steps,
+                                cancel: r.cancel,
                             });
                             replies.insert(id, reply);
                         }
@@ -103,54 +199,109 @@ impl Router {
                     }
                     continue;
                 }
+                let faults_before =
+                    sched.stats().decode_faults + sched.stats().prefill_faults;
                 match sched.step() {
                     Ok(done) => {
-                        failures = 0;
                         let tps = sched.stats().decode_tok_per_s();
                         for c in done {
-                            if let Some(reply) = replies.remove(&c.id) {
-                                let _ = reply.send(ServeResponse {
+                            let error = match c.finish_reason {
+                                FinishReason::Failed { .. } => sched.stats().last_fault.clone(),
+                                _ => None,
+                            };
+                            answer(
+                                c.id,
+                                ServeResponse {
                                     tokens: c.tokens,
                                     finish_reason: c.finish_reason,
+                                    retries: c.retries,
+                                    error,
                                     decode_tok_per_s: tps,
-                                });
-                            }
+                                },
+                                &mut replies,
+                            );
+                        }
+                        let faults_now =
+                            sched.stats().decode_faults + sched.stats().prefill_faults;
+                        if faults_now > faults_before {
+                            // transient fault absorbed this step: back off
+                            // before hammering a possibly-sick engine
+                            std::thread::sleep(backoff);
+                            backoff = (backoff * 2).min(cfg.backoff_cap);
+                        } else {
+                            backoff = cfg.backoff_base;
                         }
                     }
                     Err(e) => {
-                        // abort only the in-flight slots (their cache state
-                        // is gone) — queued requests survive in the
-                        // scheduler and are retried; dropping a reply
-                        // sender fails that caller's receiver
-                        eprintln!("[router] scheduler step failed: {e}");
-                        for id in sched.abort_active() {
-                            replies.remove(&id);
+                        // unrecoverable scheduler error: fail every tracked
+                        // request with a typed response (cause attached) —
+                        // the worker itself keeps serving new submissions
+                        let msg = e.to_string();
+                        for id in sched.abort_all() {
+                            answer(id, failed_response(msg.clone(), 0.0), &mut replies);
                         }
-                        failures += 1;
-                        if failures >= 3 {
-                            eprintln!(
-                                "[router] persistent engine failure, dropping {} requests",
-                                replies.len()
-                            );
-                            replies.clear();
-                            break;
-                        }
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(cfg.backoff_cap);
                     }
                 }
             }
+            // defensive: a reply that survived the loop (scheduler bug)
+            // still gets a typed response instead of a dropped channel
+            let leftover: Vec<u64> = replies.keys().copied().collect();
+            for id in leftover {
+                answer(
+                    id,
+                    failed_response("router shut down with request unserved".into(), 0.0),
+                    &mut replies,
+                );
+            }
         });
-        Router { tx, worker: Some(worker) }
+        Router { tx, worker: Some(worker), cfg, depth, shed: Arc::new(AtomicUsize::new(0)) }
     }
 
-    /// Submit a request; returns the reply receiver. If the worker has
-    /// exited (persistent engine failure), the receiver's `recv()` errors
-    /// instead of this call panicking.
-    pub fn submit(&self, req: ServeRequest) -> mpsc::Receiver<ServeResponse> {
+    /// Submit a request. `Ok` carries the reply receiver — guaranteed to
+    /// yield exactly one typed [`ServeResponse`] (an immediate `Rejected`
+    /// when admission shed the request). `Err` only when the worker thread
+    /// is gone (engine builder panicked / after shutdown): the request was
+    /// not accepted.
+    pub fn submit(&self, req: ServeRequest) -> Result<mpsc::Receiver<ServeResponse>> {
         let (tx, rx) = mpsc::channel();
-        if self.tx.send(Msg::Req(req, tx)).is_err() {
-            eprintln!("[router] worker gone, dropping request");
+        let admitted = self
+            .depth
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
+                (d < self.cfg.queue_depth).then_some(d + 1)
+            })
+            .is_ok();
+        if !admitted {
+            // bounded admission: shed now, with a typed response — callers
+            // distinguish overload from failure without waiting
+            self.shed.fetch_add(1, Ordering::SeqCst);
+            let _ = tx.send(ServeResponse {
+                tokens: Vec::new(),
+                finish_reason: FinishReason::Rejected,
+                retries: 0,
+                error: None,
+                decode_tok_per_s: 0.0,
+            });
+            return Ok(rx);
         }
-        rx
+        if self.tx.send(Msg::Req(req, tx)).is_err() {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            return Err(crate::anyhow!(
+                "router worker is gone (engine thread exited); request not accepted"
+            ));
+        }
+        Ok(rx)
+    }
+
+    /// Accepted-but-unanswered requests right now.
+    pub fn in_flight(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// Requests shed with `Rejected` since spawn.
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::SeqCst)
     }
 }
 

@@ -31,21 +31,96 @@
 //! order, block size, prefix reuse, preemption, or `ARA_THREADS` (pinned
 //! by `tests/scheduler.rs`, incl. the degenerate `block_len =
 //! max_decode_seq` config that reproduces the pre-paged layout exactly).
+//!
+//! **Resilience** (DESIGN.md §5): between decode steps the scheduler
+//! checks per-request deadlines and [`CancelToken`]s (freeing the slot and
+//! its blocks mid-flight), and contains faults instead of spreading them —
+//! a failed prefill rolls back only the admissions that needed it, a
+//! failed decode re-queues only the in-flight requests (queue front,
+//! ascending id). Faulted requests retry up to [`SchedCfg::retry_limit`]
+//! times and are then quarantined with `Failed { retries }`. Because a
+//! retry restarts through prefill (or the prefix cache) with its original
+//! sampler seed, every non-failed completion is bitwise identical to a
+//! fault-free run — pinned by `tests/chaos.rs`. A seeded
+//! [`FaultPlan`](super::FaultPlan) (`ARA_FAULT_PLAN`) injects
+//! decode/prefill faults, pool-pressure spikes, and latency stalls
+//! deterministically.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::engine::{Engine, FinishReason};
+use super::faults::{FaultKind, FaultPlan};
 use super::kvpool::{KvPool, PrefixHit};
 use super::sampler::{Sampler, SamplingParams};
 use crate::Result;
 
+/// [`Completion::slot`] value for requests that finished without ever
+/// being admitted (cancelled / deadline-expired / quarantined while
+/// queued).
+pub const NO_SLOT: usize = usize::MAX;
+
+/// Cooperative cancellation handle: clone it into a [`Request`], call
+/// [`CancelToken::cancel`] from any thread; the scheduler completes the
+/// request with `FinishReason::Cancelled` (partial tokens included) at the
+/// next step boundary and frees its slot and KV blocks.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
 /// One queued generation request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Request {
     pub prompt: Vec<i32>,
     pub gen_len: usize,
     pub params: SamplingParams,
+    /// Step-budget deadline: the request must finish within this many
+    /// scheduler steps of submission or it completes `DeadlineExceeded`
+    /// (checked between steps, whether queued or mid-decode). `None` means
+    /// no deadline.
+    pub deadline_steps: Option<usize>,
+    /// Cooperative cancellation (`None` means not cancellable).
+    pub cancel: Option<CancelToken>,
+}
+
+/// Scheduler resilience knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedCfg {
+    /// Fault hits a request survives before quarantine (`ARA_RETRY_LIMIT`,
+    /// default 3): on the (limit+1)-th hit it completes
+    /// `Failed { retries: limit }`.
+    pub retry_limit: u32,
+}
+
+impl Default for SchedCfg {
+    fn default() -> SchedCfg {
+        SchedCfg { retry_limit: 3 }
+    }
+}
+
+impl SchedCfg {
+    pub fn from_env() -> SchedCfg {
+        let retry_limit = std::env::var("ARA_RETRY_LIMIT")
+            .ok()
+            .and_then(|v| v.trim().parse::<u32>().ok())
+            .unwrap_or(3);
+        SchedCfg { retry_limit }
+    }
 }
 
 /// A finished request.
@@ -53,13 +128,16 @@ pub struct Request {
 pub struct Completion {
     /// Submission id (monotonically increasing per scheduler).
     pub id: u64,
-    /// The engine slot the request (last) ran in.
+    /// The engine slot the request (last) ran in — [`NO_SLOT`] when it
+    /// finished without ever being admitted.
     pub slot: usize,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
-    /// `Stop`: reached `gen_len`; `Length`: truncated by the decode
-    /// window or unrecoverable pool exhaustion.
+    /// How the request ended (see [`FinishReason`]); non-natural reasons
+    /// carry whatever tokens were generated before the cut.
     pub finish_reason: FinishReason,
+    /// Times this request was re-queued by a fault before finishing.
+    pub retries: u32,
     /// Submit → prefill admission, seconds (queueing delay).
     pub queued_s: f64,
     /// Submit → completion, seconds.
@@ -91,6 +169,23 @@ pub struct SchedStats {
     pub preemptions: usize,
     /// High-water fraction of the pool's allocatable blocks in use.
     pub pool_peak_util: f64,
+    /// Decode-step faults absorbed (injected or real engine errors).
+    pub decode_faults: usize,
+    /// Prefill faults absorbed (admission rolled back, actives untouched).
+    pub prefill_faults: usize,
+    /// Fault-triggered re-queues (excludes capacity preemptions).
+    pub retries: usize,
+    /// Requests quarantined (`Failed`) after exhausting the retry budget.
+    pub quarantined: usize,
+    /// Requests completed `Cancelled`.
+    pub cancelled: usize,
+    /// Requests completed `DeadlineExceeded`.
+    pub deadline_expired: usize,
+    /// Pool rebuilds after an engine error consumed the in-flight buffers
+    /// (each also drops the prefix cache).
+    pub pool_resets: usize,
+    /// Most recent fault message, for diagnostics on `Failed` responses.
+    pub last_fault: Option<String>,
 }
 
 impl SchedStats {
@@ -122,6 +217,10 @@ struct Pending {
     id: u64,
     req: Request,
     submitted: Instant,
+    /// `stats.steps` at submission — the deadline clock's zero point.
+    submit_step: usize,
+    /// Fault hits so far (capacity preemptions don't count).
+    retries: u32,
 }
 
 struct Active {
@@ -141,6 +240,8 @@ struct Active {
     sampler: Sampler,
     submitted: Instant,
     started: Instant,
+    submit_step: usize,
+    retries: u32,
 }
 
 /// One planned admission (capacity already secured).
@@ -164,13 +265,29 @@ pub struct Scheduler<'e> {
     slots: Vec<Option<Active>>,
     next_id: u64,
     stats: SchedStats,
+    cfg: SchedCfg,
+    /// Injected chaos schedule (`ARA_FAULT_PLAN` / [`Scheduler::set_fault_plan`]).
+    plan: Option<FaultPlan>,
+    /// Pool blocks held by active `spike` fault events: (release step, blocks).
+    spike_holds: Vec<(usize, Vec<usize>)>,
 }
 
 impl<'e> Scheduler<'e> {
     /// Build over the engine's active paged-decode specialization
     /// (geometry from `ARA_KV_BLOCK` / `ARA_KV_BLOCKS`, or whatever
-    /// [`Engine::enable_paged`] pinned last).
+    /// [`Engine::enable_paged`] pinned last). Resilience knobs come from
+    /// the environment (`ARA_RETRY_LIMIT`, `ARA_FAULT_PLAN`); a malformed
+    /// fault plan panics — chaos instrumentation must never half-apply.
     pub fn new(engine: &'e Engine) -> Scheduler<'e> {
+        let plan = FaultPlan::from_env().expect("ARA_FAULT_PLAN must parse");
+        let mut s = Scheduler::new_with(engine, SchedCfg::from_env());
+        s.plan = plan;
+        s
+    }
+
+    /// Build with explicit resilience knobs and no fault plan (benches and
+    /// tests install plans via [`Scheduler::set_fault_plan`]).
+    pub fn new_with(engine: &'e Engine, cfg: SchedCfg) -> Scheduler<'e> {
         let pool = KvPool::new(engine.config(), engine.paged_cfg());
         let mut slots = Vec::with_capacity(engine.batch);
         slots.resize_with(engine.batch, || None);
@@ -181,14 +298,28 @@ impl<'e> Scheduler<'e> {
             slots,
             next_id: 0,
             stats: SchedStats::default(),
+            cfg,
+            plan: None,
+            spike_holds: Vec::new(),
         }
+    }
+
+    /// Install (or clear) the chaos schedule; fires from the next step.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.plan = plan;
     }
 
     /// Enqueue a request; returns its completion id.
     pub fn submit(&mut self, req: Request) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Pending { id, req, submitted: Instant::now() });
+        self.queue.push_back(Pending {
+            id,
+            req,
+            submitted: Instant::now(),
+            submit_step: self.stats.steps,
+            retries: 0,
+        });
         id
     }
 
@@ -216,13 +347,19 @@ impl<'e> Scheduler<'e> {
         &self.pool
     }
 
-    /// One serve-loop iteration: admit into free slots (capacity-gated),
+    /// One serve-loop iteration: release expired chaos spike holds, sweep
+    /// cancelled/deadline-expired requests (queued and active — slot and
+    /// blocks freed mid-flight), admit into free slots (capacity-gated),
     /// then decode one token for every active slot. Returns the requests
     /// that finished.
     ///
-    /// On `Err` the in-flight pool state is lost: call
-    /// [`Scheduler::abort_active`] before stepping again (queued requests
-    /// survive; only the active slots are aborted).
+    /// Transient faults (injected or real engine errors in prefill/decode)
+    /// are absorbed here, not returned: affected requests are re-queued at
+    /// the queue front with their retry count bumped, or quarantined with
+    /// `Failed { retries }` past [`SchedCfg::retry_limit`]. `Err` means an
+    /// unrecoverable scheduler-level problem (no paged graph, pool
+    /// invariant breach) — call [`Scheduler::abort_all`] before stepping
+    /// again.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         // fail fast before any prefill work is wasted: the paged scheduler
         // needs the paged decode graph (CPU backend; PJRT serves through
@@ -233,8 +370,47 @@ impl<'e> Scheduler<'e> {
             ));
         }
         let mut done = Vec::new();
-        self.admit(&mut done)?;
-        self.decode(&mut done)?;
+        let step_now = self.stats.steps;
+        self.release_spikes(step_now);
+        // consume this step's chaos events (deterministic: plan order)
+        let mut fault_decode = false;
+        let mut fault_prefill = false;
+        let events =
+            self.plan.as_mut().map(|p| p.events_at(step_now)).unwrap_or_default();
+        for kind in events {
+            match kind {
+                FaultKind::Decode => fault_decode = true,
+                FaultKind::Prefill => fault_prefill = true,
+                FaultKind::Spike { blocks, hold } => {
+                    // grab what the pool can spare; requests react through
+                    // the normal capacity gates (admission stall, preempt)
+                    let mut held = Vec::new();
+                    for _ in 0..blocks {
+                        match self.pool.alloc() {
+                            Some(b) => held.push(b),
+                            None => break,
+                        }
+                    }
+                    if !held.is_empty() {
+                        self.spike_holds.push((step_now + hold.max(1), held));
+                    }
+                }
+                FaultKind::Stall { ms } => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+            }
+        }
+        self.sweep_expired(&mut done);
+        self.admit(&mut done, fault_prefill)?;
+        if fault_decode {
+            // plan-injected decode fault: fires *before* the pool buffers
+            // are taken, so per-slot recovery keeps the prefix cache
+            self.note_fault("injected decode fault (fault plan)");
+            self.stats.decode_faults += 1;
+            self.recover_actives(false, &mut done);
+        } else {
+            self.decode(&mut done)?;
+        }
         self.stats.steps += 1;
         self.sync_pool_stats();
         Ok(done)
@@ -267,7 +443,11 @@ impl<'e> Scheduler<'e> {
         }
     }
 
-    fn admit(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+    /// Admit queued requests into free slots. `inject_fault` simulates a
+    /// transient prefill failure (fault plan): the admissions that needed
+    /// the prefill are rolled back and retried; cache-hit admissions and
+    /// active slots are untouched — faults stay contained.
+    fn admit(&mut self, done: &mut Vec<Completion>, inject_fault: bool) -> Result<()> {
         if self.queue.is_empty() {
             return Ok(());
         }
@@ -346,23 +526,36 @@ impl<'e> Scheduler<'e> {
         let mut fresh_rows: VecDeque<Vec<f32>> = VecDeque::new();
         let mut fresh_caches = Vec::new();
         if !misses.is_empty() {
-            match self.engine.prefill_into_slots(&misses, None) {
+            let res = if inject_fault {
+                Err(crate::anyhow!("injected prefill fault (fault plan)"))
+            } else {
+                self.engine.prefill_into_slots(&misses, None)
+            };
+            match res {
                 Ok((rows, caches)) => {
                     fresh_rows = rows.into();
                     fresh_caches = caches;
                     self.stats.prefills += 1;
                 }
                 Err(e) => {
-                    // transient engine error: roll the pool back and put
-                    // every popped request back at the queue front in
-                    // original order — nothing was lost
-                    for a in admits.into_iter().rev() {
+                    // transient prefill fault: only the admissions that
+                    // needed this prefill are casualties — roll back their
+                    // blocks and retry/quarantine them. Cache-hit
+                    // admissions never touched the engine and proceed;
+                    // active slots keep decoding this very step.
+                    self.note_fault(&e.to_string());
+                    self.stats.prefill_faults += 1;
+                    let (hits, misses_adm): (Vec<Admit>, Vec<Admit>) =
+                        admits.into_iter().partition(|a| a.cached_logits.is_some());
+                    // reverse order so repeated push_front restores the
+                    // original relative queue order
+                    for a in misses_adm.into_iter().rev() {
                         for b in a.table {
                             self.pool.release(b);
                         }
-                        self.queue.push_front(a.pending);
+                        self.retry_or_quarantine(a.pending, Vec::new(), NO_SLOT, None, done);
                     }
-                    return Err(e);
+                    admits = hits;
                 }
             }
         }
@@ -412,6 +605,8 @@ impl<'e> Scheduler<'e> {
                 sampler: Sampler::new(pending.req.params.clone()),
                 submitted: pending.submitted,
                 started: t0,
+                submit_step: pending.submit_step,
+                retries: pending.retries,
                 req: pending.req,
             };
             self.stats.admitted += 1;
@@ -477,7 +672,13 @@ impl<'e> Scheduler<'e> {
         self.stats.tokens_generated -= a.tokens.len();
         self.stats.prefill_sampled -= 1;
         self.stats.admitted -= 1;
-        self.queue.push_front(Pending { id: a.id, req: a.req, submitted: a.submitted });
+        self.queue.push_front(Pending {
+            id: a.id,
+            req: a.req,
+            submitted: a.submitted,
+            submit_step: a.submit_step,
+            retries: a.retries,
+        });
     }
 
     fn decode(&mut self, done: &mut Vec<Completion>) -> Result<()> {
@@ -508,7 +709,20 @@ impl<'e> Scheduler<'e> {
         let t0 = Instant::now();
         let bufs = self.pool.take_bufs()?;
         let (logits, new_bufs) =
-            self.engine.decode_step_paged(bufs, &toks, &vlens, &rows, &btable)?;
+            match self.engine.decode_step_paged(bufs, &toks, &vlens, &rows, &btable) {
+                Ok(out) => out,
+                Err(e) => {
+                    // the failed step consumed the pool buffers: rebuild
+                    // the pool (prefix cache included) and retry the
+                    // in-flight requests through a fresh prefill — token
+                    // streams stay bitwise identical (seeded samplers)
+                    self.stats.decode_s += t0.elapsed().as_secs_f64();
+                    self.note_fault(&e.to_string());
+                    self.stats.decode_faults += 1;
+                    self.recover_actives(true, done);
+                    return Ok(());
+                }
+            };
         self.pool.restore_bufs(new_bufs);
         self.stats.decode_s += t0.elapsed().as_secs_f64();
         let vocab = self.engine.config().vocab;
@@ -528,18 +742,186 @@ impl<'e> Scheduler<'e> {
         Ok(())
     }
 
-    /// Engine-error recovery: abort every in-flight request (their pool
-    /// state is gone) but **keep the queue** — queued requests never
-    /// touched the engine and can still be served. Returns the aborted
-    /// request ids so a front-end can fail just those callers.
-    pub fn abort_active(&mut self) -> Vec<u64> {
-        let mut ids = Vec::new();
-        for s in self.slots.iter_mut() {
-            if let Some(a) = s.take() {
-                ids.push(a.id);
+    fn note_fault(&mut self, msg: &str) {
+        self.stats.last_fault = Some(msg.to_string());
+    }
+
+    /// Release chaos spike holds whose step has come.
+    fn release_spikes(&mut self, step: usize) {
+        let mut i = 0;
+        while i < self.spike_holds.len() {
+            if self.spike_holds[i].0 <= step {
+                let (_, held) = self.spike_holds.swap_remove(i);
+                for b in held {
+                    self.pool.release(b);
+                }
+            } else {
+                i += 1;
             }
         }
+    }
+
+    /// Complete queued and active requests whose cancellation token fired
+    /// or whose step-budget deadline expired — active slots free their
+    /// blocks mid-flight; queued requests finish with [`NO_SLOT`]. A
+    /// deadline of `k` grants `k` scheduler steps from submission.
+    fn sweep_expired(&mut self, done: &mut Vec<Completion>) {
+        let now_step = self.stats.steps;
+        let verdict = |req: &Request, submit_step: usize| -> Option<FinishReason> {
+            if req.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                Some(FinishReason::Cancelled)
+            } else if req.deadline_steps.is_some_and(|d| now_step - submit_step >= d) {
+                Some(FinishReason::DeadlineExceeded)
+            } else {
+                None
+            }
+        };
+        let mut i = 0;
+        while i < self.queue.len() {
+            match verdict(&self.queue[i].req, self.queue[i].submit_step) {
+                None => i += 1,
+                Some(reason) => {
+                    let p = self.queue.remove(i).expect("index in bounds");
+                    self.count_cut(reason);
+                    self.stats.completed += 1;
+                    let waited = p.submitted.elapsed().as_secs_f64();
+                    done.push(Completion {
+                        id: p.id,
+                        slot: NO_SLOT,
+                        prompt_len: p.req.prompt.len(),
+                        tokens: Vec::new(),
+                        finish_reason: reason,
+                        retries: p.retries,
+                        queued_s: waited,
+                        latency_s: waited,
+                    });
+                }
+            }
+        }
+        for slot in 0..self.slots.len() {
+            let Some(a) = self.slots[slot].as_ref() else { continue };
+            if let Some(reason) = verdict(&a.req, a.submit_step) {
+                let a = self.slots[slot].take().expect("checked above");
+                self.count_cut(reason);
+                done.push(self.complete(a, reason));
+            }
+        }
+    }
+
+    fn count_cut(&mut self, reason: FinishReason) {
+        match reason {
+            FinishReason::Cancelled => self.stats.cancelled += 1,
+            FinishReason::DeadlineExceeded => self.stats.deadline_expired += 1,
+            _ => {}
+        }
+    }
+
+    /// Retry bookkeeping after a fault hit this request: re-queue at the
+    /// queue front while the retry budget allows, else quarantine with
+    /// `Failed { retries }` (partial tokens included). `started` is `Some`
+    /// for requests that were active (their per-admission stats must be
+    /// un-counted on re-queue — the retry regenerates them).
+    fn retry_or_quarantine(
+        &mut self,
+        p: Pending,
+        tokens: Vec<i32>,
+        slot: usize,
+        started: Option<Instant>,
+        done: &mut Vec<Completion>,
+    ) {
+        if p.retries < self.cfg.retry_limit {
+            if started.is_some() {
+                self.stats.tokens_generated -= tokens.len();
+                self.stats.prefill_sampled -= 1;
+                self.stats.admitted -= 1;
+            }
+            self.stats.retries += 1;
+            self.queue.push_front(Pending { retries: p.retries + 1, ..p });
+        } else {
+            self.stats.quarantined += 1;
+            self.stats.completed += 1;
+            done.push(Completion {
+                id: p.id,
+                slot,
+                prompt_len: p.req.prompt.len(),
+                tokens,
+                finish_reason: FinishReason::Failed { retries: p.retries },
+                retries: p.retries,
+                queued_s: started
+                    .map(|s| (s - p.submitted).as_secs_f64())
+                    .unwrap_or_else(|| p.submitted.elapsed().as_secs_f64()),
+                latency_s: p.submitted.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    /// Decode-fault recovery: every in-flight request is a casualty.
+    /// `buffers_lost` distinguishes a real engine error (the step consumed
+    /// the pool buffers — rebuild the pool, prefix cache included) from a
+    /// plan-injected fault that fired before `take_bufs` (per-slot
+    /// release; cached chains survive, so retries re-admit through the
+    /// prefix cache). Either way the requests restart through prefill
+    /// with their original sampler seeds — bitwise-identical streams.
+    fn recover_actives(&mut self, buffers_lost: bool, done: &mut Vec<Completion>) {
+        let mut actives: Vec<Active> =
+            self.slots.iter_mut().filter_map(|s| s.take()).collect();
+        if actives.is_empty() && !buffers_lost {
+            return;
+        }
+        actives.sort_by_key(|a| a.id);
+        if buffers_lost {
+            self.reset_pool();
+        } else {
+            for a in &actives {
+                for &b in &a.table {
+                    self.pool.release(b);
+                }
+            }
+        }
+        // reverse id order + push_front ⇒ oldest request restarts first
+        for a in actives.into_iter().rev() {
+            let Active { id, req, submitted, submit_step, retries, tokens, slot, started, .. } =
+                a;
+            let p = Pending { id, req, submitted, submit_step, retries };
+            self.retry_or_quarantine(p, tokens, slot, Some(started), done);
+        }
+    }
+
+    /// Rebuild the pool after its in-flight buffers were lost; chaos spike
+    /// holds die with it (their blocks no longer exist).
+    fn reset_pool(&mut self) {
         self.pool.reset();
+        self.spike_holds.clear();
+        self.stats.pool_resets += 1;
+    }
+
+    /// Abort every in-flight request, releasing each slot's block chains
+    /// via ref-counts — the prefix cache (and any queued requests) survive.
+    /// The pool is rebuilt only if its buffers were genuinely lost mid-
+    /// step. Returns the aborted ids so a front-end can fail just those
+    /// callers.
+    pub fn abort_active(&mut self) -> Vec<u64> {
+        let actives: Vec<Active> =
+            self.slots.iter_mut().filter_map(|s| s.take()).collect();
+        let mut ids = Vec::new();
+        for a in actives {
+            for &b in &a.table {
+                self.pool.release(b);
+            }
+            ids.push(a.id);
+        }
+        if !self.pool.bufs_present() {
+            self.reset_pool();
+        }
+        ids
+    }
+
+    /// Hard abort: active slots *and* the queue, plus chaos spike holds —
+    /// the router's unrecoverable-error path. Returns every aborted id.
+    pub fn abort_all(&mut self) -> Vec<u64> {
+        self.release_spikes(usize::MAX);
+        let mut ids = self.abort_active();
+        ids.extend(self.queue.drain(..).map(|p| p.id));
         ids
     }
 
@@ -568,8 +950,24 @@ impl<'e> Scheduler<'e> {
             prompt_len: a.req.prompt.len(),
             tokens: a.tokens,
             finish_reason,
+            retries: a.retries,
             queued_s: (a.started - a.submitted).as_secs_f64(),
             latency_s: a.submitted.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+impl Drop for Scheduler<'_> {
+    /// Debug-build leak check: after releasing everything the loop still
+    /// holds, every pool block must be accounted for by the scratch
+    /// reservation or the prefix cache ([`KvPool::assert_balanced`]).
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        if !std::thread::panicking() {
+            self.abort_all();
+            if self.pool.bufs_present() {
+                self.pool.assert_balanced();
+            }
         }
     }
 }

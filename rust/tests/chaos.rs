@@ -1,0 +1,417 @@
+//! Seeded chaos-harness tests for the serving resilience layer
+//! (DESIGN.md §5): fault-isolated recovery with deterministic retry
+//! (plan-injected and real engine errors, prefill and decode), quarantine
+//! past the retry budget, cancellation and step-budget deadlines (queued
+//! and mid-decode), pool-pressure spikes, and bounded router admission.
+//! The load-bearing invariant throughout: every request that is not
+//! failed/cancelled/expired finishes **bitwise identical** to a fault-free
+//! `Engine::generate` run — retries restart through prefill (or the
+//! prefix cache) with their original sampler seeds.
+
+use std::sync::{mpsc, Mutex};
+
+use ara_compress::coordinator::Pipeline;
+use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::model::WeightStore;
+use ara_compress::serving::{
+    CancelToken, FaultPlan, FinishReason, KvPoolCfg, Request, Router, RouterCfg, SamplingParams,
+    SchedCfg, Scheduler, ServeRequest, NO_SLOT,
+};
+use ara_compress::svd::FactoredModel;
+
+fn pipeline() -> Pipeline {
+    let mut pl = Pipeline::new("micro-llama").expect("pipeline (cpu backend needs no artifacts)");
+    // tiny recipe: these tests check resilience plumbing, not quality
+    pl.scalecfg.pretrain_steps = std::env::var("ARA_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    pl.scalecfg.calib_batches = 2;
+    pl
+}
+
+/// Serialize the train-or-load step against the shared disk cache (same
+/// pattern as tests/scheduler.rs).
+fn substrate(pl: &Pipeline) -> (WeightStore, FactoredModel) {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _guard = LOCK.lock().unwrap();
+    let ws = pl.pretrained().expect("pretrain substrate");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+    (ws, fm)
+}
+
+/// Fault-free reference: the request alone through the monolithic greedy
+/// path (its slot-1 neighbor is an arbitrary dummy — rows are independent).
+fn reference(engine: &ara_compress::serving::Engine, prompt: &[i32], gen_len: usize) -> Vec<i32> {
+    let p = engine.config().prefill_len;
+    let prompts = vec![prompt.to_vec(), vec![1i32; p]];
+    let (toks, _) = engine.generate(&prompts, gen_len).expect("reference generate");
+    toks[0].clone()
+}
+
+fn greedy(prompt: Vec<i32>, gen_len: usize) -> Request {
+    Request { prompt, gen_len, params: SamplingParams::greedy(), ..Default::default() }
+}
+
+/// Plan-injected decode faults fire before the pool buffers are consumed:
+/// recovery releases blocks per-slot (no pool reset), the in-flight
+/// requests are re-queued and retried, and every completion is bitwise
+/// identical to a fault-free run.
+#[test]
+fn plan_decode_faults_retry_with_bitwise_parity() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 71, 2048);
+    let reqs: Vec<Request> =
+        (0..4).map(|i| greedy(stream[i * 23..i * 23 + 2 + i].to_vec(), 5 + i)).collect();
+
+    let mut sched = Scheduler::new_with(&engine, SchedCfg::default());
+    sched.set_fault_plan(Some(FaultPlan::parse("decode@2?count=2").expect("plan")));
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut done = sched.run_to_completion().expect("serve loop under faults");
+    assert_eq!(done.len(), reqs.len());
+    done.sort_by_key(|c| c.id);
+
+    let stats = sched.stats();
+    assert_eq!(stats.decode_faults, 2, "both planned faults must fire");
+    assert!(stats.retries >= 2, "in-flight requests must have been retried");
+    assert_eq!(stats.quarantined, 0, "budget of 3 absorbs 2 faults");
+    assert_eq!(stats.pool_resets, 0, "plan faults recover without a pool reset");
+    let retried: u32 = done.iter().map(|c| c.retries).sum();
+    assert!(retried >= 2, "completions must carry their retry counts");
+    for (c, r) in done.iter().zip(&reqs) {
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert_eq!(
+            c.tokens,
+            reference(&engine, &r.prompt, r.gen_len),
+            "request {} diverged after fault recovery",
+            c.id
+        );
+    }
+}
+
+/// A real engine error inside `decode_step_paged` consumes the in-flight
+/// pool buffers: recovery rebuilds the pool (prefix cache included) and
+/// restarts every in-flight request — still bitwise identical.
+#[test]
+fn engine_error_resets_pool_and_recovers_bitwise() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 73, 2048);
+    let reqs: Vec<Request> =
+        (0..3).map(|i| greedy(stream[i * 29..i * 29 + 3 + i].to_vec(), 7)).collect();
+    // references first: the injected fault counts *every* decode step on
+    // this engine, including the reference generates
+    let refs: Vec<Vec<i32>> =
+        reqs.iter().map(|r| reference(&engine, &r.prompt, r.gen_len)).collect();
+
+    engine.inject_decode_fault(3);
+    let mut sched = Scheduler::new_with(&engine, SchedCfg::default());
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut done = sched.run_to_completion().expect("serve loop under engine error");
+    assert_eq!(done.len(), reqs.len());
+    done.sort_by_key(|c| c.id);
+
+    let stats = sched.stats();
+    assert_eq!(stats.decode_faults, 1);
+    assert_eq!(stats.pool_resets, 1, "lost buffers must rebuild the pool");
+    assert!(stats.retries >= 1);
+    assert!(stats.last_fault.as_deref().is_some_and(|m| m.contains("injected")));
+    for (c, r) in done.iter().zip(refs.iter()) {
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert_eq!(c.tokens, *r, "request {} diverged after pool reset", c.id);
+    }
+}
+
+/// A prefill fault is contained to the admissions that needed that
+/// prefill: the active request keeps decoding the same step, the casualty
+/// is re-queued and retried, and both finish with parity outputs.
+#[test]
+fn prefill_fault_is_isolated_to_admissions() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 79, 2048);
+    let a = greedy(stream[0..5].to_vec(), 10);
+    let b = greedy(stream[50..54].to_vec(), 6);
+
+    let mut sched = Scheduler::new_with(&engine, SchedCfg::default());
+    sched.set_fault_plan(Some(FaultPlan::parse("prefill@1").expect("plan")));
+    sched.submit(a.clone());
+    let mut done = sched.step().expect("step 0: admit the active request");
+    assert_eq!(sched.active(), 1);
+    sched.submit(b.clone());
+    done.extend(sched.run_to_completion().expect("drain"));
+    assert_eq!(done.len(), 2);
+    done.sort_by_key(|c| c.id);
+
+    let stats = sched.stats();
+    assert_eq!(stats.prefill_faults, 1, "the planned prefill fault must fire");
+    assert_eq!(stats.decode_faults, 0, "the active slot must not be touched");
+    assert_eq!(done[0].retries, 0, "the active request never saw the fault");
+    assert_eq!(done[1].retries, 1, "the admission casualty retried once");
+    for (c, r) in done.iter().zip([&a, &b]) {
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert_eq!(c.tokens, reference(&engine, &r.prompt, r.gen_len));
+    }
+}
+
+/// Past the retry budget a request is quarantined with a typed
+/// `Failed { retries }` (partial tokens attached) — and the scheduler
+/// keeps serving new requests cleanly afterwards.
+#[test]
+fn quarantine_after_retry_budget_is_typed_and_contained() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 83, 2048);
+    let doomed = greedy(stream[0..6].to_vec(), 6);
+
+    let mut sched = Scheduler::new_with(&engine, SchedCfg { retry_limit: 1 });
+    sched.set_fault_plan(Some(FaultPlan::parse("decode@1?count=2").expect("plan")));
+    sched.submit(doomed.clone());
+    let done = sched.run_to_completion().expect("serve loop");
+    assert_eq!(done.len(), 1);
+    let c = &done[0];
+    assert_eq!(c.finish_reason, FinishReason::Failed { retries: 1 });
+    assert_eq!(c.retries, 1);
+    assert!(!c.tokens.is_empty(), "partial tokens travel with the quarantine");
+    let full = reference(&engine, &doomed.prompt, doomed.gen_len);
+    assert_eq!(c.tokens, full[..c.tokens.len()], "partial tokens stay on the parity stream");
+    let stats = sched.stats();
+    assert_eq!(stats.quarantined, 1);
+    assert_eq!(stats.retries, 1);
+    assert_eq!(stats.decode_faults, 2);
+    assert!(stats.last_fault.is_some());
+
+    // the plan is exhausted: a follow-up request serves cleanly
+    let after = greedy(stream[100..104].to_vec(), 4);
+    sched.submit(after.clone());
+    let done = sched.run_to_completion().expect("post-quarantine serve");
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish_reason, FinishReason::Stop);
+    assert_eq!(done[0].tokens, reference(&engine, &after.prompt, after.gen_len));
+}
+
+/// Cancelling a mid-decode request completes it `Cancelled` at the next
+/// step boundary with its partial tokens, and frees its slot and KV
+/// blocks immediately.
+#[test]
+fn cancellation_mid_decode_frees_blocks() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let mut engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    // sharing off so zero retained blocks is the exact post-release state
+    engine
+        .enable_paged(&pl.rt, KvPoolCfg { block_len: p, num_blocks: 8, prefix_sharing: false })
+        .expect("paged specialization");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 89, 2048);
+    let token = CancelToken::new();
+    let req = Request {
+        prompt: stream[0..p].to_vec(),
+        gen_len: 20,
+        params: SamplingParams::greedy(),
+        cancel: Some(token.clone()),
+        ..Default::default()
+    };
+
+    let mut sched = Scheduler::new_with(&engine, SchedCfg::default());
+    sched.submit(req.clone());
+    for _ in 0..3 {
+        assert!(sched.step().expect("step").is_empty(), "still decoding");
+    }
+    assert!(sched.pool().used_blocks() > 0, "the active request holds blocks");
+    token.cancel();
+    let done = sched.step().expect("cancellation sweep");
+    assert_eq!(done.len(), 1);
+    let c = &done[0];
+    assert_eq!(c.finish_reason, FinishReason::Cancelled);
+    assert!(!c.tokens.is_empty() && c.tokens.len() < req.gen_len, "partial cut");
+    let full = reference(&engine, &req.prompt, req.gen_len);
+    assert_eq!(c.tokens, full[..c.tokens.len()], "partial tokens stay on the parity stream");
+    assert_eq!(sched.pool().used_blocks(), 0, "cancellation must free the KV blocks");
+    assert_eq!(sched.stats().cancelled, 1);
+    assert!(sched.is_idle());
+}
+
+/// Step-budget deadlines: a queued request that never wins a slot expires
+/// with `NO_SLOT` and no tokens; an admitted request expires mid-decode
+/// with its partial tokens and frees its blocks.
+#[test]
+fn deadline_expires_queued_and_active_requests() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 97, 2048);
+
+    // both slots busy for ~13 steps; the third request expires queued
+    let mut sched = Scheduler::new_with(&engine, SchedCfg::default());
+    let long_a = greedy(stream[0..6].to_vec(), 15);
+    let long_b = greedy(stream[40..45].to_vec(), 15);
+    sched.submit(long_a.clone());
+    sched.submit(long_b.clone());
+    let starved_id = sched.submit(Request {
+        prompt: stream[80..84].to_vec(),
+        gen_len: 4,
+        params: SamplingParams::greedy(),
+        deadline_steps: Some(3),
+        ..Default::default()
+    });
+    let done = sched.run_to_completion().expect("serve loop");
+    assert_eq!(done.len(), 3);
+    let starved = done.iter().find(|c| c.id == starved_id).expect("expired completion");
+    assert_eq!(starved.finish_reason, FinishReason::DeadlineExceeded);
+    assert_eq!(starved.slot, NO_SLOT, "never admitted");
+    assert!(starved.tokens.is_empty());
+    for c in done.iter().filter(|c| c.id != starved_id) {
+        assert_eq!(c.finish_reason, FinishReason::Stop, "unexpired requests unaffected");
+    }
+    assert_eq!(sched.stats().deadline_expired, 1);
+
+    // an admitted request expires mid-decode with partial tokens
+    let cut = Request {
+        prompt: stream[120..126].to_vec(),
+        gen_len: 20,
+        params: SamplingParams::greedy(),
+        deadline_steps: Some(4),
+        ..Default::default()
+    };
+    sched.submit(cut.clone());
+    let done = sched.run_to_completion().expect("serve loop");
+    assert_eq!(done.len(), 1);
+    let c = &done[0];
+    assert_eq!(c.finish_reason, FinishReason::DeadlineExceeded);
+    assert_ne!(c.slot, NO_SLOT, "was admitted");
+    assert!(!c.tokens.is_empty() && c.tokens.len() < cut.gen_len, "partial cut");
+    let full = reference(&engine, &cut.prompt, cut.gen_len);
+    assert_eq!(c.tokens, full[..c.tokens.len()]);
+    assert_eq!(sched.stats().deadline_expired, 2);
+}
+
+/// A pool-pressure spike (chaos `spike` event) squeezes a pool that would
+/// otherwise fit both requests: the youngest is preempted, restarts after
+/// the hold releases, and both finish `Stop` with parity outputs.
+#[test]
+fn spike_pressure_preempts_and_recovers_with_parity() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len; // 8 for micro-llama
+    let mut engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    // 8 allocatable blocks: both requests need 2 each — no pressure until
+    // the spike grabs the remaining free blocks
+    engine
+        .enable_paged(&pl.rt, KvPoolCfg { block_len: p, num_blocks: 9, prefix_sharing: false })
+        .expect("paged specialization");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 101, 2048);
+    let reqs =
+        [greedy(stream[0..4].to_vec(), 12), greedy(stream[60..64].to_vec(), 12)];
+
+    let mut sched = Scheduler::new_with(&engine, SchedCfg::default());
+    sched.set_fault_plan(Some(FaultPlan::parse("spike@2?blocks=6&hold=4").expect("plan")));
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut done = sched.run_to_completion().expect("serve loop under spike");
+    assert_eq!(done.len(), 2);
+    done.sort_by_key(|c| c.id);
+    assert!(sched.stats().preemptions >= 1, "the spike must force a preemption");
+    assert_eq!(sched.stats().quarantined, 0, "pressure is not a fault");
+    for (c, r) in done.iter().zip(&reqs) {
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert_eq!(c.tokens, reference(&engine, &r.prompt, r.gen_len));
+    }
+    assert_eq!(sched.pool().used_blocks(), 0, "spike holds must be released");
+}
+
+/// Bounded admission: past `queue_depth` in-flight requests the router
+/// sheds with an immediate typed `Rejected`; admitted requests still serve
+/// with parity once the worker comes up.
+#[test]
+fn router_sheds_past_queue_depth_with_typed_rejection() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("parity engine");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 103, 2048);
+    let reqs: Vec<Request> =
+        (0..4).map(|i| greedy(stream[i * 33..i * 33 + 3 + i].to_vec(), 5)).collect();
+
+    // hold the worker at the gate until all submits landed, so the depth
+    // counter deterministically sheds requests 3 and 4
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let cfg = RouterCfg { queue_depth: 2, ..RouterCfg::default() };
+    let router = Router::spawn_with(cfg, move || {
+        gate_rx.recv().ok();
+        let pl = pipeline();
+        let (ws, fm) = substrate(&pl);
+        pl.engine(&ws, &fm, "uniform-80", 2).expect("worker engine")
+    });
+    let receivers: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            router
+                .submit(ServeRequest {
+                    prompt: r.prompt.clone(),
+                    gen_len: r.gen_len,
+                    params: r.params.clone(),
+                    ..Default::default()
+                })
+                .expect("worker alive")
+        })
+        .collect();
+    assert_eq!(router.shed(), 2, "requests past the depth must shed");
+    assert_eq!(router.in_flight(), 2);
+    gate_tx.send(()).expect("gate");
+
+    for (i, (rx, r)) in receivers.into_iter().zip(&reqs).enumerate() {
+        let resp = rx.recv().expect("typed response, never a dropped channel");
+        if i < 2 {
+            assert_eq!(resp.finish_reason, FinishReason::Stop, "admitted request {i}");
+            assert_eq!(resp.tokens, reference(&engine, &r.prompt, r.gen_len));
+        } else {
+            assert_eq!(resp.finish_reason, FinishReason::Rejected, "shed request {i}");
+            assert!(resp.tokens.is_empty());
+            assert_eq!(resp.retries, 0);
+            assert!(resp.error.is_none());
+            assert!(!resp.finish_reason.is_natural());
+        }
+    }
+    assert_eq!(router.in_flight(), 0, "depth returns to zero after answers");
+}
+
+/// Soak: a seeded Bernoulli fault plan (`rate@R`) over the whole trace —
+/// with a roomy retry budget every request still finishes `Stop`, bitwise
+/// identical to the fault-free references, and the loop terminates.
+#[test]
+fn seeded_rate_plan_soak_keeps_every_stream_bitwise() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let engine = pl.engine(&ws, &fm, "uniform-80", 2).expect("engine");
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 107, 2048);
+    let reqs: Vec<Request> =
+        (0..3).map(|i| greedy(stream[i * 41..i * 41 + 2 + 2 * i].to_vec(), 6)).collect();
+
+    let plan = FaultPlan::parse("rate@0.3?seed=5&until=40").expect("plan");
+    assert!(plan.remaining() > 0, "rate 0.3 over 40 steps must schedule faults");
+    let mut sched = Scheduler::new_with(&engine, SchedCfg { retry_limit: 64 });
+    sched.set_fault_plan(Some(plan));
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut done = sched.run_to_completion().expect("soak serve loop");
+    assert_eq!(done.len(), reqs.len());
+    done.sort_by_key(|c| c.id);
+    assert!(sched.stats().decode_faults >= 1, "the soak must actually inject faults");
+    assert_eq!(sched.stats().quarantined, 0);
+    for (c, r) in done.iter().zip(&reqs) {
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert_eq!(c.tokens, reference(&engine, &r.prompt, r.gen_len), "soak divergence");
+    }
+}

@@ -59,6 +59,7 @@ fn scheduler_matches_engine_generate_under_continuous_batching() {
             prompt: stream[i * 17..i * 17 + lens[i]].to_vec(),
             gen_len: gens[i],
             params: SamplingParams::greedy(),
+            ..Default::default()
         })
         .collect();
 
@@ -119,6 +120,7 @@ fn seeded_sampling_is_deterministic_across_serve_loops() {
                 top_p: 0.95,
                 seed: 1000 + i as u64,
             },
+            ..Default::default()
         })
         .collect();
 
@@ -166,16 +168,19 @@ fn late_submission_into_running_batch_keeps_parity() {
         prompt: stream[0..p].to_vec(),
         gen_len: 12,
         params: SamplingParams::greedy(),
+        ..Default::default()
     };
     let late_a = Request {
         prompt: stream[40..44].to_vec(),
         gen_len: 6,
         params: SamplingParams::greedy(),
+        ..Default::default()
     };
     let late_b = Request {
         prompt: stream[80..86].to_vec(),
         gen_len: 4,
         params: SamplingParams::greedy(),
+        ..Default::default()
     };
 
     let mut sched = Scheduler::new(&engine);
@@ -217,6 +222,7 @@ fn degenerate_block_config_matches_default_and_contiguous_paths() {
             prompt: stream[i * 17..i * 17 + lens[i]].to_vec(),
             gen_len: gens[i],
             params: SamplingParams::greedy(),
+            ..Default::default()
         })
         .collect();
 
@@ -281,6 +287,7 @@ fn shared_prompt_prefills_once_and_keeps_parity() {
         prompt: shared.clone(),
         gen_len: gens[0],
         params: SamplingParams::greedy(),
+        ..Default::default()
     });
     // admit + register the first request's chain before the sharers arrive
     let mut done = sched.step().expect("first step");
@@ -289,6 +296,7 @@ fn shared_prompt_prefills_once_and_keeps_parity() {
             prompt: shared.clone(),
             gen_len: g,
             params: SamplingParams::greedy(),
+            ..Default::default()
         });
     }
     done.extend(sched.run_to_completion().expect("drain"));
@@ -334,6 +342,7 @@ fn pool_exhaustion_preempts_youngest_and_recovers() {
             prompt: stream[i * 31..i * 31 + p].to_vec(),
             gen_len: 20,
             params: SamplingParams::greedy(),
+            ..Default::default()
         })
         .collect();
 
@@ -354,10 +363,11 @@ fn pool_exhaustion_preempts_youngest_and_recovers() {
     }
 }
 
-/// Router error recovery: a transient engine failure mid-trace aborts only
-/// the in-flight slots; queued requests survive, complete through the
-/// reset pool, and their outputs still match the standalone path. The
-/// router keeps serving afterwards.
+/// Router error recovery: a transient engine failure mid-trace is absorbed
+/// by the resilience layer — the in-flight requests are re-queued and
+/// retried (restart through prefill, original sampler seeds), so **every**
+/// request completes `Stop` with parity outputs. The router keeps serving
+/// afterwards. (Deeper fault coverage lives in `tests/chaos.rs`.)
 #[test]
 fn router_recovers_queued_requests_after_transient_engine_failure() {
     let pl = pipeline();
@@ -371,6 +381,7 @@ fn router_recovers_queued_requests_after_transient_engine_failure() {
             prompt: stream[i * 19..i * 19 + 2 + i].to_vec(),
             gen_len: 6,
             params: SamplingParams::greedy(),
+            ..Default::default()
         })
         .collect();
 
@@ -387,37 +398,36 @@ fn router_recovers_queued_requests_after_transient_engine_failure() {
     let receivers: Vec<_> = reqs
         .iter()
         .map(|r| {
-            router.submit(ServeRequest {
-                prompt: r.prompt.clone(),
-                gen_len: r.gen_len,
-                params: r.params.clone(),
-            })
+            router
+                .submit(ServeRequest {
+                    prompt: r.prompt.clone(),
+                    gen_len: r.gen_len,
+                    params: r.params.clone(),
+                    ..Default::default()
+                })
+                .expect("worker alive")
         })
         .collect();
-    let mut completed = 0usize;
-    let mut failed = 0usize;
+    let mut retried = 0usize;
     for (rx, r) in receivers.into_iter().zip(&reqs) {
-        match rx.recv() {
-            Ok(resp) => {
-                completed += 1;
-                let prompts = vec![r.prompt.clone(), vec![1i32; p]];
-                let (toks, _) = engine.generate(&prompts, r.gen_len).expect("generate");
-                assert_eq!(resp.tokens, toks[0], "recovered request diverged");
-                assert_eq!(resp.finish_reason, FinishReason::Stop);
-            }
-            Err(_) => failed += 1, // was in-flight when the fault hit
-        }
+        let resp = rx.recv().expect("typed response, never a dropped channel");
+        let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+        let (toks, _) = engine.generate(&prompts, r.gen_len).expect("generate");
+        assert_eq!(resp.tokens, toks[0], "recovered request diverged");
+        assert_eq!(resp.finish_reason, FinishReason::Stop);
+        retried += resp.retries as usize;
     }
-    assert_eq!(completed + failed, 6);
-    assert!(failed <= 2, "only active slots may abort, {failed} failed");
-    assert!(completed >= 4, "queued requests must survive the fault");
+    assert!(retried >= 1, "the in-flight requests must have been retried");
 
     // the router is still alive and serving after the recovery
-    let rx = router.submit(ServeRequest {
-        prompt: stream[500..504].to_vec(),
-        gen_len: 3,
-        params: SamplingParams::greedy(),
-    });
+    let rx = router
+        .submit(ServeRequest {
+            prompt: stream[500..504].to_vec(),
+            gen_len: 3,
+            params: SamplingParams::greedy(),
+            ..Default::default()
+        })
+        .expect("worker alive");
     let resp = rx.recv().expect("router must keep serving after recovery");
     let prompts = vec![stream[500..504].to_vec(), vec![1i32; p]];
     let (toks, _) = engine.generate(&prompts, 3).expect("generate");
