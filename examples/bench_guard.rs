@@ -1,5 +1,5 @@
 //! Bench-health guard: parse the machine-readable bench baselines
-//! (`BENCH_PR2.json` … `BENCH_PR7.json`) with the in-crate JSON parser
+//! (`BENCH_PR2.json` … `BENCH_PR8.json`) with the in-crate JSON parser
 //! and exit non-zero when a required key is missing, non-numeric,
 //! non-finite — or out of range: rate/utilization keys must lie in
 //! [0, 1], achieved compression ratios in (0, 1], wall-clock keys must be
@@ -141,6 +141,24 @@ fn required(smoke: bool) -> Vec<Check> {
             chaos_pos.push(format!("{r}_{m}"));
         }
     }
+    // fig_http (PR 8): open-loop HTTP load sweep at arrival-rate
+    // multiples of the calibrated service rate (smoke skips ×2). ok/shed
+    // rates are fractions in [0, 1]; goodput and latencies must be ≥ 0
+    // (goodput is legitimately 0 at a rate where every request shed).
+    let http_rates: &[&str] = if smoke { &["x05", "x1", "x4"] } else { &["x05", "x1", "x2", "x4"] };
+    let mut http_keys = Vec::new();
+    let mut http_unit = Vec::new();
+    let mut http_pos = Vec::new();
+    for r in http_rates {
+        for m in ["ok_rate", "shed_rate"] {
+            http_keys.push(format!("{r}_{m}"));
+            http_unit.push(format!("{r}_{m}"));
+        }
+        for m in ["goodput_tok_s", "p50_ms", "p99_ms"] {
+            http_keys.push(format!("{r}_{m}"));
+            http_pos.push(format!("{r}_{m}"));
+        }
+    }
     let none: Vec<String> = Vec::new();
     vec![
         Check {
@@ -204,6 +222,15 @@ fn required(smoke: bool) -> Vec<Check> {
             unit_keys: chaos_unit,
             ratio_keys: none.clone(),
             pos_keys: chaos_pos,
+            min_one_keys: none.clone(),
+        },
+        Check {
+            file: "BENCH_PR8.json",
+            section: format!("fig_http{sfx}"),
+            keys: http_keys,
+            unit_keys: http_unit,
+            ratio_keys: none.clone(),
+            pos_keys: http_pos,
             min_one_keys: none.clone(),
         },
     ]

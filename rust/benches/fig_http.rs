@@ -1,0 +1,233 @@
+//! Open-loop load sweep over the HTTP serving front end (DESIGN.md §7):
+//! a loopback `HttpServer` over a tiny engine, driven at seeded
+//! exponential arrival rates calibrated against the server's measured
+//! service rate — ×0.5 through ×4, deliberately past saturation. Arrivals
+//! fire on schedule whether or not earlier requests finished (open-loop;
+//! closed-loop generators gate arrivals on completions and hide queueing
+//! collapse), so past saturation the bounded admission queue fills and
+//! the 429 shed path carries the overload. Recorded per rate into
+//! `BENCH_PR8.json` (section `fig_http`): goodput (tokens from 200
+//! responses per wall second), p50/p99 end-to-end latency, and the
+//! shed (429) rate. Claims pin determinism over the wire: every 200 body
+//! is byte-identical across arrival rates (greedy parity, regardless of
+//! batch composition or shed pattern). `ARA_BENCH_SMOKE=1` shrinks the
+//! sweep for CI; `ARA_HTTP_REQS` overrides the per-rate request count.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use ara_compress::data::{corpus_spec, generate_tokens, Rng};
+use ara_compress::json::{self, Json};
+use ara_compress::report::Table;
+use ara_compress::serving::http::wire::http_call;
+use ara_compress::serving::{HttpCfg, HttpServer, Router, RouterCfg};
+use common::{bench_json_path_named, bench_section, claim, pipeline, record_bench_at, smoke};
+
+struct Outcome {
+    idx: usize,
+    status: u16,
+    body: Vec<u8>,
+    tokens: usize,
+    latency_s: f64,
+}
+
+fn completion_json(prompt: &[i32], max_tokens: usize) -> String {
+    let toks = Json::Arr(prompt.iter().map(|&t| json::n(t as f64)).collect());
+    json::obj(vec![("prompt", toks), ("max_tokens", json::n(max_tokens as f64))]).dump()
+}
+
+fn token_count(body: &[u8]) -> usize {
+    std::str::from_utf8(body)
+        .ok()
+        .and_then(|t| json::parse(t).ok())
+        .and_then(|j| j.req("token_count").ok().and_then(|v| v.as_usize().ok()))
+        .unwrap_or(0)
+}
+
+/// Fire `bodies` at `addr` with exponential inter-arrivals at `lambda`
+/// req/s (seeded), without waiting for earlier requests — the open-loop
+/// contract. Returns every request's outcome plus the sweep wall time.
+fn open_loop(addr: &str, bodies: &[String], lambda: f64, seed: u64) -> (Vec<Outcome>, f64) {
+    let mut rng = Rng::new(seed);
+    let (tx, rx) = mpsc::channel::<Outcome>();
+    let t0 = Instant::now();
+    let mut at = 0.0f64;
+    let mut dispatchers = Vec::with_capacity(bodies.len());
+    for (idx, body) in bodies.iter().enumerate() {
+        at += -(1.0 - rng.f64()).ln() / lambda;
+        let wait = Duration::from_secs_f64(at).saturating_sub(t0.elapsed());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let (addr, body, tx) = (addr.to_string(), body.clone(), tx.clone());
+        dispatchers.push(std::thread::spawn(move || {
+            let sent = Instant::now();
+            let out = match http_call(&addr, "POST", "/v1/completions", Some(&body)) {
+                Ok(r) => Outcome {
+                    idx,
+                    status: r.status,
+                    tokens: token_count(&r.body),
+                    body: r.body,
+                    latency_s: sent.elapsed().as_secs_f64(),
+                },
+                Err(_) => Outcome {
+                    idx,
+                    status: 0,
+                    tokens: 0,
+                    body: Vec::new(),
+                    latency_s: sent.elapsed().as_secs_f64(),
+                },
+            };
+            let _ = tx.send(out);
+        }));
+    }
+    drop(tx);
+    let outcomes: Vec<Outcome> = rx.iter().collect();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    for d in dispatchers {
+        let _ = d.join();
+    }
+    (outcomes, wall)
+}
+
+fn rate_label(m: f64) -> String {
+    if m < 1.0 {
+        format!("x0{}", (m * 10.0).round() as usize)
+    } else {
+        format!("x{}", m.round() as usize)
+    }
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    match sorted.is_empty() {
+        true => 0.0,
+        false => sorted[((sorted.len() as f64 * q) as usize).min(sorted.len() - 1)],
+    }
+}
+
+fn main() {
+    let smoke = smoke();
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let vocab = pl.cfg.vocab;
+    let p = pl.cfg.prefill_len;
+    let batch = *pl.cfg.decode_batches.last().unwrap();
+    let gen_len = if smoke { 3 } else { 8 };
+    let n_req = std::env::var("ARA_HTTP_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 10 } else { ara_compress::config::scaled(48, 16) });
+
+    // small admission bound so the over-saturated rates visibly shed
+    let router = Router::spawn_with(
+        RouterCfg { queue_depth: 2 * batch, ..RouterCfg::default() },
+        move || {
+            let ws = pl.pretrained().expect("pretrain");
+            let grams = pl.grams(&ws).expect("calibrate");
+            let fm = pl.factored(&ws, &grams).expect("factorize");
+            pl.engine(&ws, &fm, "uniform-80", batch).expect("engine")
+        },
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router, vocab, HttpCfg::from_env())
+        .expect("bind loopback");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let stop = server.shutdown_handle();
+    let server = std::thread::spawn(move || server.run());
+
+    // the same deterministic request set at every rate (ragged prompts)
+    let stream = generate_tokens(vocab, corpus_spec("synwiki"), 8080, 8192);
+    let mut rng = Rng::new(0x8117);
+    let bodies: Vec<String> = (0..n_req)
+        .map(|_| {
+            let len = 1 + rng.below(p);
+            let off = rng.below(stream.len() - p);
+            completion_json(&stream[off..off + len], gen_len)
+        })
+        .collect();
+
+    // calibrate the service rate: one full-batch closed burst, timed
+    let t0 = Instant::now();
+    let warm: Vec<_> = (0..batch)
+        .map(|i| {
+            let (addr, body) = (addr.clone(), bodies[i % bodies.len()].clone());
+            std::thread::spawn(move || http_call(&addr, "POST", "/v1/completions", Some(&body)))
+        })
+        .collect();
+    for w in warm {
+        w.join().expect("warmup thread").expect("warmup call");
+    }
+    let mu = batch as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    println!("calibrated service rate: {mu:.1} req/s (batch {batch}, gen_len {gen_len})");
+
+    let mults: &[f64] = if smoke { &[0.5, 1.0, 4.0] } else { &[0.5, 1.0, 2.0, 4.0] };
+    let mut t = Table::new(
+        format!("Fig http — open-loop sweep, {n_req} req/rate, μ={mu:.1} req/s"),
+        &["Rate", "λ req/s", "goodput tok/s", "ok", "shed", "p50 ms", "p99 ms"],
+    );
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    let mut ok_bodies: Vec<HashMap<usize, Vec<u8>>> = Vec::new();
+    for (ri, &m) in mults.iter().enumerate() {
+        let lambda = (m * mu).max(0.1);
+        let (outcomes, wall) = open_loop(&addr, &bodies, lambda, 0x9E37 + ri as u64);
+        assert_eq!(outcomes.len(), n_req, "every arrival must resolve");
+        let mut lat: Vec<f64> = outcomes.iter().map(|o| o.latency_s).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ok: Vec<&Outcome> = outcomes.iter().filter(|o| o.status == 200).collect();
+        let shed = outcomes.iter().filter(|o| o.status == 429).count();
+        let good_tokens: usize = ok.iter().map(|o| o.tokens).sum();
+        let goodput = good_tokens as f64 / wall;
+        let (p50, p99) = (pct(&lat, 0.50) * 1e3, pct(&lat, 0.99) * 1e3);
+        let lbl = rate_label(m);
+        t.row(vec![
+            lbl.clone(),
+            format!("{lambda:.1}"),
+            format!("{goodput:.0}"),
+            format!("{}", ok.len()),
+            format!("{shed}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+        entries.push((format!("{lbl}_goodput_tok_s"), goodput));
+        entries.push((format!("{lbl}_ok_rate"), ok.len() as f64 / n_req as f64));
+        entries.push((format!("{lbl}_shed_rate"), shed as f64 / n_req as f64));
+        entries.push((format!("{lbl}_p50_ms"), p50));
+        entries.push((format!("{lbl}_p99_ms"), p99));
+        ok_bodies.push(ok.into_iter().map(|o| (o.idx, o.body.clone())).collect());
+    }
+    t.print();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    record_bench_at(
+        &bench_json_path_named("BENCH_PR8.json"),
+        &bench_section("fig_http"),
+        &entries,
+    );
+
+    // determinism over the wire: a request that got 200 at two different
+    // arrival rates produced byte-identical bodies (greedy parity is
+    // independent of batch composition and shed pattern)
+    let base = &ok_bodies[0];
+    for (ri, &m) in mults.iter().enumerate().skip(1) {
+        let mut compared = 0usize;
+        let mut bitwise = true;
+        for (idx, body) in &ok_bodies[ri] {
+            if let Some(b) = base.get(idx) {
+                compared += 1;
+                bitwise &= body == b;
+            }
+        }
+        claim(
+            &format!("{}: {compared} 200 bodies byte-identical to x05 run", rate_label(m)),
+            bitwise && compared > 0,
+        );
+    }
+    claim(
+        "saturated rates shed (bounded admission engaged past μ)",
+        ok_bodies.last().is_some_and(|last| last.len() < n_req),
+    );
+
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean server shutdown");
+}

@@ -49,8 +49,8 @@ const SUBCOMMANDS: &[SubCmd] = &[
     },
     SubCmd {
         name: "serve",
-        usage: "serve     --model M --alloc A --batch B     continuous-batching generation demo\n          [--gen-len N] [--requests N]",
-        flags: &["model", "alloc", "batch", "gen-len", "requests"],
+        usage: "serve     --model M --alloc A --batch B     continuous-batching generation demo\n          [--gen-len N] [--requests N]\n          [--addr HOST --port P]              HTTP front end (POST /v1/completions)",
+        flags: &["model", "alloc", "batch", "gen-len", "requests", "addr", "port"],
     },
     SubCmd {
         name: "info",
@@ -260,13 +260,41 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             t.print();
         }
         "serve" => {
-            serve(
-                &args.get("model", "minillama-s"),
-                &args.get("alloc", "uniform-80"),
-                args.get_usize("batch", 4)?,
-                args.get_usize("gen-len", 32)?,
-                args.get_usize("requests", 16)?,
-            )?;
+            let model = args.get("model", "minillama-s");
+            let alloc = args.get("alloc", "uniform-80");
+            let batch = args.get_usize("batch", 4)?;
+            match args.flags.get("port") {
+                Some(p) => {
+                    let port: u16 = p
+                        .parse()
+                        .map_err(|_| ara_compress::anyhow!("--port: bad port `{p}`"))?;
+                    for k in ["gen-len", "requests"] {
+                        if args.flags.contains_key(k) {
+                            return Err(ara_compress::anyhow!(
+                                "--{k} has no effect with --port (HTTP clients set \
+                                 per-request lengths)\nusage: {}",
+                                sub_usage("serve")
+                            ));
+                        }
+                    }
+                    http_serve(&model, &alloc, batch, &args.get("addr", "127.0.0.1"), port)?;
+                }
+                None => {
+                    if args.flags.contains_key("addr") {
+                        return Err(ara_compress::anyhow!(
+                            "--addr requires --port\nusage: {}",
+                            sub_usage("serve")
+                        ));
+                    }
+                    serve(
+                        &model,
+                        &alloc,
+                        batch,
+                        args.get_usize("gen-len", 32)?,
+                        args.get_usize("requests", 16)?,
+                    )?;
+                }
+            }
         }
         "info" => {
             let paths = Paths::discover()?;
@@ -286,6 +314,43 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn sub_usage(name: &str) -> &'static str {
+    SUBCOMMANDS.iter().find(|s| s.name == name).map(|s| s.usage).unwrap_or("")
+}
+
+/// HTTP serving mode (`serve --port P`, DESIGN.md §7): the engine builds
+/// on the router's worker thread (PJRT state never crosses threads) while
+/// the listener binds immediately — `GET /healthz` answers during warmup,
+/// and submissions queue until the worker drains them. Runs until
+/// `POST /admin/shutdown`; a worker panic during teardown (debug-build KV
+/// leak check included) propagates as a nonzero exit.
+fn http_serve(
+    model: &str,
+    alloc_name: &str,
+    batch: usize,
+    addr: &str,
+    port: u16,
+) -> Result<()> {
+    use ara_compress::serving::{HttpCfg, HttpServer, Router};
+
+    let vocab = Pipeline::new(model)?.cfg.vocab;
+    let (m, a) = (model.to_string(), alloc_name.to_string());
+    let router = Router::spawn(move || {
+        let pl = Pipeline::new(&m).expect("pipeline");
+        let ws = pl.pretrained().expect("pretrain");
+        let grams = pl.grams(&ws).expect("calibrate");
+        let fm = pl.factored(&ws, &grams).expect("factorize");
+        pl.engine(&ws, &fm, &a, batch).expect("engine")
+    });
+    let server = HttpServer::bind(&format!("{addr}:{port}"), router, vocab, HttpCfg::from_env())?;
+    let bound = server.local_addr()?;
+    println!(
+        "listening on http://{bound} — POST /v1/completions, GET /healthz, \
+         GET /stats, POST /admin/shutdown"
+    );
+    server.run()
 }
 
 /// Continuous-batching serve demo: submits `requests` ragged prompts to

@@ -61,6 +61,19 @@ impl FinishReason {
     pub fn is_natural(&self) -> bool {
         matches!(self, FinishReason::Stop | FinishReason::Length)
     }
+
+    /// Stable wire label (DESIGN.md §7): what the HTTP layer writes as
+    /// `finish_reason` — lowercase snake_case, one per variant.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+            FinishReason::Rejected => "rejected",
+            FinishReason::Failed { .. } => "failed",
+        }
+    }
 }
 
 /// Generation statistics for throughput reporting (Fig. 5).

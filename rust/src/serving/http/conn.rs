@@ -1,0 +1,301 @@
+//! Per-connection request handling: route dispatch, the completion
+//! wait/stream loops, and client-disconnect detection. One request per
+//! connection (`Connection: close`); each connection runs on its own
+//! thread so a slow stream never blocks the accept loop.
+//!
+//! Disconnect contract: while a completion is in flight the handler peeks
+//! the socket between polls — EOF trips the request's [`CancelToken`], so
+//! the scheduler frees the slot and KV blocks mid-flight, and the handler
+//! still drains the typed response (the router's depth accounting relies
+//! on every reply being consumed or dropped, never leaked).
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use super::types::{self, CompletionRequest};
+use super::wire::{self, WireError};
+use super::HttpCfg;
+use crate::serving::{CancelToken, Router, ServeRequest, ServeResponse};
+
+/// Shared per-server state each connection thread gets a handle to.
+pub(super) struct Ctx {
+    pub router: Arc<Router>,
+    pub cfg: HttpCfg,
+    pub stop: Arc<AtomicBool>,
+    pub vocab: usize,
+}
+
+pub(super) fn handle(mut stream: TcpStream, ctx: &Ctx) {
+    let raw = match wire::read_request(
+        &mut stream,
+        ctx.cfg.max_header_bytes,
+        ctx.cfg.max_body_bytes,
+    ) {
+        Ok(r) => r,
+        Err(WireError::Closed) => return,
+        // malformed and oversized requests are answered without ever
+        // touching the router/scheduler
+        Err(WireError::Malformed(m)) | Err(WireError::TooLarge(m)) => {
+            let _ = wire::write_response(
+                &mut stream,
+                400,
+                "Bad Request",
+                &types::error_body("invalid_request_error", Some("body"), &m),
+            );
+            return;
+        }
+    };
+    match (raw.method.as_str(), raw.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = wire::write_response(&mut stream, 200, "OK", r#"{"status":"ok"}"#);
+        }
+        ("GET", "/stats") => match ctx.router.worker_stats() {
+            Ok(ws) => {
+                let body =
+                    types::stats_body(&ws, ctx.router.in_flight(), ctx.router.shed());
+                let _ = wire::write_response(&mut stream, 200, "OK", &body);
+            }
+            Err(e) => {
+                let _ = wire::write_response(
+                    &mut stream,
+                    503,
+                    "Service Unavailable",
+                    &types::error_body("server_error", None, &e.to_string()),
+                );
+            }
+        },
+        ("POST", "/admin/shutdown") => {
+            ctx.stop.store(true, Ordering::Release);
+            let _ = wire::write_response(
+                &mut stream,
+                200,
+                "OK",
+                r#"{"status":"shutting_down"}"#,
+            );
+        }
+        ("POST", "/v1/completions") => completions(&mut stream, ctx, &raw.body),
+        (_, "/healthz" | "/stats" | "/admin/shutdown" | "/v1/completions") => {
+            let _ = wire::write_response(
+                &mut stream,
+                405,
+                "Method Not Allowed",
+                &types::error_body(
+                    "invalid_request_error",
+                    None,
+                    &format!("method {} not allowed on {}", raw.method, raw.path),
+                ),
+            );
+        }
+        (m, p) => {
+            let _ = wire::write_response(
+                &mut stream,
+                404,
+                "Not Found",
+                &types::error_body("not_found", None, &format!("no route `{m} {p}`")),
+            );
+        }
+    }
+}
+
+fn completions(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
+    let creq = match CompletionRequest::parse(body, ctx.vocab, ctx.cfg.max_tokens_cap) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = wire::write_response(
+                stream,
+                400,
+                "Bad Request",
+                &types::error_body("invalid_request_error", Some(&e.field), &e.message),
+            );
+            return;
+        }
+    };
+    let cancel = CancelToken::new();
+    let (stream_tx, stream_rx) = match creq.stream {
+        true => {
+            let (tx, rx) = mpsc::channel();
+            (Some(tx), Some(rx))
+        }
+        false => (None, None),
+    };
+    let sreq = ServeRequest {
+        prompt: creq.prompt,
+        gen_len: creq.max_tokens,
+        params: creq.params,
+        deadline_steps: creq.timeout_steps,
+        cancel: Some(cancel.clone()),
+        stream: stream_tx,
+    };
+    let rx = match ctx.router.submit(sreq) {
+        Ok(rx) => rx,
+        Err(e) => {
+            let _ = wire::write_response(
+                stream,
+                503,
+                "Service Unavailable",
+                &types::error_body("server_error", None, &e.to_string()),
+            );
+            return;
+        }
+    };
+    match stream_rx {
+        None => finish_plain(stream, ctx, &cancel, &rx),
+        Some(srx) => finish_streaming(stream, ctx, &cancel, &rx, &srx),
+    }
+}
+
+/// Non-streaming: block for the typed response, peeking for disconnect
+/// between polls. A gone peer cancels the request but keeps waiting for
+/// the response — the scheduler's completion is what frees the slot.
+fn finish_plain(
+    stream: &mut TcpStream,
+    ctx: &Ctx,
+    cancel: &CancelToken,
+    rx: &mpsc::Receiver<ServeResponse>,
+) {
+    let mut gone = false;
+    loop {
+        match rx.recv_timeout(ctx.cfg.poll) {
+            Ok(resp) => {
+                if !gone {
+                    let (code, reason) = types::status_for(&resp.finish_reason);
+                    let _ = wire::write_response(
+                        stream,
+                        code,
+                        reason,
+                        &types::completion_body(&resp),
+                    );
+                }
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if !gone && peer_gone(stream) {
+                    gone = true;
+                    cancel.cancel();
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if !gone {
+                    let _ = wire::write_response(
+                        stream,
+                        500,
+                        "Internal Server Error",
+                        &types::error_body(
+                            "server_error",
+                            None,
+                            "router worker exited without answering",
+                        ),
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Streaming: one protocol chunk per token as it arrives from the
+/// scheduler, then a final chunk carrying the complete completion body
+/// (byte-identical to the non-streaming response — the reassembly
+/// contract). The 200 chunked header is deferred until the first token,
+/// so a request that ends non-naturally before producing anything still
+/// gets its mapped status code as a plain response.
+fn finish_streaming(
+    stream: &mut TcpStream,
+    ctx: &Ctx,
+    cancel: &CancelToken,
+    rx: &mpsc::Receiver<ServeResponse>,
+    srx: &mpsc::Receiver<i32>,
+) {
+    let mut started = false;
+    let mut gone = false;
+    let resp = loop {
+        match rx.try_recv() {
+            Ok(r) => break Some(r),
+            Err(mpsc::TryRecvError::Empty) => {}
+            Err(mpsc::TryRecvError::Disconnected) => break None,
+        }
+        pump_tokens(stream, srx, cancel, &mut started, &mut gone);
+        if !gone && peer_gone(stream) {
+            gone = true;
+            cancel.cancel();
+        }
+        std::thread::sleep(ctx.cfg.poll);
+    };
+    let Some(resp) = resp else {
+        if !gone && !started {
+            let _ = wire::write_response(
+                stream,
+                500,
+                "Internal Server Error",
+                &types::error_body(
+                    "server_error",
+                    None,
+                    "router worker exited without answering",
+                ),
+            );
+        }
+        return;
+    };
+    // the worker emits every token before it answers, so the sink is
+    // fully populated by now — flush the stragglers first
+    pump_tokens(stream, srx, cancel, &mut started, &mut gone);
+    if gone {
+        return;
+    }
+    if started {
+        let _ = wire::write_chunk(stream, types::completion_body(&resp).as_bytes());
+        let _ = wire::finish_chunked(stream);
+    } else {
+        let (code, reason) = types::status_for(&resp.finish_reason);
+        let _ = wire::write_response(stream, code, reason, &types::completion_body(&resp));
+    }
+}
+
+/// Drain every token currently in the sink onto the wire. A write failure
+/// means the peer vanished mid-stream: flip `gone`, trip the cancel
+/// token, and keep draining (tokens are consumed either way so the final
+/// accounting stays consistent).
+fn pump_tokens(
+    stream: &mut TcpStream,
+    srx: &mpsc::Receiver<i32>,
+    cancel: &CancelToken,
+    started: &mut bool,
+    gone: &mut bool,
+) {
+    while let Ok(tok) = srx.try_recv() {
+        if *gone {
+            continue;
+        }
+        if !*started {
+            if wire::start_chunked(stream).is_err() {
+                *gone = true;
+                cancel.cancel();
+                continue;
+            }
+            *started = true;
+        }
+        if wire::write_chunk(stream, types::token_chunk(tok).as_bytes()).is_err() {
+            *gone = true;
+            cancel.cancel();
+        }
+    }
+}
+
+/// Has the peer closed its end? A zero-byte nonblocking peek is EOF ⇒
+/// gone; `WouldBlock` (nothing to read, connection alive) and stray
+/// pipelined bytes are not.
+fn peer_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut buf = [0u8; 1];
+    let gone = match stream.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}

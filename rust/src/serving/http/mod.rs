@@ -1,0 +1,192 @@
+//! Std-only HTTP/1.1 front end over the [`Router`] (DESIGN.md §7): the
+//! wire protocol the serving stack speaks to the outside world.
+//!
+//! Endpoints:
+//! - `POST /v1/completions` — OpenAI-style completion over token ids.
+//!   `stream: true` answers chunked: one protocol chunk per token as the
+//!   scheduler produces it (one per `decode_step` arrival), then a final
+//!   chunk carrying the complete completion body — byte-identical to the
+//!   non-streaming response for the same request.
+//! - `GET /healthz` — liveness (answered by the accept loop's thread
+//!   pool, no engine round-trip).
+//! - `GET /stats` — router admission counters plus a consistent worker
+//!   snapshot ([`WorkerStats`]): in-flight depth, shed count, pool
+//!   utilization, prefix-hit rate, plan provenance, SIMD tier.
+//! - `POST /admin/shutdown` — graceful stop: the accept loop drains
+//!   connection threads, joins the router worker (running the debug-build
+//!   KV leak check), and [`HttpServer::run`] returns.
+//!
+//! The typed [`FinishReason`](crate::serving::FinishReason) taxonomy maps
+//! onto distinct statuses ([`status_for`]): 200 `stop`/`length`, 429
+//! `rejected` (bounded admission — no unbounded queueing), 408
+//! `deadline_exceeded`, 499 `cancelled`, 500 `failed`. Client disconnect
+//! trips the request's `CancelToken`, freeing its slot and KV blocks
+//! mid-flight. Validation errors name the offending field; malformed or
+//! oversized bodies are refused before the scheduler is touched.
+//!
+//! Knobs: `ARA_HTTP_MAX_BODY` (body cap, bytes), `ARA_HTTP_MAX_HEADER`
+//! (head cap, bytes), `ARA_HTTP_POLL_MS` (accept/stream poll interval),
+//! `ARA_HTTP_MAX_TOKENS` (per-request `max_tokens` cap).
+
+mod conn;
+mod types;
+pub mod wire;
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::router::Router;
+use crate::Result;
+
+pub use types::{status_for, CompletionRequest, FieldError};
+
+/// HTTP layer knobs (`ARA_HTTP_*`).
+#[derive(Debug, Clone, Copy)]
+pub struct HttpCfg {
+    /// Request body cap in bytes (`ARA_HTTP_MAX_BODY`, default 1 MiB);
+    /// larger declared bodies get 400 without being read.
+    pub max_body_bytes: usize,
+    /// Request head cap in bytes (`ARA_HTTP_MAX_HEADER`, default 16 KiB).
+    pub max_header_bytes: usize,
+    /// Accept-loop and stream poll interval (`ARA_HTTP_POLL_MS`,
+    /// default 5 ms) — also the disconnect-detection granularity.
+    pub poll: Duration,
+    /// Per-request `max_tokens` cap (`ARA_HTTP_MAX_TOKENS`, default 4096).
+    pub max_tokens_cap: usize,
+}
+
+impl Default for HttpCfg {
+    fn default() -> HttpCfg {
+        HttpCfg {
+            max_body_bytes: 1 << 20,
+            max_header_bytes: 16 << 10,
+            poll: Duration::from_millis(5),
+            max_tokens_cap: 4096,
+        }
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(default)
+}
+
+impl HttpCfg {
+    pub fn from_env() -> HttpCfg {
+        let d = HttpCfg::default();
+        HttpCfg {
+            max_body_bytes: env_usize("ARA_HTTP_MAX_BODY", d.max_body_bytes).max(1),
+            max_header_bytes: env_usize("ARA_HTTP_MAX_HEADER", d.max_header_bytes).max(64),
+            poll: Duration::from_millis(
+                env_usize("ARA_HTTP_POLL_MS", d.poll.as_millis() as usize).max(1) as u64,
+            ),
+            max_tokens_cap: env_usize("ARA_HTTP_MAX_TOKENS", d.max_tokens_cap).max(1),
+        }
+    }
+}
+
+/// Clonable stop signal for a running [`HttpServer`] — same flag the
+/// `POST /admin/shutdown` endpoint flips.
+#[derive(Debug, Clone)]
+pub struct ShutdownHandle(Arc<AtomicBool>);
+
+impl ShutdownHandle {
+    pub fn shutdown(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+}
+
+/// The listener + accept loop. Owns the [`Router`] for its lifetime and
+/// joins it on shutdown so the worker-side KV leak check can fail the
+/// process instead of being swallowed.
+pub struct HttpServer {
+    listener: TcpListener,
+    router: Router,
+    cfg: HttpCfg,
+    stop: Arc<AtomicBool>,
+    vocab: usize,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free one —
+    /// read it back via [`HttpServer::local_addr`]). `vocab` bounds
+    /// prompt token ids at validation.
+    pub fn bind(addr: &str, router: Router, vocab: usize, cfg: HttpCfg) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| crate::anyhow!("bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::anyhow!("set_nonblocking: {e}"))?;
+        Ok(HttpServer {
+            listener,
+            router,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+            vocab,
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(|e| crate::anyhow!("local_addr: {e}"))
+    }
+
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle(Arc::clone(&self.stop))
+    }
+
+    /// Serve until the stop flag flips (`/admin/shutdown` or a
+    /// [`ShutdownHandle`]), then drain connection threads and join the
+    /// router worker. `Err` when the worker panicked during teardown —
+    /// in debug builds that includes a tripped KV-pool leak check.
+    pub fn run(self) -> Result<()> {
+        let HttpServer { listener, router, cfg, stop, vocab } = self;
+        let ctx = Arc::new(conn::Ctx {
+            router: Arc::new(router),
+            cfg,
+            stop: Arc::clone(&stop),
+            vocab,
+        });
+        let mut workers: Vec<JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((sock, _peer)) => {
+                    // accepted sockets may inherit the listener's
+                    // nonblocking flag on some platforms — the handlers
+                    // assume blocking I/O
+                    let _ = sock.set_nonblocking(false);
+                    let _ = sock.set_nodelay(true);
+                    let c = Arc::clone(&ctx);
+                    workers.push(std::thread::spawn(move || conn::handle(sock, &c)));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(cfg.poll);
+                }
+                Err(_) => {
+                    // transient accept failure (EMFILE, ECONNABORTED, …):
+                    // back off and keep serving
+                    std::thread::sleep(cfg.poll);
+                }
+            }
+            // reap finished handlers so the vec doesn't grow unboundedly
+            workers.retain(|w| !w.is_finished());
+        }
+        drop(listener);
+        for w in workers {
+            let _ = w.join();
+        }
+        // every connection thread is gone, so both Arcs are unique again:
+        // unwrap and join the router, surfacing worker panics
+        match Arc::try_unwrap(ctx) {
+            Ok(ctx) => match Arc::try_unwrap(ctx.router) {
+                Ok(router) => router.join(),
+                Err(_) => Ok(()),
+            },
+            Err(_) => Ok(()),
+        }
+    }
+}

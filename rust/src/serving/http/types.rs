@@ -1,0 +1,372 @@
+//! Request/response types for the completion endpoint: schema validation
+//! that names the offending field (the `dufeutech` typed-route style), the
+//! pinned `FinishReason` → HTTP status mapping, and the JSON body
+//! builders. Bodies are deterministic by construction — no timestamps,
+//! ids, or run-varying floats — so a greedy completion is byte-identical
+//! across runs and across the streaming/non-streaming paths (the e2e
+//! gate's determinism assertion).
+
+use crate::json::{self, Json};
+use crate::serving::{FinishReason, SamplingParams, ServeResponse, WorkerStats};
+
+/// A validation failure that names the offending request field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldError {
+    pub field: String,
+    pub message: String,
+}
+
+fn fe(field: &str, message: impl Into<String>) -> FieldError {
+    FieldError { field: field.to_string(), message: message.into() }
+}
+
+/// A validated `POST /v1/completions` request.
+#[derive(Debug, Clone)]
+pub struct CompletionRequest {
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub params: SamplingParams,
+    /// Step-budget deadline (`Request::deadline_steps` on the wire).
+    pub timeout_steps: Option<usize>,
+    pub stream: bool,
+}
+
+const KNOWN_FIELDS: &[&str] = &[
+    "prompt",
+    "max_tokens",
+    "temperature",
+    "top_k",
+    "top_p",
+    "seed",
+    "timeout_steps",
+    "stream",
+];
+
+impl CompletionRequest {
+    /// Parse and validate a request body. `vocab` bounds prompt token ids;
+    /// `max_tokens_cap` bounds the generation budget
+    /// ([`super::HttpCfg::max_tokens_cap`]).
+    pub fn parse(
+        body: &[u8],
+        vocab: usize,
+        max_tokens_cap: usize,
+    ) -> Result<CompletionRequest, FieldError> {
+        let text = std::str::from_utf8(body)
+            .map_err(|_| fe("body", "request body is not utf-8"))?;
+        let j = json::parse(text).map_err(|e| fe("body", format!("invalid JSON: {e}")))?;
+        let pairs = j
+            .as_obj()
+            .map_err(|_| fe("body", "top level must be a JSON object"))?;
+        for (k, _) in pairs {
+            if !KNOWN_FIELDS.contains(&k.as_str()) {
+                return Err(fe(k, "unknown field"));
+            }
+        }
+
+        let prompt = match j.get("prompt") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .map_err(|_| fe("prompt", "must be an array of token ids"))?;
+                let mut toks = Vec::with_capacity(arr.len());
+                for t in arr {
+                    let id = t.as_usize().map_err(|_| {
+                        fe("prompt", "token ids must be non-negative integers")
+                    })?;
+                    if id >= vocab {
+                        return Err(fe(
+                            "prompt",
+                            format!("token id {id} out of range (vocab {vocab})"),
+                        ));
+                    }
+                    toks.push(id as i32);
+                }
+                toks
+            }
+        };
+
+        let max_tokens = j
+            .get("max_tokens")
+            .ok_or_else(|| fe("max_tokens", "required"))?
+            .as_usize()
+            .map_err(|_| fe("max_tokens", "must be a non-negative integer"))?;
+        if max_tokens > max_tokens_cap {
+            return Err(fe(
+                "max_tokens",
+                format!("exceeds the server cap of {max_tokens_cap}"),
+            ));
+        }
+
+        let mut params = SamplingParams::greedy();
+        if let Some(v) = j.get("temperature") {
+            let t = v.as_f64().map_err(|_| fe("temperature", "must be a number"))?;
+            if !(0.0..=100.0).contains(&t) {
+                return Err(fe("temperature", "must be in [0, 100]"));
+            }
+            params.temperature = t;
+        }
+        if let Some(v) = j.get("top_k") {
+            params.top_k = v
+                .as_usize()
+                .map_err(|_| fe("top_k", "must be a non-negative integer"))?;
+        }
+        if let Some(v) = j.get("top_p") {
+            let p = v.as_f64().map_err(|_| fe("top_p", "must be a number"))?;
+            if !(p > 0.0 && p <= 1.0) {
+                return Err(fe("top_p", "must be in (0, 1]"));
+            }
+            params.top_p = p;
+        }
+        if let Some(v) = j.get("seed") {
+            params.seed = v
+                .as_usize()
+                .map_err(|_| fe("seed", "must be a non-negative integer"))?
+                as u64;
+        }
+
+        let timeout_steps = match j.get("timeout_steps") {
+            None => None,
+            Some(v) => {
+                let t = v
+                    .as_usize()
+                    .map_err(|_| fe("timeout_steps", "must be a non-negative integer"))?;
+                if t == 0 {
+                    return Err(fe("timeout_steps", "must be at least 1"));
+                }
+                Some(t)
+            }
+        };
+
+        let stream = match j.get("stream") {
+            None => false,
+            Some(v) => v.as_bool().map_err(|_| fe("stream", "must be a boolean"))?,
+        };
+
+        Ok(CompletionRequest { prompt, max_tokens, params, timeout_steps, stream })
+    }
+}
+
+/// The pinned `FinishReason` → HTTP status mapping (DESIGN.md §7): natural
+/// finishes are 200; every non-natural reason gets a distinct status so
+/// load-bench and operator tooling can separate overload (429) from
+/// deadline pressure (408), client disconnects (499), and quarantine
+/// (500) without parsing bodies.
+pub fn status_for(reason: &FinishReason) -> (u16, &'static str) {
+    match reason {
+        FinishReason::Stop | FinishReason::Length => (200, "OK"),
+        FinishReason::Rejected => (429, "Too Many Requests"),
+        FinishReason::DeadlineExceeded => (408, "Request Timeout"),
+        FinishReason::Cancelled => (499, "Client Closed Request"),
+        FinishReason::Failed { .. } => (500, "Internal Server Error"),
+    }
+}
+
+/// The completion body — identical for the non-streaming response and the
+/// final chunk of a streamed response (the reassembly contract
+/// `tests/http.rs` pins).
+pub fn completion_body(resp: &ServeResponse) -> String {
+    let toks = Json::Arr(resp.tokens.iter().map(|&t| json::n(t as f64)).collect());
+    let mut pairs = vec![
+        ("object", json::s("text_completion")),
+        ("finish_reason", json::s(resp.finish_reason.label())),
+        ("token_count", json::n(resp.tokens.len() as f64)),
+        ("tokens", toks),
+        ("retries", json::n(resp.retries as f64)),
+    ];
+    if let Some(e) = &resp.error {
+        pairs.push(("error", json::s(e.clone())));
+    }
+    json::obj(pairs).dump()
+}
+
+/// One streamed token chunk: `{"token":N}` + newline, one per
+/// `decode_step` arrival.
+pub fn token_chunk(tok: i32) -> String {
+    let mut s = json::obj(vec![("token", json::n(tok as f64))]).dump();
+    s.push('\n');
+    s
+}
+
+/// Structured error body: `{"error":{"type","field"?,"message"}}` —
+/// validation errors carry the offending field by name.
+pub fn error_body(kind: &str, field: Option<&str>, message: &str) -> String {
+    let mut pairs = vec![("type", json::s(kind))];
+    if let Some(f) = field {
+        pairs.push(("field", json::s(f)));
+    }
+    pairs.push(("message", json::s(message)));
+    json::obj(vec![("error", json::obj(pairs))]).dump()
+}
+
+/// The `GET /stats` body: router admission counters + the worker's
+/// serve-loop snapshot (pool occupancy, prefix-cache hit rate, plan
+/// provenance, SIMD tier).
+pub fn stats_body(ws: &WorkerStats, in_flight: usize, shed: usize) -> String {
+    let s = &ws.sched;
+    json::obj(vec![
+        ("in_flight", json::n(in_flight as f64)),
+        ("shed", json::n(shed as f64)),
+        ("queued", json::n(ws.queued as f64)),
+        ("active", json::n(ws.active as f64)),
+        (
+            "pool",
+            json::obj(vec![
+                ("used_blocks", json::n(ws.pool_used_blocks as f64)),
+                ("utilization", json::n(ws.pool_utilization)),
+                ("peak_utilization", json::n(s.pool_peak_util)),
+            ]),
+        ),
+        ("prefix_hit_rate", json::n(ws.prefix_hit_rate)),
+        (
+            "provenance",
+            match &ws.provenance {
+                Some(p) => json::s(p.clone()),
+                None => Json::Null,
+            },
+        ),
+        ("simd_tier", json::s(ws.simd_tier)),
+        (
+            "sched",
+            json::obj(vec![
+                ("steps", json::n(s.steps as f64)),
+                ("admitted", json::n(s.admitted as f64)),
+                ("completed", json::n(s.completed as f64)),
+                ("tokens_generated", json::n(s.tokens_generated as f64)),
+                ("preemptions", json::n(s.preemptions as f64)),
+                ("retries", json::n(s.retries as f64)),
+                ("quarantined", json::n(s.quarantined as f64)),
+                ("cancelled", json::n(s.cancelled as f64)),
+                ("deadline_expired", json::n(s.deadline_expired as f64)),
+                ("decode_tok_per_s", json::n(s.decode_tok_per_s())),
+            ]),
+        ),
+    ])
+    .dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The satellite fix's contract: every non-natural reason maps to a
+    /// distinct status; natural finishes are 200. Pinned value-by-value so
+    /// a remap is a deliberate test edit, not an accident.
+    #[test]
+    fn status_mapping_is_pinned() {
+        assert_eq!(status_for(&FinishReason::Stop), (200, "OK"));
+        assert_eq!(status_for(&FinishReason::Length), (200, "OK"));
+        assert_eq!(status_for(&FinishReason::Rejected), (429, "Too Many Requests"));
+        assert_eq!(status_for(&FinishReason::DeadlineExceeded), (408, "Request Timeout"));
+        assert_eq!(status_for(&FinishReason::Cancelled), (499, "Client Closed Request"));
+        assert_eq!(
+            status_for(&FinishReason::Failed { retries: 3 }),
+            (500, "Internal Server Error")
+        );
+        // distinctness across the non-natural taxonomy
+        let codes = [
+            status_for(&FinishReason::Rejected).0,
+            status_for(&FinishReason::DeadlineExceeded).0,
+            status_for(&FinishReason::Cancelled).0,
+            status_for(&FinishReason::Failed { retries: 0 }).0,
+        ];
+        for i in 0..codes.len() {
+            for j in i + 1..codes.len() {
+                assert_ne!(codes[i], codes[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_labels_are_pinned() {
+        assert_eq!(FinishReason::Stop.label(), "stop");
+        assert_eq!(FinishReason::Length.label(), "length");
+        assert_eq!(FinishReason::Cancelled.label(), "cancelled");
+        assert_eq!(FinishReason::DeadlineExceeded.label(), "deadline_exceeded");
+        assert_eq!(FinishReason::Rejected.label(), "rejected");
+        assert_eq!(FinishReason::Failed { retries: 1 }.label(), "failed");
+    }
+
+    #[test]
+    fn validation_names_the_offending_field() {
+        let cases: &[(&str, &str)] = &[
+            (r#"{"prompt":[1,2]}"#, "max_tokens"),
+            (r#"{"max_tokens":4,"prompt":"hi"}"#, "prompt"),
+            (r#"{"max_tokens":4,"prompt":[1,999]}"#, "prompt"),
+            (r#"{"max_tokens":4,"prompt":[-3]}"#, "prompt"),
+            (r#"{"max_tokens":4,"stream":"yes"}"#, "stream"),
+            (r#"{"max_tokens":4,"top_p":0}"#, "top_p"),
+            (r#"{"max_tokens":4,"top_p":1.5}"#, "top_p"),
+            (r#"{"max_tokens":4,"temperature":-1}"#, "temperature"),
+            (r#"{"max_tokens":4,"timeout_steps":0}"#, "timeout_steps"),
+            (r#"{"max_tokens":4,"seed":1.5}"#, "seed"),
+            (r#"{"max_tokens":9999}"#, "max_tokens"),
+            (r#"{"max_tokens":4,"best_of":2}"#, "best_of"),
+            (r#"not json"#, "body"),
+            (r#"[1,2,3]"#, "body"),
+        ];
+        for (body, field) in cases {
+            let err = CompletionRequest::parse(body.as_bytes(), 64, 128)
+                .expect_err(&format!("`{body}` must fail"));
+            assert_eq!(&err.field, field, "body `{body}`");
+        }
+    }
+
+    #[test]
+    fn valid_request_round_trips() {
+        let body = r#"{"prompt":[3,1,4],"max_tokens":8,"temperature":0.7,"top_k":5,"top_p":0.9,"seed":42,"timeout_steps":100,"stream":true}"#;
+        let r = CompletionRequest::parse(body.as_bytes(), 64, 128).expect("valid");
+        assert_eq!(r.prompt, vec![3, 1, 4]);
+        assert_eq!(r.max_tokens, 8);
+        assert_eq!(r.params.temperature, 0.7);
+        assert_eq!(r.params.top_k, 5);
+        assert_eq!(r.params.top_p, 0.9);
+        assert_eq!(r.params.seed, 42);
+        assert_eq!(r.timeout_steps, Some(100));
+        assert!(r.stream);
+        // defaults: greedy params, no deadline, non-streaming
+        let r = CompletionRequest::parse(br#"{"max_tokens":0}"#, 64, 128).expect("valid");
+        assert!(r.prompt.is_empty());
+        assert_eq!(r.params, SamplingParams::greedy());
+        assert_eq!(r.timeout_steps, None);
+        assert!(!r.stream);
+    }
+
+    #[test]
+    fn completion_body_parses_back() {
+        let resp = ServeResponse {
+            tokens: vec![7, 8, 9],
+            finish_reason: FinishReason::Stop,
+            retries: 0,
+            error: None,
+            decode_tok_per_s: 123.4,
+        };
+        let j = json::parse(&completion_body(&resp)).expect("valid json");
+        assert_eq!(j.req("finish_reason").unwrap().as_str().unwrap(), "stop");
+        assert_eq!(j.req("token_count").unwrap().as_usize().unwrap(), 3);
+        let toks: Vec<i32> = j
+            .req("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_usize().unwrap() as i32)
+            .collect();
+        assert_eq!(toks, vec![7, 8, 9]);
+        // the throughput figure is engine-wide and run-varying — it must
+        // NOT appear in the body (byte-identical responses across runs)
+        assert!(j.get("decode_tok_per_s").is_none());
+        let chunk = token_chunk(7);
+        let j = json::parse(chunk.trim()).expect("chunk json");
+        assert_eq!(j.req("token").unwrap().as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn error_body_names_field() {
+        let j = json::parse(&error_body("invalid_request_error", Some("max_tokens"), "required"))
+            .unwrap();
+        let e = j.req("error").unwrap();
+        assert_eq!(e.req("field").unwrap().as_str().unwrap(), "max_tokens");
+        assert_eq!(e.req("type").unwrap().as_str().unwrap(), "invalid_request_error");
+    }
+}

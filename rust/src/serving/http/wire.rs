@@ -1,0 +1,244 @@
+//! Wire-level HTTP/1.1 framing: a bounded request reader, plain and
+//! chunked response writers, and a minimal loopback client (used by
+//! `tests/http.rs` and `benches/fig_http.rs` — the client preserves chunk
+//! boundaries, which carry the one-chunk-per-decode-step framing the
+//! streaming tests pin).
+//!
+//! Deliberately minimal: `Connection: close` (one request per
+//! connection), `Content-Length` bodies only on the way in, identity or
+//! chunked on the way out. Both caps ([`super::HttpCfg::max_header_bytes`],
+//! [`super::HttpCfg::max_body_bytes`]) are enforced *before* any work is
+//! scheduled, so malformed or oversized requests never touch the engine.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// A parsed inbound request (head + body, bounded).
+#[derive(Debug)]
+pub struct RawRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why [`read_request`] produced no request.
+#[derive(Debug)]
+pub enum WireError {
+    /// Peer closed (or reset) before a full head arrived — nothing to
+    /// answer.
+    Closed,
+    /// Unparseable request line / headers / body framing → 400.
+    Malformed(String),
+    /// Declared or actual size over a cap → 400, connection dropped
+    /// without reading the rest.
+    TooLarge(String),
+}
+
+fn header_value<'a>(head: &'a str, name: &str) -> Option<&'a str> {
+    head.lines().skip(1).find_map(|l| {
+        let (k, v) = l.split_once(':')?;
+        k.trim().eq_ignore_ascii_case(name).then(|| v.trim())
+    })
+}
+
+/// Read one request off the socket: head until `\r\n\r\n` (capped), then
+/// exactly `Content-Length` body bytes (capped). The declared length is
+/// checked against the cap *before* the body is read.
+pub fn read_request(
+    stream: &mut TcpStream,
+    max_header: usize,
+    max_body: usize,
+) -> Result<RawRequest, WireError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(p) = find_head_end(&buf) {
+            break p;
+        }
+        if buf.len() > max_header {
+            return Err(WireError::TooLarge(format!(
+                "request head exceeds {max_header} bytes"
+            )));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return match buf.is_empty() {
+                    true => Err(WireError::Closed),
+                    false => Err(WireError::Malformed("truncated request head".into())),
+                }
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(WireError::Malformed(format!("read failed: {e}"))),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| WireError::Malformed("request head is not utf-8".into()))?
+        .to_string();
+    let mut line = head.lines().next().unwrap_or("").split_whitespace();
+    let (method, path, version) = match (line.next(), line.next(), line.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
+        _ => return Err(WireError::Malformed("bad request line".into())),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(WireError::Malformed(format!("unsupported version `{version}`")));
+    }
+    let clen = match header_value(&head, "content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| WireError::Malformed(format!("bad content-length `{v}`")))?,
+    };
+    if clen > max_body {
+        return Err(WireError::TooLarge(format!(
+            "declared body of {clen} bytes exceeds the {max_body}-byte cap"
+        )));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < clen {
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(WireError::Malformed("truncated request body".into())),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(WireError::Malformed(format!("read failed: {e}"))),
+        }
+    }
+    if body.len() > clen {
+        // pipelining is out of contract (`Connection: close`)
+        return Err(WireError::Malformed("body longer than content-length".into()));
+    }
+    Ok(RawRequest { method, path, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write a complete identity-framed JSON response and flush.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Commit a chunked 200 response: header out, status pinned. Callers
+/// defer this until the first token arrives so an empty-handed
+/// non-natural finish can still get its mapped status code.
+pub fn start_chunked(stream: &mut TcpStream) -> std::io::Result<()> {
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    stream.write_all(head.as_bytes())?;
+    stream.flush()
+}
+
+/// One size-prefixed protocol chunk (the framing unit the client
+/// reassembles — never split or merged by TCP segmentation).
+pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+/// The zero-length terminal chunk.
+pub fn finish_chunked(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+// ---------- loopback client (tests + load bench) ----------
+
+/// A client-side response: status, raw body, and — for chunked responses —
+/// the protocol chunks in arrival order (`body` is their concatenation).
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+    /// `Some` iff the response was chunked; one entry per protocol chunk.
+    pub chunks: Option<Vec<Vec<u8>>>,
+}
+
+/// Issue one request and read the full response (blocking).
+pub fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> crate::Result<ClientResponse> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| crate::anyhow!("connect {addr}: {e}"))?;
+    send_request(&mut stream, method, path, body)?;
+    read_response(&mut stream)
+}
+
+/// Write a request head + optional body on an already-open connection.
+pub fn send_request(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> crate::Result<()> {
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body.as_bytes()))
+        .and_then(|_| stream.flush())
+        .map_err(|e| crate::anyhow!("send {method} {path}: {e}"))
+}
+
+/// Read a full response off the socket, decoding chunked framing (chunk
+/// boundaries preserved) or `Content-Length` identity bodies.
+pub fn read_response(stream: &mut TcpStream) -> crate::Result<ClientResponse> {
+    let mut buf = Vec::new();
+    stream
+        .read_to_end(&mut buf)
+        .map_err(|e| crate::anyhow!("read response: {e}"))?;
+    let head_end = find_head_end(&buf)
+        .ok_or_else(|| crate::anyhow!("no header terminator in response"))?;
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| crate::anyhow!("response head is not utf-8"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| crate::anyhow!("bad status line `{}`", head.lines().next().unwrap_or("")))?;
+    let rest = &buf[head_end + 4..];
+    let chunked = header_value(head, "transfer-encoding")
+        .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    if !chunked {
+        return Ok(ClientResponse { status, body: rest.to_vec(), chunks: None });
+    }
+    let mut chunks = Vec::new();
+    let mut i = 0usize;
+    loop {
+        let line_end = rest[i..]
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .ok_or_else(|| crate::anyhow!("truncated chunk size line"))?;
+        let size_str = std::str::from_utf8(&rest[i..i + line_end])
+            .map_err(|_| crate::anyhow!("chunk size is not utf-8"))?;
+        let size = usize::from_str_radix(size_str.trim(), 16)
+            .map_err(|_| crate::anyhow!("bad chunk size `{size_str}`"))?;
+        i += line_end + 2;
+        if size == 0 {
+            break;
+        }
+        if i + size + 2 > rest.len() {
+            return Err(crate::anyhow!("truncated chunk body"));
+        }
+        chunks.push(rest[i..i + size].to_vec());
+        i += size + 2;
+    }
+    let body = chunks.concat();
+    Ok(ClientResponse { status, body, chunks: Some(chunks) })
+}

@@ -29,10 +29,17 @@
 //! sheds load past a configurable queue depth, and a seeded
 //! [`FaultPlan`] (`faults.rs`, `ARA_FAULT_PLAN`) drives the chaos-testing
 //! harness (`tests/chaos.rs`, `benches/fig_chaos.rs`).
+//!
+//! The wire protocol (DESIGN.md §7) is the outermost layer: `http/` is a
+//! std-only HTTP/1.1 front end over the [`Router`] — OpenAI-style
+//! `POST /v1/completions` with chunked per-step token streaming,
+//! `GET /healthz`, and `GET /stats` — mapping the typed taxonomy onto
+//! status codes (429 shed, 408 deadline, 499 disconnect, 500 quarantine).
 
 mod batcher;
 mod engine;
 mod faults;
+pub mod http;
 mod kvpool;
 mod router;
 mod sampler;
@@ -41,8 +48,9 @@ mod scheduler;
 pub use batcher::{BatchPlan, DynamicBatcher};
 pub use engine::{Engine, FinishReason, GenStats};
 pub use faults::{FaultEvent, FaultKind, FaultPlan};
+pub use http::{HttpCfg, HttpServer, ShutdownHandle};
 pub use kvpool::{KvPool, KvPoolCfg, PoolStats, PrefixHit};
-pub use router::{Router, RouterCfg, ServeRequest, ServeResponse};
+pub use router::{Router, RouterCfg, ServeRequest, ServeResponse, WorkerStats};
 pub use sampler::{argmax, Sampler, SamplingParams};
 pub use scheduler::{
     CancelToken, Completion, Request, SchedCfg, SchedStats, Scheduler, NO_SLOT,

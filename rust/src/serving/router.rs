@@ -37,6 +37,10 @@ pub struct ServeRequest {
     pub deadline_steps: Option<usize>,
     /// Optional cooperative cancellation token.
     pub cancel: Option<CancelToken>,
+    /// Optional per-token streaming sink (see [`Request::stream`]): each
+    /// sampled token is delivered the scheduler step it is produced, and
+    /// the final [`ServeResponse`] still carries the complete stream.
+    pub stream: Option<mpsc::Sender<i32>>,
 }
 
 /// One generation response. Every submitted request receives exactly one —
@@ -96,7 +100,32 @@ impl RouterCfg {
 
 enum Msg {
     Req(ServeRequest, mpsc::Sender<ServeResponse>),
+    /// Snapshot the worker's serve-loop state (scheduler + pool + engine
+    /// provenance) into the sender — the `GET /stats` round-trip.
+    Stats(mpsc::Sender<WorkerStats>),
     Shutdown,
+}
+
+/// Point-in-time snapshot of the worker's serve loop, taken between
+/// scheduler steps (so the counters are mutually consistent).
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    /// Full scheduler counters (see [`super::SchedStats`]).
+    pub sched: super::SchedStats,
+    /// KV-pool blocks currently allocated (scratch block included).
+    pub pool_used_blocks: usize,
+    /// Fraction of allocatable pool blocks in use, in [0, 1].
+    pub pool_utilization: f64,
+    /// Prefix-cache hit rate over admission lookups, in [0, 1].
+    pub prefix_hit_rate: f64,
+    /// Compression-plan provenance line baked into the engine, if any.
+    pub provenance: Option<String>,
+    /// SIMD dispatch tier the engine's kernels run on.
+    pub simd_tier: &'static str,
+    /// Requests waiting for a slot on the worker right now.
+    pub queued: usize,
+    /// Requests actively decoding on the worker right now.
+    pub active: usize,
 }
 
 /// Router handle: submit requests, receive responses.
@@ -187,8 +216,21 @@ impl Router {
                                 params: r.params,
                                 deadline_steps: r.deadline_steps,
                                 cancel: r.cancel,
+                                stream: r.stream,
                             });
                             replies.insert(id, reply);
+                        }
+                        Msg::Stats(reply) => {
+                            let _ = reply.send(WorkerStats {
+                                sched: sched.stats().clone(),
+                                pool_used_blocks: sched.pool().used_blocks(),
+                                pool_utilization: sched.pool().utilization(),
+                                prefix_hit_rate: sched.stats().prefix_hit_rate(),
+                                provenance: engine.provenance().map(str::to_string),
+                                simd_tier: crate::kernels::active_tier().name(),
+                                queued: sched.queued(),
+                                active: sched.active(),
+                            });
                         }
                         Msg::Shutdown => shutdown = true,
                     }
@@ -302,6 +344,35 @@ impl Router {
     /// Requests shed with `Rejected` since spawn.
     pub fn shed(&self) -> usize {
         self.shed.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot the worker's serve-loop state (scheduler counters, pool
+    /// occupancy, engine provenance). Blocks for one channel round-trip —
+    /// the worker answers between scheduler steps. `Err` when the worker
+    /// is gone.
+    pub fn worker_stats(&self) -> Result<WorkerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(tx))
+            .map_err(|_| crate::anyhow!("router worker is gone (engine thread exited)"))?;
+        rx.recv().map_err(|_| {
+            crate::anyhow!("router worker exited without answering stats probe")
+        })
+    }
+
+    /// Shut down and join the worker, surfacing a worker panic as `Err`
+    /// instead of swallowing it the way `Drop` must. The debug-build KV
+    /// leak check lives in the scheduler's `Drop` on the worker thread —
+    /// callers that care about it (the `serve` subcommand, the e2e gate)
+    /// must use `join` so a tripped check fails the process.
+    pub fn join(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        match self.worker.take() {
+            Some(w) => w.join().map_err(|_| {
+                crate::anyhow!("router worker panicked during shutdown (leak check?)")
+            }),
+            None => Ok(()),
+        }
     }
 }
 

@@ -96,6 +96,13 @@ pub struct Request {
     pub deadline_steps: Option<usize>,
     /// Cooperative cancellation (`None` means not cancellable).
     pub cancel: Option<CancelToken>,
+    /// Per-token streaming sink: each sampled token is sent here the step
+    /// it is produced (the HTTP layer's chunk-per-`decode_step` feed). A
+    /// high-water mark rides retries/preemptions, so a restarted request
+    /// — which regenerates a bitwise-identical stream — never re-sends a
+    /// token already delivered. A gone receiver is ignored (disconnects
+    /// are signalled through [`CancelToken`], not the sink).
+    pub stream: Option<std::sync::mpsc::Sender<i32>>,
 }
 
 /// Scheduler resilience knobs.
@@ -221,6 +228,9 @@ struct Pending {
     submit_step: usize,
     /// Fault hits so far (capacity preemptions don't count).
     retries: u32,
+    /// Tokens already delivered to `req.stream` (high-water mark across
+    /// retries: a restarted request skips re-sending this prefix).
+    streamed: usize,
 }
 
 struct Active {
@@ -242,6 +252,8 @@ struct Active {
     started: Instant,
     submit_step: usize,
     retries: u32,
+    /// Tokens already delivered to `req.stream` (see [`Pending::streamed`]).
+    streamed: usize,
 }
 
 /// One planned admission (capacity already secured).
@@ -319,6 +331,7 @@ impl<'e> Scheduler<'e> {
             submitted: Instant::now(),
             submit_step: self.stats.steps,
             retries: 0,
+            streamed: 0,
         });
         id
     }
@@ -607,6 +620,7 @@ impl<'e> Scheduler<'e> {
                 started: t0,
                 submit_step: pending.submit_step,
                 retries: pending.retries,
+                streamed: pending.streamed,
                 req: pending.req,
             };
             self.stats.admitted += 1;
@@ -617,6 +631,7 @@ impl<'e> Scheduler<'e> {
             let tok = act.sampler.sample(&row);
             act.last = tok;
             act.tokens.push(tok);
+            Self::emit_stream(&mut act);
             self.stats.tokens_generated += 1;
             self.stats.prefill_sampled += 1;
             match self.finish_reason(&act) {
@@ -678,7 +693,21 @@ impl<'e> Scheduler<'e> {
             submitted: a.submitted,
             submit_step: a.submit_step,
             retries: a.retries,
+            streamed: a.streamed,
         });
+    }
+
+    /// Deliver newly sampled tokens to the request's streaming sink, if
+    /// any. The `streamed` high-water mark makes this idempotent across
+    /// retries: a restarted request regenerates a bitwise-identical
+    /// prefix, so positions below the mark are skipped, never re-sent.
+    fn emit_stream(a: &mut Active) {
+        if let Some(sink) = &a.req.stream {
+            while a.streamed < a.tokens.len() {
+                let _ = sink.send(a.tokens[a.streamed]);
+                a.streamed += 1;
+            }
+        }
     }
 
     fn decode(&mut self, done: &mut Vec<Completion>) -> Result<()> {
@@ -733,6 +762,7 @@ impl<'e> Scheduler<'e> {
             let tok = a.sampler.sample(row);
             a.last = tok;
             a.tokens.push(tok);
+            Self::emit_stream(&mut a);
             self.stats.tokens_generated += 1;
             match self.finish_reason(&a) {
                 Some(reason) => done.push(self.complete(a, reason)),
@@ -880,9 +910,19 @@ impl<'e> Scheduler<'e> {
         }
         // reverse id order + push_front ⇒ oldest request restarts first
         for a in actives.into_iter().rev() {
-            let Active { id, req, submitted, submit_step, retries, tokens, slot, started, .. } =
-                a;
-            let p = Pending { id, req, submitted, submit_step, retries };
+            let Active {
+                id,
+                req,
+                submitted,
+                submit_step,
+                retries,
+                streamed,
+                tokens,
+                slot,
+                started,
+                ..
+            } = a;
+            let p = Pending { id, req, submitted, submit_step, retries, streamed };
             self.retry_or_quarantine(p, tokens, slot, Some(started), done);
         }
     }

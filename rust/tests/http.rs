@@ -1,0 +1,279 @@
+//! Integration tests for the HTTP serving front end (DESIGN.md §7) over a
+//! real loopback socket: field-naming validation errors, the streaming ↔
+//! non-streaming reassembly contract, disconnect-mid-stream cancellation
+//! (KV blocks freed — the worker-side `assert_balanced` leak check runs
+//! in the scheduler's debug-build `Drop` when the server joins the router
+//! at shutdown), and malformed/oversized bodies refused without touching
+//! the scheduler.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use ara_compress::coordinator::Pipeline;
+use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::json::{self, Json};
+use ara_compress::serving::http::wire::{http_call, send_request};
+use ara_compress::serving::{HttpCfg, HttpServer, Router, RouterCfg, ShutdownHandle};
+
+fn pipeline() -> Pipeline {
+    let mut pl = Pipeline::new("micro-llama").expect("pipeline (cpu backend needs no artifacts)");
+    pl.scalecfg.pretrain_steps = std::env::var("ARA_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    pl.scalecfg.calib_batches = 2;
+    pl
+}
+
+/// Launch a full server (engine on the router worker) on a free loopback
+/// port. The returned join handle yields `HttpServer::run`'s result — an
+/// `Err` after shutdown means the worker panicked, which in these
+/// debug-assertion builds includes a tripped KV-pool leak check.
+fn start_server(
+    cfg: HttpCfg,
+) -> (String, ShutdownHandle, std::thread::JoinHandle<ara_compress::Result<()>>) {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let pl = pipeline();
+    let vocab = pl.cfg.vocab;
+    let router = Router::spawn_with(RouterCfg { queue_depth: 8, ..RouterCfg::default() }, move || {
+        // serialize the train-or-load step against the shared disk cache
+        // (same pattern as tests/chaos.rs)
+        let _guard = LOCK.lock().unwrap();
+        let ws = pl.pretrained().expect("pretrain substrate");
+        let grams = pl.grams(&ws).expect("calibrate");
+        let fm = pl.factored(&ws, &grams).expect("factorize");
+        pl.engine(&ws, &fm, "uniform-80", 2).expect("engine")
+    });
+    let server = HttpServer::bind("127.0.0.1:0", router, vocab, cfg).expect("bind loopback");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, stop, handle)
+}
+
+fn prompt_tokens(n: usize, seed: u64) -> Vec<i32> {
+    generate_tokens(256, corpus_spec("synwiki"), seed, n.max(16))[..n].to_vec()
+}
+
+fn completion_json(prompt: &[i32], max_tokens: usize, extra: &str) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(r#"{{"prompt":[{}],"max_tokens":{max_tokens}{extra}}}"#, toks.join(","))
+}
+
+fn stats(addr: &str) -> Json {
+    let r = http_call(addr, "GET", "/stats", None).expect("stats call");
+    assert_eq!(r.status, 200);
+    json::parse(std::str::from_utf8(&r.body).unwrap()).expect("stats json")
+}
+
+fn sched_counter(st: &Json, key: &str) -> usize {
+    st.req("sched").unwrap().req(key).unwrap().as_usize().unwrap()
+}
+
+/// Validation errors carry the offending field by name; malformed and
+/// oversized bodies get 400 before the scheduler sees anything (pinned
+/// via the `/stats` counters afterwards). Routes answer 404/405 typed.
+#[test]
+fn validation_errors_name_fields_and_never_touch_the_scheduler() {
+    let cfg = HttpCfg { max_body_bytes: 2048, ..HttpCfg::default() };
+    let (addr, stop, server) = start_server(cfg);
+
+    let cases: &[(&str, &str)] = &[
+        (r#"{"prompt":[1,2]}"#, "max_tokens"),
+        (r#"{"max_tokens":4,"prompt":"hi"}"#, "prompt"),
+        (r#"{"max_tokens":4,"prompt":[999]}"#, "prompt"),
+        (r#"{"max_tokens":4,"stream":"yes"}"#, "stream"),
+        (r#"{"max_tokens":4,"best_of":2}"#, "best_of"),
+        (r#"{"max_tokens":4,"timeout_steps":0}"#, "timeout_steps"),
+        ("this is not json", "body"),
+    ];
+    for (body, field) in cases {
+        let r = http_call(&addr, "POST", "/v1/completions", Some(body)).expect("call");
+        assert_eq!(r.status, 400, "`{body}` must be refused");
+        let j = json::parse(std::str::from_utf8(&r.body).unwrap()).expect("error json");
+        let e = j.req("error").expect("structured error");
+        assert_eq!(
+            e.req("field").unwrap().as_str().unwrap(),
+            *field,
+            "`{body}` must name the offending field"
+        );
+    }
+
+    // oversized: the declared length alone gets the request refused
+    let huge = completion_json(&vec![1; 4096], 4, "");
+    assert!(huge.len() > 2048);
+    let r = http_call(&addr, "POST", "/v1/completions", Some(&huge)).expect("call");
+    assert_eq!(r.status, 400, "oversized body must be refused");
+
+    // unknown route and wrong method
+    let r = http_call(&addr, "GET", "/v2/nope", None).expect("call");
+    assert_eq!(r.status, 404);
+    let r = http_call(&addr, "GET", "/v1/completions", None).expect("call");
+    assert_eq!(r.status, 405);
+
+    // none of the above ever reached the scheduler
+    let st = stats(&addr);
+    assert_eq!(sched_counter(&st, "admitted"), 0, "scheduler must be untouched");
+    assert_eq!(sched_counter(&st, "completed"), 0);
+    assert_eq!(st.req("in_flight").unwrap().as_usize().unwrap(), 0);
+
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
+}
+
+/// The reassembly contract: a streamed completion's token chunks parse to
+/// exactly the non-streaming token array, and its final chunk is
+/// byte-identical to the whole non-streaming body. Greedy requests are
+/// also byte-identical across repeat runs (determinism over the wire).
+#[test]
+fn streaming_chunks_reassemble_to_the_non_streaming_body() {
+    let (addr, stop, server) = start_server(HttpCfg::default());
+    let body = completion_json(&prompt_tokens(5, 4242), 6, "");
+
+    let plain = http_call(&addr, "POST", "/v1/completions", Some(&body)).expect("plain call");
+    assert_eq!(plain.status, 200);
+    assert!(plain.chunks.is_none(), "non-streaming must be identity-framed");
+    let j = json::parse(std::str::from_utf8(&plain.body).unwrap()).expect("completion json");
+    assert_eq!(j.req("finish_reason").unwrap().as_str().unwrap(), "stop");
+    let want: Vec<i64> = j
+        .req("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i64)
+        .collect();
+    assert_eq!(want.len(), 6);
+
+    let streamed_body = completion_json(&prompt_tokens(5, 4242), 6, r#","stream":true"#);
+    let streamed =
+        http_call(&addr, "POST", "/v1/completions", Some(&streamed_body)).expect("stream call");
+    assert_eq!(streamed.status, 200);
+    let chunks = streamed.chunks.expect("streaming must be chunked");
+    assert_eq!(chunks.len(), want.len() + 1, "one chunk per token + the final body");
+    let got: Vec<i64> = chunks[..want.len()]
+        .iter()
+        .map(|c| {
+            let j = json::parse(std::str::from_utf8(c).unwrap().trim()).expect("token chunk");
+            j.req("token").unwrap().as_f64().unwrap() as i64
+        })
+        .collect();
+    assert_eq!(got, want, "streamed tokens must reassemble to the response array");
+    assert_eq!(
+        chunks.last().unwrap(),
+        &plain.body,
+        "the final chunk must be byte-identical to the non-streaming body"
+    );
+
+    // run-to-run determinism of the full body, greedy over the wire
+    let again = http_call(&addr, "POST", "/v1/completions", Some(&body)).expect("repeat call");
+    assert_eq!(again.status, 200);
+    assert_eq!(again.body, plain.body, "greedy completions must be byte-identical");
+
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
+}
+
+/// Disconnecting mid-stream trips the request's cancel token: the
+/// scheduler completes it `Cancelled` and frees its slot and KV blocks.
+/// The block accounting is then proven twice — live via `/stats`
+/// (`used_blocks` back to zero with no prefix cache on this path's
+/// cancelled chain) and at shutdown, where the debug-build
+/// `assert_balanced` leak check runs in the worker's scheduler `Drop` and
+/// would fail `HttpServer::run` on any leak.
+#[test]
+fn disconnect_mid_stream_cancels_and_frees_blocks() {
+    let (addr, stop, server) = start_server(HttpCfg::default());
+    // long request: ~40 decode steps of runway after the first chunk
+    let body = completion_json(&prompt_tokens(6, 777), 40, r#","stream":true"#);
+
+    let mut raw = TcpStream::connect(&addr).expect("connect");
+    send_request(&mut raw, "POST", "/v1/completions", Some(&body)).expect("send");
+    // read just past the response head (written with the first token),
+    // then vanish — the handler's next peek sees EOF and cancels
+    raw.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut seen = Vec::new();
+    let mut buf = [0u8; 256];
+    while !seen.windows(4).any(|w| w == b"\r\n\r\n") {
+        let n = raw.read(&mut buf).expect("response head");
+        assert!(n > 0, "server closed before streaming started");
+        seen.extend_from_slice(&buf[..n]);
+    }
+    assert!(seen.starts_with(b"HTTP/1.1 200"), "stream must have started");
+    drop(raw);
+
+    // the cancellation lands at a step boundary; poll the public surface
+    let t0 = Instant::now();
+    loop {
+        let st = stats(&addr);
+        // the admission slot releases one handler-turn after the counter
+        // ticks — require both before declaring the request fully gone
+        if sched_counter(&st, "cancelled") == 1
+            && st.req("in_flight").unwrap().as_usize().unwrap() == 0
+        {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "disconnect was never converted into a cancellation; stats: {}",
+            st.dump()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // clean shutdown runs the worker-side KV leak check (assert_balanced
+    // in the scheduler's Drop) — a leaked block fails the join
+    stop.shutdown();
+    server.join().expect("server thread").expect("no leaked KV blocks at shutdown");
+}
+
+/// A `timeout_steps` deadline and admission shedding surface as their
+/// mapped statuses (408 / 429) with typed bodies — the fix satellite's
+/// wire-visible half (the unit mapping itself is pinned in
+/// `serving::http::types`).
+#[test]
+fn deadline_and_shed_map_to_distinct_statuses() {
+    let (addr, stop, server) = start_server(HttpCfg::default());
+
+    // warm the engine so the deadline request's steps are all decode
+    let warm = completion_json(&prompt_tokens(4, 31), 2, "");
+    let r = http_call(&addr, "POST", "/v1/completions", Some(&warm)).expect("warm call");
+    assert_eq!(r.status, 200);
+
+    // a 1-step budget cannot cover a 24-token generation → 408
+    let doomed = completion_json(&prompt_tokens(6, 32), 24, r#","timeout_steps":1"#);
+    let r = http_call(&addr, "POST", "/v1/completions", Some(&doomed)).expect("deadline call");
+    let body_text = String::from_utf8_lossy(&r.body).to_string();
+    assert_eq!(r.status, 408, "DeadlineExceeded must map to 408; body: {body_text}");
+    let j = json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+    assert_eq!(j.req("finish_reason").unwrap().as_str().unwrap(), "deadline_exceeded");
+
+    // burst past queue_depth (8): the overflow sheds with 429 and the
+    // rejected bodies carry the typed reason
+    let burst: Vec<_> = (0..24)
+        .map(|i| {
+            let addr = addr.clone();
+            let body = completion_json(&prompt_tokens(5, 100 + i), 12, "");
+            std::thread::spawn(move || {
+                http_call(&addr, "POST", "/v1/completions", Some(&body)).expect("burst call")
+            })
+        })
+        .collect();
+    let mut codes = Vec::new();
+    for h in burst {
+        let r = h.join().expect("burst thread");
+        if r.status == 429 {
+            let j = json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+            assert_eq!(j.req("finish_reason").unwrap().as_str().unwrap(), "rejected");
+            assert_eq!(j.req("token_count").unwrap().as_usize().unwrap(), 0);
+        }
+        codes.push(r.status);
+    }
+    assert!(codes.iter().all(|c| *c == 200 || *c == 429), "burst statuses: {codes:?}");
+    assert!(codes.contains(&429), "a 24-deep burst over depth 8 must shed");
+
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
+}
