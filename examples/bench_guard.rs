@@ -1,10 +1,12 @@
 //! Bench-health guard: parse the machine-readable bench baselines
-//! (`BENCH_PR2.json` … `BENCH_PR8.json`) with the in-crate JSON parser
+//! (`BENCH_PR2.json` … `BENCH_PR9.json`) with the in-crate JSON parser
 //! and exit non-zero when a required key is missing, non-numeric,
 //! non-finite — or out of range: rate/utilization keys must lie in
 //! [0, 1], achieved compression ratios in (0, 1], wall-clock keys must be
-//! ≥ 0, and native-SIMD speedups must be ≥ 1 in real baselines. Replaces
-//! the brittle `grep` checks the CI `bench-smoke` job used to run.
+//! ≥ 0, speedups (native SIMD over scalar, speculative over plain decode)
+//! must be ≥ 1 in real baselines, and bespoke-bounded keys such as
+//! `accepted_per_verify` must lie in [0, k]. Replaces the brittle `grep`
+//! checks the CI `bench-smoke` job used to run.
 //!
 //!   cargo run --release --example bench_guard            # real baselines
 //!   cargo run --release --example bench_guard -- --smoke # CI smoke run
@@ -25,8 +27,12 @@ struct Check {
     ratio_keys: Vec<String>,
     /// Keys that must be ≥ 0 (wall-clock durations, counts).
     pos_keys: Vec<String>,
-    /// Keys that must be ≥ 1 (speedup ratios: native SIMD over scalar).
+    /// Keys that must be ≥ 1 (speedup ratios: native SIMD over scalar,
+    /// speculative over plain decode — real baselines only).
     min_one_keys: Vec<String>,
+    /// Keys with a bespoke inclusive upper bound: `(key, max)` must lie
+    /// in [0, max] (e.g. `accepted_per_verify` ∈ [0, k]).
+    bounded_keys: Vec<(String, f64)>,
 }
 
 fn required(smoke: bool) -> Vec<Check> {
@@ -159,6 +165,35 @@ fn required(smoke: bool) -> Vec<Check> {
             http_pos.push(format!("{r}_{m}"));
         }
     }
+    // fig_specdec (PR 9): self-speculative decoding over the compression
+    // ladder. accept_rate is a fraction in [0, 1]; accepted_per_verify is
+    // bounded by the draft length k; throughputs must be ≥ 0. The
+    // spec/plain speedup must be ≥ 1 in real baselines only — smoke
+    // timings are single-iteration noise, so smoke just requires the key
+    // to exist and be finite (the bitwise-identity contract itself is
+    // pinned by the bench's claims and tests/specdec.rs, not the guard).
+    let spec_grid: &[(&str, usize)] = if smoke {
+        &[("uniform-40", 2)]
+    } else {
+        &[("uniform-40", 2), ("uniform-40", 4), ("ara-40", 2), ("ara-40", 4)]
+    };
+    let mut spec_keys = vec![s("plain_tok_s")];
+    let mut spec_unit = Vec::new();
+    let mut spec_pos = vec![s("plain_tok_s")];
+    let mut spec_min_one = Vec::new();
+    let mut spec_bounded = Vec::new();
+    for (d, k) in spec_grid {
+        spec_keys.push(format!("{d}_k{k}_tok_s"));
+        spec_pos.push(format!("{d}_k{k}_tok_s"));
+        spec_keys.push(format!("{d}_k{k}_speedup"));
+        if !smoke {
+            spec_min_one.push(format!("{d}_k{k}_speedup"));
+        }
+        spec_keys.push(format!("{d}_k{k}_accepted_per_verify"));
+        spec_bounded.push((format!("{d}_k{k}_accepted_per_verify"), *k as f64));
+        spec_keys.push(format!("{d}_k{k}_accept_rate"));
+        spec_unit.push(format!("{d}_k{k}_accept_rate"));
+    }
     let none: Vec<String> = Vec::new();
     vec![
         Check {
@@ -169,6 +204,7 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
             min_one_keys: none.clone(),
+            bounded_keys: Vec::new(),
         },
         Check {
             file: "BENCH_PR2.json",
@@ -178,6 +214,7 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
             min_one_keys: none.clone(),
+            bounded_keys: Vec::new(),
         },
         Check {
             file: "BENCH_PR3.json",
@@ -187,6 +224,7 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
             min_one_keys: none.clone(),
+            bounded_keys: Vec::new(),
         },
         Check {
             file: "BENCH_PR4.json",
@@ -196,6 +234,7 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
             min_one_keys: none.clone(),
+            bounded_keys: Vec::new(),
         },
         Check {
             file: "BENCH_PR5.json",
@@ -205,6 +244,7 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: sweep_ratio,
             pos_keys: sweep_pos,
             min_one_keys: none.clone(),
+            bounded_keys: Vec::new(),
         },
         Check {
             file: "BENCH_PR6.json",
@@ -214,6 +254,7 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: none.clone(),
             min_one_keys: tier_min_one,
+            bounded_keys: Vec::new(),
         },
         Check {
             file: "BENCH_PR7.json",
@@ -223,6 +264,7 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: chaos_pos,
             min_one_keys: none.clone(),
+            bounded_keys: Vec::new(),
         },
         Check {
             file: "BENCH_PR8.json",
@@ -232,6 +274,17 @@ fn required(smoke: bool) -> Vec<Check> {
             ratio_keys: none.clone(),
             pos_keys: http_pos,
             min_one_keys: none.clone(),
+            bounded_keys: Vec::new(),
+        },
+        Check {
+            file: "BENCH_PR9.json",
+            section: format!("fig_specdec{sfx}"),
+            keys: spec_keys,
+            unit_keys: spec_unit,
+            ratio_keys: none.clone(),
+            pos_keys: spec_pos,
+            min_one_keys: spec_min_one,
+            bounded_keys: spec_bounded,
         },
     ]
 }
@@ -310,7 +363,19 @@ fn main() {
                 }
                 Some(Ok(v)) if check.min_one_keys.contains(key) && v < 1.0 => {
                     failures.push(format!(
-                        "{} [{}] {key}: speedup {v} below 1 (native SIMD slower than scalar)",
+                        "{} [{}] {key}: speedup {v} below 1 (optimized path slower than baseline)",
+                        check.file, check.section
+                    ))
+                }
+                Some(Ok(v))
+                    if check
+                        .bounded_keys
+                        .iter()
+                        .any(|(k, max)| k == key && !(0.0..=*max).contains(&v)) =>
+                {
+                    let max = check.bounded_keys.iter().find(|(k, _)| k == key).unwrap().1;
+                    failures.push(format!(
+                        "{} [{}] {key}: {v} outside [0, {max}]",
                         check.file, check.section
                     ))
                 }

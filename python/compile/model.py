@@ -651,3 +651,90 @@ def make_decode_paged(cfg, alloc, batch, block_len, num_blocks):
 
     outs = ["logits"] + [n for n, *_ in pspec]
     return fn, spec, outs
+
+
+def make_decode_verify(cfg, alloc, batch, block_len, num_blocks, window):
+    """Speculative **verify** pass over the paged pool (mirrors
+    ``rust/src/runtime/programs.rs:decode_verify``; artifact name
+    ``decode_verify_<alloc>_b<B>_blk<block_len>x<num_blocks>_k<window>``).
+
+    Scores a ``(b, window)`` token window in one call: window slot ``j`` of
+    sequence ``i`` sits at virtual position ``lens[i] + j``. Per layer all
+    ``window`` new K/V rows are scattered at ``rows[i·window + j]``
+    **before** the block-table gather, so within-window attention reads the
+    freshly written rows; per-position masking (virtual slot ≤ ``lens[i] +
+    j``) gives each window slot exactly the prefix a sequential one-token
+    ``make_decode_paged`` step would see. Because every kernel reduces along
+    row-independent axes, ``logits[i, j]`` is bitwise identical to the
+    sequential step's logits — the self-speculative acceptance contract
+    (DESIGN.md §8). Returns logits ``(b, window, vocab)`` plus the updated
+    pools.
+    """
+    wspec = _to_spec3(spec_alloc(cfg, alloc))
+    pspec = _pool_spec(cfg, block_len, num_blocks)
+    bps = -(-cfg["max_decode_seq"] // block_len)  # blocks per sequence
+    S = bps * block_len
+    W = window
+    spec = wspec + pspec + [("tokens", (batch, W), I32), ("lens", (batch,), I32),
+                            ("rows", (batch * W,), I32),
+                            ("btable", (batch, bps), I32)]
+    names = [n for n, *_ in spec]
+    unflatten = _bind(names)
+    d, nh, nkv, dh = cfg["d_model"], cfg["n_heads"], cfg["n_kv_heads"], head_dim(cfg)
+    width = nkv * dh
+
+    def fn(*arrays):
+        params = unflatten(arrays)
+        tokens, lens = params["tokens"], params["lens"]
+        wrows, btable = params["rows"], params["btable"]
+        b = batch
+        h = params["embed"][tokens]                          # (b, W, d)
+        pos = lens[:, None] + jnp.arange(W, dtype=I32)[None, :]  # (b, W)
+        new_pools = []
+        for i in range(cfg["n_layers"]):
+            p = f"layers.{i}."
+            x2 = rmsnorm(h.reshape(b * W, d), params[p + "ln1"])
+            q = _linear_alloc(params, p + "attn.wq", x2).reshape(b, W, nh, dh)
+            k = _linear_alloc(params, p + "attn.wk", x2).reshape(b, W, nkv, dh)
+            v = _linear_alloc(params, p + "attn.wv", x2).reshape(b, W, nkv, dh)
+            if cfg["family"] == "qwen":
+                q = rmsnorm(q.reshape(-1, dh), params[p + "qnorm"]).reshape(b, W, nh, dh)
+                k = rmsnorm(k.reshape(-1, dh), params[p + "knorm"]).reshape(b, W, nkv, dh)
+            q = _rope(q, pos, cfg["rope_theta"])
+            k = _rope(k, pos, cfg["rope_theta"])
+            # scatter all W rows, then gather: write-before-gather makes the
+            # within-window prefix visible to later window slots
+            kp = params[f"kpool.{i}"].at[wrows].set(k.reshape(b * W, width))
+            vp = params[f"vpool.{i}"].at[wrows].set(v.reshape(b * W, width))
+            new_pools += [kp, vp]
+            prow = (btable * block_len)[:, :, None] \
+                + jnp.arange(block_len, dtype=I32)[None, None, :]
+            prow = prow.reshape(b, S)
+            kc = kp[prow].reshape(b, S, nkv, dh).transpose(0, 2, 1, 3)
+            vc = vp[prow].reshape(b, S, nkv, dh).transpose(0, 2, 1, 3)
+            if nkv != nh:
+                rep = nh // nkv
+                kc = jnp.repeat(kc, rep, axis=1)
+                vc = jnp.repeat(vc, rep, axis=1)
+            # per-position mask: window slot j attends virtual slots ≤ lens+j
+            ramp = jnp.arange(S, dtype=I32)[None, None, :]
+            mask = ramp <= pos[:, :, None]                   # (b, W, S)
+            mask_bh = jnp.broadcast_to(mask[:, None], (b, nh, W, S)) \
+                .reshape(b * nh, W, S)
+            qp = q.transpose(0, 2, 1, 3).reshape(b * nh, W, dh)
+            kp3 = kc.reshape(b * nh, S, dh)
+            vp3 = vc.reshape(b * nh, S, dh)
+            o = _masked_attention(qp, kp3, vp3, float(dh) ** -0.5, mask_bh)
+            o = o.reshape(b, nh, W, dh).transpose(0, 2, 1, 3).reshape(b * W, d)
+            h = h + _linear_alloc(params, p + "attn.wo", o).reshape(b, W, d)
+            x2 = rmsnorm(h.reshape(b * W, d), params[p + "ln2"])
+            g = _linear_alloc(params, p + "mlp.wgate", x2)
+            u = _linear_alloc(params, p + "mlp.wup", x2)
+            h = h + _linear_alloc(params, p + "mlp.wdown",
+                                  (g * jax.nn.sigmoid(g)) * u).reshape(b, W, d)
+        hf = rmsnorm(h.reshape(b * W, d), params["norm_f"])
+        logits = (hf @ params["head"].T).reshape(b, W, cfg["vocab"])
+        return (logits, *new_pools)
+
+    outs = ["logits"] + [n for n, *_ in pspec]
+    return fn, spec, outs

@@ -1,0 +1,153 @@
+//! Self-speculative decoding sweep (DESIGN.md §8): drive the
+//! continuous-batching scheduler through one deterministic greedy trace
+//! three ways — plain decode, then speculative decode across a draft-plan
+//! × draft-length grid (heavier compression rungs of the same ladder
+//! drafting for the serving plan). Recorded per `<draft>_k<k>` combo into
+//! `BENCH_PR9.json` (section `fig_specdec`): end-to-end `tok_s`, speedup
+//! over the plain run, `accepted_per_verify` (∈ [0, k]) and
+//! `draft_accept_rate` (∈ [0, 1]); plus the shared `plain_tok_s`
+//! baseline. The claims pin the §8 contract: every speculative stream is
+//! **bitwise identical** to the plain run's — speculation is a throughput
+//! optimization, never a sampling change. `ARA_BENCH_SMOKE=1` shrinks the
+//! grid for CI; `ARA_SPECDEC_REQS` overrides the trace length.
+
+mod common;
+
+use std::time::Instant;
+
+use ara_compress::data::{corpus_spec, generate_tokens, Rng};
+use ara_compress::report::Table;
+use ara_compress::serving::{Request, SamplingParams, Scheduler, SpecDec};
+use common::{bench_json_path_named, bench_section, claim, pipeline, record_bench_at, smoke};
+
+struct SpecRun {
+    tok_s: f64,
+    accepted_per_verify: f64,
+    accept_rate: f64,
+    verify_passes: usize,
+    streams: Vec<Vec<i32>>,
+}
+
+/// Drive the trace through `sched` (with `draft` naming the draft plan on
+/// every request, or `None` for the plain path) and collect throughput,
+/// acceptance telemetry, and the per-request token streams.
+fn run_trace(sched: &mut Scheduler, reqs: &[Request], draft: Option<&str>) -> SpecRun {
+    for r in reqs {
+        sched.submit(Request { draft_spec: draft.map(str::to_string), ..r.clone() });
+    }
+    let t0 = Instant::now();
+    let mut done = sched.run_to_completion().expect("serve loop");
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    done.sort_by_key(|c| c.id);
+    let st = sched.stats();
+    let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+    SpecRun {
+        tok_s: tokens as f64 / wall,
+        accepted_per_verify: st.accepted_per_verify(),
+        accept_rate: st.draft_accept_rate(),
+        verify_passes: st.verify_passes,
+        streams: done.into_iter().map(|c| c.tokens).collect(),
+    }
+}
+
+fn main() {
+    let smoke = smoke();
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let ws = pl.pretrained().expect("pretrain");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+    let bmax = *pl.cfg.decode_batches.last().unwrap();
+
+    // deterministic greedy trace: mixed ragged prompts, generation
+    // lengths long enough for several verify rounds per request
+    let p = pl.cfg.prefill_len;
+    let n_req = std::env::var("ARA_SPECDEC_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 6 } else { ara_compress::config::scaled(32, 12) });
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 9191, 8192);
+    let mut rng = Rng::new(0x59EC);
+    let reqs: Vec<Request> = (0..n_req)
+        .map(|_| {
+            let len = 1 + rng.below(p);
+            let off = rng.below(stream.len() - p);
+            Request {
+                prompt: stream[off..off + len].to_vec(),
+                gen_len: 6 + rng.below(10),
+                params: SamplingParams::greedy(),
+                ..Default::default()
+            }
+        })
+        .collect();
+
+    // shared plain baseline (the speedup denominator, and the bitwise
+    // reference every speculative combo is compared against)
+    let target = pl.engine(&ws, &fm, "uniform-80", bmax).expect("target engine");
+    let plain = run_trace(&mut Scheduler::new(&target), &reqs, None);
+
+    // draft-plan × draft-length grid: heavier rungs of the same ladder
+    let drafts: &[&str] = if smoke { &["uniform-40"] } else { &["uniform-40", "ara-40"] };
+    let ks: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    let mut t = Table::new(
+        format!("Fig specdec — {n_req} greedy requests, B={bmax}, target uniform-80"),
+        &["Draft", "k", "tok/s", "speedup", "acc/verify", "acc rate", "verifies", "bitwise"],
+    );
+    t.row(vec![
+        "(plain)".into(),
+        "-".into(),
+        format!("{:.0}", plain.tok_s),
+        "1.00".into(),
+        "-".into(),
+        "-".into(),
+        "0".into(),
+        "-".into(),
+    ]);
+    let mut entries: Vec<(String, f64)> = vec![("plain_tok_s".into(), plain.tok_s)];
+    for &spec in drafts {
+        for &k in ks {
+            let mut target = pl.engine(&ws, &fm, "uniform-80", bmax).expect("target engine");
+            target.enable_verify(&pl.rt, k + 1).expect("verify specialization");
+            let draft = pl.engine(&ws, &fm, spec, bmax).expect("draft engine");
+            let sd = SpecDec::new(draft, spec, k).expect("spec dec");
+            let mut sched = Scheduler::new(&target);
+            sched.set_spec_dec(Some(sd)).expect("install spec dec");
+            let r = run_trace(&mut sched, &reqs, Some(spec));
+            let bitwise = r.streams == plain.streams;
+            let speedup = r.tok_s / plain.tok_s.max(1e-9);
+            t.row(vec![
+                spec.into(),
+                format!("{k}"),
+                format!("{:.0}", r.tok_s),
+                format!("{speedup:.2}"),
+                format!("{:.2}", r.accepted_per_verify),
+                format!("{:.2}", r.accept_rate),
+                format!("{}", r.verify_passes),
+                if bitwise { "yes".into() } else { "NO".into() },
+            ]);
+            claim(
+                &format!("{spec} k={k}: streams bitwise-identical to plain decode"),
+                bitwise,
+            );
+            claim(
+                &format!("{spec} k={k}: verify rounds actually ran"),
+                r.verify_passes > 0,
+            );
+            claim(
+                &format!("{spec} k={k}: accepted_per_verify in [0, {k}]"),
+                (0.0..=k as f64).contains(&r.accepted_per_verify),
+            );
+            entries.push((format!("{spec}_k{k}_tok_s"), r.tok_s));
+            entries.push((format!("{spec}_k{k}_speedup"), speedup));
+            entries.push((format!("{spec}_k{k}_accepted_per_verify"), r.accepted_per_verify));
+            entries.push((format!("{spec}_k{k}_accept_rate"), r.accept_rate));
+        }
+    }
+    t.print();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    record_bench_at(
+        &bench_json_path_named("BENCH_PR9.json"),
+        &bench_section("fig_specdec"),
+        &entries,
+    );
+}

@@ -49,8 +49,8 @@ const SUBCOMMANDS: &[SubCmd] = &[
     },
     SubCmd {
         name: "serve",
-        usage: "serve     --model M --alloc A --batch B     continuous-batching generation demo\n          [--gen-len N] [--requests N]\n          [--addr HOST --port P]              HTTP front end (POST /v1/completions)",
-        flags: &["model", "alloc", "batch", "gen-len", "requests", "addr", "port"],
+        usage: "serve     --model M --alloc A --batch B     continuous-batching generation demo\n          [--gen-len N] [--requests N]\n          [--addr HOST --port P]              HTTP front end (POST /v1/completions)\n          [--draft SPEC]                      self-speculative decoding draft plan\n                                              (e.g. ara@0.35; default ARA_DRAFT_SPEC)",
+        flags: &["model", "alloc", "batch", "gen-len", "requests", "addr", "port", "draft"],
     },
     SubCmd {
         name: "info",
@@ -263,6 +263,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let model = args.get("model", "minillama-s");
             let alloc = args.get("alloc", "uniform-80");
             let batch = args.get_usize("batch", 4)?;
+            // --draft wins; otherwise the ARA_DRAFT_SPEC env default.
+            // An empty value disables drafting explicitly.
+            let draft = args
+                .flags
+                .get("draft")
+                .cloned()
+                .or_else(|| std::env::var("ARA_DRAFT_SPEC").ok())
+                .map(|v| v.trim().to_string())
+                .filter(|v| !v.is_empty());
             match args.flags.get("port") {
                 Some(p) => {
                     let port: u16 = p
@@ -277,7 +286,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                             ));
                         }
                     }
-                    http_serve(&model, &alloc, batch, &args.get("addr", "127.0.0.1"), port)?;
+                    http_serve(
+                        &model,
+                        &alloc,
+                        batch,
+                        &args.get("addr", "127.0.0.1"),
+                        port,
+                        draft,
+                    )?;
                 }
                 None => {
                     if args.flags.contains_key("addr") {
@@ -292,6 +308,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                         batch,
                         args.get_usize("gen-len", 32)?,
                         args.get_usize("requests", 16)?,
+                        draft,
                     )?;
                 }
             }
@@ -320,6 +337,36 @@ fn sub_usage(name: &str) -> &'static str {
     SUBCOMMANDS.iter().find(|s| s.name == name).map(|s| s.usage).unwrap_or("")
 }
 
+/// Build the self-speculative draft decoder for `serve` (DESIGN.md §8):
+/// resolve the draft spec — a registry spec like `ara@0.35` (allocated on
+/// the spot), or a precomputed allocation name like `uniform-40` — into an
+/// engine at the target's batch size, and arm the target's verify window
+/// for `ARA_SPEC_K` draft tokens per round (default 4). The draft is
+/// advisory: callers report any error here and keep serving plain.
+fn build_spec_dec(
+    pl: &Pipeline,
+    ws: &ara_compress::model::WeightStore,
+    grams: &std::collections::BTreeMap<String, ara_compress::linalg::Mat>,
+    fm: &ara_compress::svd::FactoredModel,
+    target: &mut ara_compress::serving::Engine,
+    spec: &str,
+    batch: usize,
+) -> Result<ara_compress::serving::SpecDec> {
+    let k = std::env::var("ARA_SPEC_K")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(4)
+        .max(1);
+    let draft = if spec.contains('@') {
+        let plan = pl.allocate_spec(spec, ws, grams, fm)?;
+        pl.engine_for_plan(ws, fm, &plan, batch)?
+    } else {
+        pl.engine(ws, fm, spec, batch)?
+    };
+    target.enable_verify(&pl.rt, k + 1)?;
+    ara_compress::serving::SpecDec::new(draft, spec, k)
+}
+
 /// HTTP serving mode (`serve --port P`, DESIGN.md §7): the engine builds
 /// on the router's worker thread (PJRT state never crosses threads) while
 /// the listener binds immediately — `GET /healthz` answers during warmup,
@@ -332,17 +379,31 @@ fn http_serve(
     batch: usize,
     addr: &str,
     port: u16,
+    draft: Option<String>,
 ) -> Result<()> {
-    use ara_compress::serving::{HttpCfg, HttpServer, Router};
+    use ara_compress::serving::{HttpCfg, HttpServer, Router, RouterCfg};
 
     let vocab = Pipeline::new(model)?.cfg.vocab;
     let (m, a) = (model.to_string(), alloc_name.to_string());
-    let router = Router::spawn(move || {
+    let router = Router::spawn_with_spec(RouterCfg::from_env(), move || {
         let pl = Pipeline::new(&m).expect("pipeline");
         let ws = pl.pretrained().expect("pretrain");
         let grams = pl.grams(&ws).expect("calibrate");
         let fm = pl.factored(&ws, &grams).expect("factorize");
-        pl.engine(&ws, &fm, &a, batch).expect("engine")
+        let mut engine = pl.engine(&ws, &fm, &a, batch).expect("engine");
+        let spec = draft.and_then(|spec| {
+            match build_spec_dec(&pl, &ws, &grams, &fm, &mut engine, &spec, batch) {
+                Ok(sd) => {
+                    println!("speculative draft `{spec}` armed (k = {})", sd.k());
+                    Some(sd)
+                }
+                Err(e) => {
+                    eprintln!("draft `{spec}` disabled, serving plain: {e}");
+                    None
+                }
+            }
+        });
+        (engine, spec)
     });
     let server = HttpServer::bind(&format!("{addr}:{port}"), router, vocab, HttpCfg::from_env())?;
     let bound = server.local_addr()?;
@@ -366,6 +427,7 @@ fn serve(
     batch: usize,
     gen_len: usize,
     requests: usize,
+    draft: Option<String>,
 ) -> Result<()> {
     use ara_compress::data::{corpus_spec, generate_tokens};
     use ara_compress::serving::{Request, SamplingParams, Scheduler};
@@ -374,10 +436,27 @@ fn serve(
     let ws = pl.pretrained()?;
     let grams = pl.grams(&ws)?;
     let fm = pl.factored(&ws, &grams)?;
-    let engine = pl.engine(&ws, &fm, alloc_name, batch)?;
+    let mut engine = pl.engine(&ws, &fm, alloc_name, batch)?;
     if let Some(p) = engine.provenance() {
         println!("serving {p}");
     }
+    // arm the verify window before the scheduler borrows the engine;
+    // failures are reported and the demo serves plain
+    let spec_dec = match &draft {
+        Some(spec) if engine.has_paged() => {
+            match build_spec_dec(&pl, &ws, &grams, &fm, &mut engine, spec, batch) {
+                Ok(sd) => {
+                    println!("speculative draft `{spec}` armed (k = {})", sd.k());
+                    Some(sd)
+                }
+                Err(e) => {
+                    eprintln!("draft `{spec}` disabled, serving plain: {e}");
+                    None
+                }
+            }
+        }
+        _ => None,
+    };
 
     let p = pl.cfg.prefill_len;
     let stream =
@@ -417,11 +496,16 @@ fn serve(
     }
 
     let mut sched = Scheduler::new(&engine);
+    let draft_spec = spec_dec.as_ref().map(|sd| sd.spec().to_string());
+    if let Some(sd) = spec_dec {
+        sched.set_spec_dec(Some(sd))?;
+    }
     for prompt in prompts {
         sched.submit(Request {
             prompt,
             gen_len,
             params: SamplingParams::greedy(),
+            draft_spec: draft_spec.clone(),
             ..Default::default()
         });
     }
@@ -455,5 +539,16 @@ fn serve(
         st.pool_peak_util,
         st.preemptions
     );
+    if st.verify_passes > 0 {
+        println!(
+            "specdec: {} verify passes, {}/{} draft tokens accepted \
+             ({:.2} accepted/verify, accept rate {:.2})",
+            st.verify_passes,
+            st.draft_accepted,
+            st.draft_tokens,
+            st.accepted_per_verify(),
+            st.draft_accept_rate()
+        );
+    }
     Ok(())
 }

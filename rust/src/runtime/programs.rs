@@ -5,7 +5,9 @@
 //!
 //! Covered artifacts (see python/compile/aot.py):
 //!   train_step, calibrate, score_dense, score_masked, mask_fwd_grad,
-//!   lora_step, prefill_<alloc>_b<B>, decode_<alloc>_b<B>
+//!   lora_step, prefill_<alloc>_b<B>, decode_<alloc>_b<B>,
+//!   decode_paged_<alloc>_b<B>_blk<L>x<N>,
+//!   decode_verify_<alloc>_b<B>_blk<L>x<N>_k<W>
 //!
 //! Serving allocations resolve exactly like `aot.py:resolve_alloc`:
 //! configs/allocations/<model>.<alloc>.json, then artifacts/allocations/,
@@ -47,6 +49,12 @@ pub fn build(cfg: &ModelCfg, paths: &Paths, name: &str) -> Result<Program> {
                 let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
                 validate_alloc(cfg, &alloc)?;
                 Ok(prefill(cfg, &alloc, batch, name))
+            } else if let Some(rest) = name.strip_prefix("decode_verify_") {
+                let (alloc_name, batch, block_len, num_blocks, window) =
+                    parse_verify(rest, name)?;
+                let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
+                validate_alloc(cfg, &alloc)?;
+                Ok(decode_verify(cfg, &alloc, batch, block_len, num_blocks, window, name))
             } else if let Some(rest) = name.strip_prefix("decode_paged_") {
                 let (alloc_name, batch, block_len, num_blocks) = parse_paged(rest, name)?;
                 let alloc = resolve_alloc(cfg, paths, &alloc_name)?;
@@ -79,9 +87,12 @@ pub(crate) fn is_known_artifact(name: &str) -> bool {
     matches!(
         name,
         "train_step" | "calibrate" | "score_dense" | "score_masked" | "mask_fwd_grad" | "lora_step"
-    ) || if let Some(rest) = name.strip_prefix("decode_paged_") {
+    ) || if let Some(rest) = name.strip_prefix("decode_verify_") {
         // must not fall through to the plain-decode parse: a malformed
-        // paged name would misparse as alloc `paged_…`
+        // verify name would misparse as alloc `verify_…`
+        parse_verify(rest, name).is_ok()
+    } else if let Some(rest) = name.strip_prefix("decode_paged_") {
+        // same trap for a malformed paged name (alloc `paged_…`)
         parse_paged(rest, name).is_ok()
     } else {
         name.strip_prefix("prefill_")
@@ -125,6 +136,23 @@ fn parse_paged(rest: &str, full: &str) -> Result<(String, usize, usize, usize)> 
         return Err(crate::anyhow!("degenerate pool geometry in artifact name `{full}`"));
     }
     Ok((alloc, batch, block_len, num_blocks))
+}
+
+/// Split `"<alloc>_b<B>_blk<L>x<N>_k<W>"` into
+/// (alloc, B, block_len, num_blocks, window).
+fn parse_verify(rest: &str, full: &str) -> Result<(String, usize, usize, usize, usize)> {
+    let pos = rest
+        .rfind("_k")
+        .ok_or_else(|| crate::anyhow!("bad verify artifact name `{full}` (missing _k)"))?;
+    let window: usize = rest[pos + 2..]
+        .parse()
+        .map_err(|_| crate::anyhow!("bad window in artifact name `{full}`"))?;
+    let (alloc, batch, block_len, num_blocks) = parse_paged(&rest[..pos], full)?;
+    if window < 2 {
+        // a 1-token window is just the plain paged decode step
+        return Err(crate::anyhow!("degenerate verify window in artifact name `{full}`"));
+    }
+    Ok((alloc, batch, block_len, num_blocks, window))
 }
 
 /// Resolve a serving allocation by name (mirrors aot.py:resolve_alloc),
@@ -1093,6 +1121,156 @@ fn decode_paged(
     net.finish(name, outputs, names)
 }
 
+/// Speculative **verify** pass over the paged pool: scores a `(b, W)` token
+/// window in one call, where window slot `j` of sequence `i` sits at virtual
+/// position `lens[i] + j`. Per layer all `W` new K/V rows are scattered at
+/// `rows[i·W + j]` **before** the block-table gather, so within-window
+/// attention (slot `j` attending to slots `< j` of the same round) reads the
+/// freshly written rows. Per-position masking (`virtual slot ≤ lens[i] + j`)
+/// gives each window slot exactly the prefix a sequential one-token decode
+/// would see — and because every kernel reduces along axes that are
+/// row-independent (matmul/rmsnorm/softmax rows, bmm dot products in fixed
+/// block order), `logits[i, j]` is **bitwise identical** to the logits of
+/// `decode_paged` fed the same prefix token-by-token. That equality is the
+/// whole speculative-decoding contract (DESIGN.md §8): acceptance compares
+/// target argmaxes computed here against draft proposals, so the accepted
+/// stream can never diverge from plain decode. Non-speculative slots ride
+/// along with window slots ≥ 1 writing to scratch rows (block 0) that are
+/// never attended and get overwritten by later traffic.
+fn decode_verify(
+    cfg: &ModelCfg,
+    alloc: &Allocation,
+    batch: usize,
+    block_len: usize,
+    num_blocks: usize,
+    window: usize,
+    name: &str,
+) -> Program {
+    let mut net = Net::new(cfg, LinearMode::Alloc);
+    net.add_aux_inputs();
+    net.add_alloc_module_inputs(alloc);
+    let (b, w) = (batch, window);
+    let (d, nh, nkv, dh) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+    let bps = cfg.max_decode_seq.div_ceil(block_len); // blocks per sequence
+    let s = bps * block_len; // gathered virtual window length
+    let rows = num_blocks * block_len;
+    let width = nkv * dh;
+    let mut pool_in = Vec::new();
+    for i in 0..cfg.n_layers {
+        let kp = net.input_f32(&format!("kpool.{i}"), &[rows, width]);
+        let vp = net.input_f32(&format!("vpool.{i}"), &[rows, width]);
+        pool_in.push((kp, vp));
+    }
+    let tokens = net.input_i32("tokens", &[b, w]);
+    let lens = net.input_i32("lens", &[b]);
+    let wrow = net.input_i32("rows", &[b * w]); // flat row-major (b, w)
+    let btable = net.input_i32("btable", &[b, bps]);
+
+    let embed = net.p("embed");
+    let mut h = net.g.gather(embed, tokens); // (b, w, d)
+    // window slot j of sequence i decodes at virtual position lens[i] + j
+    let lens_f = net.g.cast_f32(lens);
+    let lcol = net.g.reshape(lens_f, &[b, 1]);
+    let it = net.g.iota(w);
+    let jrow = net.g.reshape(it, &[1, w]);
+    let pos = net.g.add(lcol, jrow); // (b, w)
+    // per-position valid window: virtual slot ≤ lens[i] + j — exactly the
+    // prefix a sequential one-token decode at that position would attend
+    let one = net.g.scalar(1.0);
+    let plus1 = net.g.add(pos, one); // (b, w)
+    let pl3 = net.g.reshape(plus1, &[b, w, 1]);
+    let ramp = net.g.iota(s);
+    let valid = net.g.less(ramp, pl3); // (b, w, s)
+    let v4 = net.g.reshape(valid, &[b, 1, w, s]);
+    let vb = net.g.broadcast(v4, &[b, nh, w, s]);
+    let mask = net.g.reshape(vb, &[b * nh, w, s]);
+    let mut pools_out = Vec::new();
+    for layer in 0..cfg.n_layers {
+        let pfx = format!("layers.{layer}.");
+        let h2 = net.g.reshape(h, &[b * w, d]);
+        let ln1 = net.p(&format!("{pfx}ln1"));
+        let x2 = net.rmsnorm(h2, ln1);
+        let q0 = net.linear(&format!("{pfx}attn.wq"), x2);
+        let k0 = net.linear(&format!("{pfx}attn.wk"), x2);
+        let v0 = net.linear(&format!("{pfx}attn.wv"), x2);
+        let mut q = net.g.reshape(q0, &[b, w, nh, dh]);
+        let mut k = net.g.reshape(k0, &[b, w, nkv, dh]);
+        let v = net.g.reshape(v0, &[b, w, nkv, dh]);
+        if cfg.family == "qwen" {
+            let qn = net.p(&format!("{pfx}qnorm"));
+            let kn = net.p(&format!("{pfx}knorm"));
+            let qf = net.g.reshape(q, &[b * w * nh, dh]);
+            let qn2 = net.rmsnorm(qf, qn);
+            q = net.g.reshape(qn2, &[b, w, nh, dh]);
+            let kf = net.g.reshape(k, &[b * w * nkv, dh]);
+            let kn2 = net.rmsnorm(kf, kn);
+            k = net.g.reshape(kn2, &[b, w, nkv, dh]);
+        }
+        q = net.rope(q, pos);
+        k = net.rope(k, pos);
+
+        // scatter all W rows, then gather: write-before-gather makes the
+        // within-window prefix visible to later window slots
+        let (kp_in, vp_in) = pool_in[layer];
+        let k2 = net.g.reshape(k, &[b * w, width]);
+        let v2 = net.g.reshape(v, &[b * w, width]);
+        let kp = net.g.update_rows(kp_in, k2, wrow);
+        let vp = net.g.update_rows(vp_in, v2, wrow);
+        pools_out.push(kp);
+        pools_out.push(vp);
+        let kc = net.g.gather_blocks(kp, btable, block_len, nkv); // (b,nkv,s,dh)
+        let vc = net.g.gather_blocks(vp, btable, block_len, nkv);
+
+        let rep = nh / nkv;
+        let (kr, vr) = if rep == 1 {
+            (kc, vc)
+        } else {
+            let k5 = net.g.reshape(kc, &[b, nkv, 1, s, dh]);
+            let kb = net.g.broadcast(k5, &[b, nkv, rep, s, dh]);
+            let kr = net.g.reshape(kb, &[b, nh, s, dh]);
+            let v5 = net.g.reshape(vc, &[b, nkv, 1, s, dh]);
+            let vb = net.g.broadcast(v5, &[b, nkv, rep, s, dh]);
+            let vr = net.g.reshape(vb, &[b, nh, s, dh]);
+            (kr, vr)
+        };
+        let qt = net.g.transpose(q, &[0, 2, 1, 3]); // (b, nh, w, dh)
+        let qp = net.g.reshape(qt, &[b * nh, w, dh]);
+        let kr3 = net.g.reshape(kr, &[b * nh, s, dh]);
+        let vr3 = net.g.reshape(vr, &[b * nh, s, dh]);
+        let o = net.masked_attention(qp, kr3, vr3, (dh as f32).powf(-0.5), mask); // (b·nh, w, dh)
+        let o4 = net.g.reshape(o, &[b, nh, w, dh]);
+        let ot = net.g.transpose(o4, &[0, 2, 1, 3]);
+        let o2 = net.g.reshape(ot, &[b * w, d]);
+        let attn = net.linear(&format!("{pfx}attn.wo"), o2);
+        let attn3 = net.g.reshape(attn, &[b, w, d]);
+        h = net.g.add(h, attn3);
+
+        let h2 = net.g.reshape(h, &[b * w, d]);
+        let ln2 = net.p(&format!("{pfx}ln2"));
+        let x2 = net.rmsnorm(h2, ln2);
+        let gt = net.linear(&format!("{pfx}mlp.wgate"), x2);
+        let up = net.linear(&format!("{pfx}mlp.wup"), x2);
+        let sg = net.g.sigmoid(gt);
+        let silu = net.g.mul(gt, sg);
+        let y = net.g.mul(silu, up);
+        let down = net.linear(&format!("{pfx}mlp.wdown"), y);
+        let down3 = net.g.reshape(down, &[b, w, d]);
+        h = net.g.add(h, down3);
+    }
+    let h2 = net.g.reshape(h, &[b * w, d]);
+    let nf = net.p("norm_f");
+    let hf = net.rmsnorm(h2, nf);
+    let head = net.p("head");
+    let logits2 = net.g.matmul(hf, head, false, true);
+    let logits = net.g.reshape(logits2, &[b, w, cfg.vocab]); // (b, w, vocab)
+
+    let mut outputs = vec![logits];
+    outputs.extend(pools_out);
+    let mut names = vec!["logits".to_string()];
+    names.extend(pool_names(cfg));
+    net.finish(name, outputs, names)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1240,5 +1418,57 @@ mod tests {
         assert!(!is_known_artifact("decode_paged_uniform-80_b2"));
         assert!(!is_known_artifact("decode_paged_uniform-80_b2_blk0x4"));
         assert!(!is_known_artifact("decode_paged_uniform-80_b2_blk8x1"));
+    }
+
+    #[test]
+    fn verify_decode_manifest_contract() {
+        let c = cfg("micro-llama");
+        let paths = Paths::discover().unwrap();
+        let p = build(&c, &paths, "decode_verify_uniform-80_b2_blk8x19_k3").unwrap();
+        let n = p.manifest.inputs.len();
+        assert_eq!(p.manifest.inputs[n - 4].name, "tokens");
+        assert_eq!(p.manifest.inputs[n - 3].name, "lens");
+        assert_eq!(p.manifest.inputs[n - 2].name, "rows");
+        assert_eq!(p.manifest.inputs[n - 1].name, "btable");
+        // window-shaped token/row inputs: (b, W) tokens, flat (b·W) rows
+        assert_eq!(p.manifest.input("tokens").unwrap().shape, vec![2, 3]);
+        assert_eq!(p.manifest.input("rows").unwrap().shape, vec![2 * 3]);
+        assert_eq!(p.manifest.input("rows").unwrap().dtype, "i32");
+        let bps = c.max_decode_seq.div_ceil(8);
+        assert_eq!(p.manifest.input("btable").unwrap().shape, vec![2, bps]);
+        assert_eq!(
+            p.manifest.input("kpool.0").unwrap().shape,
+            vec![19 * 8, c.n_kv_heads * c.head_dim()]
+        );
+        assert_eq!(p.manifest.outputs[0], "logits");
+        assert_eq!(p.manifest.outputs.len(), 1 + 2 * c.n_layers);
+
+        // the engine shares weight buffers between the paged and verify
+        // executables — their weight prefixes must match exactly
+        let paged = build(&c, &paths, "decode_paged_uniform-80_b2_blk8x19").unwrap();
+        let wv = p
+            .manifest
+            .inputs
+            .iter()
+            .position(|s| s.name.starts_with("kpool"))
+            .unwrap();
+        let wp = paged
+            .manifest
+            .inputs
+            .iter()
+            .position(|s| s.name.starts_with("kpool"))
+            .unwrap();
+        assert_eq!(wv, wp, "weight prefix lengths differ");
+        for (a, b) in p.manifest.inputs[..wv].iter().zip(&paged.manifest.inputs[..wp]) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+        }
+
+        assert!(is_known_artifact("decode_verify_uniform-80_b2_blk8x19_k3"));
+        // a 1-token window is plain decode; malformed geometry stays bad
+        assert!(!is_known_artifact("decode_verify_uniform-80_b2_blk8x19_k1"));
+        assert!(!is_known_artifact("decode_verify_uniform-80_b2_blk8x19"));
+        assert!(!is_known_artifact("decode_verify_uniform-80_b2_k3"));
+        assert!(!is_known_artifact("decode_verify_uniform-80_b2_blk0x4_k3"));
     }
 }

@@ -93,12 +93,25 @@ pub struct GenStats {
     /// Active SIMD kernel tier name (`scalar`/`avx2`/`avx512`/`neon`) —
     /// throughput numbers are only comparable within one tier.
     pub simd_tier: &'static str,
+    /// Self-speculative decoding (DESIGN.md §8): tokens proposed by the
+    /// draft engine. Zero on plain decode.
+    pub draft_tokens: usize,
+    /// Draft tokens accepted by target verification (≤ `draft_tokens`).
+    pub draft_accepted: usize,
+    /// Batched verify passes run (`decode_verify` calls).
+    pub verify_passes: usize,
 }
 
 impl GenStats {
     /// Decode throughput in tokens/second.
     pub fn tok_per_s(&self) -> f64 {
         self.tokens_generated as f64 / self.decode_s.max(1e-9)
+    }
+
+    /// Mean accepted draft tokens per verify pass — the speculative win
+    /// (each pass also emits one corrected/bonus token on top of these).
+    pub fn accepted_per_verify(&self) -> f64 {
+        self.draft_accepted as f64 / (self.verify_passes as f64).max(1.0)
     }
 }
 
@@ -119,6 +132,12 @@ pub struct Engine {
     /// paged artifacts (PJRT keeps the contiguous serving path).
     paged: Option<Rc<Exe>>,
     paged_cfg: KvPoolCfg,
+    /// The speculative verify specialization (`decode_verify` — scores a
+    /// `(b, W)` token window in one pass). Loaded on demand by
+    /// [`Engine::enable_verify`]; shares the decode weight prefix.
+    verify: Option<Rc<Exe>>,
+    /// Window length `W` the verify graph was compiled for (0 = none).
+    verify_window: usize,
     /// Device buffers for the weight prefix, in decode-manifest order
     /// (shared with the paged decode — identical weight prefix, pinned by
     /// `runtime::programs` tests).
@@ -269,6 +288,8 @@ impl Engine {
             decode,
             paged,
             paged_cfg,
+            verify: None,
+            verify_window: 0,
             backend: rt.backend(),
             provenance: None,
             fault: Cell::new(None),
@@ -316,6 +337,39 @@ impl Engine {
     /// the CPU backend; PJRT serves through the contiguous path only).
     pub fn has_paged(&self) -> bool {
         self.paged.is_some()
+    }
+
+    /// Load the speculative verify specialization for window length
+    /// `window` (= spec `k` + 1: the pending token plus `k` draft tokens)
+    /// against the active pool geometry. Weights are shared with the
+    /// decode graphs — no re-upload. Requires the paged path.
+    pub fn enable_verify(&mut self, rt: &Runtime, window: usize) -> Result<()> {
+        if self.paged.is_none() {
+            return Err(crate::anyhow!("verify decode requires the paged path (cpu backend)"));
+        }
+        if window < 2 {
+            return Err(crate::anyhow!("verify window must be ≥ 2 (got {window})"));
+        }
+        let verify = rt.load(&format!(
+            "decode_verify_{}_b{}_{}_k{window}",
+            self.alloc_artifact,
+            self.batch,
+            self.paged_cfg.artifact_suffix()
+        ))?;
+        check_paged_prefix(&self.decode, &verify, self.dec_weights.len())?;
+        self.verify = Some(verify);
+        self.verify_window = window;
+        Ok(())
+    }
+
+    /// Whether a verify specialization is loaded.
+    pub fn has_verify(&self) -> bool {
+        self.verify.is_some()
+    }
+
+    /// Window length the verify graph was compiled for (0 when absent).
+    pub fn verify_window(&self) -> usize {
+        self.verify_window
     }
 
     /// Test instrumentation: make the n-th subsequent decode step (either
@@ -533,6 +587,59 @@ impl Engine {
         let logit_buf = it
             .next()
             .ok_or_else(|| crate::anyhow!("paged decode returned no outputs"))?;
+        let logits = self.backend.download(&logit_buf)?;
+        Ok((logits, it.collect()))
+    }
+
+    /// One speculative **verify** pass over the paged pool: scores a
+    /// `(batch, W)` token window in one call (`W = verify_window`). Per
+    /// slot, `tokens[i·W + j]` sits at virtual position `vlens[i] + j` and
+    /// its K/V is written to pool row `rows[i·W + j]` (non-speculative
+    /// slots point window positions ≥ 1 at scratch rows). Returns the
+    /// `(batch, W, vocab)` logits — `logits[i][j]` is bitwise identical to
+    /// a sequential one-token `decode_step_paged` fed the same prefix —
+    /// and the updated pool buffers. Subject to the same injected-fault
+    /// instrumentation as the plain decode paths.
+    pub fn decode_step_verify(
+        &self,
+        pool: Vec<DeviceBuffer>,
+        tokens: &[i32],
+        vlens: &[i32],
+        rows: &[i32],
+        btable: &[i32],
+    ) -> Result<(Tensor, Vec<DeviceBuffer>)> {
+        self.check_fault()?;
+        let verify = self
+            .verify
+            .as_ref()
+            .ok_or_else(|| crate::anyhow!("verify decode not enabled on this engine"))?;
+        let b = self.batch;
+        let w = self.verify_window;
+        let bps = self.paged_cfg.blocks_per_seq(&self.cfg);
+        assert_eq!(tokens.len(), b * w, "tokens must be (batch, window)");
+        assert_eq!(vlens.len(), b, "vlens must cover every slot");
+        assert_eq!(rows.len(), b * w, "rows must be (batch · window)");
+        assert_eq!(btable.len(), b * bps, "btable must be (batch, blocks_per_seq)");
+        assert_eq!(pool.len(), 2 * self.cfg.n_layers, "pool buffer count");
+        let tok_t = IntTensor::from_vec(&[b, w], tokens.to_vec());
+        let len_t = IntTensor::from_vec(&[b], vlens.to_vec());
+        let row_t = IntTensor::from_vec(&[b * w], rows.to_vec());
+        let bt_t = IntTensor::from_vec(&[b, bps], btable.to_vec());
+        let mut args: Vec<DeviceArg> = self.dec_weights.iter().map(DeviceArg::Ref).collect();
+        for p in pool {
+            args.push(DeviceArg::Own(p));
+        }
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&tok_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&len_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&row_t))?));
+        args.push(DeviceArg::Own(self.backend.upload(&Feed::I32(&bt_t))?));
+        let outs = verify
+            .run_device_args(args)
+            .map_err(|e| crate::anyhow!("verify decode step: {e}"))?;
+        let mut it = outs.into_iter();
+        let logit_buf = it
+            .next()
+            .ok_or_else(|| crate::anyhow!("verify decode returned no outputs"))?;
         let logits = self.backend.download(&logit_buf)?;
         Ok((logits, it.collect()))
     }

@@ -1,7 +1,9 @@
 //! Per-connection request handling: route dispatch, the completion
-//! wait/stream loops, and client-disconnect detection. One request per
-//! connection (`Connection: close`); each connection runs on its own
-//! thread so a slow stream never blocks the accept loop.
+//! wait/stream loops, and client-disconnect detection. Each connection
+//! runs on its own thread so a slow stream never blocks the accept loop,
+//! and serves up to [`super::HttpCfg::keepalive_max`] requests
+//! sequentially (HTTP/1.1 keep-alive) before closing; streamed
+//! completions always close after the terminal chunk.
 //!
 //! Disconnect contract: while a completion is in flight the handler peeks
 //! the socket between polls — EOF trips the request's [`CancelToken`], so
@@ -27,57 +29,84 @@ pub(super) struct Ctx {
 }
 
 pub(super) fn handle(mut stream: TcpStream, ctx: &Ctx) {
-    let raw = match wire::read_request(
-        &mut stream,
-        ctx.cfg.max_header_bytes,
-        ctx.cfg.max_body_bytes,
-    ) {
-        Ok(r) => r,
-        Err(WireError::Closed) => return,
-        // malformed and oversized requests are answered without ever
-        // touching the router/scheduler
-        Err(WireError::Malformed(m)) | Err(WireError::TooLarge(m)) => {
-            let _ = wire::write_response(
-                &mut stream,
-                400,
-                "Bad Request",
-                &types::error_body("invalid_request_error", Some("body"), &m),
-            );
-            return;
-        }
-    };
-    match (raw.method.as_str(), raw.path.as_str()) {
-        ("GET", "/healthz") => {
-            let _ = wire::write_response(&mut stream, 200, "OK", r#"{"status":"ok"}"#);
-        }
-        ("GET", "/stats") => match ctx.router.worker_stats() {
-            Ok(ws) => {
-                let body =
-                    types::stats_body(&ws, ctx.router.in_flight(), ctx.router.shed());
-                let _ = wire::write_response(&mut stream, 200, "OK", &body);
-            }
-            Err(e) => {
+    let mut carry: Vec<u8> = Vec::new();
+    let max = ctx.cfg.keepalive_max.max(1);
+    for served in 1..=max {
+        let raw = match wire::read_request(
+            &mut stream,
+            &mut carry,
+            ctx.cfg.max_header_bytes,
+            ctx.cfg.max_body_bytes,
+        ) {
+            Ok(r) => r,
+            Err(WireError::Closed) => return,
+            // malformed and oversized requests are answered without ever
+            // touching the router/scheduler; framing is unrecoverable, so
+            // the connection closes regardless of keep-alive
+            Err(WireError::Malformed(m)) | Err(WireError::TooLarge(m)) => {
                 let _ = wire::write_response(
                     &mut stream,
-                    503,
-                    "Service Unavailable",
-                    &types::error_body("server_error", None, &e.to_string()),
+                    400,
+                    "Bad Request",
+                    &types::error_body("invalid_request_error", Some("body"), &m),
+                    false,
                 );
+                return;
             }
-        },
+        };
+        // honor the client's Connection preference, capped at
+        // keepalive_max requests per connection
+        let keep = raw.keep_alive && served < max;
+        if !dispatch(&mut stream, ctx, &raw, keep) || !keep {
+            return;
+        }
+    }
+}
+
+/// Route one parsed request. Returns whether the connection is still
+/// reusable (a streamed completion commits `Connection: close` framing,
+/// so it never is).
+fn dispatch(stream: &mut TcpStream, ctx: &Ctx, raw: &wire::RawRequest, keep: bool) -> bool {
+    match (raw.method.as_str(), raw.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ =
+                wire::write_response(stream, 200, "OK", r#"{"status":"ok"}"#, keep);
+            true
+        }
+        ("GET", "/stats") => {
+            match ctx.router.worker_stats() {
+                Ok(ws) => {
+                    let body =
+                        types::stats_body(&ws, ctx.router.in_flight(), ctx.router.shed());
+                    let _ = wire::write_response(stream, 200, "OK", &body, keep);
+                }
+                Err(e) => {
+                    let _ = wire::write_response(
+                        stream,
+                        503,
+                        "Service Unavailable",
+                        &types::error_body("server_error", None, &e.to_string()),
+                        keep,
+                    );
+                }
+            }
+            true
+        }
         ("POST", "/admin/shutdown") => {
             ctx.stop.store(true, Ordering::Release);
             let _ = wire::write_response(
-                &mut stream,
+                stream,
                 200,
                 "OK",
                 r#"{"status":"shutting_down"}"#,
+                false,
             );
+            false
         }
-        ("POST", "/v1/completions") => completions(&mut stream, ctx, &raw.body),
+        ("POST", "/v1/completions") => completions(stream, ctx, &raw.body, keep),
         (_, "/healthz" | "/stats" | "/admin/shutdown" | "/v1/completions") => {
             let _ = wire::write_response(
-                &mut stream,
+                stream,
                 405,
                 "Method Not Allowed",
                 &types::error_body(
@@ -85,20 +114,24 @@ pub(super) fn handle(mut stream: TcpStream, ctx: &Ctx) {
                     None,
                     &format!("method {} not allowed on {}", raw.method, raw.path),
                 ),
+                keep,
             );
+            true
         }
         (m, p) => {
             let _ = wire::write_response(
-                &mut stream,
+                stream,
                 404,
                 "Not Found",
                 &types::error_body("not_found", None, &format!("no route `{m} {p}`")),
+                keep,
             );
+            true
         }
     }
 }
 
-fn completions(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
+fn completions(stream: &mut TcpStream, ctx: &Ctx, body: &[u8], keep: bool) -> bool {
     let creq = match CompletionRequest::parse(body, ctx.vocab, ctx.cfg.max_tokens_cap) {
         Ok(r) => r,
         Err(e) => {
@@ -107,8 +140,9 @@ fn completions(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
                 400,
                 "Bad Request",
                 &types::error_body("invalid_request_error", Some(&e.field), &e.message),
+                keep,
             );
-            return;
+            return true;
         }
     };
     let cancel = CancelToken::new();
@@ -126,6 +160,7 @@ fn completions(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
         deadline_steps: creq.timeout_steps,
         cancel: Some(cancel.clone()),
         stream: stream_tx,
+        draft_spec: creq.draft,
     };
     let rx = match ctx.router.submit(sreq) {
         Ok(rx) => rx,
@@ -135,25 +170,28 @@ fn completions(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
                 503,
                 "Service Unavailable",
                 &types::error_body("server_error", None, &e.to_string()),
+                keep,
             );
-            return;
+            return true;
         }
     };
     match stream_rx {
-        None => finish_plain(stream, ctx, &cancel, &rx),
-        Some(srx) => finish_streaming(stream, ctx, &cancel, &rx, &srx),
+        None => finish_plain(stream, ctx, &cancel, &rx, keep),
+        Some(srx) => finish_streaming(stream, ctx, &cancel, &rx, &srx, keep),
     }
 }
 
 /// Non-streaming: block for the typed response, peeking for disconnect
 /// between polls. A gone peer cancels the request but keeps waiting for
 /// the response — the scheduler's completion is what frees the slot.
+/// Returns whether the connection is still reusable.
 fn finish_plain(
     stream: &mut TcpStream,
     ctx: &Ctx,
     cancel: &CancelToken,
     rx: &mpsc::Receiver<ServeResponse>,
-) {
+    keep: bool,
+) -> bool {
     let mut gone = false;
     loop {
         match rx.recv_timeout(ctx.cfg.poll) {
@@ -165,9 +203,10 @@ fn finish_plain(
                         code,
                         reason,
                         &types::completion_body(&resp),
+                        keep,
                     );
                 }
-                return;
+                return !gone;
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if !gone && peer_gone(stream) {
@@ -186,9 +225,10 @@ fn finish_plain(
                             None,
                             "router worker exited without answering",
                         ),
+                        keep,
                     );
                 }
-                return;
+                return !gone;
             }
         }
     }
@@ -206,7 +246,8 @@ fn finish_streaming(
     cancel: &CancelToken,
     rx: &mpsc::Receiver<ServeResponse>,
     srx: &mpsc::Receiver<i32>,
-) {
+    keep: bool,
+) -> bool {
     let mut started = false;
     let mut gone = false;
     let resp = loop {
@@ -233,22 +274,28 @@ fn finish_streaming(
                     None,
                     "router worker exited without answering",
                 ),
+                keep,
             );
+            return true;
         }
-        return;
+        return false;
     };
     // the worker emits every token before it answers, so the sink is
     // fully populated by now — flush the stragglers first
     pump_tokens(stream, srx, cancel, &mut started, &mut gone);
     if gone {
-        return;
+        return false;
     }
     if started {
+        // chunked framing committed `Connection: close` — never reuse
         let _ = wire::write_chunk(stream, types::completion_body(&resp).as_bytes());
         let _ = wire::finish_chunked(stream);
+        false
     } else {
         let (code, reason) = types::status_for(&resp.finish_reason);
-        let _ = wire::write_response(stream, code, reason, &types::completion_body(&resp));
+        let _ =
+            wire::write_response(stream, code, reason, &types::completion_body(&resp), keep);
+        true
     }
 }
 

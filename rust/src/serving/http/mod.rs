@@ -24,9 +24,18 @@
 //! mid-flight. Validation errors name the offending field; malformed or
 //! oversized bodies are refused before the scheduler is touched.
 //!
+//! Connections are persistent (HTTP/1.1 keep-alive): a handler serves up
+//! to `ARA_HTTP_KEEPALIVE_MAX` sequential requests per connection before
+//! closing, honoring the client's `Connection` header; streamed
+//! completions always close after the terminal chunk. The accept loop
+//! caps live connections at `ARA_HTTP_MAX_CONNS` — excess connections
+//! get an immediate 503 and are dropped without touching the engine.
+//!
 //! Knobs: `ARA_HTTP_MAX_BODY` (body cap, bytes), `ARA_HTTP_MAX_HEADER`
 //! (head cap, bytes), `ARA_HTTP_POLL_MS` (accept/stream poll interval),
-//! `ARA_HTTP_MAX_TOKENS` (per-request `max_tokens` cap).
+//! `ARA_HTTP_MAX_TOKENS` (per-request `max_tokens` cap),
+//! `ARA_HTTP_KEEPALIVE_MAX` (requests per connection),
+//! `ARA_HTTP_MAX_CONNS` (live connection cap).
 
 mod conn;
 mod types;
@@ -56,6 +65,12 @@ pub struct HttpCfg {
     pub poll: Duration,
     /// Per-request `max_tokens` cap (`ARA_HTTP_MAX_TOKENS`, default 4096).
     pub max_tokens_cap: usize,
+    /// Requests served per connection before it is closed
+    /// (`ARA_HTTP_KEEPALIVE_MAX`, default 64; 1 disables reuse).
+    pub keepalive_max: usize,
+    /// Live-connection cap on the accept loop (`ARA_HTTP_MAX_CONNS`,
+    /// default 256): excess connections get an immediate 503.
+    pub max_conns: usize,
 }
 
 impl Default for HttpCfg {
@@ -65,6 +80,8 @@ impl Default for HttpCfg {
             max_header_bytes: 16 << 10,
             poll: Duration::from_millis(5),
             max_tokens_cap: 4096,
+            keepalive_max: 64,
+            max_conns: 256,
         }
     }
 }
@@ -86,6 +103,8 @@ impl HttpCfg {
                 env_usize("ARA_HTTP_POLL_MS", d.poll.as_millis() as usize).max(1) as u64,
             ),
             max_tokens_cap: env_usize("ARA_HTTP_MAX_TOKENS", d.max_tokens_cap).max(1),
+            keepalive_max: env_usize("ARA_HTTP_KEEPALIVE_MAX", d.keepalive_max).max(1),
+            max_conns: env_usize("ARA_HTTP_MAX_CONNS", d.max_conns).max(1),
         }
     }
 }
@@ -154,12 +173,26 @@ impl HttpServer {
         let mut workers: Vec<JoinHandle<()>> = Vec::new();
         while !stop.load(Ordering::Acquire) {
             match listener.accept() {
-                Ok((sock, _peer)) => {
+                Ok((mut sock, _peer)) => {
                     // accepted sockets may inherit the listener's
                     // nonblocking flag on some platforms — the handlers
                     // assume blocking I/O
                     let _ = sock.set_nonblocking(false);
                     let _ = sock.set_nodelay(true);
+                    // connection cap: reap finished handlers first, then
+                    // shed with an immediate 503 — no handler thread, no
+                    // request read, no engine work
+                    workers.retain(|w| !w.is_finished());
+                    if workers.len() >= cfg.max_conns {
+                        let _ = wire::write_response(
+                            &mut sock,
+                            503,
+                            "Service Unavailable",
+                            r#"{"error":{"type":"server_error","message":"connection limit reached"}}"#,
+                            false,
+                        );
+                        continue;
+                    }
                     let c = Arc::clone(&ctx);
                     workers.push(std::thread::spawn(move || conn::handle(sock, &c)));
                 }

@@ -29,6 +29,10 @@ pub struct CompletionRequest {
     /// Step-budget deadline (`Request::deadline_steps` on the wire).
     pub timeout_steps: Option<usize>,
     pub stream: bool,
+    /// Self-speculative decoding opt-in/out (`Request::draft_spec` on the
+    /// wire): a draft-plan spec such as `"ara@0.35"`, `""` to opt out of
+    /// the server default, absent to inherit it.
+    pub draft: Option<String>,
 }
 
 const KNOWN_FIELDS: &[&str] = &[
@@ -40,6 +44,7 @@ const KNOWN_FIELDS: &[&str] = &[
     "seed",
     "timeout_steps",
     "stream",
+    "draft",
 ];
 
 impl CompletionRequest {
@@ -143,7 +148,16 @@ impl CompletionRequest {
             Some(v) => v.as_bool().map_err(|_| fe("stream", "must be a boolean"))?,
         };
 
-        Ok(CompletionRequest { prompt, max_tokens, params, timeout_steps, stream })
+        let draft = match j.get("draft") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .map_err(|_| fe("draft", "must be a draft-plan spec string"))?
+                    .to_string(),
+            ),
+        };
+
+        Ok(CompletionRequest { prompt, max_tokens, params, timeout_steps, stream, draft })
     }
 }
 
@@ -233,13 +247,32 @@ pub fn stats_body(ws: &WorkerStats, in_flight: usize, shed: usize) -> String {
                 ("admitted", json::n(s.admitted as f64)),
                 ("completed", json::n(s.completed as f64)),
                 ("tokens_generated", json::n(s.tokens_generated as f64)),
+                ("streamed", json::n(s.streamed as f64)),
                 ("preemptions", json::n(s.preemptions as f64)),
                 ("retries", json::n(s.retries as f64)),
                 ("quarantined", json::n(s.quarantined as f64)),
                 ("cancelled", json::n(s.cancelled as f64)),
                 ("deadline_expired", json::n(s.deadline_expired as f64)),
                 ("decode_tok_per_s", json::n(s.decode_tok_per_s())),
+                ("verify_passes", json::n(s.verify_passes as f64)),
+                ("draft_tokens", json::n(s.draft_tokens as f64)),
+                ("draft_accepted", json::n(s.draft_accepted as f64)),
+                ("accepted_per_verify", json::n(s.accepted_per_verify())),
             ]),
+        ),
+        (
+            "draft",
+            match &ws.draft_spec {
+                Some(spec) => json::obj(vec![
+                    ("spec", json::s(spec.clone())),
+                    (
+                        "pool_utilization",
+                        json::n(ws.draft_pool_utilization.unwrap_or(0.0)),
+                    ),
+                    ("active_drafts", json::n(ws.active_drafts as f64)),
+                ]),
+                None => Json::Null,
+            },
         ),
     ])
     .dump()
@@ -302,6 +335,7 @@ mod tests {
             (r#"{"max_tokens":4,"seed":1.5}"#, "seed"),
             (r#"{"max_tokens":9999}"#, "max_tokens"),
             (r#"{"max_tokens":4,"best_of":2}"#, "best_of"),
+            (r#"{"max_tokens":4,"draft":7}"#, "draft"),
             (r#"not json"#, "body"),
             (r#"[1,2,3]"#, "body"),
         ];
@@ -314,7 +348,7 @@ mod tests {
 
     #[test]
     fn valid_request_round_trips() {
-        let body = r#"{"prompt":[3,1,4],"max_tokens":8,"temperature":0.7,"top_k":5,"top_p":0.9,"seed":42,"timeout_steps":100,"stream":true}"#;
+        let body = r#"{"prompt":[3,1,4],"max_tokens":8,"temperature":0.7,"top_k":5,"top_p":0.9,"seed":42,"timeout_steps":100,"stream":true,"draft":"ara@0.35"}"#;
         let r = CompletionRequest::parse(body.as_bytes(), 64, 128).expect("valid");
         assert_eq!(r.prompt, vec![3, 1, 4]);
         assert_eq!(r.max_tokens, 8);
@@ -324,12 +358,18 @@ mod tests {
         assert_eq!(r.params.seed, 42);
         assert_eq!(r.timeout_steps, Some(100));
         assert!(r.stream);
-        // defaults: greedy params, no deadline, non-streaming
+        assert_eq!(r.draft.as_deref(), Some("ara@0.35"));
+        // defaults: greedy params, no deadline, non-streaming, no draft
         let r = CompletionRequest::parse(br#"{"max_tokens":0}"#, 64, 128).expect("valid");
         assert!(r.prompt.is_empty());
         assert_eq!(r.params, SamplingParams::greedy());
         assert_eq!(r.timeout_steps, None);
         assert!(!r.stream);
+        assert_eq!(r.draft, None);
+        // an empty draft string is a valid explicit opt-out
+        let r = CompletionRequest::parse(br#"{"max_tokens":0,"draft":""}"#, 64, 128)
+            .expect("valid");
+        assert_eq!(r.draft.as_deref(), Some(""));
     }
 
     #[test]

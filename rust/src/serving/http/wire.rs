@@ -4,9 +4,13 @@
 //! boundaries, which carry the one-chunk-per-decode-step framing the
 //! streaming tests pin).
 //!
-//! Deliberately minimal: `Connection: close` (one request per
-//! connection), `Content-Length` bodies only on the way in, identity or
-//! chunked on the way out. Both caps ([`super::HttpCfg::max_header_bytes`],
+//! Deliberately minimal: `Content-Length` bodies only on the way in,
+//! identity or chunked on the way out. Connections are reusable
+//! (HTTP/1.1 keep-alive semantics: persistent unless `Connection: close`;
+//! HTTP/1.0 closes unless `Connection: keep-alive`); bytes read past the
+//! current body — a pipelining client — are preserved in the caller's
+//! carry buffer and consumed by the next [`read_request`] on the same
+//! connection. Both caps ([`super::HttpCfg::max_header_bytes`],
 //! [`super::HttpCfg::max_body_bytes`]) are enforced *before* any work is
 //! scheduled, so malformed or oversized requests never touch the engine.
 
@@ -19,6 +23,9 @@ pub struct RawRequest {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// Whether the client allows the connection to be reused after this
+    /// response (HTTP/1.1 default; overridden by a `Connection` header).
+    pub keep_alive: bool,
 }
 
 /// Why [`read_request`] produced no request.
@@ -43,13 +50,17 @@ fn header_value<'a>(head: &'a str, name: &str) -> Option<&'a str> {
 
 /// Read one request off the socket: head until `\r\n\r\n` (capped), then
 /// exactly `Content-Length` body bytes (capped). The declared length is
-/// checked against the cap *before* the body is read.
+/// checked against the cap *before* the body is read. `carry` holds bytes
+/// read past the previous request's body on a reused connection — they
+/// are consumed first, and any over-read past this request's body is
+/// placed back for the next call.
 pub fn read_request(
     stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
     max_header: usize,
     max_body: usize,
 ) -> Result<RawRequest, WireError> {
-    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut buf: Vec<u8> = std::mem::take(carry);
     let mut chunk = [0u8; 1024];
     let head_end = loop {
         if let Some(p) = find_head_end(&buf) {
@@ -93,6 +104,12 @@ pub fn read_request(
             "declared body of {clen} bytes exceeds the {max_body}-byte cap"
         )));
     }
+    let keep_alive = match header_value(&head, "connection") {
+        Some(v) if v.eq_ignore_ascii_case("close") => false,
+        Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+        // HTTP/1.1 defaults persistent; HTTP/1.0 defaults close
+        _ => version == "HTTP/1.1",
+    };
     let mut body = buf[head_end + 4..].to_vec();
     while body.len() < clen {
         match stream.read(&mut chunk) {
@@ -102,25 +119,30 @@ pub fn read_request(
         }
     }
     if body.len() > clen {
-        // pipelining is out of contract (`Connection: close`)
-        return Err(WireError::Malformed("body longer than content-length".into()));
+        // bytes past this body belong to the next pipelined request:
+        // park them for the next read_request on this connection
+        *carry = body.split_off(clen);
     }
-    Ok(RawRequest { method, path, body })
+    Ok(RawRequest { method, path, body, keep_alive })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Write a complete identity-framed JSON response and flush.
+/// Write a complete identity-framed JSON response and flush. `keep`
+/// selects the `Connection` header — the body is byte-identical either
+/// way (the determinism contract covers bodies, not connection framing).
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     reason: &str,
     body: &str,
+    keep: bool,
 ) -> std::io::Result<()> {
+    let conn = if keep { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -130,7 +152,9 @@ pub fn write_response(
 
 /// Commit a chunked 200 response: header out, status pinned. Callers
 /// defer this until the first token arrives so an empty-handed
-/// non-natural finish can still get its mapped status code.
+/// non-natural finish can still get its mapped status code. Streamed
+/// responses always close the connection — the chunk cadence is tied to
+/// the decode loop, so reuse would serialize unrelated requests behind it.
 pub fn start_chunked(stream: &mut TcpStream) -> std::io::Result<()> {
     let head = "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
     stream.write_all(head.as_bytes())?;
@@ -177,16 +201,30 @@ pub fn http_call(
     read_response(&mut stream)
 }
 
-/// Write a request head + optional body on an already-open connection.
+/// Write a request head + optional body on an already-open connection
+/// (`Connection: close` — the one-shot [`http_call`] path).
 pub fn send_request(
     stream: &mut TcpStream,
     method: &str,
     path: &str,
     body: Option<&str>,
 ) -> crate::Result<()> {
+    send_request_keep(stream, method, path, body, false)
+}
+
+/// [`send_request`] with an explicit `Connection` choice: `keep = true`
+/// asks the server to hold the connection open for another request.
+pub fn send_request_keep(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    keep: bool,
+) -> crate::Result<()> {
     let body = body.unwrap_or("");
+    let conn = if keep { "keep-alive" } else { "close" };
     let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     );
     stream
@@ -197,46 +235,90 @@ pub fn send_request(
 }
 
 /// Read a full response off the socket, decoding chunked framing (chunk
-/// boundaries preserved) or `Content-Length` identity bodies.
+/// boundaries preserved) or `Content-Length` identity bodies. Reads
+/// incrementally and stops at the end of the framed response — never
+/// relies on the server closing the connection, so it works on
+/// keep-alive connections (issue [`send_request_keep`] again afterwards).
 pub fn read_response(stream: &mut TcpStream) -> crate::Result<ClientResponse> {
-    let mut buf = Vec::new();
-    stream
-        .read_to_end(&mut buf)
-        .map_err(|e| crate::anyhow!("read response: {e}"))?;
-    let head_end = find_head_end(&buf)
-        .ok_or_else(|| crate::anyhow!("no header terminator in response"))?;
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    let mut eof = false;
+    let mut fill = |buf: &mut Vec<u8>, eof: &mut bool| -> crate::Result<()> {
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                *eof = true;
+                Ok(())
+            }
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e) => Err(crate::anyhow!("read response: {e}")),
+        }
+    };
+    let head_end = loop {
+        if let Some(p) = find_head_end(&buf) {
+            break p;
+        }
+        if eof {
+            return Err(crate::anyhow!("no header terminator in response"));
+        }
+        fill(&mut buf, &mut eof)?;
+    };
     let head = std::str::from_utf8(&buf[..head_end])
-        .map_err(|_| crate::anyhow!("response head is not utf-8"))?;
+        .map_err(|_| crate::anyhow!("response head is not utf-8"))?
+        .to_string();
     let status: u16 = head
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| crate::anyhow!("bad status line `{}`", head.lines().next().unwrap_or("")))?;
-    let rest = &buf[head_end + 4..];
-    let chunked = header_value(head, "transfer-encoding")
+    let chunked = header_value(&head, "transfer-encoding")
         .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
     if !chunked {
-        return Ok(ClientResponse { status, body: rest.to_vec(), chunks: None });
+        let clen = match header_value(&head, "content-length") {
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| crate::anyhow!("bad content-length `{v}`"))?,
+            None => 0,
+        };
+        while buf.len() < head_end + 4 + clen {
+            if eof {
+                return Err(crate::anyhow!("truncated response body"));
+            }
+            fill(&mut buf, &mut eof)?;
+        }
+        let body = buf[head_end + 4..head_end + 4 + clen].to_vec();
+        return Ok(ClientResponse { status, body, chunks: None });
     }
     let mut chunks = Vec::new();
-    let mut i = 0usize;
+    let mut i = head_end + 4;
     loop {
-        let line_end = rest[i..]
-            .windows(2)
-            .position(|w| w == b"\r\n")
-            .ok_or_else(|| crate::anyhow!("truncated chunk size line"))?;
-        let size_str = std::str::from_utf8(&rest[i..i + line_end])
-            .map_err(|_| crate::anyhow!("chunk size is not utf-8"))?;
+        let line_end = loop {
+            if let Some(p) = buf[i..].windows(2).position(|w| w == b"\r\n") {
+                break p;
+            }
+            if eof {
+                return Err(crate::anyhow!("truncated chunk size line"));
+            }
+            fill(&mut buf, &mut eof)?;
+        };
+        let size_str = std::str::from_utf8(&buf[i..i + line_end])
+            .map_err(|_| crate::anyhow!("chunk size is not utf-8"))?
+            .to_string();
         let size = usize::from_str_radix(size_str.trim(), 16)
             .map_err(|_| crate::anyhow!("bad chunk size `{size_str}`"))?;
         i += line_end + 2;
+        while buf.len() < i + size + 2 {
+            if eof {
+                return Err(crate::anyhow!("truncated chunk body"));
+            }
+            fill(&mut buf, &mut eof)?;
+        }
         if size == 0 {
             break;
         }
-        if i + size + 2 > rest.len() {
-            return Err(crate::anyhow!("truncated chunk body"));
-        }
-        chunks.push(rest[i..i + size].to_vec());
+        chunks.push(buf[i..i + size].to_vec());
         i += size + 2;
     }
     let body = chunks.concat();

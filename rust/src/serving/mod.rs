@@ -32,9 +32,16 @@
 //!
 //! The wire protocol (DESIGN.md §7) is the outermost layer: `http/` is a
 //! std-only HTTP/1.1 front end over the [`Router`] — OpenAI-style
-//! `POST /v1/completions` with chunked per-step token streaming,
-//! `GET /healthz`, and `GET /stats` — mapping the typed taxonomy onto
-//! status codes (429 shed, 408 deadline, 499 disconnect, 500 quarantine).
+//! `POST /v1/completions` with chunked per-step token streaming (with
+//! keep-alive connection reuse), `GET /healthz`, and `GET /stats` —
+//! mapping the typed taxonomy onto status codes (429 shed, 408 deadline,
+//! 499 disconnect, 500 quarantine, 503 connection cap).
+//!
+//! Self-speculative decoding (DESIGN.md §8, `specdec.rs`): a
+//! heavier-compressed plan of the same backbone drafts `k` greedy tokens
+//! per round and the target verifies the window in one batched
+//! `decode_verify` pass — up to `k + 1` tokens per step, with accepted
+//! streams bitwise identical to plain greedy decode.
 
 mod batcher;
 mod engine;
@@ -44,6 +51,7 @@ mod kvpool;
 mod router;
 mod sampler;
 mod scheduler;
+mod specdec;
 
 pub use batcher::{BatchPlan, DynamicBatcher};
 pub use engine::{Engine, FinishReason, GenStats};
@@ -55,3 +63,4 @@ pub use sampler::{argmax, Sampler, SamplingParams};
 pub use scheduler::{
     CancelToken, Completion, Request, SchedCfg, SchedStats, Scheduler, NO_SLOT,
 };
+pub use specdec::SpecDec;

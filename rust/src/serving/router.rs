@@ -25,6 +25,7 @@ use std::time::Duration;
 use super::engine::{Engine, FinishReason};
 use super::sampler::SamplingParams;
 use super::scheduler::{CancelToken, Request, Scheduler};
+use super::specdec::SpecDec;
 use crate::Result;
 
 /// One generation request (ragged prompt; the scheduler left-pads).
@@ -41,6 +42,10 @@ pub struct ServeRequest {
     /// sampled token is delivered the scheduler step it is produced, and
     /// the final [`ServeResponse`] still carries the complete stream.
     pub stream: Option<mpsc::Sender<i32>>,
+    /// Optional draft-plan spec for self-speculative decoding (see
+    /// [`Request::draft_spec`]). `None` inherits the worker's
+    /// `ARA_DRAFT_SPEC` default; `Some("")` explicitly opts out.
+    pub draft_spec: Option<String>,
 }
 
 /// One generation response. Every submitted request receives exactly one —
@@ -126,6 +131,13 @@ pub struct WorkerStats {
     pub queued: usize,
     /// Requests actively decoding on the worker right now.
     pub active: usize,
+    /// Draft-plan spec when a speculative decoder is installed.
+    pub draft_spec: Option<String>,
+    /// Draft KV-pool utilization in [0, 1] when a speculative decoder is
+    /// installed.
+    pub draft_pool_utilization: Option<f64>,
+    /// Slots with a live draft sequence right now.
+    pub active_drafts: usize,
 }
 
 /// Router handle: submit requests, receive responses.
@@ -168,12 +180,38 @@ impl Router {
     where
         F: FnOnce() -> Engine + Send + 'static,
     {
+        Router::spawn_with_spec(cfg, move || (engine_builder(), None))
+    }
+
+    /// Spawn the engine worker with an optional self-speculative decoder.
+    /// The builder runs on the worker thread (engines are not `Send`) and
+    /// returns the target engine plus an optional [`SpecDec`] holding the
+    /// draft engine; installation failure (mismatched verify window, batch)
+    /// is logged and the worker serves plain — the draft is advisory.
+    pub fn spawn_with_spec<F>(cfg: RouterCfg, builder: F) -> Router
+    where
+        F: FnOnce() -> (Engine, Option<SpecDec>) + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Msg>();
         let depth = Arc::new(AtomicUsize::new(0));
         let worker_depth = Arc::clone(&depth);
         let worker = std::thread::spawn(move || {
-            let engine = engine_builder();
+            let (engine, spec) = builder();
             let mut sched = Scheduler::new(&engine);
+            if let Some(sd) = spec {
+                if let Err(e) = sched.set_spec_dec(Some(sd)) {
+                    eprintln!("specdec disabled: {e}");
+                }
+            }
+            // worker-wide default draft spec: requests that don't name a
+            // draft inherit it. ARA_DRAFT_SPEC wins (empty string = no
+            // default); unset falls back to the installed decoder's spec,
+            // so `--draft` alone turns drafting on for every greedy request
+            let default_draft = std::env::var("ARA_DRAFT_SPEC")
+                .ok()
+                .map(|v| v.trim().to_string())
+                .or_else(|| sched.spec_dec().map(|sd| sd.spec().to_string()))
+                .filter(|v| !v.is_empty());
             let mut replies: HashMap<u64, mpsc::Sender<ServeResponse>> = HashMap::new();
             let mut shutdown = false;
             let mut backoff = cfg.backoff_base;
@@ -210,6 +248,12 @@ impl Router {
                     };
                     match msg {
                         Msg::Req(r, reply) => {
+                            // per-request draft override: absent → worker
+                            // default; empty string → explicit opt-out
+                            let draft_spec = r
+                                .draft_spec
+                                .or_else(|| default_draft.clone())
+                                .filter(|v| !v.is_empty());
                             let id = sched.submit(Request {
                                 prompt: r.prompt,
                                 gen_len: r.gen_len,
@@ -217,6 +261,7 @@ impl Router {
                                 deadline_steps: r.deadline_steps,
                                 cancel: r.cancel,
                                 stream: r.stream,
+                                draft_spec,
                             });
                             replies.insert(id, reply);
                         }
@@ -230,6 +275,15 @@ impl Router {
                                 simd_tier: crate::kernels::active_tier().name(),
                                 queued: sched.queued(),
                                 active: sched.active(),
+                                draft_spec: sched
+                                    .spec_dec()
+                                    .map(|sd| sd.spec().to_string()),
+                                draft_pool_utilization: sched
+                                    .spec_dec()
+                                    .map(|sd| sd.pool_utilization()),
+                                active_drafts: sched
+                                    .spec_dec()
+                                    .map_or(0, |sd| sd.active_drafts()),
                             });
                         }
                         Msg::Shutdown => shutdown = true,

@@ -45,6 +45,17 @@
 //! [`FaultPlan`](super::FaultPlan) (`ARA_FAULT_PLAN`) injects
 //! decode/prefill faults, pool-pressure spikes, and latency stalls
 //! deterministically.
+//!
+//! **Self-speculative decoding** (DESIGN.md §8): when a [`SpecDec`] is
+//! installed ([`Scheduler::set_spec_dec`]) and a request opts in
+//! ([`Request::draft_spec`] naming its spec, greedy sampling), each decode
+//! iteration drafts `k` tokens with the compressed draft engine and
+//! verifies the whole window in **one** batched `decode_verify` pass,
+//! emitting the longest accepted prefix plus the target's corrected/bonus
+//! token — up to `k + 1` tokens per pass. Plain and speculative requests
+//! coexist in one batch (plain slots ride the pass at window position 0),
+//! and any draft-side failure falls back to the plain one-token step.
+//! Accepted streams stay bitwise identical to plain greedy decode.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -55,6 +66,7 @@ use super::engine::{Engine, FinishReason};
 use super::faults::{FaultKind, FaultPlan};
 use super::kvpool::{KvPool, PrefixHit};
 use super::sampler::{Sampler, SamplingParams};
+use super::specdec::SpecDec;
 use crate::Result;
 
 /// [`Completion::slot`] value for requests that finished without ever
@@ -103,6 +115,12 @@ pub struct Request {
     /// token already delivered. A gone receiver is ignored (disconnects
     /// are signalled through [`CancelToken`], not the sink).
     pub stream: Option<std::sync::mpsc::Sender<i32>>,
+    /// Self-speculative decoding opt-in (DESIGN.md §8): the registry spec
+    /// of the draft plan to propose tokens with (e.g. `ara@0.35`). Honored
+    /// only when it names the spec of the scheduler's installed
+    /// [`SpecDec`] **and** sampling is greedy (the bitwise-parity contract
+    /// covers greedy argmax only); otherwise the request decodes plain.
+    pub draft_spec: Option<String>,
 }
 
 /// Scheduler resilience knobs.
@@ -191,6 +209,18 @@ pub struct SchedStats {
     /// Pool rebuilds after an engine error consumed the in-flight buffers
     /// (each also drops the prefix cache).
     pub pool_resets: usize,
+    /// Tokens actually delivered through per-token streaming sinks. Rides
+    /// the per-request `streamed` high-water mark: a retried request
+    /// regenerates its prefix but never re-sends a delivered position.
+    pub streamed: usize,
+    /// Batched `decode_verify` passes run (self-speculative decoding,
+    /// DESIGN.md §8).
+    pub verify_passes: usize,
+    /// Tokens proposed by the draft engine across verify passes.
+    pub draft_tokens: usize,
+    /// Draft tokens accepted by target verification (≤ `draft_tokens`;
+    /// each verify pass also emits one corrected/bonus token on top).
+    pub draft_accepted: usize,
     /// Most recent fault message, for diagnostics on `Failed` responses.
     pub last_fault: Option<String>,
 }
@@ -216,6 +246,21 @@ impl SchedStats {
             0.0
         } else {
             self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    /// Mean accepted draft tokens per verify pass, in [0, k] — the
+    /// speculative win (comparable to [`super::GenStats::accepted_per_verify`]).
+    pub fn accepted_per_verify(&self) -> f64 {
+        self.draft_accepted as f64 / (self.verify_passes as f64).max(1.0)
+    }
+
+    /// Fraction of proposed draft tokens the target accepted, in [0, 1].
+    pub fn draft_accept_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            0.0
+        } else {
+            self.draft_accepted as f64 / self.draft_tokens as f64
         }
     }
 }
@@ -282,6 +327,9 @@ pub struct Scheduler<'e> {
     plan: Option<FaultPlan>,
     /// Pool blocks held by active `spike` fault events: (release step, blocks).
     spike_holds: Vec<(usize, Vec<usize>)>,
+    /// The self-speculative draft side, when installed
+    /// ([`Scheduler::set_spec_dec`]).
+    spec: Option<SpecDec>,
 }
 
 impl<'e> Scheduler<'e> {
@@ -313,7 +361,56 @@ impl<'e> Scheduler<'e> {
             cfg,
             plan: None,
             spike_holds: Vec::new(),
+            spec: None,
         }
+    }
+
+    /// Install (or clear) the self-speculative decoder (DESIGN.md §8).
+    /// Requires the target engine's verify specialization
+    /// ([`Engine::enable_verify`]) with window = draft `k` + 1, and a
+    /// draft engine of the same batch size.
+    pub fn set_spec_dec(&mut self, spec: Option<SpecDec>) -> Result<()> {
+        if let Some(sd) = &spec {
+            if !self.engine.has_verify() {
+                return Err(crate::anyhow!(
+                    "speculative decoding needs Engine::enable_verify on the target"
+                ));
+            }
+            if self.engine.verify_window() != sd.k() + 1 {
+                return Err(crate::anyhow!(
+                    "verify window {} != draft k {} + 1",
+                    self.engine.verify_window(),
+                    sd.k()
+                ));
+            }
+            if sd.batch() != self.engine.batch {
+                return Err(crate::anyhow!(
+                    "draft batch {} != target batch {}",
+                    sd.batch(),
+                    self.engine.batch
+                ));
+            }
+        }
+        if let Some(old) = &mut self.spec {
+            old.release_all();
+        }
+        self.spec = spec;
+        Ok(())
+    }
+
+    /// The installed speculative decoder, if any.
+    pub fn spec_dec(&self) -> Option<&SpecDec> {
+        self.spec.as_ref()
+    }
+
+    /// Whether a request opts into the installed speculative decoder: it
+    /// names the decoder's spec and samples greedily — the bitwise-parity
+    /// contract covers greedy argmax only. Single-token requests draw
+    /// their one token from prefill logits and never reach decode.
+    fn spec_eligible(req: &Request, sd: &SpecDec) -> bool {
+        req.params.temperature <= 0.0
+            && req.gen_len > 1
+            && req.draft_spec.as_deref() == Some(sd.spec())
     }
 
     /// Install (or clear) the chaos schedule; fires from the next step.
@@ -575,6 +672,7 @@ impl<'e> Scheduler<'e> {
         self.stats.prefill_s += t0.elapsed().as_secs_f64();
 
         let p = self.engine.config().prefill_len;
+        let mut spec_admits: Vec<(usize, Vec<i32>)> = Vec::new();
         let mut admits: VecDeque<Admit> = admits.into();
         while let Some(a) = admits.pop_front() {
             let Admit { pending, slot, eff, table, covered, cached_logits } = a;
@@ -631,13 +729,30 @@ impl<'e> Scheduler<'e> {
             let tok = act.sampler.sample(&row);
             act.last = tok;
             act.tokens.push(tok);
-            Self::emit_stream(&mut act);
+            Self::emit_stream(&mut act, &mut self.stats);
             self.stats.tokens_generated += 1;
             self.stats.prefill_sampled += 1;
             match self.finish_reason(&act) {
                 Some(reason) => done.push(self.complete(act, reason)),
-                None => self.slots[slot] = Some(act),
+                None => {
+                    if self.spec.as_ref().is_some_and(|sd| Self::spec_eligible(&act.req, sd)) {
+                        spec_admits.push((slot, eff));
+                    }
+                    self.slots[slot] = Some(act);
+                }
             }
+        }
+        // draft-admit the speculative newcomers: one batched draft prefill
+        // (through the draft pool's own prefix cache); failures silently
+        // leave those requests on the plain path
+        if !spec_admits.is_empty() {
+            let t1 = Instant::now();
+            if let Some(sd) = self.spec.as_mut() {
+                let pairs: Vec<(usize, &[i32])> =
+                    spec_admits.iter().map(|(s, e)| (*s, e.as_slice())).collect();
+                sd.admit(&pairs);
+            }
+            self.stats.prefill_s += t1.elapsed().as_secs_f64();
         }
         Ok(())
     }
@@ -679,6 +794,9 @@ impl<'e> Scheduler<'e> {
     /// queue front — it restarts from prefill with its original sampler
     /// seed, so its final token stream is unchanged (determinism).
     fn requeue(&mut self, a: Active) {
+        if let Some(sd) = self.spec.as_mut() {
+            sd.release(a.slot); // the restart re-admits through the draft cache
+        }
         for b in &a.table {
             self.pool.release(*b);
         }
@@ -701,11 +819,12 @@ impl<'e> Scheduler<'e> {
     /// any. The `streamed` high-water mark makes this idempotent across
     /// retries: a restarted request regenerates a bitwise-identical
     /// prefix, so positions below the mark are skipped, never re-sent.
-    fn emit_stream(a: &mut Active) {
+    fn emit_stream(a: &mut Active, stats: &mut SchedStats) {
         if let Some(sink) = &a.req.stream {
             while a.streamed < a.tokens.len() {
                 let _ = sink.send(a.tokens[a.streamed]);
                 a.streamed += 1;
+                stats.streamed += 1;
             }
         }
     }
@@ -715,6 +834,12 @@ impl<'e> Scheduler<'e> {
             self.ensure_block(slot, done);
         }
         if self.slots.iter().all(Option::is_none) {
+            return Ok(());
+        }
+        // speculative path: when any slot has a live draft, one verify
+        // round replaces this step (slots without drafts ride along at
+        // window position 0 — bitwise identical to their plain step)
+        if self.spec.is_some() && self.engine.has_verify() && self.decode_spec(done)? {
             return Ok(());
         }
         let b = self.engine.batch;
@@ -762,7 +887,7 @@ impl<'e> Scheduler<'e> {
             let tok = a.sampler.sample(row);
             a.last = tok;
             a.tokens.push(tok);
-            Self::emit_stream(&mut a);
+            Self::emit_stream(&mut a, &mut self.stats);
             self.stats.tokens_generated += 1;
             match self.finish_reason(&a) {
                 Some(reason) => done.push(self.complete(a, reason)),
@@ -770,6 +895,185 @@ impl<'e> Scheduler<'e> {
             }
         }
         Ok(())
+    }
+
+    /// One speculative serve-loop iteration (DESIGN.md §8): draft `k`
+    /// greedy tokens per opted-in slot, verify the whole `W = k + 1`
+    /// window in one batched [`Engine::decode_step_verify`] pass, then
+    /// emit the longest accepted draft prefix plus the target's
+    /// corrected/bonus token — each emission walking the exact
+    /// sample → stream → finish pipeline of the plain path, so streams
+    /// and finish reasons stay bitwise identical. Slots without a live
+    /// draft (plain requests, retired drafts, window-end) ride the same
+    /// pass at window position 0. Returns `false` when no slot could
+    /// propose — the caller then runs the plain one-token step.
+    fn decode_spec(&mut self, done: &mut Vec<Completion>) -> Result<bool> {
+        let w = self.engine.verify_window();
+        let k = w - 1;
+        let b = self.engine.batch;
+        let bl = self.pool.cfg.block_len;
+        let bps = self.pool.cfg.blocks_per_seq(self.engine.config());
+        let s_virt = bps * bl;
+        // which active slots can run a full window this round?
+        let mut targets: Vec<(usize, i32, usize)> = Vec::new();
+        let mut drops: Vec<usize> = Vec::new();
+        for slot in 0..self.slots.len() {
+            let Some((vpos, last)) = self.slots[slot]
+                .as_ref()
+                .map(|a| ((a.fill - a.start) as usize, a.last))
+            else {
+                continue;
+            };
+            if !self.spec.as_ref().is_some_and(|sd| sd.has(slot)) {
+                continue;
+            }
+            if vpos + w > s_virt {
+                // no room to write k+1 positions: this request finishes on
+                // plain steps (the draft can't stay in sync through them)
+                drops.push(slot);
+                continue;
+            }
+            // target-side blocks for the whole window [vpos, vpos + k] —
+            // no preemption here: on exhaustion the slot just rides plain
+            let needed = (vpos + k) / bl + 1;
+            let mut ok = true;
+            loop {
+                let a = self.slots[slot].as_mut().expect("checked active");
+                if a.table.len() >= needed {
+                    break;
+                }
+                match self.pool.alloc() {
+                    Some(blk) => a.table.push(blk),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                drops.push(slot);
+                continue;
+            }
+            targets.push((slot, last, vpos));
+        }
+        {
+            let sd = self.spec.as_mut().expect("caller checked spec");
+            for s in drops {
+                sd.release(s);
+            }
+            if targets.is_empty() {
+                return Ok(false);
+            }
+        }
+        let t0 = Instant::now();
+        let proposals = self.spec.as_mut().expect("caller checked spec").propose(&targets);
+        if proposals.is_empty() {
+            // draft engine faulted or every draft ran out of pool room —
+            // this step falls back to the plain path
+            self.stats.decode_s += t0.elapsed().as_secs_f64();
+            return Ok(false);
+        }
+        let mut dmap: Vec<Option<&[i32]>> = vec![None; b];
+        for (s, d) in &proposals {
+            dmap[*s] = Some(d.as_slice());
+        }
+        // one verify pass over the whole batch: window position 0 is every
+        // active slot's normal one-token step; positions >= 1 carry the
+        // draft tokens (speculative slots) or park in the scratch row
+        let mut toks = vec![crate::data::BOS_TOKEN; b * w];
+        let mut vlens = vec![0i32; b];
+        let mut rows = vec![0i32; b * w];
+        let mut btable = vec![0i32; b * bps];
+        for a in self.slots.iter().flatten() {
+            let vpos = (a.fill - a.start) as usize;
+            vlens[a.slot] = vpos as i32;
+            toks[a.slot * w] = a.last;
+            rows[a.slot * w] = (a.table[vpos / bl] * bl + vpos % bl) as i32;
+            for (j, &blk) in a.table.iter().enumerate() {
+                btable[a.slot * bps + j] = blk as i32;
+            }
+            if let Some(d) = dmap[a.slot] {
+                for j in 1..w {
+                    let vp = vpos + j;
+                    toks[a.slot * w + j] = d[j - 1];
+                    rows[a.slot * w + j] = (a.table[vp / bl] * bl + vp % bl) as i32;
+                }
+            }
+        }
+        let bufs = self.pool.take_bufs()?;
+        let (logits, new_bufs) =
+            match self.engine.decode_step_verify(bufs, &toks, &vlens, &rows, &btable) {
+                Ok(out) => out,
+                Err(e) => {
+                    // same recovery as a plain decode fault: the pass
+                    // consumed the pool buffers; every in-flight request
+                    // retries to a bitwise-identical stream
+                    self.stats.decode_s += t0.elapsed().as_secs_f64();
+                    self.note_fault(&e.to_string());
+                    self.stats.decode_faults += 1;
+                    self.recover_actives(true, done);
+                    return Ok(true);
+                }
+            };
+        self.pool.restore_bufs(new_bufs);
+        self.stats.verify_passes += 1;
+        let vocab = self.engine.config().vocab;
+        // draft frontier updates to apply after the walk:
+        // (slot, new virtual fill, catch-up token on full acceptance)
+        let mut commits: Vec<(usize, usize, Option<i32>)> = Vec::new();
+        for slot in 0..b {
+            let Some(mut a) = self.slots[slot].take() else { continue };
+            let d = dmap[slot];
+            let span = if d.is_some() { w } else { 1 };
+            let mut finished = None;
+            let mut accepted = 0usize;
+            for j in 0..span {
+                let off = (slot * w + j) * vocab;
+                let row = &logits.data[off..off + vocab];
+                let tok = a.sampler.sample(row);
+                a.fill += 1;
+                a.last = tok;
+                a.tokens.push(tok);
+                self.stats.tokens_generated += 1;
+                // target argmax agrees with the draft: token accepted,
+                // keep consuming the window. Disagreement means `tok` is
+                // the correction (j < k) or the bonus token (j == k) —
+                // either way the round ends with it emitted.
+                let matched = d.is_some_and(|dd| j < k && tok == dd[j]);
+                if matched {
+                    accepted += 1;
+                }
+                if let Some(reason) = self.finish_reason(&a) {
+                    finished = Some(reason);
+                    break;
+                }
+                if !matched {
+                    break;
+                }
+            }
+            if let Some(dd) = d {
+                self.stats.draft_tokens += dd.len();
+                self.stats.draft_accepted += accepted;
+                if finished.is_some() {
+                    self.spec.as_mut().expect("caller checked spec").release(slot);
+                } else {
+                    // full acceptance leaves the last draft token's own
+                    // K/V row unwritten on the draft side — feed it back
+                    let catch_up = if accepted == k { Some(dd[k - 1]) } else { None };
+                    commits.push((slot, (a.fill - a.start) as usize, catch_up));
+                }
+            }
+            Self::emit_stream(&mut a, &mut self.stats);
+            match finished {
+                Some(reason) => done.push(self.complete(a, reason)),
+                None => self.slots[slot] = Some(a),
+            }
+        }
+        if !commits.is_empty() {
+            self.spec.as_mut().expect("caller checked spec").commit(&commits);
+        }
+        self.stats.decode_s += t0.elapsed().as_secs_f64();
+        Ok(true)
     }
 
     fn note_fault(&mut self, msg: &str) {
@@ -893,6 +1197,11 @@ impl<'e> Scheduler<'e> {
     /// prefix cache). Either way the requests restart through prefill
     /// with their original sampler seeds — bitwise-identical streams.
     fn recover_actives(&mut self, buffers_lost: bool, done: &mut Vec<Completion>) {
+        // every in-flight draft dies with its request; the draft pool and
+        // its prefix cache survive for the retries' re-admission
+        if let Some(sd) = self.spec.as_mut() {
+            sd.release_all();
+        }
         let mut actives: Vec<Active> =
             self.slots.iter_mut().filter_map(|s| s.take()).collect();
         if actives.is_empty() && !buffers_lost {
@@ -941,6 +1250,9 @@ impl<'e> Scheduler<'e> {
     /// step. Returns the aborted ids so a front-end can fail just those
     /// callers.
     pub fn abort_active(&mut self) -> Vec<u64> {
+        if let Some(sd) = self.spec.as_mut() {
+            sd.release_all();
+        }
         let actives: Vec<Active> =
             self.slots.iter_mut().filter_map(|s| s.take()).collect();
         let mut ids = Vec::new();
@@ -980,6 +1292,9 @@ impl<'e> Scheduler<'e> {
     }
 
     fn complete(&mut self, a: Active, finish_reason: FinishReason) -> Completion {
+        if let Some(sd) = self.spec.as_mut() {
+            sd.release(a.slot);
+        }
         for b in &a.table {
             self.pool.release(*b);
         }

@@ -1,0 +1,380 @@
+//! Self-speculative decoding (DESIGN.md §8): a *heavier-compressed plan of
+//! the same backbone* acts as the draft model. ARA's allocation registry
+//! materializes `ara@0.35` and `ara@0.8` from one weight store, so the
+//! draft shares the target's tokenizer, K/V geometry, and weight
+//! provenance — no second checkpoint, no distillation.
+//!
+//! [`SpecDec`] owns the draft [`Engine`] and a **private** paged
+//! [`KvPool`] (with its own prefix cache), mirroring one draft sequence
+//! per target scheduler slot. Per verify round the scheduler asks it to
+//! [`SpecDec::propose`] `k` greedy tokens (k sequential batched draft
+//! decode steps), runs the target's one-pass `decode_verify` window, and
+//! then [`SpecDec::commit`]s the accepted frontier back (rewinding past
+//! rejected positions is free — rows above the frontier are masked and
+//! overwritten on the next append).
+//!
+//! Failure policy: the draft is *advisory*. Any draft-side failure — pool
+//! exhaustion, a prefill or decode fault, falling out of sync — retires
+//! the affected draft slots and the requests silently continue on the
+//! plain one-token path. Accepted token streams are spec-invariant
+//! (bitwise identical to plain greedy decode), so fallback is always
+//! correct, never a quality cliff.
+
+use super::engine::Engine;
+use super::kvpool::{KvPool, PrefixHit};
+use super::sampler::argmax;
+use crate::Result;
+
+/// One draft sequence shadowing an active target slot.
+struct DraftSlot {
+    /// Next draft K/V write position (virtual coordinates). Between verify
+    /// rounds this always equals the target request's `fill - start` — the
+    /// sync invariant [`SpecDec::propose`] checks before drafting.
+    fill: usize,
+    /// Physical draft-pool blocks backing virtual positions, grown on
+    /// demand (the draft pool is independent of the target pool).
+    table: Vec<usize>,
+}
+
+/// The draft side of the self-speculative decode loop: a compressed-plan
+/// [`Engine`] plus its private paged pool, one shadow sequence per target
+/// scheduler slot.
+pub struct SpecDec {
+    draft: Engine,
+    pool: KvPool,
+    spec: String,
+    k: usize,
+    slots: Vec<Option<DraftSlot>>,
+}
+
+impl SpecDec {
+    /// Wrap a draft engine (same model config and batch size as the
+    /// target) proposing `k` tokens per verify round. `spec` is the
+    /// registry spec the draft was allocated from (`ara@0.35`, …) —
+    /// requests opt in by naming it in [`super::Request::draft_spec`].
+    pub fn new(draft: Engine, spec: &str, k: usize) -> Result<SpecDec> {
+        if !draft.has_paged() {
+            return Err(crate::anyhow!(
+                "speculative drafting requires the paged path (cpu backend)"
+            ));
+        }
+        if k < 1 {
+            return Err(crate::anyhow!("draft length k must be >= 1 (got {k})"));
+        }
+        let pool = KvPool::new(draft.config(), draft.paged_cfg());
+        let slots = (0..draft.batch).map(|_| None).collect();
+        Ok(SpecDec { pool, spec: spec.to_string(), k, slots, draft })
+    }
+
+    /// The registry spec requests must name to opt in.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Draft tokens proposed per verify round.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Draft engine batch size (must equal the target scheduler's).
+    pub fn batch(&self) -> usize {
+        self.draft.batch
+    }
+
+    /// Whether `slot` currently has a live draft sequence.
+    pub fn has(&self, slot: usize) -> bool {
+        self.slots[slot].is_some()
+    }
+
+    /// Live draft sequences.
+    pub fn active_drafts(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Current used fraction of the draft pool's allocatable blocks.
+    pub fn pool_utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// High-water used fraction of the draft pool since construction.
+    pub fn pool_peak_utilization(&self) -> f64 {
+        self.pool.peak_utilization()
+    }
+
+    /// Retire `slot`'s draft sequence (idempotent), releasing its blocks.
+    pub fn release(&mut self, slot: usize) {
+        if let Some(st) = self.slots[slot].take() {
+            for b in st.table {
+                self.pool.release(b);
+            }
+        }
+    }
+
+    /// Retire every draft sequence (scheduler recovery/abort paths). The
+    /// draft pool and its prefix cache survive, so re-admitted requests
+    /// can still hit cached prompt chains.
+    pub fn release_all(&mut self) {
+        for s in 0..self.slots.len() {
+            self.release(s);
+        }
+    }
+
+    /// Drop every draft slot and rebuild the draft pool after a failed
+    /// draft step consumed its buffers. The affected requests silently
+    /// fall back to plain decode (streams are spec-invariant).
+    fn poison(&mut self) {
+        for s in &mut self.slots {
+            *s = None;
+        }
+        self.pool.reset();
+    }
+
+    /// Draft-admit freshly admitted requests: `(target slot, effective
+    /// windowed prompt)` pairs. One batched draft prefill covers the
+    /// draft-cache misses; fully cached prompts skip prefill through the
+    /// draft pool's own prefix map. Any per-slot failure (pool exhaustion,
+    /// prefill fault) skips just that slot — the request decodes plain.
+    pub fn admit(&mut self, reqs: &[(usize, &[i32])]) {
+        let bl = self.pool.cfg.block_len;
+        let p = self.draft.config().prefill_len;
+        struct Adm<'a> {
+            slot: usize,
+            eff: &'a [i32],
+            table: Vec<usize>,
+            covered: usize,
+        }
+        let mut misses: Vec<Adm> = Vec::new();
+        for &(slot, eff) in reqs {
+            // a stale draft sequence for a reused slot would be a desync
+            self.release(slot);
+            let n = eff.len();
+            if n == 0 || n > p {
+                continue;
+            }
+            let total = n.div_ceil(bl);
+            let (mut table, covered, full) = match self.pool.lookup(eff) {
+                Some(PrefixHit::Full { blocks, .. }) => (blocks, n, true),
+                Some(PrefixHit::Partial { blocks, covered }) => (blocks, covered, false),
+                None => (Vec::new(), 0, false),
+            };
+            // a fully cached prompt with a partial tail block will be
+            // appended into — copy-on-write it (shared blocks are never
+            // written), same contract as the target pool
+            let mut ok = true;
+            if full && n % bl != 0 {
+                let tail = *table.last().expect("full hit implies blocks");
+                match self.pool.cow_block(tail) {
+                    Ok(Some(fresh)) => {
+                        self.pool.release(tail);
+                        *table.last_mut().unwrap() = fresh;
+                    }
+                    _ => ok = false,
+                }
+            }
+            while ok && table.len() < total {
+                match self.pool.alloc() {
+                    Some(nb) => table.push(nb),
+                    None => ok = false,
+                }
+            }
+            if !ok {
+                for blk in table {
+                    self.pool.release(blk);
+                }
+                continue;
+            }
+            if full {
+                self.slots[slot] = Some(DraftSlot { fill: n, table });
+            } else {
+                misses.push(Adm { slot, eff, table, covered });
+            }
+        }
+        if misses.is_empty() {
+            return;
+        }
+        let pairs: Vec<(usize, &[i32])> = misses.iter().map(|m| (m.slot, m.eff)).collect();
+        let (rows, caches) = match self.draft.prefill_into_slots(&pairs, None) {
+            Ok(x) => x,
+            Err(_) => {
+                // draft prefill fault: no draft for these slots, no harm
+                for m in misses {
+                    for blk in m.table {
+                        self.pool.release(blk);
+                    }
+                }
+                return;
+            }
+        };
+        for (m, row) in misses.into_iter().zip(rows) {
+            let n = m.eff.len();
+            if self.pool.write_prefill(&caches, m.slot, p - n, n, m.covered, &m.table).is_err() {
+                for blk in m.table {
+                    self.pool.release(blk);
+                }
+                continue;
+            }
+            self.pool.register(m.eff, &m.table, &row);
+            self.slots[m.slot] = Some(DraftSlot { fill: n, table: m.table });
+        }
+    }
+
+    /// Propose `k` greedy draft tokens per target: `k` sequential batched
+    /// draft decode steps over the draft pool. `targets` carries
+    /// `(slot, pending last token, target virtual position)`; slots that
+    /// are out of sync, out of draft-pool room, or hit a draft fault are
+    /// retired (plain fallback) and omitted from the result.
+    pub fn propose(&mut self, targets: &[(usize, i32, usize)]) -> Vec<(usize, Vec<i32>)> {
+        let b = self.draft.batch;
+        let bl = self.pool.cfg.block_len;
+        let bps = self.pool.cfg.blocks_per_seq(self.draft.config());
+        let s_virt = bps * bl;
+        // (slot, next token to feed) for drafts that can run a full window
+        let mut live: Vec<(usize, i32)> = Vec::new();
+        for &(slot, last, vpos) in targets {
+            let sync = self.slots[slot].as_ref().is_some_and(|st| st.fill == vpos);
+            if !sync || vpos + self.k >= s_virt {
+                self.release(slot);
+                continue;
+            }
+            // draft blocks for write positions [vpos, vpos + k] (the last
+            // one backs the post-verify catch-up feed)
+            let needed = (vpos + self.k) / bl + 1;
+            let mut ok = true;
+            loop {
+                let st = self.slots[slot].as_mut().expect("checked in sync");
+                if st.table.len() >= needed {
+                    break;
+                }
+                match self.pool.alloc() {
+                    Some(nb) => st.table.push(nb),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                self.release(slot);
+                continue;
+            }
+            live.push((slot, last));
+        }
+        if live.is_empty() {
+            return Vec::new();
+        }
+        let mut out: Vec<(usize, Vec<i32>)> =
+            live.iter().map(|&(s, _)| (s, Vec::with_capacity(self.k))).collect();
+        let vocab = self.draft.config().vocab;
+        for _round in 0..self.k {
+            let mut toks = vec![crate::data::BOS_TOKEN; b];
+            let mut vlens = vec![0i32; b];
+            let mut rows = vec![0i32; b];
+            let mut btable = vec![0i32; b * bps];
+            for &(slot, feed) in &live {
+                let st = self.slots[slot].as_ref().expect("live implies slot");
+                toks[slot] = feed;
+                vlens[slot] = st.fill as i32;
+                rows[slot] = (st.table[st.fill / bl] * bl + st.fill % bl) as i32;
+                for (j, &blk) in st.table.iter().enumerate() {
+                    btable[slot * bps + j] = blk as i32;
+                }
+            }
+            let Ok(bufs) = self.pool.take_bufs() else {
+                self.poison();
+                return Vec::new();
+            };
+            let step = self.draft.decode_step_paged(bufs, &toks, &vlens, &rows, &btable);
+            let (logits, new_bufs) = match step {
+                Ok(x) => x,
+                Err(_) => {
+                    // the failed step consumed the draft pool buffers —
+                    // rebuild and retire every draft (plain fallback)
+                    self.poison();
+                    return Vec::new();
+                }
+            };
+            self.pool.restore_bufs(new_bufs);
+            for (li, (slot, feed)) in live.iter_mut().enumerate() {
+                let row = &logits.data[*slot * vocab..(*slot + 1) * vocab];
+                let tok = argmax(row) as i32;
+                self.slots[*slot].as_mut().expect("live implies slot").fill += 1;
+                out[li].1.push(tok);
+                *feed = tok;
+            }
+        }
+        out
+    }
+
+    /// Commit verify outcomes back into the draft state: per slot the new
+    /// shared frontier (`new_fill` = the target's post-round `fill -
+    /// start`) plus, for fully accepted windows, the last draft token
+    /// whose own K/V row the draft never wrote (`catch_up`) — it is fed
+    /// through one batched draft step (logits discarded) so the draft
+    /// stays bitwise in sync. Rewinding past rejected positions is free:
+    /// rows above the frontier are masked and overwritten on re-append.
+    pub fn commit(&mut self, advances: &[(usize, usize, Option<i32>)]) {
+        let feeds: Vec<(usize, i32)> = advances
+            .iter()
+            .filter_map(|&(s, _, c)| c.map(|t| (s, t)))
+            .filter(|&(s, _)| self.slots[s].is_some())
+            .collect();
+        if !feeds.is_empty() {
+            let b = self.draft.batch;
+            let bl = self.pool.cfg.block_len;
+            let bps = self.pool.cfg.blocks_per_seq(self.draft.config());
+            let mut toks = vec![crate::data::BOS_TOKEN; b];
+            let mut vlens = vec![0i32; b];
+            let mut rows = vec![0i32; b];
+            let mut btable = vec![0i32; b * bps];
+            for &(slot, tok) in &feeds {
+                let st = self.slots[slot].as_ref().expect("filtered on is_some");
+                toks[slot] = tok;
+                vlens[slot] = st.fill as i32;
+                rows[slot] = (st.table[st.fill / bl] * bl + st.fill % bl) as i32;
+                for (j, &blk) in st.table.iter().enumerate() {
+                    btable[slot * bps + j] = blk as i32;
+                }
+            }
+            let Ok(bufs) = self.pool.take_bufs() else {
+                self.poison();
+                return;
+            };
+            match self.draft.decode_step_paged(bufs, &toks, &vlens, &rows, &btable) {
+                Ok((_logits, new_bufs)) => {
+                    self.pool.restore_bufs(new_bufs);
+                    for &(slot, _) in &feeds {
+                        self.slots[slot].as_mut().expect("filtered on is_some").fill += 1;
+                    }
+                }
+                Err(_) => {
+                    self.poison();
+                    return;
+                }
+            }
+        }
+        for &(slot, new_fill, _) in advances {
+            if let Some(st) = self.slots[slot].as_mut() {
+                debug_assert!(
+                    new_fill <= st.fill,
+                    "draft frontier moved backwards past the proposal window"
+                );
+                st.fill = new_fill;
+            }
+        }
+    }
+}
+
+impl Drop for SpecDec {
+    /// Debug-build leak check, mirroring the scheduler's: after retiring
+    /// every draft sequence the draft pool must balance (scratch + cached
+    /// chains account for every block).
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        if !std::thread::panicking() {
+            self.release_all();
+            if self.pool.bufs_present() {
+                self.pool.assert_balanced();
+            }
+        }
+    }
+}

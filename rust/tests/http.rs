@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 use ara_compress::coordinator::Pipeline;
 use ara_compress::data::{corpus_spec, generate_tokens};
 use ara_compress::json::{self, Json};
-use ara_compress::serving::http::wire::{http_call, send_request};
+use ara_compress::serving::http::wire::{http_call, read_response, send_request, send_request_keep};
 use ara_compress::serving::{HttpCfg, HttpServer, Router, RouterCfg, ShutdownHandle};
 
 fn pipeline() -> Pipeline {
@@ -227,6 +227,121 @@ fn disconnect_mid_stream_cancels_and_frees_blocks() {
     // in the scheduler's Drop) — a leaked block fails the join
     stop.shutdown();
     server.join().expect("server thread").expect("no leaked KV blocks at shutdown");
+}
+
+/// Keep-alive: one TCP connection serves sequential requests with bodies
+/// byte-identical to one-shot connections; a streamed completion on the
+/// same connection closes it after the terminal chunk (streaming is tied
+/// to the decode loop, so reuse would serialize unrelated requests).
+#[test]
+fn keep_alive_reuses_the_connection_with_identical_bodies() {
+    let (addr, stop, server) = start_server(HttpCfg::default());
+    let body = completion_json(&prompt_tokens(5, 9090), 5, "");
+
+    // reference bodies over one-shot connections
+    let oneshot = http_call(&addr, "POST", "/v1/completions", Some(&body)).expect("one-shot");
+    assert_eq!(oneshot.status, 200);
+
+    let mut raw = TcpStream::connect(&addr).expect("connect");
+    raw.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    // mixed traffic over ONE connection: health, two completions, stats
+    send_request_keep(&mut raw, "GET", "/healthz", None, true).expect("send healthz");
+    let r = read_response(&mut raw).expect("healthz response");
+    assert_eq!(r.status, 200);
+    send_request_keep(&mut raw, "POST", "/v1/completions", Some(&body), true).expect("send 1");
+    let first = read_response(&mut raw).expect("first completion");
+    send_request_keep(&mut raw, "POST", "/v1/completions", Some(&body), true).expect("send 2");
+    let second = read_response(&mut raw).expect("second completion");
+    assert_eq!(first.status, 200);
+    assert_eq!(first.body, second.body, "keep-alive repeats must be byte-identical");
+    assert_eq!(first.body, oneshot.body, "keep-alive must not change response bodies");
+
+    // a streamed completion on the same connection answers chunked and
+    // then closes it, even though the client asked keep-alive
+    let streamed_body = completion_json(&prompt_tokens(5, 9090), 5, r#","stream":true"#);
+    send_request_keep(&mut raw, "POST", "/v1/completions", Some(&streamed_body), true)
+        .expect("send stream");
+    let streamed = read_response(&mut raw).expect("streamed response");
+    assert_eq!(streamed.status, 200);
+    assert!(streamed.chunks.is_some());
+    assert_eq!(
+        streamed.chunks.as_ref().unwrap().last().unwrap(),
+        &oneshot.body,
+        "final chunk still byte-identical to the non-streaming body"
+    );
+    let mut probe = [0u8; 16];
+    assert_eq!(
+        raw.read(&mut probe).expect("post-stream read"),
+        0,
+        "server must close the connection after a streamed response"
+    );
+
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
+}
+
+/// `ARA_HTTP_KEEPALIVE_MAX = 1` disables reuse: the server answers with
+/// `Connection: close` framing and hangs up after one request even when
+/// the client asked keep-alive.
+#[test]
+fn keepalive_max_one_closes_after_every_request() {
+    let (addr, stop, server) =
+        start_server(HttpCfg { keepalive_max: 1, ..HttpCfg::default() });
+    let mut raw = TcpStream::connect(&addr).expect("connect");
+    raw.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    send_request_keep(&mut raw, "GET", "/healthz", None, true).expect("send");
+    let r = read_response(&mut raw).expect("response");
+    assert_eq!(r.status, 200);
+    let mut probe = [0u8; 16];
+    assert_eq!(
+        raw.read(&mut probe).expect("post-response read"),
+        0,
+        "keepalive_max = 1 must close after the first response"
+    );
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
+}
+
+/// The accept-loop connection cap: with `max_conns = 1` and one held
+/// keep-alive connection, a second connection is shed with an immediate
+/// 503 — no handler thread, no engine work. Releasing the held connection
+/// restores service.
+#[test]
+fn connection_cap_sheds_excess_with_503() {
+    let (addr, stop, server) =
+        start_server(HttpCfg { max_conns: 1, ..HttpCfg::default() });
+
+    // hold the only slot: a completed keep-alive request leaves the
+    // handler thread alive, parked in read_request
+    let mut held = TcpStream::connect(&addr).expect("connect");
+    held.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    send_request_keep(&mut held, "GET", "/healthz", None, true).expect("send");
+    assert_eq!(read_response(&mut held).expect("held response").status, 200);
+
+    // the next connection must be shed at accept time
+    let shed = http_call(&addr, "GET", "/healthz", None).expect("shed call");
+    assert_eq!(shed.status, 503, "over-cap connection must get an immediate 503");
+    let j = json::parse(std::str::from_utf8(&shed.body).unwrap()).expect("503 body json");
+    assert_eq!(j.req("error").unwrap().req("type").unwrap().as_str().unwrap(), "server_error");
+
+    // release the slot; the handler thread exits once the peer vanishes
+    drop(held);
+    let t0 = Instant::now();
+    loop {
+        if let Ok(r) = http_call(&addr, "GET", "/healthz", None) {
+            if r.status == 200 {
+                break;
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "slot never freed after the held connection dropped"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
 }
 
 /// A `timeout_steps` deadline and admission shedding surface as their

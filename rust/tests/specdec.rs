@@ -1,0 +1,323 @@
+//! Self-speculative decoding tests (DESIGN.md §8): the load-bearing
+//! contract is that with greedy sampling the accepted token stream is
+//! **bitwise identical** to the plain serving path — `Engine::generate`
+//! through the contiguous graph — for every prompt, every draft plan, and
+//! every draft length `k`. Speculation is a throughput optimization, never
+//! a sampling change. Also covered: mixed spec/plain batches, mid-stream
+//! rejection, cache-overrun prompts, and interaction with the PR-7 fault
+//! injection (target- and draft-side).
+
+use std::sync::Mutex;
+
+use ara_compress::coordinator::Pipeline;
+use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::model::WeightStore;
+use ara_compress::serving::{
+    Engine, FinishReason, Request, SamplingParams, SchedStats, Scheduler, SpecDec,
+};
+use ara_compress::svd::FactoredModel;
+
+fn pipeline() -> Pipeline {
+    let mut pl = Pipeline::new("micro-llama").expect("pipeline (cpu backend needs no artifacts)");
+    pl.scalecfg.pretrain_steps = std::env::var("ARA_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    pl.scalecfg.calib_batches = 2;
+    pl
+}
+
+/// Serialize the train-or-load step against the shared disk cache (same
+/// pattern as tests/scheduler.rs).
+fn substrate(pl: &Pipeline) -> (WeightStore, FactoredModel) {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _guard = LOCK.lock().unwrap();
+    let ws = pl.pretrained().expect("pretrain substrate");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+    (ws, fm)
+}
+
+/// Target engine with the verify window armed for draft length `k`, plus
+/// a draft engine of `draft_alloc` wrapped in a [`SpecDec`].
+fn spec_pair(
+    pl: &Pipeline,
+    ws: &WeightStore,
+    fm: &FactoredModel,
+    draft_alloc: &str,
+    batch: usize,
+    k: usize,
+) -> (Engine, SpecDec) {
+    let mut target = pl.engine(ws, fm, "uniform-80", batch).expect("target engine");
+    target.enable_verify(&pl.rt, k + 1).expect("verify specialization");
+    let draft = pl.engine(ws, fm, draft_alloc, batch).expect("draft engine");
+    let sd = SpecDec::new(draft, draft_alloc, k).expect("spec dec");
+    (target, sd)
+}
+
+/// Run `reqs` through a speculative scheduler; returns per-request token
+/// streams (id order) and the final stats.
+fn run_spec(engine: &Engine, sd: SpecDec, reqs: &[Request]) -> (Vec<Vec<i32>>, SchedStats) {
+    let mut sched = Scheduler::new(engine);
+    sched.set_spec_dec(Some(sd)).expect("install spec dec");
+    for r in reqs {
+        sched.submit(r.clone());
+    }
+    let mut done = sched.run_to_completion().expect("serve loop");
+    done.sort_by_key(|c| c.id);
+    let stats = sched.stats().clone();
+    (done.into_iter().map(|c| c.tokens).collect(), stats)
+}
+
+/// The tentpole pin: across draft lengths k ∈ {1, 2, 4, 8} and a heavy
+/// draft plan, every greedy stream is bitwise identical to the standalone
+/// contiguous `Engine::generate` run — mid-stream rejections and all.
+#[test]
+fn spec_streams_bitwise_match_plain_greedy_across_k() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 11, 4096);
+    let lens = [3usize, 8, 5, 1];
+    let gens = [9usize, 6, 12, 7];
+
+    for &k in &[1usize, 2, 4, 8] {
+        let (target, sd) = spec_pair(&pl, &ws, &fm, "uniform-40", 2, k);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                prompt: stream[i * 17..i * 17 + lens[i]].to_vec(),
+                gen_len: gens[i],
+                params: SamplingParams::greedy(),
+                draft_spec: Some("uniform-40".into()),
+                ..Default::default()
+            })
+            .collect();
+        let (toks, stats) = run_spec(&target, sd, &reqs);
+        for (i, r) in reqs.iter().enumerate() {
+            let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+            let (plain, _) = target.generate(&prompts, r.gen_len).expect("generate");
+            assert_eq!(toks[i], plain[0], "k={k} request {i} diverged from plain greedy");
+        }
+        assert!(stats.verify_passes > 0, "k={k}: no verify pass ran");
+        assert!(stats.draft_tokens > 0, "k={k}: no draft tokens proposed");
+        assert!(stats.draft_accepted <= stats.draft_tokens);
+        let apv = stats.accepted_per_verify();
+        assert!(
+            (0.0..=k as f64).contains(&apv),
+            "k={k}: accepted_per_verify {apv} out of [0, {k}]"
+        );
+    }
+}
+
+/// A draft built from the *same* allocation as the target proposes the
+/// target's own argmax — acceptance should be near-total, exercising the
+/// full-acceptance catch-up feed; parity must still hold exactly.
+#[test]
+fn identical_draft_plan_accepts_and_keeps_parity() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 29, 2048);
+    let (target, sd) = spec_pair(&pl, &ws, &fm, "uniform-80", 2, 3);
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            prompt: stream[i * 23..i * 23 + 2 + i].to_vec(),
+            gen_len: 10,
+            params: SamplingParams::greedy(),
+            draft_spec: Some("uniform-80".into()),
+            ..Default::default()
+        })
+        .collect();
+    let (toks, stats) = run_spec(&target, sd, &reqs);
+    for (i, r) in reqs.iter().enumerate() {
+        let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+        let (plain, _) = target.generate(&prompts, r.gen_len).expect("generate");
+        assert_eq!(toks[i], plain[0], "self-draft request {i} diverged");
+    }
+    // the draft *is* the target, so proposals can only be rejected at
+    // finish/window boundaries — acceptance must dominate
+    assert!(stats.draft_accepted > 0, "identical draft must accept tokens");
+    assert!(
+        stats.draft_accept_rate() > 0.5,
+        "identical draft accept rate {} suspiciously low",
+        stats.draft_accept_rate()
+    );
+    // speculation must beat one-token-per-step: each verify pass emits at
+    // least one token per drafted slot, and first tokens come from prefill
+    assert!(
+        stats.verify_passes < stats.tokens_generated,
+        "accounting: {} verify passes for {} generated tokens",
+        stats.verify_passes,
+        stats.tokens_generated
+    );
+}
+
+/// Spec and plain requests share one batch: opted-in slots run the verify
+/// window while opted-out (no draft named / sampled) slots ride window
+/// position 0 — everyone keeps parity, and the sampled request replays its
+/// seeded stream exactly.
+#[test]
+fn mixed_spec_and_plain_requests_coexist_in_one_batch() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 37, 2048);
+    let (target, sd) = spec_pair(&pl, &ws, &fm, "uniform-40", 2, 4);
+
+    let mk = |i: usize, draft: Option<&str>, params: SamplingParams| Request {
+        prompt: stream[i * 19..i * 19 + 3 + i].to_vec(),
+        gen_len: 8,
+        params,
+        draft_spec: draft.map(str::to_string),
+        ..Default::default()
+    };
+    let reqs = vec![
+        mk(0, Some("uniform-40"), SamplingParams::greedy()),
+        mk(1, None, SamplingParams::greedy()),
+        mk(2, Some("uniform-40"), SamplingParams::greedy()),
+        // sampled → spec-ineligible even though it names the draft
+        mk(3, Some("uniform-40"), SamplingParams { temperature: 1.5, top_k: 0, top_p: 1.0, seed: 7 }),
+    ];
+    let (toks, stats) = run_spec(&target, sd, &reqs);
+    assert!(stats.verify_passes > 0, "spec slots must have run verify rounds");
+
+    // greedy requests (spec or plain) match the contiguous reference
+    for i in [0usize, 1, 2] {
+        let prompts = vec![reqs[i].prompt.clone(), vec![1i32; p]];
+        let (plain, _) = target.generate(&prompts, reqs[i].gen_len).expect("generate");
+        assert_eq!(toks[i], plain[0], "mixed-batch request {i} diverged");
+    }
+    // the sampled request replays bit-identically on a plain scheduler
+    let mut sched = Scheduler::new(&target);
+    sched.submit(reqs[3].clone());
+    let done = sched.run_to_completion().expect("plain serve loop");
+    assert_eq!(toks[3], done[0].tokens, "sampled request not spec-invariant");
+}
+
+/// Cache-overrun prompts: a full-window prompt generating to the KV limit
+/// finishes `Length` at exactly the plain path's cut, with the draft
+/// retiring at the window-end guard instead of overrunning.
+#[test]
+fn cache_overrun_prompts_stop_at_length_with_parity() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 41, 2048);
+    let (target, sd) = spec_pair(&pl, &ws, &fm, "uniform-40", 2, 4);
+    let reqs: Vec<Request> = (0..2)
+        .map(|i| Request {
+            prompt: stream[i * 31..i * 31 + p].to_vec(),
+            gen_len: pl.cfg.max_decode_seq,
+            params: SamplingParams::greedy(),
+            draft_spec: Some("uniform-40".into()),
+            ..Default::default()
+        })
+        .collect();
+
+    let mut sched = Scheduler::new(&target);
+    sched.set_spec_dec(Some(sd)).expect("install spec dec");
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut done = sched.run_to_completion().expect("serve loop");
+    done.sort_by_key(|c| c.id);
+    for (c, r) in done.iter().zip(&reqs) {
+        let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+        let (plain, _) = target.generate(&prompts, r.gen_len).expect("generate");
+        assert_eq!(c.tokens, plain[0], "overrun request diverged");
+        assert_eq!(c.finish_reason, FinishReason::Length, "KV exhaustion must surface");
+        assert!(c.tokens.len() < pl.cfg.max_decode_seq);
+    }
+}
+
+/// PR-7 fault interaction, target side: an injected decode fault fires
+/// inside the verify pass; the resilience layer requeues and retries, and
+/// the regenerated stream is still bitwise identical.
+#[test]
+fn target_fault_during_verify_retries_to_identical_stream() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 43, 2048);
+    let (target, sd) = spec_pair(&pl, &ws, &fm, "uniform-40", 2, 2);
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            prompt: stream[i * 13..i * 13 + 2 + i].to_vec(),
+            gen_len: 8,
+            params: SamplingParams::greedy(),
+            draft_spec: Some("uniform-40".into()),
+            ..Default::default()
+        })
+        .collect();
+
+    target.inject_decode_fault(2);
+    let (toks, stats) = run_spec(&target, sd, &reqs);
+    assert_eq!(stats.decode_faults, 1, "the injected fault must have fired");
+    assert!(stats.retries >= 1, "in-flight requests must have been retried");
+    for (i, r) in reqs.iter().enumerate() {
+        let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+        let (plain, _) = target.generate(&prompts, r.gen_len).expect("generate");
+        assert_eq!(toks[i], plain[0], "post-fault request {i} diverged");
+    }
+}
+
+/// PR-7 fault interaction, draft side: a fault in the *draft* engine must
+/// never surface to the request — the draft poisons itself, the batch
+/// falls back to plain decode, and streams stay identical with zero
+/// target-side faults recorded.
+#[test]
+fn draft_fault_falls_back_to_plain_with_parity() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    let p = pl.cfg.prefill_len;
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 47, 2048);
+    let mut target = pl.engine(&ws, &fm, "uniform-80", 2).expect("target engine");
+    target.enable_verify(&pl.rt, 3).expect("verify specialization");
+    let draft = pl.engine(&ws, &fm, "uniform-40", 2).expect("draft engine");
+    draft.inject_decode_fault(1);
+    let sd = SpecDec::new(draft, "uniform-40", 2).expect("spec dec");
+
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            prompt: stream[i * 11..i * 11 + 2 + i].to_vec(),
+            gen_len: 7,
+            params: SamplingParams::greedy(),
+            draft_spec: Some("uniform-40".into()),
+            ..Default::default()
+        })
+        .collect();
+    let (toks, stats) = run_spec(&target, sd, &reqs);
+    assert_eq!(stats.decode_faults, 0, "a draft fault must not count as a target fault");
+    assert_eq!(stats.retries, 0, "a draft fault must not requeue requests");
+    for (i, r) in reqs.iter().enumerate() {
+        let prompts = vec![r.prompt.clone(), vec![1i32; p]];
+        let (plain, _) = target.generate(&prompts, r.gen_len).expect("generate");
+        assert_eq!(toks[i], plain[0], "draft-fault request {i} diverged");
+    }
+}
+
+/// Installation contract: the scheduler refuses a decoder whose `k` does
+/// not match the armed verify window, and a target without the verify
+/// specialization at all.
+#[test]
+fn set_spec_dec_validates_window_and_batch() {
+    let pl = pipeline();
+    let (ws, fm) = substrate(&pl);
+    // no verify armed → refused
+    let bare = pl.engine(&ws, &fm, "uniform-80", 2).expect("target engine");
+    let draft = pl.engine(&ws, &fm, "uniform-40", 2).expect("draft engine");
+    let sd = SpecDec::new(draft, "uniform-40", 2).expect("spec dec");
+    let mut sched = Scheduler::new(&bare);
+    assert!(sched.set_spec_dec(Some(sd)).is_err(), "must require enable_verify");
+
+    // window mismatch (armed for k=4, decoder built for k=2) → refused
+    let mut target = pl.engine(&ws, &fm, "uniform-80", 2).expect("target engine");
+    target.enable_verify(&pl.rt, 5).expect("verify specialization");
+    let draft = pl.engine(&ws, &fm, "uniform-40", 2).expect("draft engine");
+    let sd = SpecDec::new(draft, "uniform-40", 2).expect("spec dec");
+    let mut sched = Scheduler::new(&target);
+    assert!(sched.set_spec_dec(Some(sd)).is_err(), "must pin window = k + 1");
+
+    // clearing is always fine
+    assert!(sched.set_spec_dec(None).is_ok());
+}
