@@ -1,5 +1,5 @@
 //! Bench-health guard: parse the machine-readable bench baselines
-//! (`BENCH_PR2.json` … `BENCH_PR9.json`) with the in-crate JSON parser
+//! (`BENCH_PR2.json` … `BENCH_PR10.json`) with the in-crate JSON parser
 //! and exit non-zero when a required key is missing, non-numeric,
 //! non-finite — or out of range: rate/utilization keys must lie in
 //! [0, 1], achieved compression ratios in (0, 1], wall-clock keys must be
@@ -194,6 +194,28 @@ fn required(smoke: bool) -> Vec<Check> {
         spec_keys.push(format!("{d}_k{k}_accept_rate"));
         spec_unit.push(format!("{d}_k{k}_accept_rate"));
     }
+    // fig_quant (PR 10): ratio × precision grid for int8 SVD factors.
+    // Throughput/bytes/ppl must be ≥ 0; the int8/f32 bytes ratio must lie
+    // in (0, 1] (packed int8 can never be larger than f32); `ppl_delta`
+    // only needs to exist and be finite — it may legitimately be negative
+    // (quantization noise can improve ppl), and the bench's own
+    // `check_ppl_gate` already fails the build when it exceeds the
+    // configured ARA_PPL_GATE threshold.
+    let quant_specs: &[&str] = if smoke { &["ara@0.8"] } else { &["ara@0.8", "ara@0.6"] };
+    let mut quant_keys = vec![s("gate_threshold")];
+    let mut quant_ratio = Vec::new();
+    let mut quant_pos = vec![s("gate_threshold")];
+    for sp in quant_specs {
+        for prec in ["f32", "int8"] {
+            for m in ["tok_s", "bytes", "ppl"] {
+                quant_keys.push(format!("{sp}_{prec}_{m}"));
+                quant_pos.push(format!("{sp}_{prec}_{m}"));
+            }
+        }
+        quant_keys.push(format!("{sp}_ppl_delta"));
+        quant_keys.push(format!("{sp}_bytes_ratio"));
+        quant_ratio.push(format!("{sp}_bytes_ratio"));
+    }
     let none: Vec<String> = Vec::new();
     vec![
         Check {
@@ -285,6 +307,16 @@ fn required(smoke: bool) -> Vec<Check> {
             pos_keys: spec_pos,
             min_one_keys: spec_min_one,
             bounded_keys: spec_bounded,
+        },
+        Check {
+            file: "BENCH_PR10.json",
+            section: format!("fig_quant{sfx}"),
+            keys: quant_keys,
+            unit_keys: none.clone(),
+            ratio_keys: quant_ratio,
+            pos_keys: quant_pos,
+            min_one_keys: none,
+            bounded_keys: Vec::new(),
         },
     ]
 }

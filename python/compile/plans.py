@@ -3,15 +3,19 @@
 The rust side (`rust/src/compress/plan.rs`) writes versioned plan JSON:
 
   {
-   "schema_version": 1,
-   "spec": "ara@0.8?epochs=5",      # registry method spec
+   "schema_version": 2,
+   "spec": "ara@0.8?quant=int8",    # registry method spec
    "method": "ara", "label": "ARA",
    "target": 0.8, "achieved": 0.7931,
    "seed": 7,                        # null for data-free methods
+   "quant": {"bits": 8, "group": 32},  # v2: null for pure-f32 plans
    "scale": {"alloc_samples": 96, "alloc_epochs": 10},
    "wall_ms": 1234.5,
    "allocation": {"name": ..., "modules": {...}}   # the legacy schema
   }
+
+Schema v2 added the optional `quant` recipe (top-level mirror of
+`allocation.quant`); v1 files load unchanged with no recipe.
 
 `aot.py` resolves serving allocations through `load_alloc_file`, so a
 plan file dropped into configs/allocations/ specializes serving exactly
@@ -23,12 +27,16 @@ round-trip bit-for-bit.
 import json
 import sys
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 PLAN_KEYS = (
     "schema_version", "spec", "method", "label", "target", "achieved",
     "seed", "scale", "wall_ms", "allocation",
 )
+
+# v2 additions: present in fresh files, absent in v1 files — validated
+# when present, never required.
+OPTIONAL_KEYS = ("quant",)
 
 
 def is_plan(doc):
@@ -54,6 +62,11 @@ def validate_plan(doc):
     for key in ("alloc_samples", "alloc_epochs"):
         if key not in scale:
             raise ValueError(f"plan scale missing `{key}`")
+    quant = doc.get("quant")
+    if quant is not None:
+        for key in ("bits", "group"):
+            if not isinstance(quant.get(key), int) or quant[key] <= 0:
+                raise ValueError(f"plan quant has bad `{key}`: {quant!r}")
     return doc
 
 
@@ -72,7 +85,10 @@ def load_alloc_file(path):
 def dump_plan(plan, path):
     """Write a plan compactly (matching the rust serializer's key order)."""
     validate_plan(plan)
-    ordered = {k: plan[k] for k in PLAN_KEYS}
+    keys = [k for k in PLAN_KEYS]
+    if "quant" in plan:  # v2: keep rust's key order (after seed)
+        keys.insert(keys.index("seed") + 1, "quant")
+    ordered = {k: plan[k] for k in keys}
     with open(path, "w") as f:
         json.dump(ordered, f, separators=(",", ":"))
 

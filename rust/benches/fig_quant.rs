@@ -1,0 +1,167 @@
+//! Quantized low-rank serving sweep (DESIGN.md §9): the ratio × precision
+//! grid for int8 SVD factors. For each compression ratio the same `ara`
+//! rank allocation is served twice — f32 factors and packed int8 factors
+//! (`?quant=int8&group=32`) — and three axes are recorded per cell into
+//! `BENCH_PR10.json` (section `fig_quant`): decode `tok_s` through the
+//! serving engine, resident factor `bytes` (packed codes + group scales
+//! for int8, 4 bytes/elem for f32), and masked-eval `ppl`. The quantized
+//! cell additionally records `ppl_delta = (int8 - f32) / f32`, and the
+//! **perplexity-delta quality gate** (`eval::check_ppl_gate`, threshold
+//! `ARA_PPL_GATE`, default 20%) fails the build — non-zero exit — when
+//! int8 degrades quality past the threshold. `ARA_BENCH_SMOKE=1` shrinks
+//! the grid to one ratio for CI.
+
+mod common;
+
+use ara_compress::data::{corpus_spec, generate_tokens};
+use ara_compress::eval::{check_ppl_gate, perplexity_masked, ppl_gate_threshold};
+use ara_compress::model::{Allocation, ModuleAlloc};
+use ara_compress::quant::{quantized_factors, PackedInt8, QuantScheme};
+use ara_compress::report::Table;
+use ara_compress::svd::{alloc_masks, FactoredModel};
+use common::{bench_json_path_named, bench_section, claim, pipeline, record_bench_at, smoke};
+
+const GROUP: usize = 32;
+
+/// Bytes the low-rank factor weights keep resident at serve time: packed
+/// int8 codes + f32 group scales when quantized, 4 bytes per element for
+/// f32. Dense (uncompressed) modules are identical in both columns and
+/// excluded — the grid measures what quantization changes.
+fn factor_bytes(fm: &FactoredModel, alloc: &Allocation, int8: bool) -> f64 {
+    let mut total = 0usize;
+    for (name, ma) in &alloc.modules {
+        let k = match ma {
+            ModuleAlloc::Rank(k) => *k,
+            ModuleAlloc::Dense => continue,
+        };
+        let (u, v) = fm.factors[name].truncate(k);
+        total += if int8 {
+            PackedInt8::quantize(&u, GROUP).bytes() + PackedInt8::quantize(&v, GROUP).bytes()
+        } else {
+            4 * (u.data.len() + v.data.len())
+        };
+    }
+    total as f64
+}
+
+fn main() {
+    let smoke = smoke();
+    let model = "minillama-s";
+    let pl = pipeline(model);
+    let ws = pl.pretrained().expect("pretrain");
+    let grams = pl.grams(&ws).expect("calibrate");
+    let fm = pl.factored(&ws, &grams).expect("factorize");
+
+    let ratios: &[&str] = if smoke { &["0.8"] } else { &["0.8", "0.6"] };
+    let eval_b = if smoke { 1 } else { 2 };
+    let thr = ppl_gate_threshold();
+
+    let b = *pl.cfg.decode_batches.last().unwrap();
+    let stream = generate_tokens(pl.cfg.vocab, corpus_spec("synwiki"), 7, 4096);
+    let prompts: Vec<Vec<i32>> = (0..b)
+        .map(|i| stream[i * 16..i * 16 + pl.cfg.prefill_len].to_vec())
+        .collect();
+
+    let mut t = Table::new(
+        format!("Fig quant — ratio × precision grid, B={b}, gate ≤ {:.0}%", thr * 100.0),
+        &["Spec", "prec", "tok/s", "factor KiB", "ppl", "Δppl %", "gate"],
+    );
+    let mut entries: Vec<(String, f64)> = vec![("gate_threshold".into(), thr)];
+    let mut gate_failed = false;
+
+    for r in ratios {
+        let fspec = format!("ara@{r}");
+        let qspec = format!("{fspec}?quant=int8&group={GROUP}");
+        let fplan = pl.allocate_spec(&fspec, &ws, &grams, &fm).expect("f32 plan");
+        let qplan = pl.allocate_spec(&qspec, &ws, &grams, &fm).expect("quant plan");
+
+        // quality: masked eval over the served factor values — f32 factors
+        // vs their quantize→dequantize twin (exactly what the engine's
+        // packed weights decode to, pinned by tests/quant.rs)
+        let fppl = perplexity_masked(
+            &pl.cfg,
+            &pl.rt,
+            &ws,
+            &fm,
+            &alloc_masks(&pl.cfg, &fplan.allocation),
+            "synwiki",
+            eval_b,
+        )
+        .expect("f32 ppl")
+        .ppl;
+        let fq = quantized_factors(&fm, &qplan.allocation, GROUP);
+        let qppl = perplexity_masked(
+            &pl.cfg,
+            &pl.rt,
+            &ws,
+            &fq,
+            &alloc_masks(&pl.cfg, &qplan.allocation),
+            "synwiki",
+            eval_b,
+        )
+        .expect("quant ppl")
+        .ppl;
+
+        // bytes: what the factor weights keep resident at serve time
+        let fbytes = factor_bytes(&fm, &fplan.allocation, false);
+        let qbytes = factor_bytes(&fm, &qplan.allocation, true);
+        claim(&format!("{fspec}: int8 factors smaller than f32"), qbytes < fbytes);
+
+        // throughput: greedy decode through each serving engine
+        let fe = pl.engine_for_plan(&ws, &fm, &fplan, b).expect("f32 engine");
+        let (_, fstats) = fe.generate(&prompts, 16).expect("f32 gen");
+        let qe = pl.engine_for_plan(&ws, &fm, &qplan, b).expect("quant engine");
+        let (_, qstats) = qe.generate(&prompts, 16).expect("quant gen");
+        claim(
+            &format!("{qspec}: engine reports the int8/g{GROUP} recipe"),
+            qstats.quant == Some(QuantScheme { bits: 8, group: GROUP }) && fstats.quant.is_none(),
+        );
+
+        // the quality gate: relative ppl regression past ARA_PPL_GATE
+        // fails the build
+        let delta = match check_ppl_gate(fppl, qppl, thr) {
+            Ok(d) => {
+                claim(&format!("{fspec}: ppl gate (Δ ≤ {:.0}%)", thr * 100.0), true);
+                d
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                claim(&format!("{fspec}: ppl gate (Δ ≤ {:.0}%)", thr * 100.0), false);
+                gate_failed = true;
+                (qppl - fppl) / fppl
+            }
+        };
+
+        for (prec, tok_s, bytes, ppl, d) in [
+            ("f32", fstats.tok_per_s(), fbytes, fppl, None),
+            ("int8", qstats.tok_per_s(), qbytes, qppl, Some(delta)),
+        ] {
+            t.row(vec![
+                fspec.clone(),
+                prec.into(),
+                format!("{tok_s:.0}"),
+                format!("{:.1}", bytes / 1024.0),
+                format!("{ppl:.3}"),
+                d.map_or("-".into(), |d| format!("{:+.2}", d * 100.0)),
+                d.map_or("-".into(), |d| if d <= thr { "pass".into() } else { "FAIL".into() }),
+            ]);
+            entries.push((format!("{fspec}_{prec}_tok_s"), tok_s));
+            entries.push((format!("{fspec}_{prec}_bytes"), bytes));
+            entries.push((format!("{fspec}_{prec}_ppl"), ppl));
+        }
+        entries.push((format!("{fspec}_ppl_delta"), delta));
+        entries.push((format!("{fspec}_bytes_ratio"), qbytes / fbytes.max(1.0)));
+    }
+
+    t.print();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    record_bench_at(
+        &bench_json_path_named("BENCH_PR10.json"),
+        &bench_section("fig_quant"),
+        &entries,
+    );
+    if gate_failed {
+        eprintln!("fig_quant: perplexity gate failed (threshold {thr}; tune ARA_PPL_GATE)");
+        std::process::exit(1);
+    }
+}

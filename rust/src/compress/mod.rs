@@ -34,7 +34,7 @@ use crate::Result;
 
 pub use methods::{computed_alloc, heuristic_ara_alloc};
 pub use plan::{CompressionPlan, PlanScale, PLAN_SCHEMA_VERSION};
-pub use registry::{build_method, method_for, MethodSpec, ALL_METHOD_IDS};
+pub use registry::{build_method, method_for, quant_params, MethodSpec, ALL_METHOD_IDS};
 
 /// Experiment-scale knobs (all counts, no shapes) with bench defaults.
 #[derive(Debug, Clone)]

@@ -16,8 +16,10 @@ use crate::Result;
 
 /// Current plan schema version. Version `0` is reserved for plans
 /// synthesized from legacy bare-`Allocation` files or computed serving
-/// fallbacks — they carry no recorded provenance.
-pub const PLAN_SCHEMA_VERSION: u32 = 1;
+/// fallbacks — they carry no recorded provenance. Version `2` added the
+/// optional top-level `quant` recipe (mirroring `allocation.quant`);
+/// version-1 files load unchanged with `quant = null`.
+pub const PLAN_SCHEMA_VERSION: u32 = 2;
 
 /// The **effective** sample/epoch budget a mask-trained allocation ran
 /// with — [`crate::compress::RunScale`] defaults with any spec overrides
@@ -75,10 +77,20 @@ impl CompressionPlan {
         self.schema_version >= 1
     }
 
-    /// One-line provenance summary for serving stats / CLI output.
+    /// The composed quantization recipe (carried by the allocation).
+    pub fn quant(&self) -> Option<crate::quant::QuantScheme> {
+        self.allocation.quant
+    }
+
+    /// One-line provenance summary for serving stats / CLI output. Names
+    /// the quant recipe when the plan composes one.
     pub fn provenance_line(&self) -> String {
+        let quant = match self.allocation.quant {
+            Some(q) => format!(", int{}/g{}", q.bits, q.group),
+            None => String::new(),
+        };
         format!(
-            "plan {} (schema v{}, achieved {:.4}, seed {}, {:.0} ms)",
+            "plan {} (schema v{}, achieved {:.4}, seed {}, {:.0} ms{quant})",
             self.spec,
             self.schema_version,
             self.achieved,
@@ -89,6 +101,13 @@ impl CompressionPlan {
 
     pub fn to_json(&self) -> String {
         let alloc = json::parse(&self.allocation.to_json()).expect("allocation JSON is valid");
+        let quant = match &self.allocation.quant {
+            Some(q) => json::obj(vec![
+                ("bits", json::n(q.bits as f64)),
+                ("group", json::n(q.group as f64)),
+            ]),
+            None => Json::Null,
+        };
         json::obj(vec![
             ("schema_version", json::n(self.schema_version as f64)),
             ("spec", json::s(&self.spec)),
@@ -97,6 +116,7 @@ impl CompressionPlan {
             ("target", json::n(self.target)),
             ("achieved", json::n(self.achieved)),
             ("seed", self.seed.map_or(Json::Null, |s| json::n(s as f64))),
+            ("quant", quant),
             (
                 "scale",
                 json::obj(vec![
@@ -132,6 +152,20 @@ impl CompressionPlan {
             s => Some(s.as_usize()? as u64),
         };
         let scale = j.req("scale")?;
+        let mut allocation = Allocation::from_json(&j.req("allocation")?.dump())?;
+        // v2 mirrors the recipe at the top level; backfill hand-written
+        // files whose allocation object omits it.
+        if allocation.quant.is_none() {
+            match j.get("quant") {
+                None | Some(Json::Null) => {}
+                Some(q) => {
+                    allocation.quant = Some(crate::quant::QuantScheme {
+                        bits: q.req("bits")?.as_usize()? as u32,
+                        group: q.req("group")?.as_usize()?,
+                    });
+                }
+            }
+        }
         Ok(CompressionPlan {
             schema_version: version,
             spec: j.req("spec")?.as_str()?.to_string(),
@@ -145,7 +179,7 @@ impl CompressionPlan {
                 alloc_epochs: scale.req("alloc_epochs")?.as_usize()?,
             },
             wall_ms: j.req("wall_ms")?.as_f64()?,
-            allocation: Allocation::from_json(&j.req("allocation")?.dump())?,
+            allocation,
         })
     }
 
@@ -211,6 +245,62 @@ mod tests {
         assert!(!p.provenanced());
         assert_eq!(p.method, "legacy");
         assert_eq!(p.allocation, a);
+    }
+
+    #[test]
+    fn quantized_plan_roundtrips_and_names_recipe() {
+        let mut p = sample_plan();
+        p.allocation.quant = Some(crate::quant::QuantScheme { bits: 8, group: 32 });
+        let text = p.to_json();
+        assert!(text.contains("\"quant\""), "{text}");
+        let q = CompressionPlan::from_json(&text).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(q.quant(), Some(crate::quant::QuantScheme { bits: 8, group: 32 }));
+        assert!(q.provenance_line().contains("int8/g32"), "{}", q.provenance_line());
+    }
+
+    /// Drop `key` from the top level of an object document.
+    fn without_key(text: &str, key: &str) -> String {
+        let mut j = json::parse(text).unwrap();
+        if let Json::Obj(pairs) = &mut j {
+            pairs.retain(|(k, _)| k != key);
+        }
+        j.dump()
+    }
+
+    #[test]
+    fn v1_plan_without_quant_loads_with_none() {
+        // a v1-era file: no top-level quant key, no allocation.quant key
+        let mut j = json::parse(&sample_plan().to_json()).unwrap();
+        if let Json::Obj(pairs) = &mut j {
+            pairs.retain(|(k, _)| k != "quant");
+            for (k, v) in pairs.iter_mut() {
+                if k == "schema_version" {
+                    *v = json::n(1.0);
+                }
+            }
+        }
+        let q = CompressionPlan::from_json(&j.dump()).unwrap();
+        assert_eq!(q.schema_version, 1);
+        assert_eq!(q.quant(), None);
+        assert!(!q.provenance_line().contains("int8"));
+    }
+
+    #[test]
+    fn top_level_quant_backfills_bare_allocation_object() {
+        // hand-written v2 file where only the top level names the recipe
+        let mut p = sample_plan();
+        p.allocation.quant = Some(crate::quant::QuantScheme { bits: 8, group: 16 });
+        let mut j = json::parse(&p.to_json()).unwrap();
+        if let Json::Obj(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if k == "allocation" {
+                    *v = json::parse(&without_key(&v.dump(), "quant")).unwrap();
+                }
+            }
+        }
+        let q = CompressionPlan::from_json(&j.dump()).unwrap();
+        assert_eq!(q.quant(), Some(crate::quant::QuantScheme { bits: 8, group: 16 }));
     }
 
     #[test]

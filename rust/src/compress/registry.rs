@@ -175,10 +175,56 @@ impl<'s> Params<'s> {
     }
 }
 
+/// The quantization recipe of a spec, from its method-agnostic `quant` /
+/// `group` params: `?quant=int8[&group=N]` → `Some(QuantScheme)` (group
+/// defaults to 32), `?quant=none` or absent → `None`. Every method
+/// composes with quantization, so these params are validated here rather
+/// than per-method; errors name the spec.
+pub fn quant_params(spec: &MethodSpec) -> Result<Option<crate::quant::QuantScheme>> {
+    let canonical = spec.canonical();
+    let mut p = Params::new(&canonical, spec.params.clone());
+    let quant = p.take("quant");
+    let group = p.usize("group")?;
+    // remaining params belong to the method; build_method validates them
+    match quant.as_deref() {
+        None => {
+            if group.is_some() {
+                return Err(crate::anyhow!(
+                    "spec `{canonical}`: `group` requires `quant=int8`"
+                ));
+            }
+            Ok(None)
+        }
+        Some("none") => {
+            if group.is_some() {
+                return Err(crate::anyhow!(
+                    "spec `{canonical}`: `group` requires `quant=int8`"
+                ));
+            }
+            Ok(None)
+        }
+        Some("int8") => {
+            let group = group.unwrap_or(32);
+            if group == 0 {
+                return Err(crate::anyhow!("spec `{canonical}`: `group` must be positive"));
+            }
+            Ok(Some(crate::quant::QuantScheme { bits: 8, group }))
+        }
+        Some(other) => Err(crate::anyhow!(
+            "spec `{canonical}`: unknown quantization `{other}` (expected int8 or none)"
+        )),
+    }
+}
+
 /// Build the boxed method a parsed spec names, applying its parameters.
 pub fn build_method(spec: &MethodSpec) -> Result<Box<dyn AllocMethod>> {
     let canonical = spec.canonical();
     let mut p = Params::new(&canonical, spec.params.clone());
+    // quant/group are method-agnostic (validated by `quant_params`); strip
+    // them before per-method validation so every method accepts them
+    quant_params(spec)?;
+    p.take("quant");
+    p.take("group");
     let method: Box<dyn AllocMethod> = match spec.method.as_str() {
         "uniform" => {
             p.finish(&[])?;
@@ -364,6 +410,27 @@ mod tests {
         assert_eq!(m.id(), "ara-nolg");
         let (_, m) = method_for("dobi-svd1@0.5").unwrap();
         assert_eq!(m.id(), "dobi");
+    }
+
+    #[test]
+    fn quant_params_parse_and_compose_with_every_method() {
+        use crate::quant::QuantScheme;
+        let s = MethodSpec::parse("ara@0.8?quant=int8").unwrap();
+        assert_eq!(quant_params(&s).unwrap(), Some(QuantScheme { bits: 8, group: 32 }));
+        assert!(build_method(&s).is_ok(), "quant must compose with ara");
+        let s = MethodSpec::parse("uniform@0.8?quant=int8&group=16").unwrap();
+        assert_eq!(quant_params(&s).unwrap().unwrap().group, 16);
+        assert!(build_method(&s).is_ok(), "quant must compose with uniform");
+        assert_eq!(s.canonical(), "uniform@0.8?quant=int8&group=16");
+        // explicit f32
+        let s = MethodSpec::parse("ara@0.8?quant=none").unwrap();
+        assert_eq!(quant_params(&s).unwrap(), None);
+        // invalid recipes are named in errors
+        assert!(quant_params(&MethodSpec::parse("ara@0.8?quant=int4").unwrap()).is_err());
+        assert!(quant_params(&MethodSpec::parse("ara@0.8?group=32").unwrap()).is_err());
+        assert!(quant_params(&MethodSpec::parse("ara@0.8?quant=int8&group=0").unwrap()).is_err());
+        // build_method validates quant before stripping it
+        assert!(build_method(&MethodSpec::parse("uniform@0.8?quant=int4").unwrap()).is_err());
     }
 
     #[test]

@@ -119,7 +119,14 @@ impl Pipeline {
         })?;
         let ctx = self.alloc_ctx(ws, grams, fm);
         let t0 = Instant::now();
-        let allocation = method.allocate(&ctx, target)?;
+        let mut allocation = method.allocate(&ctx, target)?;
+        // Compose the spec's quant recipe (`?quant=int8&group=32`) onto the
+        // allocation and rename it so the runtime's executable cache never
+        // conflates a quantized variant with its f32 sibling.
+        if let Some(q) = registry::quant_params(&parsed)? {
+            allocation.quant = Some(q);
+            allocation.name = format!("{}-q{}g{}", allocation.name, q.bits, q.group);
+        }
         Ok(CompressionPlan {
             schema_version: crate::compress::PLAN_SCHEMA_VERSION,
             spec: parsed.canonical(),

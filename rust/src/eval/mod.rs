@@ -4,5 +4,7 @@
 mod ppl;
 pub mod zeroshot;
 
-pub use ppl::{perplexity_dense, perplexity_masked, PplReport};
+pub use ppl::{
+    check_ppl_gate, perplexity_dense, perplexity_masked, ppl_gate_threshold, PplReport,
+};
 pub use zeroshot::{zero_shot_suite, Scorer, ZeroShotReport};

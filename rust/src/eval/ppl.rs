@@ -87,3 +87,62 @@ fn finish(corpus: &str, sum: f64, count: usize) -> Result<PplReport> {
     let mean = sum / count as f64;
     Ok(PplReport { corpus: corpus.to_string(), ppl: mean.exp(), mean_nll: mean, tokens: count })
 }
+
+/// Max tolerated **relative** perplexity increase of a quantized plan over
+/// its f32 sibling (`ARA_PPL_GATE`, default 0.2 = 20%). The quality gate
+/// the `fig_quant` bench enforces (DESIGN.md §9).
+pub fn ppl_gate_threshold() -> f64 {
+    std::env::var("ARA_PPL_GATE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|t: &f64| t.is_finite() && *t >= 0.0)
+        .unwrap_or(0.2)
+}
+
+/// The perplexity-delta quality gate: returns the relative ppl increase
+/// `(quant - f32) / f32`, or an error naming both perplexities when the
+/// quantized plan degrades quality past `threshold`. Non-finite inputs
+/// always fail — a NaN ppl must never pass a quality gate.
+pub fn check_ppl_gate(f32_ppl: f64, quant_ppl: f64, threshold: f64) -> Result<f64> {
+    if !f32_ppl.is_finite() || !quant_ppl.is_finite() || f32_ppl <= 0.0 {
+        return Err(crate::anyhow!(
+            "ppl gate: non-finite perplexities (f32 {f32_ppl}, quant {quant_ppl})"
+        ));
+    }
+    let delta = (quant_ppl - f32_ppl) / f32_ppl;
+    if delta > threshold {
+        return Err(crate::anyhow!(
+            "ppl gate FAILED: quantized ppl {quant_ppl:.4} exceeds f32 ppl {f32_ppl:.4} \
+             by {:.1}% (> {:.1}% allowed; tune ARA_PPL_GATE)",
+            delta * 100.0,
+            threshold * 100.0
+        ));
+    }
+    Ok(delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_passes_small_delta_and_fails_large() {
+        let d = check_ppl_gate(10.0, 10.5, 0.2).unwrap();
+        assert!((d - 0.05).abs() < 1e-12);
+        // quantization can even improve ppl — negative delta passes
+        assert!(check_ppl_gate(10.0, 9.0, 0.2).unwrap() < 0.0);
+        let err = check_ppl_gate(10.0, 13.0, 0.2).unwrap_err().to_string();
+        assert!(err.contains("ppl gate FAILED"), "{err}");
+        assert!(check_ppl_gate(f64::NAN, 10.0, 0.2).is_err());
+        assert!(check_ppl_gate(10.0, f64::INFINITY, 0.2).is_err());
+    }
+
+    #[test]
+    fn gate_threshold_reads_env_with_default() {
+        // no poking at the real env from tests that may run in parallel:
+        // just pin the default
+        if std::env::var("ARA_PPL_GATE").is_err() {
+            assert_eq!(ppl_gate_threshold(), 0.2);
+        }
+    }
+}

@@ -272,6 +272,79 @@ pub fn matmul_f32(
 }
 
 // ---------------------------------------------------------------------------
+// int8 kernels (quantized serving path): dot-style, weights stay packed
+// ---------------------------------------------------------------------------
+
+/// Flat span [e0, e0+out.len()) of the (m·n)-element output of
+/// A(m,k) · Wᵀ where W is packed int8 with stored shape (n, k): element
+/// `e = i·n + j` is `dot_q8(A row i, W row j)`. Each element is one
+/// independent dot with a fixed internal schedule, so any flat split is
+/// bitwise-deterministic. Overwrites its outputs (no pre-zero needed).
+fn mm_flat_q8(
+    tier: SimdTier,
+    a: &[f32],
+    w: &crate::quant::PackedInt8,
+    k: usize,
+    n: usize,
+    e0: usize,
+    out: &mut [f32],
+) {
+    let gpr = w.groups_per_row();
+    for (off, o) in out.iter_mut().enumerate() {
+        let e = e0 + off;
+        let (i, j) = (e / n, e % n);
+        let arow = &a[i * k..i * k + k];
+        let qrow = &w.data[j * k..j * k + k];
+        let srow = &w.scales[j * gpr..(j + 1) * gpr];
+        *o = simd::dot_q8(tier, arow, qrow, srow, w.group);
+    }
+}
+
+/// C = A · Wᵀ with A row-major (m, k) and W packed int8, stored shape
+/// (n, k) — the serving layout for both SVD factors, with quantization
+/// groups along the dot dimension. `out` (len m·n) is overwritten. Runs on
+/// up to `nt` threads over disjoint flat output spans; each element is an
+/// independent [`simd::dot_q8`] with a fixed accumulation schedule, so the
+/// result is **bitwise identical** for any `nt` and any `tier` — and
+/// bitwise-equal to [`matmul_f32_tier`] (tb = true) over the dequantized
+/// weights.
+pub fn matmul_q8_tier(
+    tier: SimdTier,
+    a: &[f32],
+    w: &crate::quant::PackedInt8,
+    m: usize,
+    out: &mut [f32],
+    nt: usize,
+) {
+    let (n, k) = (w.shape[0], w.shape[1]);
+    debug_assert_eq!(a.len(), m * k, "matmul_q8 A buffer size");
+    debug_assert_eq!(out.len(), m * n, "matmul_q8 out buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let total = m * n;
+    let nt = nt.clamp(1, total);
+    if nt <= 1 {
+        mm_flat_q8(tier, a, w, k, n, 0, out);
+        return;
+    }
+    let per = total.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(per).enumerate() {
+            s.spawn(move || mm_flat_q8(tier, a, w, k, n, ci * per, chunk));
+        }
+    });
+}
+
+/// [`matmul_q8_tier`] on the process-wide [`active_tier`] with the thread
+/// count picked from the problem size (one flop each for the inline
+/// dequant multiply and the accumulate multiply-add).
+pub fn matmul_q8(a: &[f32], w: &crate::quant::PackedInt8, m: usize, out: &mut [f32]) {
+    let (n, k) = (w.shape[0], w.shape[1]);
+    matmul_q8_tier(active_tier(), a, w, m, out, threads_for(3 * m * k * n));
+}
+
+// ---------------------------------------------------------------------------
 // f64 kernels (SVD/whitening path): plain scalar loops, no tier dispatch
 // ---------------------------------------------------------------------------
 

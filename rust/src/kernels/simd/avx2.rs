@@ -58,3 +58,49 @@ pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
     }
     total
 }
+
+/// Int8 dot under the 8-virtual-lane contract with inline dequantization:
+/// per 8-chunk, sign-extend 8 codes (`vpmovsxbd` + `vcvtdq2ps` — exact),
+/// multiply by the scale vector, then `vaddps(acc, vmulps(x, y))` like the
+/// f32 dot. The scale vector is a splat when the chunk sits inside one
+/// group, else built per-lane on the stack (only at group boundaries).
+/// Two separate multiplies per element — bitwise-equal to scalar.
+///
+/// # Safety
+/// Caller must have verified `avx2` via `is_x86_feature_detected!`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_q8(x: &[f32], q: &[i8], scales: &[f32], group: usize) -> f32 {
+    debug_assert_eq!(x.len(), q.len(), "dot_q8 operand lengths");
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let base = c * 8;
+        let codes = _mm_loadl_epi64(q.as_ptr().add(base) as *const __m128i);
+        let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(codes));
+        let sv = if base / group == (base + 7) / group {
+            _mm256_set1_ps(*scales.get_unchecked(base / group))
+        } else {
+            let mut s = [0.0f32; 8];
+            for (l, sl) in s.iter_mut().enumerate() {
+                *sl = *scales.get_unchecked((base + l) / group);
+            }
+            _mm256_loadu_ps(s.as_ptr())
+        };
+        let yv = _mm256_mul_ps(qf, sv);
+        let xv = _mm256_loadu_ps(x.as_ptr().add(base));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+    }
+    let lo = _mm256_castps256_ps128(acc); // acc[0..4]
+    let hi = _mm256_extractf128_ps(acc, 1); // acc[4..8]
+    let s = _mm_add_ps(lo, hi); // s[l] = acc[l] + acc[l+4]
+    let sh = _mm_movehl_ps(s, s); // [s2, s3, s2, s3]
+    let t = _mm_add_ps(s, sh); // [s0+s2, s1+s3, ..]
+    let tsh = _mm_shuffle_ps(t, t, 0b01); // lane 0 = t[1]
+    let mut total = _mm_cvtss_f32(_mm_add_ss(t, tsh)); // t0 + t1
+    for i in chunks * 8..n {
+        let y = *q.get_unchecked(i) as f32 * *scales.get_unchecked(i / group);
+        total += *x.get_unchecked(i) * y;
+    }
+    total
+}

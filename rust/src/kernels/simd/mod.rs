@@ -3,7 +3,7 @@
 //! portable scalar reference plus per-ISA `#[target_feature]` modules, with
 //! unsafe confined to the intrinsics bodies).
 //!
-//! Two micro-kernels are dispatched, matching the two inner loops of
+//! Three micro-kernels are dispatched, matching the inner loops of
 //! [`crate::kernels`]:
 //!
 //! * [`axpy`] — `out[j] += a * b[j]`, the j-contiguous inner loop of the
@@ -19,6 +19,12 @@
 //!   NEON with two 4-lane registers, AVX-512 by reusing the 8-lane AVX2
 //!   kernel (16 lanes would change the reduction shape) — so the dot is
 //!   also bitwise-identical across tiers.
+//! * [`dot_q8`] — the int8×f32-accumulate dot of the quantized serving
+//!   path: identical schedule to [`dot`], with each weight dequantized
+//!   inline as `code as f32 * scale` (two separate multiplies per
+//!   element). Because the conversion is exact and the accumulation
+//!   order is the f32 contract's, `dot_q8(x, q, s, g)` is bitwise-equal
+//!   to `dot(x, dequant(q, s, g))` on every tier.
 //!
 //! Tier choice: best available by default, forcible with `ARA_SIMD`
 //! (`scalar` | `avx2` | `avx512` | `neon` | `native`). Forcing a tier the
@@ -193,6 +199,28 @@ pub fn dot(tier: SimdTier, x: &[f32], y: &[f32]) -> f32 {
     }
 }
 
+/// Int8 dot product with inline per-group dequantization on `tier`:
+/// `Σ x[i] · (q[i] as f32 * scales[i / group])` under the 8-virtual-lane
+/// contract. Bitwise-equal to [`dot`] over the dequantized weights on
+/// every tier; AVX-512 reuses the AVX2 kernel for the same reason [`dot`]
+/// does.
+#[inline]
+pub fn dot_q8(tier: SimdTier, x: &[f32], q: &[i8], scales: &[f32], group: usize) -> f32 {
+    match tier {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: Avx512 availability requires avx2 detection (see
+        // `is_available`), which is what the AVX2 kernel needs.
+        SimdTier::Avx512 => unsafe { avx2::dot_q8(x, q, scales, group) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected when avx2 is detected.
+        SimdTier::Avx2 => unsafe { avx2::dot_q8(x, q, scales, group) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: neon is a baseline feature of aarch64.
+        SimdTier::Neon => unsafe { neon::dot_q8(x, q, scales, group) },
+        _ => scalar::dot_q8(x, q, scales, group),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,6 +267,16 @@ mod tests {
             want += x[i] * y[i];
         }
         assert_eq!(scalar::dot(&x, &y).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn scalar_dot_q8_matches_dot_over_dequant_bitwise() {
+        // 19 elements, group 5: chunks cross group boundaries, tail is odd
+        let x: Vec<f32> = (0..19).map(|i| (i as f32 * 0.7).cos()).collect();
+        let q: Vec<i8> = (0..19).map(|i| ((i * 53 % 255) as i32 - 127) as i8).collect();
+        let scales: Vec<f32> = (0..4).map(|g| 0.01 + g as f32 * 0.003).collect();
+        let y: Vec<f32> = (0..19).map(|i| q[i] as f32 * scales[i / 5]).collect();
+        assert_eq!(scalar::dot_q8(&x, &q, &scales, 5).to_bits(), scalar::dot(&x, &y).to_bits());
     }
 
     #[test]

@@ -58,3 +58,54 @@ pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
     }
     total
 }
+
+/// Int8 dot under the 8-virtual-lane contract with inline dequantization:
+/// per 8-chunk, widen 8 codes (`sxtl` to i16, then to i32, then
+/// `scvtf` — exact), multiply each 4-lane half by its scale vector, and
+/// accumulate with `vaddq(acc, vmulq(x, y))` like the f32 dot. Scale
+/// vectors are splats when the chunk sits inside one group, else built
+/// per-lane on the stack (only at group boundaries). Two separate
+/// multiplies per element — bitwise-equal to scalar.
+///
+/// # Safety
+/// NEON is a baseline aarch64 feature; callers reach this only on aarch64.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_q8(x: &[f32], q: &[i8], scales: &[f32], group: usize) -> f32 {
+    debug_assert_eq!(x.len(), q.len(), "dot_q8 operand lengths");
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc0 = vdupq_n_f32(0.0); // virtual lanes 0..4
+    let mut acc1 = vdupq_n_f32(0.0); // virtual lanes 4..8
+    for c in 0..chunks {
+        let base = c * 8;
+        let codes = vld1_s8(q.as_ptr().add(base)); // 8 × i8
+        let wide = vmovl_s8(codes); // 8 × i16
+        let q0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(wide))); // lanes 0..4
+        let q1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(wide))); // lanes 4..8
+        let (s0, s1) = if base / group == (base + 7) / group {
+            let sv = vdupq_n_f32(*scales.get_unchecked(base / group));
+            (sv, sv)
+        } else {
+            let mut s = [0.0f32; 8];
+            for (l, sl) in s.iter_mut().enumerate() {
+                *sl = *scales.get_unchecked((base + l) / group);
+            }
+            (vld1q_f32(s.as_ptr()), vld1q_f32(s.as_ptr().add(4)))
+        };
+        let y0 = vmulq_f32(q0, s0);
+        let y1 = vmulq_f32(q1, s1);
+        let x0 = vld1q_f32(x.as_ptr().add(base));
+        let x1 = vld1q_f32(x.as_ptr().add(base + 4));
+        acc0 = vaddq_f32(acc0, vmulq_f32(x0, y0));
+        acc1 = vaddq_f32(acc1, vmulq_f32(x1, y1));
+    }
+    let s = vaddq_f32(acc0, acc1); // s[l] = acc[l] + acc[l+4]
+    let t0 = vgetq_lane_f32::<0>(s) + vgetq_lane_f32::<2>(s);
+    let t1 = vgetq_lane_f32::<1>(s) + vgetq_lane_f32::<3>(s);
+    let mut total = t0 + t1;
+    for i in chunks * 8..n {
+        let y = *q.get_unchecked(i) as f32 * *scales.get_unchecked(i / group);
+        total += *x.get_unchecked(i) * y;
+    }
+    total
+}

@@ -1,4 +1,4 @@
-//! Portable reference implementations of the two dispatched micro-kernels.
+//! Portable reference implementations of the dispatched micro-kernels.
 //! These are the semantic ground truth: every SIMD tier must match them
 //! **bitwise** (see the parity tests in `tests/simd_parity.rs`).
 
@@ -36,6 +36,38 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     let mut total = (s0 + s2) + (s1 + s3);
     for i in chunks * 8..n {
         total += x[i] * y[i];
+    }
+    total
+}
+
+/// Int8 dot product under the same 8-virtual-lane contract as [`dot`]:
+/// each code is dequantized inline — `y = q[i] as f32 * scales[i / group]`
+/// (two separate multiplies, never folded) — and accumulated exactly like
+/// the f32 dot. By construction this is **bitwise-equal** to
+/// `dot(x, dequant(q, scales, group))`, which is what makes packed serving
+/// bitwise-faithful to the f32 reference path.
+#[inline]
+pub fn dot_q8(x: &[f32], q: &[i8], scales: &[f32], group: usize) -> f32 {
+    debug_assert_eq!(x.len(), q.len(), "dot_q8 operand lengths");
+    let n = x.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let base = c * 8;
+        let xb = &x[base..base + 8];
+        let qb = &q[base..base + 8];
+        for l in 0..8 {
+            let y = qb[l] as f32 * scales[(base + l) / group];
+            acc[l] += xb[l] * y;
+        }
+    }
+    let s0 = acc[0] + acc[4];
+    let s1 = acc[1] + acc[5];
+    let s2 = acc[2] + acc[6];
+    let s3 = acc[3] + acc[7];
+    let mut total = (s0 + s2) + (s1 + s3);
+    for i in chunks * 8..n {
+        total += x[i] * (q[i] as f32 * scales[i / group]);
     }
     total
 }

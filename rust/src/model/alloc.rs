@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::json::{self, Json};
+use crate::quant::QuantScheme;
 use crate::Result;
 
 /// Per-module decision: keep the dense matrix (the R ≥ 1 branch of Eq. 8)
@@ -22,11 +23,17 @@ pub enum ModuleAlloc {
 pub struct Allocation {
     pub name: String,
     pub modules: BTreeMap<String, ModuleAlloc>,
+    /// Weight-quantization recipe for the factored modules, when the plan
+    /// composes SVD with quantization (`?quant=int8`). `None` = pure f32.
+    /// Carried here so graph specialization and engine upload — which
+    /// resolve allocations by name from disk — see the recipe without any
+    /// side-channel plumbing.
+    pub quant: Option<QuantScheme>,
 }
 
 impl Allocation {
     pub fn new(name: impl Into<String>) -> Allocation {
-        Allocation { name: name.into(), modules: BTreeMap::new() }
+        Allocation { name: name.into(), modules: BTreeMap::new(), quant: None }
     }
 
     pub fn set(&mut self, module: &str, a: ModuleAlloc) {
@@ -68,7 +75,19 @@ impl Allocation {
                 })
                 .collect(),
         );
-        json::obj(vec![("name", json::s(&self.name)), ("modules", mods)]).dump()
+        let mut fields = vec![("name", json::s(&self.name)), ("modules", mods)];
+        // optional: emitted only for quantized plans, so legacy readers
+        // (and aot.py) keep parsing pure-f32 allocations unchanged
+        if let Some(q) = &self.quant {
+            fields.push((
+                "quant",
+                json::obj(vec![
+                    ("bits", json::n(q.bits as f64)),
+                    ("group", json::n(q.group as f64)),
+                ]),
+            ));
+        }
+        json::obj(fields).dump()
     }
 
     pub fn from_json(text: &str) -> Result<Allocation> {
@@ -86,7 +105,14 @@ impl Allocation {
             };
             modules.insert(k.clone(), a);
         }
-        Ok(Allocation { name: j.req("name")?.as_str()?.to_string(), modules })
+        let quant = match j.get("quant") {
+            Some(Json::Null) | None => None,
+            Some(q) => Some(QuantScheme {
+                bits: q.req("bits")?.as_usize()? as u32,
+                group: q.req("group")?.as_usize()?,
+            }),
+        };
+        Ok(Allocation { name: j.req("name")?.as_str()?.to_string(), modules, quant })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -132,6 +158,21 @@ mod tests {
         let a = Allocation::from_json(text).unwrap();
         assert_eq!(a.get("layers.0.attn.wq"), ModuleAlloc::Rank(19));
         assert_eq!(a.get("layers.0.mlp.wdown"), ModuleAlloc::Dense);
+    }
+
+    #[test]
+    fn quant_recipe_round_trips_and_is_optional() {
+        let mut a = Allocation::new("uniform-80-q8g32");
+        a.set("layers.0.attn.wq", ModuleAlloc::Rank(12));
+        a.quant = Some(QuantScheme { bits: 8, group: 32 });
+        let b = Allocation::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, b);
+        // legacy files (no "quant" key) parse with quant = None
+        let legacy = r#"{"name": "x", "modules": {"m": {"dense": true}}}"#;
+        assert_eq!(Allocation::from_json(legacy).unwrap().quant, None);
+        // and a pure-f32 allocation does not emit the key at all
+        let f32_alloc = Allocation::new("plain");
+        assert!(!f32_alloc.to_json().contains("quant"));
     }
 
     #[test]

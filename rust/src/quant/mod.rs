@@ -1,13 +1,27 @@
-//! Weight quantization substrate for Table 3: GPTQ (Hessian-aware,
-//! column-by-column with error feedback) and round-to-nearest, both
-//! group-wise symmetric. Quantized weights are dequantized back to f32 for
-//! execution (the CPU PJRT path has no int kernels); *memory accounting*
-//! uses the real packed sizes.
+//! Weight quantization: the Table-3 substrate (GPTQ — Hessian-aware,
+//! column-by-column with error feedback — and round-to-nearest, both
+//! group-wise symmetric) plus the **packed int8 serving path**.
+//!
+//! The packed-serving contract ([`packed`], DESIGN.md §9): SVD factor
+//! matrices are stored as real row-major `i8` codes with per-(row,
+//! column-group) symmetric f32 scales, and the interpreter executes them
+//! through a dedicated int8×f32-accumulate matmul op — no dequant
+//! round-trip, and the resident bytes ([`PackedInt8::bytes`]) are the
+//! bytes actually held. The kernel dequantizes each code inline
+//! (`code as f32 * scale`) under the f32 dot's 8-virtual-lane contract,
+//! so packed execution is bitwise-identical to dequantizing to f32 and
+//! running the float kernels — across SIMD tiers and `ARA_THREADS`.
+//!
+//! The older GPTQ/RTN substrate still quantize-dequantizes to f32 (it
+//! exists to *measure* codecs, not to serve them); only the registry's
+//! `?quant=int8` recipe reaches the packed path.
 
 mod gptq;
+pub mod packed;
 mod rtn;
 
 pub use gptq::gptq_quantize;
+pub use packed::{quantized_factors, PackedInt8, QuantScheme};
 pub use rtn::rtn_quantize;
 
 use crate::tensor::Tensor;

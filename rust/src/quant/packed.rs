@@ -1,0 +1,189 @@
+//! Packed int8 weight storage for the quantized serving path.
+//!
+//! [`PackedInt8`] holds a 2-D weight matrix as row-major `i8` codes plus
+//! per-row, per-group symmetric f32 scales, with groups running along the
+//! **columns** (the dot dimension of the serving matmuls — both SVD factors
+//! are consumed as `x · Wᵀ` with the stored layout `(rows_out, k_in)`).
+//! Dequantization of one element is exactly `code as f32 * scale`, and the
+//! int8 matmul kernel ([`crate::kernels::matmul_q8`]) evaluates that very
+//! expression inline under the f32 dot's 8-virtual-lane contract, so
+//! serving from packed weights is **bitwise identical** to dequantizing and
+//! serving f32 — the quality gate can measure quantization loss on the f32
+//! eval path and the number is exact for the served engine.
+
+use crate::model::alloc::{Allocation, ModuleAlloc};
+use crate::svd::FactoredModel;
+use crate::tensor::Tensor;
+
+/// A quantization recipe attached to a compression plan: `bits` per weight
+/// code and `group` columns per scale. Only `bits == 8` has a packed
+/// serving path today; the registry rejects anything else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantScheme {
+    pub bits: u32,
+    pub group: usize,
+}
+
+/// A 2-D matrix stored as row-major int8 codes + per-(row, column-group)
+/// symmetric f32 scales. `shape = [rows, cols]`; groups tile the columns,
+/// so row `r` has `cols.div_ceil(group)` scales.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedInt8 {
+    pub shape: [usize; 2],
+    pub group: usize,
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+impl PackedInt8 {
+    /// Scales per row.
+    pub fn groups_per_row(&self) -> usize {
+        self.shape[1].div_ceil(self.group)
+    }
+
+    /// Symmetric per-group round-to-nearest quantization of a 2-D tensor.
+    /// Per group: `scale = amax / 127`, `code = round(v / scale)` clamped to
+    /// `[-127, 127]` (the symmetric range — `-128` is never emitted, so
+    /// `code * scale` round-trips the group maximum exactly). An all-zero
+    /// group stores `scale = 0` and zero codes.
+    pub fn quantize(t: &Tensor, group: usize) -> PackedInt8 {
+        assert_eq!(t.shape.len(), 2, "PackedInt8 quantizes 2-D tensors");
+        assert!(group > 0, "quantization group must be positive");
+        let (rows, cols) = (t.shape[0], t.shape[1]);
+        let gpr = cols.div_ceil(group);
+        let mut data = vec![0i8; rows * cols];
+        let mut scales = vec![0.0f32; rows * gpr];
+        for r in 0..rows {
+            let src = &t.data[r * cols..(r + 1) * cols];
+            for g in 0..gpr {
+                let c0 = g * group;
+                let c1 = (c0 + group).min(cols);
+                let amax = src[c0..c1].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                if amax == 0.0 {
+                    continue; // scale 0, codes 0
+                }
+                let scale = amax / 127.0;
+                scales[r * gpr + g] = scale;
+                for c in c0..c1 {
+                    let q = (src[c] / scale).round().clamp(-127.0, 127.0);
+                    data[r * cols + c] = q as i8;
+                }
+            }
+        }
+        PackedInt8 { shape: [rows, cols], group, data, scales }
+    }
+
+    /// Dequantize one element — the canonical expression (`code * scale`)
+    /// that the int8 kernels evaluate inline.
+    #[inline]
+    pub fn dequant_at(&self, r: usize, c: usize) -> f32 {
+        let cols = self.shape[1];
+        self.data[r * cols + c] as f32 * self.scales[r * self.groups_per_row() + c / self.group]
+    }
+
+    /// Dequantize the whole matrix to an f32 tensor.
+    pub fn dequant(&self) -> Tensor {
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let gpr = self.groups_per_row();
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                out.push(self.data[r * cols + c] as f32 * self.scales[r * gpr + c / self.group]);
+            }
+        }
+        Tensor::from_vec(&self.shape, out)
+    }
+
+    /// Resident bytes: one byte per code plus four per scale. This is the
+    /// real storage the serving engine holds — not an accounting fiction.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+}
+
+/// The factored model **as the quantized engine serves it**: every
+/// `Rank(k)` module's truncated factors are quantize-dequantized in place
+/// (first `k` columns of `wu`, first `k` rows of `wv`; ranks beyond `k`
+/// are masked out by the eval path anyway), dense modules untouched.
+/// Because the int8 kernel is bitwise-equal to dequant-then-f32, running
+/// the f32 eval on this model measures the served quality exactly.
+pub fn quantized_factors(fm: &FactoredModel, alloc: &Allocation, group: usize) -> FactoredModel {
+    let mut out = fm.clone();
+    for (name, mf) in out.factors.iter_mut() {
+        let k = match alloc.modules.get(name) {
+            Some(ModuleAlloc::Rank(k)) => *k,
+            _ => continue,
+        };
+        let (u, v) = mf.truncate(k);
+        let qu = PackedInt8::quantize(&u, group).dequant();
+        let qv = PackedInt8::quantize(&v, group).dequant();
+        let (m, r_full) = (mf.wu.shape[0], mf.wu.shape[1]);
+        for i in 0..m {
+            mf.wu.data[i * r_full..i * r_full + k].copy_from_slice(&qu.data[i * k..(i + 1) * k]);
+        }
+        let n = mf.wv.shape[1];
+        mf.wv.data[..k * n].copy_from_slice(&qv.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_is_within_half_step() {
+        let vals: Vec<f32> = (0..96).map(|i| ((i * 37 % 192) as f32 - 96.0) / 13.0).collect();
+        let t = Tensor::from_vec(&[4, 24], vals);
+        let p = PackedInt8::quantize(&t, 8);
+        let d = p.dequant();
+        assert_eq!(d.shape, t.shape);
+        for (r, chunk) in t.data.chunks(24).enumerate() {
+            for g in 0..3 {
+                let seg = &chunk[g * 8..(g + 1) * 8];
+                let amax = seg.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let step = amax / 127.0;
+                for (c, &v) in seg.iter().enumerate() {
+                    let got = d.at2(r, g * 8 + c);
+                    assert!(
+                        (got - v).abs() <= 0.5 * step + 1e-6,
+                        "({r},{c}) {got} vs {v}, step {step}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_max_round_trips_exactly() {
+        // the symmetric range maps the group amax to code ±127 exactly
+        let t = Tensor::from_vec(&[1, 4], vec![0.5, -2.0, 1.0, 0.25]);
+        let p = PackedInt8::quantize(&t, 4);
+        assert_eq!(p.dequant_at(0, 1), -2.0);
+    }
+
+    #[test]
+    fn non_multiple_group_and_zero_group() {
+        // cols = 7, group = 3 → groups of 3, 3, 1; second row all zeros
+        let t = Tensor::from_vec(
+            &[2, 7],
+            vec![1.0, -1.0, 0.5, 2.0, 0.0, -2.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        );
+        let p = PackedInt8::quantize(&t, 3);
+        assert_eq!(p.groups_per_row(), 3);
+        assert_eq!(p.scales.len(), 6);
+        assert_eq!(p.dequant_at(0, 6), 4.0); // singleton tail group is exact
+        for c in 0..7 {
+            assert_eq!(p.dequant_at(1, c), 0.0);
+        }
+        assert_eq!(p.scales[3..6], [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn bytes_counts_codes_and_scales() {
+        let t = Tensor::from_vec(&[3, 10], vec![1.0; 30]);
+        let p = PackedInt8::quantize(&t, 4);
+        // 30 codes + 3 rows × ceil(10/4)=3 scales × 4 bytes
+        assert_eq!(p.bytes(), 30 + 4 * 9);
+    }
+}

@@ -62,6 +62,7 @@ impl Backend for CpuBackend {
         Ok(DeviceBuffer::Host(match feed {
             Feed::F32(t) => Value::F32((*t).clone()),
             Feed::I32(t) => Value::I32((*t).clone()),
+            Feed::Q8(t) => Value::Q8((*t).clone()),
         }))
     }
 

@@ -9,6 +9,7 @@
 use std::collections::HashMap;
 
 use super::manifest::Manifest;
+use crate::quant::PackedInt8;
 use crate::tensor::{IntTensor, Tensor};
 use crate::Result;
 
@@ -16,6 +17,9 @@ use crate::Result;
 pub enum Feed<'a> {
     F32(&'a Tensor),
     I32(&'a IntTensor),
+    /// Packed int8 weights (quantized serving path) — weights only, never
+    /// activations.
+    Q8(&'a PackedInt8),
 }
 
 impl Feed<'_> {
@@ -23,6 +27,7 @@ impl Feed<'_> {
         match self {
             Feed::F32(t) => &t.shape,
             Feed::I32(t) => &t.shape,
+            Feed::Q8(t) => &t.shape,
         }
     }
 
@@ -30,6 +35,7 @@ impl Feed<'_> {
         match self {
             Feed::F32(_) => "f32",
             Feed::I32(_) => "i32",
+            Feed::Q8(_) => "q8",
         }
     }
 }
@@ -39,6 +45,8 @@ impl Feed<'_> {
 pub enum Value {
     F32(Tensor),
     I32(IntTensor),
+    /// Packed int8 weights; stays packed through upload and execution.
+    Q8(PackedInt8),
 }
 
 impl Value {
@@ -46,11 +54,12 @@ impl Value {
         match self {
             Value::F32(t) => &t.shape,
             Value::I32(t) => &t.shape,
+            Value::Q8(t) => &t.shape,
         }
     }
 
     /// View as an f32 tensor, converting i32 values (mirrors how the PJRT
-    /// path converts S32 output literals).
+    /// path converts S32 output literals) and dequantizing packed int8.
     pub fn to_f32_tensor(&self) -> Tensor {
         match self {
             Value::F32(t) => t.clone(),
@@ -58,6 +67,7 @@ impl Value {
                 &t.shape,
                 t.data.iter().map(|&x| x as f32).collect(),
             ),
+            Value::Q8(t) => t.dequant(),
         }
     }
 
@@ -65,6 +75,7 @@ impl Value {
         match self {
             Value::F32(t) => Feed::F32(t),
             Value::I32(t) => Feed::I32(t),
+            Value::Q8(t) => Feed::Q8(t),
         }
     }
 }

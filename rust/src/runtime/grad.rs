@@ -291,6 +291,9 @@ pub fn append_gradients(g: &mut Graph, loss: Id, wrt: &[Id]) -> Vec<Id> {
             | Op::GatherBlocks { .. } => {
                 panic!("no VJP for scatter/paged-KV ops (serving/adjoint-only)")
             }
+            Op::MatmulQ { .. } => {
+                panic!("no VJP for quantized matmul (serving-only)")
+            }
         }
     }
 

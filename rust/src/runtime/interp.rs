@@ -22,6 +22,7 @@ use std::collections::HashMap;
 use std::sync::OnceLock;
 
 use crate::kernels;
+use crate::quant::PackedInt8;
 use crate::runtime::exec::{Feed, Value};
 use crate::runtime::fusion::{plan_fusion, FusedOp, FusionPlan};
 use crate::tensor::{IntTensor, Tensor};
@@ -35,6 +36,9 @@ pub type Id = usize;
 pub enum DType {
     F32,
     I32,
+    /// Packed int8 weights (per-group scales). Input-only: produced by no
+    /// op, consumed only by [`Op::MatmulQ`].
+    Q8,
 }
 
 /// One IR operation. Structural parameters (shapes, axes, permutations)
@@ -73,6 +77,10 @@ pub enum Op {
     // ---- contractions ----
     /// 2-D matmul with transpose flags: C = op(A) · op(B).
     Matmul { a: Id, b: Id, ta: bool, tb: bool },
+    /// Quantized 2-D matmul: C = X · Wᵀ with `x` f32 (m, k) and `w` packed
+    /// int8 stored (n, k) — weights stay packed, accumulation in f32
+    /// (serving-only, no VJP).
+    MatmulQ { x: Id, w: Id },
     /// Batched 3-D matmul over the leading dim.
     Bmm { a: Id, b: Id, ta: bool, tb: bool },
 
@@ -147,6 +155,7 @@ impl Op {
             | Op::Less(a, b)
             | Op::Matmul { a, b, .. }
             | Op::Bmm { a, b, .. } => vec![*a, *b],
+            Op::MatmulQ { x, w } => vec![*x, *w],
             Op::Concat(xs, _) => xs.clone(),
             Op::Gather { table, idx } => vec![*table, *idx],
             Op::TakeLast { x, idx } => vec![*x, *idx],
@@ -309,6 +318,20 @@ impl Graph {
         let (kb, n) = if tb { (sb[1], sb[0]) } else { (sb[0], sb[1]) };
         assert_eq!(ka, kb, "matmul inner dim: {sa:?} (ta={ta}) vs {sb:?} (tb={tb})");
         self.push(Op::Matmul { a, b, ta, tb }, vec![m, n], DType::F32)
+    }
+
+    /// Quantized matmul against packed int8 weights: `x` f32 (m, k) times
+    /// the transpose of `w` Q8 stored (n, k) → f32 (m, n). The stored
+    /// layout matches the serving convention for both SVD factors
+    /// (`y = x · Wᵀ`), with quantization groups along the dot dimension.
+    pub fn matmul_q(&mut self, x: Id, w: Id) -> Id {
+        let (sx, sw) = (self.shape(x).to_vec(), self.shape(w).to_vec());
+        assert_eq!(self.dtype(x), DType::F32, "matmul_q lhs must be f32");
+        assert_eq!(self.dtype(w), DType::Q8, "matmul_q rhs must be q8");
+        assert_eq!(sx.len(), 2, "matmul_q lhs must be 2-D, got {sx:?}");
+        assert_eq!(sw.len(), 2, "matmul_q rhs must be 2-D, got {sw:?}");
+        assert_eq!(sx[1], sw[1], "matmul_q inner dim: {sx:?} vs {sw:?} (stored (n, k))");
+        self.push(Op::MatmulQ { x, w }, vec![sx[0], sw[0]], DType::F32)
     }
 
     pub fn bmm(&mut self, a: Id, b: Id, ta: bool, tb: bool) -> Id {
@@ -568,10 +591,14 @@ impl Graph {
                 Op::Input(k) => out.push(match &mut args[*k] {
                     Arg::F32(t) => Value::F32((*t).clone()),
                     Arg::I32(t) => Value::I32((*t).clone()),
+                    Arg::Q8(t) => Value::Q8((*t).clone()),
                     Arg::OwnF32(t) => Value::F32(t.take().ok_or_else(|| {
                         crate::anyhow!("output input node {o} already consumed")
                     })?),
                     Arg::OwnI32(t) => Value::I32(t.take().ok_or_else(|| {
+                        crate::anyhow!("output input node {o} already consumed")
+                    })?),
+                    Arg::OwnQ8(t) => Value::Q8(t.take().ok_or_else(|| {
                         crate::anyhow!("output input node {o} already consumed")
                     })?),
                 }),
@@ -599,18 +626,16 @@ impl Graph {
                 Arg::OwnF32(None) => {
                     Err(crate::anyhow!("node {id}: f32 input consumed in place"))
                 }
-                Arg::I32(_) | Arg::OwnI32(_) => {
-                    Err(crate::anyhow!("node {id}: expected f32 input"))
-                }
+                _ => Err(crate::anyhow!("node {id}: expected f32 input")),
             },
             // constants are read straight out of the graph — never cloned
             Op::Const(v) => match v {
                 Value::F32(t) => Ok(t),
-                Value::I32(_) => Err(crate::anyhow!("node {id}: expected f32 const")),
+                _ => Err(crate::anyhow!("node {id}: expected f32 const")),
             },
             _ => match vals[id].as_ref() {
                 Some(Value::F32(t)) => Ok(t),
-                Some(Value::I32(_)) => Err(crate::anyhow!("node {id}: expected f32 value")),
+                Some(_) => Err(crate::anyhow!("node {id}: expected f32 value")),
                 None => Err(crate::anyhow!("node {id}: value missing (freed too early?)")),
             },
         }
@@ -629,17 +654,42 @@ impl Graph {
                 Arg::OwnI32(None) => {
                     Err(crate::anyhow!("node {id}: i32 input consumed in place"))
                 }
-                Arg::F32(_) | Arg::OwnF32(_) => {
-                    Err(crate::anyhow!("node {id}: expected i32 input"))
-                }
+                _ => Err(crate::anyhow!("node {id}: expected i32 input")),
             },
             Op::Const(v) => match v {
                 Value::I32(t) => Ok(t),
-                Value::F32(_) => Err(crate::anyhow!("node {id}: expected i32 const")),
+                _ => Err(crate::anyhow!("node {id}: expected i32 const")),
             },
             _ => match vals[id].as_ref() {
                 Some(Value::I32(t)) => Ok(t),
-                Some(Value::F32(_)) => Err(crate::anyhow!("node {id}: expected i32 value")),
+                Some(_) => Err(crate::anyhow!("node {id}: expected i32 value")),
+                None => Err(crate::anyhow!("node {id}: value missing (freed too early?)")),
+            },
+        }
+    }
+
+    fn q8_of<'a>(
+        &'a self,
+        vals: &'a [Option<Value>],
+        args: &'a [Arg],
+        id: Id,
+    ) -> Result<&'a PackedInt8> {
+        match &self.nodes[id].op {
+            Op::Input(k) => match &args[*k] {
+                Arg::Q8(t) => Ok(*t),
+                Arg::OwnQ8(Some(t)) => Ok(t),
+                Arg::OwnQ8(None) => {
+                    Err(crate::anyhow!("node {id}: q8 input consumed in place"))
+                }
+                _ => Err(crate::anyhow!("node {id}: expected q8 input")),
+            },
+            Op::Const(v) => match v {
+                Value::Q8(t) => Ok(t),
+                _ => Err(crate::anyhow!("node {id}: expected q8 const")),
+            },
+            _ => match vals[id].as_ref() {
+                Some(Value::Q8(t)) => Ok(t),
+                Some(_) => Err(crate::anyhow!("node {id}: expected q8 value")),
                 None => Err(crate::anyhow!("node {id}: value missing (freed too early?)")),
             },
         }
@@ -859,6 +909,16 @@ impl Graph {
                 kernels::matmul_f32(&at.data, &bt.data, m, k, n, *ta, *tb, &mut buf);
                 Value::F32(Tensor::from_vec(out_shape, buf))
             }
+            Op::MatmulQ { x, w } => {
+                let xt = self.f32_of(vals, args, *x)?;
+                let wq = self.q8_of(vals, args, *w)?;
+                let (m, n) = (out_shape[0], out_shape[1]);
+                // each output element is an independent dot_q8 that
+                // overwrites its slot — no pre-zero needed
+                let mut buf = arena.take(m * n);
+                kernels::matmul_q8(&xt.data, wq, m, &mut buf);
+                Value::F32(Tensor::from_vec(out_shape, buf))
+            }
             Op::Bmm { a, b, ta, tb } => {
                 let at = self.f32_of(vals, args, *a)?;
                 let bt = self.f32_of(vals, args, *b)?;
@@ -883,6 +943,11 @@ impl Graph {
                 DType::I32 => {
                     let t = self.i32_of(vals, args, *x)?;
                     Value::I32(IntTensor::from_vec(shape, t.data.clone()))
+                }
+                DType::Q8 => {
+                    return Err(crate::anyhow!(
+                        "node {id}: packed q8 weights cannot be reshaped"
+                    ))
                 }
             },
             Op::Transpose(x, _) => {
@@ -1292,8 +1357,10 @@ fn rope_inplace(
 pub enum Arg<'a> {
     F32(&'a Tensor),
     I32(&'a IntTensor),
+    Q8(&'a PackedInt8),
     OwnF32(Option<Tensor>),
     OwnI32(Option<IntTensor>),
+    OwnQ8(Option<PackedInt8>),
 }
 
 impl<'a> Arg<'a> {
@@ -1301,6 +1368,7 @@ impl<'a> Arg<'a> {
         match f {
             Feed::F32(t) => Arg::F32(t),
             Feed::I32(t) => Arg::I32(t),
+            Feed::Q8(t) => Arg::Q8(t),
         }
     }
 
@@ -1308,6 +1376,7 @@ impl<'a> Arg<'a> {
         match v {
             Value::F32(t) => Arg::OwnF32(Some(t)),
             Value::I32(t) => Arg::OwnI32(Some(t)),
+            Value::Q8(t) => Arg::OwnQ8(Some(t)),
         }
     }
 }
@@ -1663,7 +1732,7 @@ mod tests {
     fn run1(g: &Graph, out: Id, feeds: &[Feed]) -> Tensor {
         match g.eval(feeds, &[out]).unwrap().remove(0) {
             Value::F32(t) => t,
-            Value::I32(_) => panic!("expected f32"),
+            other => panic!("expected f32, got {other:?}"),
         }
     }
 
@@ -1720,6 +1789,57 @@ mod tests {
         let ib = g.input(&[2, 3], DType::F32);
         let c3 = g.matmul(ia, ib, true, true);
         assert_eq!(run1(&g, c3, &[Feed::F32(&at), Feed::F32(&bt)]).data, expect.data);
+    }
+
+    #[test]
+    fn matmul_q_matches_dequant_matmul_bitwise() {
+        // m < 8 keeps the f32 reference on the same dot micro-kernel
+        // schedule the q8 kernel mirrors, so through the full interpreter
+        // path (feeds → exec → arena) equality is BITWISE, not approximate.
+        // k = 70 with group 32 leaves a ragged 6-wide last scale group.
+        let (m, k, n, group) = (3usize, 70usize, 9usize, 32usize);
+        let mut s = 0x9e3779b97f4a7c15u64;
+        let mut fill = |len: usize| -> Vec<f32> {
+            (0..len)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    ((s >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+                })
+                .collect()
+        };
+        let x = t(&[m, k], fill(m * k));
+        let w = t(&[n, k], fill(n * k));
+        let q = PackedInt8::quantize(&w, group);
+        let dq = q.dequant();
+
+        let mut g = Graph::default();
+        let ix = g.input(&[m, k], DType::F32);
+        let iw = g.input(&[n, k], DType::Q8);
+        let y = g.matmul_q(ix, iw);
+        assert_eq!(g.shape(y), &[m, n][..]);
+        let got = run1(&g, y, &[Feed::F32(&x), Feed::Q8(&q)]);
+
+        let mut g2 = Graph::default();
+        let ix2 = g2.input(&[m, k], DType::F32);
+        let iw2 = g2.input(&[n, k], DType::F32);
+        let y2 = g2.matmul(ix2, iw2, false, true);
+        let want = run1(&g2, y2, &[Feed::F32(&x), Feed::F32(&dq)]);
+
+        assert_eq!(got.shape, want.shape);
+        for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: {a:e} vs {b:e}");
+        }
+    }
+
+    #[test]
+    fn q8_weights_cannot_be_reshaped() {
+        let mut g = Graph::default();
+        let iw = g.input(&[4, 6], DType::Q8);
+        let r = g.reshape(iw, &[6, 4]);
+        let w = t(&[4, 6], vec![0.25; 24]);
+        let q = PackedInt8::quantize(&w, 3);
+        let err = g.eval(&[Feed::Q8(&q)], &[r]).unwrap_err().to_string();
+        assert!(err.contains("reshape"), "{err}");
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::Result;
 pub struct TensorSpec {
     pub name: String,
     pub shape: Vec<usize>,
-    pub dtype: String, // "f32" | "i32"
+    pub dtype: String, // "f32" | "i32" | "q8" (packed int8 weights)
 }
 
 #[derive(Debug, Clone)]

@@ -280,6 +280,21 @@ impl<'a> Net<'a> {
         id
     }
 
+    /// Packed int8 weight input (quantized serving path). The manifest
+    /// shape is the same logical (rows, cols) the f32 factor would have;
+    /// only the dtype differs, so the weight-upload prefix stays aligned
+    /// across the decode/paged/verify graphs of one plan.
+    fn input_q8(&mut self, name: &str, shape: &[usize]) -> Id {
+        let id = self.g.input(shape, DType::Q8);
+        self.specs.push(TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "q8".to_string(),
+        });
+        self.params.insert(name.to_string(), id);
+        id
+    }
+
     fn p(&self, name: &str) -> Id {
         *self
             .params
@@ -315,6 +330,12 @@ impl<'a> Net<'a> {
             match alloc.get(&d.name) {
                 ModuleAlloc::Dense => {
                     self.input_f32(&d.name, &[d.m, d.n]);
+                }
+                // only the SVD factors are quantized — dense-kept modules
+                // stay f32 (the recipe composes with the rank allocation)
+                ModuleAlloc::Rank(k) if alloc.quant.is_some() => {
+                    self.input_q8(&format!("{}.u", d.name), &[d.m, k]);
+                    self.input_q8(&format!("{}.v", d.name), &[k, d.n]);
                 }
                 ModuleAlloc::Rank(k) => {
                     self.input_f32(&format!("{}.u", d.name), &[d.m, k]);
@@ -373,8 +394,16 @@ impl<'a> Net<'a> {
                 } else {
                     let u = self.p(&format!("{name}.u"));
                     let v = self.p(&format!("{name}.v"));
-                    let t = self.g.matmul(x, v, false, true);
-                    self.g.matmul(t, u, false, true)
+                    if self.g.dtype(v) == DType::Q8 {
+                        // packed factors: both matmuls run the int8 kernel
+                        // (x · Wᵀ with W stored (rows_out, k_in)) — bitwise
+                        // equal to the f32 pair over dequantized weights
+                        let t = self.g.matmul_q(x, v);
+                        self.g.matmul_q(t, u)
+                    } else {
+                        let t = self.g.matmul(x, v, false, true);
+                        self.g.matmul(t, u, false, true)
+                    }
                 }
             }
         }

@@ -177,6 +177,9 @@ fn feed_to_literal(feed: &Feed, name: &str) -> Result<xla::Literal> {
         Feed::I32(t) => xla::Literal::vec1(&t.data)
             .reshape(&dims)
             .map_err(|e| crate::anyhow!("reshape {name}: {e}")),
+        Feed::Q8(_) => Err(crate::anyhow!(
+            "input {name}: packed q8 weights are cpu-backend only (no PJRT int8 path)"
+        )),
     }
 }
 
@@ -249,6 +252,9 @@ pub fn feed_to_buffer(client: &xla::PjRtClient, feed: &Feed) -> Result<xla::PjRt
         Feed::I32(t) => client
             .buffer_from_host_buffer(&t.data, &t.shape, None)
             .map_err(|e| crate::anyhow!("upload: {e}")),
+        Feed::Q8(_) => Err(crate::anyhow!(
+            "packed q8 weights are cpu-backend only (no PJRT int8 path)"
+        )),
     }
 }
 

@@ -29,6 +29,7 @@ use super::kvpool::KvPoolCfg;
 use super::sampler::argmax;
 use crate::config::ModelCfg;
 use crate::model::{Allocation, ModuleAlloc, WeightStore};
+use crate::quant::{PackedInt8, QuantScheme};
 use crate::runtime::{Backend, DeviceArg, DeviceBuffer, Exe, Feed, Runtime, Value};
 use crate::svd::FactoredModel;
 use crate::tensor::{IntTensor, Tensor};
@@ -93,6 +94,10 @@ pub struct GenStats {
     /// Active SIMD kernel tier name (`scalar`/`avx2`/`avx512`/`neon`) —
     /// throughput numbers are only comparable within one tier.
     pub simd_tier: &'static str,
+    /// The quantization recipe the engine serves with (`None` = f32
+    /// factors) — surfaced so throughput/quality reports name the full
+    /// composed plan, not just the rank allocation.
+    pub quant: Option<QuantScheme>,
     /// Self-speculative decoding (DESIGN.md §8): tokens proposed by the
     /// draft engine. Zero on plain decode.
     pub draft_tokens: usize,
@@ -148,6 +153,10 @@ pub struct Engine {
     /// Compression-plan provenance line (set when the engine was built
     /// from a [`crate::compress::CompressionPlan`]).
     provenance: Option<String>,
+    /// The allocation's quantization recipe (`None` = f32 factors). When
+    /// set, factor weights were uploaded as packed int8 and decode runs
+    /// the quantized matmul path end-to-end.
+    quant: Option<QuantScheme>,
     /// Test instrumentation: fail the n-th subsequent decode step once.
     fault: Cell<Option<usize>>,
     /// Test instrumentation: fail the n-th subsequent batched prefill once.
@@ -268,7 +277,20 @@ impl Engine {
                         spec.shape
                     ));
                 }
-                bufs.push(rt.upload(&Feed::F32(&t))?);
+                if spec.dtype == "q8" {
+                    // factor input compiled for packed int8: quantize on
+                    // upload — no dequantized copy is ever resident
+                    let q = alloc.quant.ok_or_else(|| {
+                        crate::anyhow!(
+                            "{}: manifest says q8 but allocation has no quant recipe",
+                            spec.name
+                        )
+                    })?;
+                    let pq = PackedInt8::quantize(&t, q.group);
+                    bufs.push(rt.upload(&Feed::Q8(&pq))?);
+                } else {
+                    bufs.push(rt.upload(&Feed::F32(&t))?);
+                }
             }
             Ok(bufs)
         };
@@ -292,9 +314,15 @@ impl Engine {
             verify_window: 0,
             backend: rt.backend(),
             provenance: None,
+            quant: alloc.quant,
             fault: Cell::new(None),
             fault_prefill: Cell::new(None),
         })
+    }
+
+    /// The quantization recipe this engine serves with (`None` = f32).
+    pub fn quant(&self) -> Option<QuantScheme> {
+        self.quant
     }
 
     /// Record the provenance line of the compression plan this engine was
@@ -660,6 +688,7 @@ impl Engine {
         let mut stats = GenStats {
             provenance: self.provenance.clone(),
             simd_tier: crate::kernels::active_tier().name(),
+            quant: self.quant,
             ..Default::default()
         };
 

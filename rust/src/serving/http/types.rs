@@ -239,6 +239,30 @@ pub fn stats_body(ws: &WorkerStats, in_flight: usize, shed: usize) -> String {
                 None => Json::Null,
             },
         ),
+        // the composed compression recipe the engine serves with: quant is
+        // null for pure-f32 plans, {bits, group} when factors are packed
+        (
+            "plan",
+            json::obj(vec![
+                (
+                    "provenance",
+                    match &ws.provenance {
+                        Some(p) => json::s(p.clone()),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "quant",
+                    match ws.quant {
+                        Some(q) => json::obj(vec![
+                            ("bits", json::n(q.bits as f64)),
+                            ("group", json::n(q.group as f64)),
+                        ]),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
         ("simd_tier", json::s(ws.simd_tier)),
         (
             "sched",

@@ -125,6 +125,8 @@ pub struct WorkerStats {
     pub prefix_hit_rate: f64,
     /// Compression-plan provenance line baked into the engine, if any.
     pub provenance: Option<String>,
+    /// Quantization recipe the engine serves with (`None` = f32 factors).
+    pub quant: Option<crate::quant::QuantScheme>,
     /// SIMD dispatch tier the engine's kernels run on.
     pub simd_tier: &'static str,
     /// Requests waiting for a slot on the worker right now.
@@ -272,6 +274,7 @@ impl Router {
                                 pool_utilization: sched.pool().utilization(),
                                 prefix_hit_rate: sched.stats().prefix_hit_rate(),
                                 provenance: engine.provenance().map(str::to_string),
+                                quant: engine.quant(),
                                 simd_tier: crate::kernels::active_tier().name(),
                                 queued: sched.queued(),
                                 active: sched.active(),

@@ -31,20 +31,46 @@ fn pipeline() -> Pipeline {
 /// port. The returned join handle yields `HttpServer::run`'s result — an
 /// `Err` after shutdown means the worker panicked, which in these
 /// debug-assertion builds includes a tripped KV-pool leak check.
+/// Serializes the train-or-load step against the shared disk cache for
+/// every server flavor in this file (same pattern as tests/chaos.rs).
+static PRETRAIN_LOCK: Mutex<()> = Mutex::new(());
+
 fn start_server(
     cfg: HttpCfg,
 ) -> (String, ShutdownHandle, std::thread::JoinHandle<ara_compress::Result<()>>) {
-    static LOCK: Mutex<()> = Mutex::new(());
     let pl = pipeline();
     let vocab = pl.cfg.vocab;
     let router = Router::spawn_with(RouterCfg { queue_depth: 8, ..RouterCfg::default() }, move || {
-        // serialize the train-or-load step against the shared disk cache
-        // (same pattern as tests/chaos.rs)
-        let _guard = LOCK.lock().unwrap();
+        let _guard = PRETRAIN_LOCK.lock().unwrap();
         let ws = pl.pretrained().expect("pretrain substrate");
         let grams = pl.grams(&ws).expect("calibrate");
         let fm = pl.factored(&ws, &grams).expect("factorize");
         pl.engine(&ws, &fm, "uniform-80", 2).expect("engine")
+    });
+    let server = HttpServer::bind("127.0.0.1:0", router, vocab, cfg).expect("bind loopback");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let stop = server.shutdown_handle();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, stop, handle)
+}
+
+/// Like [`start_server`], but the engine serves a quantized plan
+/// (`uniform@0.8?quant=int8&group=32`) built through the pipeline front
+/// door — packed int8 factors end-to-end.
+fn start_quant_server(
+    cfg: HttpCfg,
+) -> (String, ShutdownHandle, std::thread::JoinHandle<ara_compress::Result<()>>) {
+    let pl = pipeline();
+    let vocab = pl.cfg.vocab;
+    let router = Router::spawn_with(RouterCfg { queue_depth: 8, ..RouterCfg::default() }, move || {
+        let _guard = PRETRAIN_LOCK.lock().unwrap();
+        let ws = pl.pretrained().expect("pretrain substrate");
+        let grams = pl.grams(&ws).expect("calibrate");
+        let fm = pl.factored(&ws, &grams).expect("factorize");
+        let plan = pl
+            .allocate_spec("uniform@0.8?quant=int8&group=32", &ws, &grams, &fm)
+            .expect("quant plan");
+        pl.engine_for_plan(&ws, &fm, &plan, 2).expect("quantized engine")
     });
     let server = HttpServer::bind("127.0.0.1:0", router, vocab, cfg).expect("bind loopback");
     let addr = server.local_addr().expect("local addr").to_string();
@@ -118,6 +144,49 @@ fn validation_errors_name_fields_and_never_touch_the_scheduler() {
     assert_eq!(sched_counter(&st, "admitted"), 0, "scheduler must be untouched");
     assert_eq!(sched_counter(&st, "completed"), 0);
     assert_eq!(st.req("in_flight").unwrap().as_usize().unwrap(), 0);
+
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
+}
+
+/// `GET /stats` carries the composed compression recipe: the `plan`
+/// object's `quant` is null for an f32 engine and `{bits, group}` for a
+/// quantized one — and the quantized server completes requests end-to-end
+/// over the wire (DESIGN.md §9).
+#[test]
+fn stats_plan_object_reports_quant_recipe() {
+    // f32 engine: plan.quant must be null
+    let (addr, stop, server) = start_server(HttpCfg::default());
+    let st = stats(&addr);
+    let plan = st.req("plan").expect("stats must carry a plan object");
+    assert!(
+        matches!(plan.req("quant").unwrap(), Json::Null),
+        "f32 plan must report quant: null, got {}",
+        plan.dump()
+    );
+    stop.shutdown();
+    server.join().expect("server thread").expect("clean shutdown");
+
+    // quantized engine: plan.quant carries the recipe, provenance names it,
+    // and completions still serve
+    let (addr, stop, server) = start_quant_server(HttpCfg::default());
+    let st = stats(&addr);
+    let plan = st.req("plan").expect("plan object");
+    let q = plan.req("quant").expect("quant key");
+    assert_eq!(q.req("bits").unwrap().as_usize().unwrap(), 8, "{}", plan.dump());
+    assert_eq!(q.req("group").unwrap().as_usize().unwrap(), 32, "{}", plan.dump());
+    let prov = plan.req("provenance").unwrap().as_str().expect("provenanced plan");
+    assert!(prov.contains("int8/g32"), "provenance must name the recipe: {prov}");
+
+    let body = completion_json(&prompt_tokens(5, 4242), 6, "");
+    let r = http_call(&addr, "POST", "/v1/completions", Some(&body)).expect("quant completion");
+    assert_eq!(r.status, 200);
+    let j = json::parse(std::str::from_utf8(&r.body).unwrap()).expect("completion json");
+    assert_eq!(j.req("finish_reason").unwrap().as_str().unwrap(), "stop");
+    assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 6);
+    // greedy decode over packed weights is deterministic over the wire
+    let again = http_call(&addr, "POST", "/v1/completions", Some(&body)).expect("repeat");
+    assert_eq!(again.body, r.body, "quantized completions must be byte-identical");
 
     stop.shutdown();
     server.join().expect("server thread").expect("clean shutdown");

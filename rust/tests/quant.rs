@@ -1,0 +1,170 @@
+//! PR 10 integration tests: int8 SVD factors end-to-end.
+//!
+//! * registry grammar: `?quant=int8&group=32` composes with any method,
+//!   bad recipes fail naming the spec;
+//! * `CompressionPlan` v2 carries the recipe across disk and resolves
+//!   through `runtime::resolve_plan`;
+//! * a quantized plan builds a serving engine whose factor weights are
+//!   uploaded as packed int8, generates deterministically, and surfaces
+//!   the recipe through `Engine::quant` / `GenStats` / the provenance
+//!   line — the contract DESIGN.md §9 pins.
+
+use std::sync::Mutex;
+
+use ara_compress::compress::CompressionPlan;
+use ara_compress::coordinator::Pipeline;
+use ara_compress::model::{ModuleAlloc, WeightStore};
+use ara_compress::quant::{quantized_factors, QuantScheme};
+
+fn pipeline() -> Pipeline {
+    let mut pl = Pipeline::new("micro-llama").expect("pipeline (cpu backend needs no artifacts)");
+    pl.scalecfg.pretrain_steps = std::env::var("ARA_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    pl.scalecfg.calib_batches = 2;
+    pl.scalecfg.alloc_samples = 16;
+    pl.scalecfg.alloc_epochs = 2;
+    pl.scalecfg.eval_batches = 2;
+    pl.scalecfg.zs_items = 6;
+    pl
+}
+
+/// Serialize the train-or-load step against the shared disk cache (same
+/// contract as tests/integration.rs).
+fn pretrained(pl: &Pipeline) -> WeightStore {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _guard = LOCK.lock().unwrap();
+    pl.pretrained().expect("pretrain substrate")
+}
+
+#[test]
+fn quant_params_compose_and_bad_recipes_name_the_spec() {
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+
+    // `group` without `quant=int8` is rejected through the front door
+    let err =
+        pl.allocate_spec("uniform@0.8?group=32", &ws, &grams, &fm).unwrap_err().to_string();
+    assert!(err.contains("group"), "{err}");
+
+    let err = pl
+        .allocate_spec("uniform@0.8?quant=fp4", &ws, &grams, &fm)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("fp4"), "{err}");
+
+    // quant=none is the explicit f32 spelling
+    let plan = pl.allocate_spec("uniform@0.8?quant=none", &ws, &grams, &fm).unwrap();
+    assert_eq!(plan.quant(), None);
+}
+
+#[test]
+fn ara_quant_spec_allocates_with_the_recipe() {
+    // the acceptance spelling: `ara@0.8?quant=int8` just works, with the
+    // default group of 32
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+    let plan = pl.allocate_spec("ara@0.8?quant=int8", &ws, &grams, &fm).unwrap();
+    assert_eq!(plan.method, "ara");
+    assert_eq!(plan.quant(), Some(QuantScheme { bits: 8, group: 32 }));
+    assert!(plan.allocation.name.ends_with("-q8g32"), "{}", plan.allocation.name);
+    assert!(plan.spec.contains("quant=int8"), "{}", plan.spec);
+}
+
+#[test]
+fn quantized_plan_roundtrips_and_resolves_with_recipe() {
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+    let plan = pl.allocate_spec("uniform@0.8?quant=int8&group=16", &ws, &grams, &fm).unwrap();
+    assert_eq!(plan.quant(), Some(QuantScheme { bits: 8, group: 16 }));
+
+    // disk roundtrip keeps the recipe
+    let tmp = std::env::temp_dir().join(format!("ara-quant-plan-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let path = tmp.join("plan.json");
+    plan.save(&path).unwrap();
+    let back = CompressionPlan::load(&path).unwrap();
+    assert_eq!(plan, back);
+    let _ = std::fs::remove_dir_all(&tmp);
+
+    // resolve_plan through a scratch artifacts dir keeps the recipe too
+    let tmp = std::env::temp_dir().join(format!("ara-quant-resolve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let mut paths = pl.paths.clone();
+    paths.artifacts = tmp.clone();
+    let dir = tmp.join("allocations");
+    std::fs::create_dir_all(&dir).unwrap();
+    plan.save(&dir.join(format!("{}.{}.json", pl.cfg.name, plan.allocation.name))).unwrap();
+    let resolved =
+        ara_compress::runtime::resolve_plan(&pl.cfg, &paths, &plan.allocation.name).unwrap();
+    assert_eq!(resolved.quant(), Some(QuantScheme { bits: 8, group: 16 }));
+    assert_eq!(resolved.allocation, plan.allocation);
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn quantized_engine_serves_deterministically_and_reports_recipe() {
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+    let plan = pl.allocate_spec("uniform@0.8?quant=int8&group=32", &ws, &grams, &fm).unwrap();
+
+    let engine = pl.engine_for_plan(&ws, &fm, &plan, 2).expect("quantized engine");
+    assert_eq!(engine.quant(), Some(QuantScheme { bits: 8, group: 32 }));
+
+    let prompts = vec![vec![0i32; pl.cfg.prefill_len], vec![5i32; pl.cfg.prefill_len]];
+    let (a, stats) = engine.generate(&prompts, 8).unwrap();
+    let (b, _) = engine.generate(&prompts, 8).unwrap();
+    assert_eq!(a, b, "quantized greedy decode must be deterministic");
+    assert_eq!(a[0].len(), 8);
+    for toks in &a {
+        for &tok in toks {
+            assert!((tok as usize) < pl.cfg.vocab, "out-of-vocab token {tok}");
+        }
+    }
+    assert_eq!(stats.tokens_generated, 2 * 8);
+    assert_eq!(stats.quant, Some(QuantScheme { bits: 8, group: 32 }));
+    let prov = stats.provenance.expect("plan-built engine carries provenance");
+    assert!(prov.contains("int8/g32"), "{prov}");
+}
+
+#[test]
+fn quantized_factors_measure_what_the_engine_serves() {
+    // `quantized_factors` builds the f32 twin of the packed weights the
+    // engine uploads: for every Rank(k) module, the first k columns/rows of
+    // the factor matrices must equal dequant(quantize(truncate(k))) exactly
+    // — this equivalence is what lets the ppl gate score served quality
+    // through the ordinary masked eval path.
+    let pl = pipeline();
+    let ws = pretrained(&pl);
+    let grams = pl.grams(&ws).unwrap();
+    let fm = pl.factored(&ws, &grams).unwrap();
+    let plan = pl.allocate_spec("uniform@0.8?quant=int8&group=32", &ws, &grams, &fm).unwrap();
+
+    let fq = quantized_factors(&fm, &plan.allocation, 32);
+    let mut checked = 0usize;
+    for (name, alloc) in &plan.allocation.modules {
+        let k = match alloc {
+            ModuleAlloc::Rank(k) => *k,
+            ModuleAlloc::Dense => continue,
+        };
+        let (u, v) = fm.factors[name].truncate(k);
+        let qu = ara_compress::quant::PackedInt8::quantize(&u, 32).dequant();
+        let qv = ara_compress::quant::PackedInt8::quantize(&v, 32).dequant();
+        let (gu, gv) = fq.factors[name].truncate(k);
+        assert_eq!(gu.data, qu.data, "{name}.u");
+        assert_eq!(gv.data, qv.data, "{name}.v");
+        // quantization must actually change something at int8 precision
+        assert_ne!(gu.data, u.data, "{name}.u unchanged by quantize-dequant?");
+        checked += 1;
+    }
+    assert!(checked > 0, "allocation had no low-rank modules to check");
+}

@@ -4,7 +4,9 @@
 //! small-m dot), on awkward non-lane-multiple shapes, zero-sized edges,
 //! NaN/subnormal inputs, and any thread count.
 
-use ara_compress::kernels::{available_tiers, bmm_f32_tier, matmul_f32_tier, SimdTier};
+use ara_compress::kernels::{available_tiers, bmm_f32_tier, matmul_f32_tier, matmul_q8_tier, SimdTier};
+use ara_compress::quant::PackedInt8;
+use ara_compress::tensor::Tensor;
 
 /// Deterministic pseudo-random fill in [-0.5, 0.5).
 fn fill(n: usize, seed: u64) -> Vec<f32> {
@@ -104,6 +106,63 @@ fn thread_count_is_invariant_within_each_tier() {
         for nt in [2, 3, 4, 8] {
             let got = mm(tier, &a, &b, m, k, n, false, true, nt);
             assert_bits_eq(&got, &base, &format!("{} nt={nt}", tier.name()));
+        }
+    }
+}
+
+/// Dequant-then-f32 reference for the quantized matmul: y = x · dequant(w)ᵀ
+/// computed with the f32 kernel contract. The int8 kernel dequantizes
+/// per-element with the identical lane schedule, so every tier must match
+/// this reference **bitwise** — the quantized path buys bytes, not drift.
+fn mm_q8_reference(x: &[f32], w: &PackedInt8, m: usize) -> Vec<f32> {
+    let (n, k) = (w.shape[0], w.shape[1]);
+    let dq = w.dequant();
+    let mut out = vec![0.0f32; m * n];
+    matmul_f32_tier(SimdTier::Scalar, x, &dq.data, m, k, n, false, true, &mut out, 1);
+    out
+}
+
+fn pack(n_rows: usize, k: usize, group: usize, seed: u64) -> PackedInt8 {
+    let w = Tensor::from_vec(&[n_rows, k], fill(n_rows * k, seed));
+    PackedInt8::quantize(&w, group)
+}
+
+#[test]
+fn q8_matmul_matches_dequant_reference_bitwise_on_every_tier() {
+    // k values straddle both the 8-lane chunking AND the scale-group
+    // boundaries: k=70/group=32 leaves a 6-wide ragged last group; group=5
+    // forces group crossings *inside* every 8-lane chunk; k=23 < group=32
+    // exercises the single-partial-group row.
+    for &(m, k, n, group) in
+        &[(1usize, 70usize, 9usize, 32usize), (3, 23, 5, 32), (5, 64, 13, 16), (4, 37, 7, 5)]
+    {
+        let x = fill(m * k, 71 + k as u64);
+        let w = pack(n, k, group, 72 + n as u64);
+        let want = mm_q8_reference(&x, &w, m);
+        for tier in available_tiers() {
+            let mut got = vec![0.0f32; m * n];
+            matmul_q8_tier(tier, &x, &w, m, &mut got, 1);
+            assert_bits_eq(
+                &got,
+                &want,
+                &format!("q8 {} {m}x{k}x{n} g{group}", tier.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn q8_matmul_is_thread_count_invariant_within_each_tier() {
+    let (m, k, n, group) = (9, 130, 37, 32);
+    let x = fill(m * k, 81);
+    let w = pack(n, k, group, 82);
+    for tier in available_tiers() {
+        let mut base = vec![0.0f32; m * n];
+        matmul_q8_tier(tier, &x, &w, m, &mut base, 1);
+        for nt in [2, 3, 4, 8] {
+            let mut got = vec![0.0f32; m * n];
+            matmul_q8_tier(tier, &x, &w, m, &mut got, nt);
+            assert_bits_eq(&got, &base, &format!("q8 {} nt={nt}", tier.name()));
         }
     }
 }
